@@ -1,0 +1,79 @@
+//! Bench: the paper's core claim at the kernel level — binarized
+//! XNOR+popcount attention vs dense f32 attention on CPU, across context
+//! lengths (the Figure-1/Table-3 shape, software edition).
+//!
+//! Custom harness (criterion is unavailable offline — util::bench).
+
+use had::binary::attention::had_attention_with;
+use had::binary::{HadAttnConfig, PackedKv};
+use had::binary::attention::Scratch;
+use had::binary::{standard_attention_ref, PackedMat};
+use had::tensor::Mat;
+use had::util::bench::Bencher;
+use had::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(9);
+    let d = 64;
+    let d_v = 64;
+    let n_q = 16; // a decode-style query block
+
+    println!("== binary vs f32 attention scores (n_q={n_q}, d={d}) ==");
+    for n_k in [256usize, 1024, 4096, 16384] {
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let qp = PackedMat::pack(n_q, d, &q.data);
+        let kp = PackedMat::pack(n_k, d, &k.data);
+        let mut out = vec![0i32; n_q * n_k];
+        let s_bin = b.run(&format!("scores/xnor-popcount n_k={n_k}"), || {
+            had::binary::hamming::score_matrix(&qp, &kp, &mut out);
+            out[0]
+        });
+        let s_f32 = b.run(&format!("scores/f32-dense     n_k={n_k}"), || q.matmul_nt(&k));
+        s_bin.print();
+        s_f32.print();
+        println!("  -> binary speedup {:.1}x", s_f32.mean_ns() / s_bin.mean_ns());
+    }
+
+    println!("\n== fused HAD attention vs dense standard attention ==");
+    for n_k in [256usize, 1024, 4096] {
+        let n_top = (30 * n_k / 256).max(1);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        let cfg = HadAttnConfig { n_top, temp: 1.0 };
+        let mut scratch = Scratch::default();
+        let s_had = b.run(&format!("attn/HAD fused    n_k={n_k} N={n_top}"), || {
+            had_attention_with(&q, &kv, &cfg, &mut scratch)
+        });
+        let s_std = b.run(&format!("attn/standard f32 n_k={n_k}"), || {
+            standard_attention_ref(&q, &k, &v)
+        });
+        s_had.print();
+        s_std.print();
+        println!("  -> HAD end-to-end speedup {:.1}x", s_std.mean_ns() / s_had.mean_ns());
+    }
+
+    println!("\n== top-N selection strategies (n=4096 integer scores) ==");
+    let d_dom = 64usize;
+    let scores: Vec<i32> = (0..4096)
+        .map(|_| rng.below((2 * d_dom + 1) as u64) as i32 - d_dom as i32)
+        .collect();
+    for n_top in [30usize, 120, 480] {
+        let s_heap = b.run(&format!("topn/insertion N={n_top}"), || {
+            had::binary::topn::select_topn_heap(&scores, n_top)
+        });
+        let s_count = b.run(&format!("topn/counting  N={n_top}"), || {
+            had::binary::topn::select_topn_counting(&scores, n_top, d_dom)
+        });
+        s_heap.print();
+        s_count.print();
+    }
+
+    println!("\n== bit packing throughput ==");
+    let xs = rng.normal_vec(4096 * 64, 1.0);
+    let s = b.run("pack 4096x64 f32 -> bits", || PackedMat::pack(4096, 64, &xs));
+    s.print_throughput(4096.0 * 64.0, "elem");
+}

@@ -1,0 +1,82 @@
+//! Bench: coordinator hot paths — routing, admission, batch assembly —
+//! independent of PJRT (pure L3 overhead; should be negligible next to
+//! model execution, per DESIGN.md §Perf L3).
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use had::coordinator::{assemble_padded, BatchPolicy, BucketQueue, Router};
+use had::coordinator::request::Request;
+use had::util::bench::Bencher;
+use had::util::rng::Rng;
+
+fn mk_request(id: u64, len: usize) -> Request {
+    let (tx, rx) = channel();
+    std::mem::forget(rx); // keep the channel alive for the bench
+    Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx }
+}
+
+fn main() {
+    let b = Bencher::default();
+    let router = Router::longqa_default();
+    let mut rng = Rng::new(3);
+
+    // routing
+    let lens: Vec<usize> = (0..1024).map(|_| rng.range_usize(1, 1025)).collect();
+    let s = b.run("router/route x1024", || {
+        let mut acc = 0usize;
+        for &l in &lens {
+            acc += router.route(l).unwrap().n_ctx;
+        }
+        acc
+    });
+    s.print_throughput(1024.0, "req");
+
+    // admission + drain cycle
+    let bucket = router.buckets()[1].clone(); // 256-bucket
+    let s = b.run("batcher/push+drain batch of 16", || {
+        let mut q = BucketQueue::new(bucket.clone(), BatchPolicy::default());
+        for i in 0..16u64 {
+            let _ = q.push(mk_request(i, 200));
+        }
+        let mut n = 0;
+        while !q.is_empty() {
+            n += q.drain_batch().len();
+        }
+        n
+    });
+    s.print();
+
+    // batch assembly (padding + row duplication)
+    for n_ctx in [128usize, 1024] {
+        let reqs: Vec<Request> = (0..8).map(|i| mk_request(i, n_ctx * 3 / 4)).collect();
+        let s = b.run(&format!("batcher/assemble 8x{n_ctx}"), || {
+            assemble_padded(&reqs, n_ctx, 8, 0)
+        });
+        s.print_throughput((8 * n_ctx) as f64, "tok");
+    }
+
+    // end-to-end queue throughput under a zipfian-ish length mix
+    let s = b.run("coordinator/admit 256 mixed-length reqs", || {
+        let mut queues: Vec<BucketQueue> = router
+            .buckets()
+            .iter()
+            .map(|bk| BucketQueue::new(bk.clone(), BatchPolicy { queue_cap: 512, ..Default::default() }))
+            .collect();
+        let mut rng = Rng::new(7);
+        let mut admitted = 0usize;
+        for i in 0..256u64 {
+            let len = [64usize, 200, 400, 900][rng.range_usize(0, 4)];
+            let idx = router
+                .buckets()
+                .iter()
+                .position(|bk| bk.n_ctx >= len)
+                .unwrap();
+            if queues[idx].push(mk_request(i, len)).is_ok() {
+                admitted += 1;
+            }
+        }
+        admitted
+    });
+    s.print_throughput(256.0, "req");
+}

@@ -1,0 +1,25 @@
+//! Bench: hwsim model evaluation cost (it's analytic — must be instant)
+//! plus the Table-3 numbers printed for the record.
+
+use had::hwsim::{breakdown, context_sweep, Design, Tech, Workload};
+use had::util::bench::Bencher;
+
+fn main() {
+    let tech = Tech::default();
+    let b = Bencher::quick();
+
+    let s = b.run("hwsim/breakdown paper workload", || {
+        let sa = breakdown(Design::Standard, Workload::paper(), &tech);
+        let had = breakdown(Design::Had, Workload::paper(), &tech);
+        (sa.total_area(), had.total_area())
+    });
+    s.print();
+
+    let s = b.run("hwsim/context sweep 6 points", || {
+        context_sweep(&tech, &[128, 256, 512, 1024, 2048, 4096])
+    });
+    s.print();
+
+    // the actual Table-3 numbers, for bench_output.txt
+    println!("\n{}", had::hwsim::table3_text(&tech));
+}

@@ -1,0 +1,70 @@
+//! Bench: PJRT execution latency per artifact — the Figure-1 measurement
+//! (full vs no-attention vs HAD forward at each context length) plus the
+//! host<->literal conversion overhead the §Perf pass targets.
+
+use had::data::longqa::{longqa_batch, LongQaGen};
+use had::model::ParamSet;
+use had::runtime::{default_artifact_dir, HostTensor, Runtime};
+use had::util::bench::Bencher;
+use had::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(dir)?;
+    let b = Bencher::quick();
+    let mut rng = Rng::new(11);
+
+    println!("== single-request forward latency by context (Figure 1) ==");
+    for n_ctx in [128usize, 256, 512, 1024] {
+        let config = format!("longqa_{n_ctx}");
+        let cfg = rt.manifest.config(&config)?;
+        let params = ParamSet::init(cfg, &mut rng);
+        let gen = LongQaGen::new(n_ctx);
+        let batch = longqa_batch(&gen, &mut rng, 1);
+        let l = cfg.model.n_layers;
+        for artifact in ["fwd_standard_b1", "fwd_noattn_b1", "fwd_had_b1"] {
+            let exe = rt.load(&format!("{config}__{artifact}"))?;
+            let mut inputs: Vec<HostTensor> = params.tensors.clone();
+            inputs.push(batch.x.clone());
+            inputs.push(HostTensor::vec_f32(vec![1.0; l]));
+            inputs.push(HostTensor::vec_f32(vec![1.0; l]));
+            inputs.push(HostTensor::scalar_f32(cfg.model.n_top as f32));
+            exe.run(&inputs)?; // warm
+            let s = b.run(&format!("{config}/{artifact}"), || exe.run(&inputs).unwrap());
+            s.print();
+        }
+    }
+
+    println!("\n== host tensor -> literal conversion overhead ==");
+    let cfg = rt.manifest.config("tinyglue")?;
+    let params = ParamSet::init(cfg, &mut rng);
+    let s = b.run("to_literal: full tinyglue param set", || {
+        params
+            .tensors
+            .iter()
+            .map(|t| t.to_literal().unwrap())
+            .count()
+    });
+    s.print_throughput(params.total_elems() as f64 * 4.0, "byte");
+
+    println!("\n== batched eval forward (serving path) ==");
+    let config = "longqa_256";
+    let cfg = rt.manifest.config(config)?;
+    let params = ParamSet::init(cfg, &mut rng);
+    let gen = LongQaGen::new(256);
+    let batch = longqa_batch(&gen, &mut rng, cfg.eval_batch);
+    let exe = rt.load(&format!("{config}__fwd_had"))?;
+    let mut inputs: Vec<HostTensor> = params.tensors.clone();
+    inputs.push(batch.x.clone());
+    inputs.push(HostTensor::vec_f32(vec![1.0; cfg.model.n_layers]));
+    inputs.push(HostTensor::vec_f32(vec![1.0; cfg.model.n_layers]));
+    inputs.push(HostTensor::scalar_f32(cfg.model.n_top as f32));
+    exe.run(&inputs)?;
+    let s = b.run("longqa_256/fwd_had batch=16", || exe.run(&inputs).unwrap());
+    s.print_throughput(cfg.eval_batch as f64, "req");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full system on one real
+//! workload, proving all layers compose:
+//!
+//!   teacher pre-training (PJRT train-step artifact)
+//!   -> sigma calibration (Eq. 12)
+//!   -> 4-stage HAD distillation (Algorithm 1, tanh -> STE)
+//!   -> evaluation of teacher vs binarized student (fused Pallas fwd)
+//!   -> checkpoint save/load round trip
+//!
+//! Logs the loss curve and accuracy; scale with --scale / --task.
+//!
+//! Run: cargo run --release --example distill_e2e -- [--scale 0.5] [--task QQP]
+
+use anyhow::Result;
+use had::data::tinyglue::{GlueGen, GlueTask};
+use had::data::token_batch;
+use had::distill::{evaluate, Method, Pipeline, Schedule};
+use had::exp::SuiteOptions;
+use had::model::{load_checkpoint, save_checkpoint};
+use had::runtime::{default_artifact_dir, Runtime};
+use had::util::cli::Args;
+use had::util::rng::Rng;
+
+fn main() -> Result<()> {
+    had::util::log::init_from_env();
+    let args = Args::parse(std::env::args().skip(1));
+    let mut opts = SuiteOptions::default();
+    opts.scale = args.get_f64("scale", 1.0);
+    opts.seed = args.get_u64("seed", opts.seed);
+    let task_name = args.get_str("task", "QQP");
+    let task = GlueTask::ALL
+        .iter()
+        .copied()
+        .find(|t| t.name().eq_ignore_ascii_case(&task_name))
+        .unwrap_or(GlueTask::Qqp);
+
+    let rt = Runtime::new(default_artifact_dir())?;
+    let cfg = rt.manifest.config("tinyglue")?;
+    let n_ctx = cfg.model.n_ctx;
+    let tb = cfg.train_batch;
+    let n_top = cfg.model.n_top as f32;
+
+    println!("=== distill_e2e: task {} | scale {} ===", task.name(), opts.scale);
+    let gen = GlueGen::new(task);
+    let mut train = |rng: &mut Rng| token_batch(&gen, rng, tb, n_ctx);
+
+    // 1) teacher
+    let schedule = Schedule::new(opts.budget(), opts.lr);
+    let mut pipeline = Pipeline::new(&rt, cfg, schedule);
+    pipeline.teacher_lr = opts.teacher_lr;
+    let mut rng = Rng::new(opts.seed);
+    let t0 = std::time::Instant::now();
+    let (teacher_params, teacher_acc) = pipeline.train_teacher(&mut rng, &mut train)?;
+    println!("teacher trained: {} steps, acc~{teacher_acc:.3}, {:?}", opts.budget().teacher, t0.elapsed());
+
+    // 2) calibration (paper Eq. 12)
+    let (sq, sk) = pipeline.calibrate_sigma(&teacher_params, &mut rng, &mut train, opts.calib_batches)?;
+    println!("sigma_q={sq:?} sigma_k={sk:?}");
+
+    // 3) 4-stage distillation
+    let t1 = std::time::Instant::now();
+    let outcome = pipeline.distill(Method::Had, &teacher_params, &sq, &sk, n_top, &mut rng, &mut train)?;
+    println!(
+        "distilled {} steps in {:?}; loss curve (step, kl_att, kl_out):",
+        outcome.loss_trace.len(),
+        t1.elapsed()
+    );
+    let stride = (outcome.loss_trace.len() / 12).max(1);
+    for (step, kl_att, kl_out) in outcome.loss_trace.iter().step_by(stride) {
+        println!("  step {step:>5}  kl_att {kl_att:>9.5}  kl_out {kl_out:>9.5}");
+    }
+
+    // 4) evaluate teacher vs student on a held-out stream
+    let eval_gen = GlueGen::new(task);
+    let mut eval_rng = Rng::new(opts.seed ^ 0xE7A1);
+    let evals: Vec<_> = (0..opts.eval_batches)
+        .map(|_| token_batch(&eval_gen, &mut eval_rng, tb, n_ctx))
+        .collect();
+    let teacher_ckpt = had::model::Checkpoint {
+        config: "tinyglue".into(),
+        step: 0.0,
+        sigma_q: sq.clone(),
+        sigma_k: sk.clone(),
+        params: teacher_params,
+    };
+    let base = evaluate(&rt, cfg, "fwd_standard", &teacher_ckpt, &evals, n_top)?;
+    let student = evaluate(&rt, cfg, "fwd_had", &outcome.student, &evals, n_top)?;
+    println!(
+        "accuracy: teacher(fp32 attention) {:.2}%  vs  HAD student (binary K/Q, top-{}) {:.2}%",
+        base.metric("accuracy"),
+        cfg.model.n_top,
+        student.metric("accuracy")
+    );
+
+    // 5) checkpoint round trip
+    let path = std::path::PathBuf::from("results").join("distill_e2e.ckpt");
+    save_checkpoint(&path, cfg, &outcome.student)?;
+    let loaded = load_checkpoint(&path, cfg)?;
+    let re = evaluate(&rt, cfg, "fwd_had", &loaded, &evals, n_top)?;
+    assert_eq!(re.preds, student.preds, "checkpoint round-trip must be exact");
+    println!("checkpoint save/load round-trip OK -> {path:?}");
+    println!("distill_e2e OK");
+    Ok(())
+}

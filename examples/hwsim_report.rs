@@ -1,0 +1,27 @@
+//! Hardware cost report: the paper's Table 3 plus scaling sweeps from the
+//! hwsim component model (CAM-based HAD unit vs BF16 standard attention).
+//!
+//! Run: cargo run --release --example hwsim_report
+
+use had::hwsim::{breakdown, context_sweep, render_comparison, Design, Tech, Workload};
+
+fn main() {
+    let tech = Tech::default();
+
+    // Paper workload (Table 3): n=256, d=1024, N=30
+    println!("{}", had::hwsim::table3_text(&tech));
+
+    // Other design points: the serving buckets of this repo
+    for (n, d, ntop) in [(128usize, 512usize, 15usize), (1024, 512, 120), (4096, 1024, 480)] {
+        let w = Workload { n_ctx: n, d_model: d, n_top: ntop };
+        let sa = breakdown(Design::Standard, w, &tech);
+        let had_ = breakdown(Design::Had, w, &tech);
+        println!("{}", render_comparison(&sa, &had_));
+    }
+
+    println!("Energy-per-query sweep (N scaled linearly with n):");
+    println!("{:>8} {:>12} {:>12} {:>8}", "n_ctx", "SA nJ", "HAD nJ", "ratio");
+    for (n, sa_nj, had_nj, _) in context_sweep(&tech, &[128, 256, 512, 1024, 2048, 4096, 8192]) {
+        println!("{n:>8} {sa_nj:>12.1} {had_nj:>12.1} {:>7.1}x", sa_nj / had_nj);
+    }
+}

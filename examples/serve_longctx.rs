@@ -1,0 +1,91 @@
+//! Long-context serving demo: the L3 coordinator serving batched
+//! requests across length buckets with the binarized (fwd_had) models.
+//!
+//! Spawns client threads generating a mixed-length workload, routes
+//! through the length-bucket router + dynamic batcher onto the PJRT
+//! engine thread, and reports latency percentiles / throughput / batch
+//! occupancy per the paper's serving motivation.
+//!
+//! Run: cargo run --release --example serve_longctx -- [--requests 64] [--clients 4]
+
+use anyhow::Result;
+use had::coordinator::{BatchPolicy, Router, Server, ServingModel};
+use had::data::longqa::LongQaGen;
+use had::runtime::{default_artifact_dir, Engine};
+use had::util::cli::Args;
+use had::util::rng::Rng;
+
+fn main() -> Result<()> {
+    had::util::log::init_from_env();
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.get_usize("requests", 64);
+    let n_clients = args.get_usize("clients", 4);
+    let fwd = args.get_str("fwd", "fwd_had");
+
+    // engine thread owns PJRT; handles are Send
+    let engine = Engine::start(default_artifact_dir())?;
+    let router = Router::longqa_default();
+
+    // one serving model per bucket (random weights: serving-path demo)
+    let manifest = had::runtime::Manifest::load(default_artifact_dir())?;
+    let models: Vec<ServingModel> = router
+        .buckets()
+        .iter()
+        .map(|b| ServingModel::random(&manifest, &b.config, 7, &fwd))
+        .collect::<Result<_>>()?;
+
+    // pre-compile every bucket so latency numbers are steady-state
+    for b in router.buckets() {
+        let ms = engine.handle().warmup(&format!("{}__{}", b.config, fwd))?;
+        println!("warmed {}__{fwd} in {ms} ms", b.config);
+    }
+
+    let server = Server::start(
+        engine.handle(),
+        router,
+        models,
+        BatchPolicy { max_wait: std::time::Duration::from_millis(4), ..Default::default() },
+    )?;
+
+    println!("\nserving {n_requests} requests from {n_clients} client threads...");
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let server = &server;
+            scope.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                for i in 0..n_requests / n_clients {
+                    // mixed-length workload across all buckets
+                    let n_ctx = [128usize, 256, 512, 1024][rng.range_usize(0, 4)];
+                    let gen = LongQaGen::new(n_ctx);
+                    let mut tokens = vec![0i32; n_ctx];
+                    let _label = gen.sample(&mut rng, &mut tokens);
+                    match server.infer(tokens) {
+                        Ok(resp) => {
+                            if i == 0 {
+                                println!(
+                                    "client {c}: first response from {} in {:.2} ms (pred {}, occ {})",
+                                    resp.bucket,
+                                    resp.latency_us as f64 / 1e3,
+                                    resp.pred,
+                                    resp.batch_occupancy
+                                );
+                            }
+                        }
+                        Err(e) => eprintln!("client {c}: {e:#}"),
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+
+    let snap = server.metrics.snapshot();
+    snap.print("serve_longctx");
+    println!(
+        "wall time {elapsed:?} => {:.1} req/s end-to-end",
+        snap.requests as f64 / elapsed.as_secs_f64()
+    );
+    println!("serve_longctx OK");
+    Ok(())
+}

@@ -1,0 +1,212 @@
+"""AOT artifact builder: lower every (config, kind, variant) graph to HLO text.
+
+Emits HLO *text*, NOT serialized HloModuleProto — jax >= 0.5 writes protos
+with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<config>__<name>.hlo.txt   one per artifact
+  artifacts/manifest.json              the Rust-side contract: model
+      configs, parameter layout (name/shape/init), artifact signatures.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--only tinyglue] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, steps
+from .model import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Experiment configuration registry (mirrors DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+# Batch sizes chosen for the single-core CPU testbed; EXPERIMENTS.md records
+# the scale. n_top defaults follow the paper: 30 @ n=256 context scaled
+# linearly (§3.2 / §4.3).
+
+CONFIGS: Dict[str, Dict[str, Any]] = {
+    # GLUE analog: BERT-shaped token-mode encoder (paper §4.1, Table 1)
+    "tinyglue": {
+        "model": ModelConfig(
+            n_layers=2, d_model=64, n_heads=4, d_ff=128,
+            n_ctx=128, n_classes=4, vocab=256, n_top=15, block_q=64,
+        ),
+        "train_batch": 16,
+        "eval_batch": 16,
+    },
+    # ImageNet analog, DeiT-B stand-in (paper §4.2, Table 2)
+    "vision_base": {
+        "model": ModelConfig(
+            n_layers=4, d_model=96, n_heads=8, d_ff=192,
+            n_ctx=65, n_classes=8, vocab=0, input_dim=48, n_top=10, block_q=65,
+        ),
+        "train_batch": 16,
+        "eval_batch": 16,
+    },
+    # ImageNet analog, DeiT-T stand-in — also the Figure-3 N-sweep subject
+    "vision_tiny": {
+        "model": ModelConfig(
+            n_layers=2, d_model=48, n_heads=4, d_ff=96,
+            n_ctx=65, n_classes=8, vocab=0, input_dim=48, n_top=10, block_q=65,
+        ),
+        "train_batch": 16,
+        "eval_batch": 16,
+    },
+}
+
+# QuALITY analog at powers-of-two context lengths (paper §4.3, Figure 5).
+# N scales linearly with context: 15 @ 128 ... 120 @ 1024 (paper's ratio).
+_LONGQA_BATCH = {128: 16, 256: 16, 512: 8, 1024: 4}
+for _n, _b in _LONGQA_BATCH.items():
+    CONFIGS[f"longqa_{_n}"] = {
+        "model": ModelConfig(
+            n_layers=2, d_model=64, n_heads=4, d_ff=128,
+            n_ctx=_n, n_classes=4, vocab=256,
+            n_top=max(1, 15 * _n // 128), block_q=min(64, _n),
+        ),
+        "train_batch": _b,
+        "eval_batch": _b,
+    }
+
+
+def artifact_plan(config_name: str) -> List[Dict[str, Any]]:
+    """Artifacts to build for one config. Fields consumed by Rust."""
+    entry = CONFIGS[config_name]
+    tb, eb = entry["train_batch"], entry["eval_batch"]
+    plan = [
+        {"name": "teacher_step", "kind": "teacher_step", "variant": "standard", "ste": True, "pallas": False, "batch": tb},
+        {"name": "calib", "kind": "calib", "variant": "standard", "ste": True, "pallas": False, "batch": tb},
+        {"name": "distill_had_tanh", "kind": "distill_step", "variant": "had", "ste": False, "pallas": False, "batch": tb},
+        {"name": "distill_had_ste", "kind": "distill_step", "variant": "had", "ste": True, "pallas": False, "batch": tb},
+        {"name": "fwd_standard", "kind": "fwd", "variant": "standard", "ste": True, "pallas": False, "batch": eb},
+        {"name": "fwd_had", "kind": "fwd", "variant": "had", "ste": True, "pallas": True, "batch": eb},
+    ]
+    if config_name in ("tinyglue", "vision_base", "vision_tiny"):
+        plan += [
+            {"name": "distill_sab_tanh", "kind": "distill_step", "variant": "sab", "ste": False, "pallas": False, "batch": tb},
+            {"name": "distill_sab_ste", "kind": "distill_step", "variant": "sab", "ste": True, "pallas": False, "batch": tb},
+            {"name": "distill_bit_ste", "kind": "distill_step", "variant": "bit", "ste": True, "pallas": False, "batch": tb},
+            {"name": "fwd_bit", "kind": "fwd", "variant": "bit", "ste": True, "pallas": False, "batch": eb},
+            {"name": "fwd_sab", "kind": "fwd", "variant": "sab", "ste": True, "pallas": False, "batch": eb},
+        ]
+    if config_name == "vision_tiny":
+        # Figure 3: full-precision student with top-N only (runtime N).
+        plan += [
+            {"name": "distill_fptopn", "kind": "distill_step", "variant": "fp_topn", "ste": True, "pallas": False, "batch": tb},
+            {"name": "fwd_fptopn", "kind": "fwd", "variant": "fp_topn", "ste": True, "pallas": False, "batch": eb},
+        ]
+    if config_name.startswith("longqa"):
+        # Figure 1: single-request latency with and without the O(n^2) block.
+        plan += [
+            {"name": "fwd_standard_b1", "kind": "fwd", "variant": "standard", "ste": True, "pallas": False, "batch": 1},
+            {"name": "fwd_noattn_b1", "kind": "fwd", "variant": "noattn", "ste": True, "pallas": False, "batch": 1},
+            {"name": "fwd_had_b1", "kind": "fwd", "variant": "had", "ste": True, "pallas": True, "batch": 1},
+        ]
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def build_fn(cfg: ModelConfig, art: Dict[str, Any]):
+    kind = art["kind"]
+    if kind == "teacher_step":
+        return steps.make_teacher_step(cfg)
+    if kind == "distill_step":
+        return steps.make_distill_step(cfg, art["variant"], art["ste"])
+    if kind == "fwd":
+        return steps.make_fwd(cfg, art["variant"], use_pallas=art["pallas"])
+    if kind == "calib":
+        return steps.make_calib(cfg)
+    raise ValueError(kind)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    # keep_unused=True: the rust caller supplies EVERY signature input
+    # positionally (params the graph doesn't touch included — e.g. the
+    # classifier head in the calib graph, or n_top in pallas-fwd graphs).
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(specs) -> List[Dict[str, Any]]:
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def build_all(out_dir: str, only: str | None = None, list_only: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: Dict[str, Any] = {"version": 1, "configs": {}, "artifacts": []}
+    t0 = time.time()
+    n_built = 0
+    for config_name, entry in CONFIGS.items():
+        if only and only not in config_name:
+            continue
+        cfg: ModelConfig = entry["model"]
+        manifest["configs"][config_name] = {
+            "model": cfg.to_dict(),
+            "train_batch": entry["train_batch"],
+            "eval_batch": entry["eval_batch"],
+            "params": [
+                {"name": n, "shape": list(sh), "init": init}
+                for n, sh, init in model.param_specs(cfg)
+            ],
+        }
+        for art in artifact_plan(config_name):
+            fname = f"{config_name}__{art['name']}.hlo.txt"
+            example = steps.example_inputs(cfg, art["kind"], art["batch"])
+            record = {
+                "config": config_name,
+                "file": fname,
+                "inputs": _sig(example),
+                **art,
+            }
+            manifest["artifacts"].append(record)
+            if list_only:
+                print(fname)
+                continue
+            fn = build_fn(cfg, art)
+            text = to_hlo_text(fn, example)
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            record["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+            record["hlo_bytes"] = len(text)
+            n_built += 1
+            print(f"[aot] {fname}  ({len(text) / 1e6:.2f} MB, {time.time() - t0:.0f}s elapsed)")
+    if not list_only:
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"[aot] wrote {n_built} artifacts + manifest.json in {time.time() - t0:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on config name")
+    ap.add_argument("--list", action="store_true", help="list artifact names only")
+    args = ap.parse_args()
+    build_all(args.out_dir, args.only, args.list)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 kernels: Pallas HAD attention, bit-ops Hamming path, binarizers.
+
+`ref` holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from . import binarize, bitops, had_attention, ref  # noqa: F401

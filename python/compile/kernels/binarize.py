@@ -1,0 +1,84 @@
+"""Binarization primitives for Hamming Attention Distillation (HAD).
+
+These implement the paper's Eq. (4) and the stage-wise relaxations of
+Sections 3.5-3.7:
+
+  stage 1:  Q = c * sigma * tanh(Q_c / (c * sigma))        (Eq. 13)
+  stage 2:  Q =     sigma * tanh(Q_c / (c * sigma))        (Eq. 15)
+  stage 3+: Q =     sigma * STE(Q_c / sigma)               (Eq. 18)
+
+`sign` here is the binarization convention used throughout the repo:
+sign(x) = +1 for x >= 0 and -1 otherwise (zero maps to +1 so the output is
+always a valid {-1,+1} pattern — required for the Hamming identity
+q.k = d - 2*ham(q,k)).
+
+All functions are pure jnp and differentiable (the STE via custom_vjp), so
+they can be used both inside Pallas kernels (interpret mode) and in the L2
+training graphs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "hard_sign",
+    "ste_sign",
+    "tanh_binarize",
+    "ste_binarize",
+    "binarize_stage",
+]
+
+
+def hard_sign(x: jax.Array) -> jax.Array:
+    """{-1,+1} sign with sign(0) = +1 (no zero outputs)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+@jax.custom_vjp
+def ste_sign(x: jax.Array) -> jax.Array:
+    """Straight-through estimator sign (paper Eqs. 16-17).
+
+    Forward: hard_sign(x). Backward: identity gradient clipped to |x| <= 1.
+    """
+    return hard_sign(x)
+
+
+def _ste_sign_fwd(x):
+    return hard_sign(x), x
+
+
+def _ste_sign_bwd(x, g):
+    # dSTE/dx = 1 on [-1, 1], 0 elsewhere (Eq. 17).
+    mask = (jnp.abs(x) <= 1.0).astype(g.dtype)
+    return (g * mask,)
+
+
+ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+def tanh_binarize(x: jax.Array, sigma: jax.Array, c: jax.Array, outer_mult: jax.Array) -> jax.Array:
+    """Stage 1/2 scaled-tanh relaxation of binarization.
+
+    ``outer_mult`` selects the stage: pass ``c`` for stage 1 (Eq. 13) and
+    ``1.0`` for stage 2 (Eq. 15). Keeping it a runtime scalar lets a single
+    lowered HLO artifact serve both stages.
+    """
+    sigma = jnp.asarray(sigma, x.dtype)
+    c = jnp.asarray(c, x.dtype)
+    inner = c * sigma
+    return outer_mult * sigma * jnp.tanh(x / inner)
+
+
+def ste_binarize(x: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Stage 3/4 binarization: sigma * STE(x / sigma) (Eq. 18)."""
+    sigma = jnp.asarray(sigma, x.dtype)
+    return sigma * ste_sign(x / sigma)
+
+
+def binarize_stage(x: jax.Array, sigma: jax.Array, c: jax.Array, outer_mult: jax.Array, *, ste: bool) -> jax.Array:
+    """Dispatch helper used by the L2 model: tanh relaxation or STE."""
+    if ste:
+        return ste_binarize(x, sigma)
+    return tanh_binarize(x, sigma, c, outer_mult)

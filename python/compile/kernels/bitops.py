@@ -1,0 +1,118 @@
+"""Bit-exact Hamming formulation of the binarized score matrix.
+
+This module proves, in code, the identity the whole paper rests on:
+
+    sign(q) . sign(k)  =  d  -  2 * ham(pack(q), pack(k))
+
+where ``pack`` packs the sign bits of a d-vector into ceil(d/32) uint32
+words and ``ham`` is XOR + popcount. The paper's CAM hardware evaluates the
+right-hand side; the TPU kernel evaluates the left-hand side on the MXU;
+the Rust CPU fast path (rust/src/binary/) evaluates the right-hand side
+with u64 popcounts. The pytest suite checks all three agree bit-exactly
+through this module's oracle-vs-kernel pairing.
+
+Also includes a Pallas kernel variant (`hamming_scores_pallas`) operating
+on pre-packed keys/queries, demonstrating that the packed layout (32x
+smaller K) is expressible in the same kernel language as the MXU variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .binarize import hard_sign
+
+INTERPRET = True
+
+
+def pack_bits(x) -> jax.Array:
+    """Pack sign bits of the last axis into uint32 words.
+
+    bit i of word w holds sign(x[..., 32*w + i]) >= 0. The last axis length
+    must be a multiple of 32 (models in this repo use d_head in {16,32,64,
+    128}; d<32 callers pad with +1 signs which contribute equally to both
+    sides of the Hamming identity and cancel).
+    """
+    d = x.shape[-1]
+    if d % 32 != 0:
+        pad = 32 - d % 32
+        # Pad with +1 signs: XOR of equal bits is 0, so distances are
+        # unchanged relative to the padded dot product d' = d + pad.
+        x = jnp.concatenate([x, jnp.ones(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+        d = x.shape[-1]
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[:-1] + (d // 32, 32))
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint32)
+
+
+def popcount_u32(x) -> jax.Array:
+    """Branch-free 32-bit popcount (Hacker's Delight 5-2) in jnp."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def hamming_scores(q_packed, k_packed, d: int) -> jax.Array:
+    """Binary dot products from packed patterns: d - 2*ham.
+
+    q_packed: (..., n_q, w) uint32, k_packed: (..., n_k, w) uint32.
+    ``d`` is the ORIGINAL (unpadded) dimension; padding bits are equal in
+    both operands so they never contribute to the XOR.
+    Returns int32 (..., n_q, n_k) equal to sign(q).sign(k).
+    """
+    x = q_packed[..., :, None, :] ^ k_packed[..., None, :, :]
+    ham = jnp.sum(popcount_u32(x), axis=-1)
+    return d - 2 * ham
+
+
+def binary_scores_from_float(q, k) -> jax.Array:
+    """End-to-end packed path: float q,k -> packed -> Hamming scores."""
+    d = q.shape[-1]
+    return hamming_scores(pack_bits(q), pack_bits(k), d)
+
+
+def _hamming_kernel(q_ref, k_ref, o_ref, *, d: int):
+    qp = q_ref[...]
+    kp = k_ref[...]
+    x = qp[:, None, :] ^ kp[None, :, :]
+    ham = jnp.sum(popcount_u32(x), axis=-1)
+    o_ref[...] = (d - 2 * ham).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block_q"))
+def hamming_scores_pallas(q_packed, k_packed, *, d: int, block_q: int = 64):
+    """Pallas kernel over packed operands: (bh, n_q, w) x (bh, n_k, w).
+
+    The packed-K slab per (batch*head) is w = d/32 words wide — the 32x
+    VMEM saving that lets long-context K stay resident (DESIGN.md
+    §Hardware-Adaptation).
+    """
+    bh, n_q, w = q_packed.shape
+    n_k = k_packed.shape[1]
+    block_q = min(block_q, n_q)
+    if n_q % block_q != 0:
+        raise ValueError(f"n_q={n_q} not divisible by block_q={block_q}")
+    kernel = functools.partial(_hamming_kernel, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, n_k, w), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, n_k), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n_q, n_k), jnp.int32),
+        interpret=INTERPRET,
+    )(q_packed, k_packed)
+
+
+def packed_k_bytes(n_k: int, d: int) -> int:
+    """Bytes of a packed key cache row-major (hwsim + DESIGN.md numbers)."""
+    return n_k * ((d + 31) // 32) * 4

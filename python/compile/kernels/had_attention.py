@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: fused HAD attention (paper Eqs. 4-8, Figure 2).
+
+One fused kernel computes, per (batch*head, query-block) grid cell:
+
+    sign(Q) sign(K)^T  ->  top-N per query  ->  softmax(./sqrt(d))  ->  A V
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the binary score matrix
+is realized as a ±1 matmul (bit-exact in f32/bf16 because |scores| <= d_head
+<= 256), which runs on the MXU at full throughput; K and V stay resident in
+VMEM across all query blocks (binarized K is 32x smaller once bit-packed at
+rest, which is what makes long-context K residency possible — the packed
+layout itself is exercised by kernels/bitops.py and the Rust fast path);
+top-N uses lax.top_k (sorting network) and the AV accumulation gathers only
+N rows of V per query.
+
+The kernel MUST run with interpret=True in this environment: real TPU
+lowering emits Mosaic custom-calls that the CPU PJRT plugin cannot execute.
+`interpret` is therefore a module-level switch that aot.py leaves True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .binarize import hard_sign
+
+# CPU PJRT can only execute interpret-mode Pallas. Keep this True.
+INTERPRET = True
+
+# Max d_head for which ±1 matmul accumulation is integer-exact in bf16.
+MAX_EXACT_D_HEAD = 256
+
+
+def _had_attention_kernel(q_ref, k_ref, v_ref, t_ref, o_ref, *, n_top: int, d_scale: float):
+    """Kernel body. Shapes (per grid cell):
+
+    q_ref: (block_q, d)   — one query block of one (batch, head)
+    k_ref: (n_k, d)       — all keys of that (batch, head), VMEM resident
+    v_ref: (n_k, d_v)     — all values
+    t_ref: (1, 1)         — softmax temperature (sigma_q*sigma_k, runtime)
+    o_ref: (block_q, d_v) — output block
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    temp = t_ref[0, 0]
+
+    # Binarize and score: ±1 matmul == d - 2*hamming, exact in f32.
+    qb = hard_sign(q)
+    kb = hard_sign(k)
+    scores = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32)
+
+    # Top-N per query row (Eq. 6), ties broken by lowest key index (the
+    # lax.top_k convention shared with ref.topn_mask_ref). Implemented as
+    # a stable variadic sort + slice rather than lax.top_k: jax lowers
+    # top_k to a `topk(..., largest=true)` HLO op that the xla_extension
+    # 0.5.1 text parser predates; variadic `sort` round-trips cleanly.
+    n_k_total = scores.shape[-1]
+    iota = lax.broadcasted_iota(jnp.int32, scores.shape, len(scores.shape) - 1)
+    sorted_neg, sorted_idx = lax.sort(
+        (-scores, iota), dimension=-1, is_stable=True, num_keys=1
+    )
+    top_vals = -sorted_neg[..., :n_top]
+    top_idx = sorted_idx[..., :n_top]
+    del n_k_total
+
+    # Softmax over only the kept logits, scaled by temp/sqrt(d_head)
+    # (Eq. 7; temp carries the sigma_q*sigma_k standardization factor).
+    logits = top_vals * (d_scale * temp)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    expl = jnp.exp(logits)
+    probs = expl / jnp.sum(expl, axis=-1, keepdims=True)
+
+    # Sparse accumulation over V: gather N rows per query (Eq. 8).
+    v_gathered = jnp.take(v, top_idx, axis=0)  # (block_q, n_top, d_v)
+    o_ref[...] = jnp.einsum("qn,qnd->qd", probs, v_gathered).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_top", "block_q"))
+def had_attention(q, k, v, *, n_top: int, block_q: int = 128, temp=None):
+    """Fused HAD attention over (B, H, n, d) tensors.
+
+    Args:
+      q: (B, H, n_q, d) continuous queries (binarized inside the kernel).
+      k: (B, H, n_k, d) continuous keys.
+      v: (B, H, n_k, d_v) values (full precision, per the paper).
+      n_top: sparsity parameter N — attention entries kept per query.
+      block_q: query rows per grid cell (VMEM tile height).
+      temp: optional runtime softmax temperature scalar — carries the
+        sigma_q*sigma_k standardization product of the calibrated model
+        (paper §3.4); defaults to 1.
+
+    Returns (B, H, n_q, d_v).
+    """
+    b, h, n_q, d = q.shape
+    n_k = k.shape[2]
+    d_v = v.shape[3]
+    if d > MAX_EXACT_D_HEAD:
+        raise ValueError(f"d_head={d} breaks ±1-matmul integer exactness (max {MAX_EXACT_D_HEAD})")
+    n_top = min(n_top, n_k)
+    block_q = min(block_q, n_q)
+    if n_q % block_q != 0:
+        raise ValueError(f"n_q={n_q} must be divisible by block_q={block_q}")
+
+    d_scale = 1.0 / (float(d) ** 0.5)
+    if temp is None:
+        temp = jnp.ones((), jnp.float32)
+    temp = jnp.asarray(temp, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_had_attention_kernel, n_top=n_top, d_scale=d_scale)
+
+    qf = q.reshape(b * h, n_q, d)
+    kf = k.reshape(b * h, n_k, d)
+    vf = v.reshape(b * h, n_k, d_v)
+
+    grid = (b * h, n_q // block_q)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Query block: march down the query axis per grid step.
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            # K and V: whole (n_k, d) slab per (batch*head) — VMEM resident
+            # across the inner query-block loop (packed-K residency story).
+            pl.BlockSpec((None, n_k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, n_k, d_v), lambda i, j: (i, 0, 0)),
+            # Runtime softmax temperature (broadcast scalar).
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d_v), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_q, d_v), v.dtype),
+        interpret=INTERPRET,
+    )(qf, kf, vf, temp)
+    return out.reshape(b, h, n_q, d_v)
+
+
+def vmem_report(*, n_k: int, d: int, d_v: int, block_q: int, n_top: int) -> dict:
+    """Static VMEM/MXU estimate for one grid cell (DESIGN.md §Perf, L1).
+
+    Returns byte counts for the resident tensors and an MXU utilization
+    proxy: fraction of the (8,128)x(128,128) systolic pipeline kept busy by
+    the score matmul given the tile shapes. Used by EXPERIMENTS.md §Perf —
+    interpret-mode wallclock is NOT a TPU proxy.
+    """
+    f32 = 4
+    q_bytes = block_q * d * f32
+    k_bytes = n_k * d * f32
+    k_packed_bytes = n_k * ((d + 31) // 32) * 4  # bit-packed at rest
+    v_bytes = n_k * d_v * f32
+    out_bytes = block_q * d_v * f32
+    gather_bytes = block_q * n_top * d_v * f32
+    total = q_bytes + k_bytes + v_bytes + out_bytes + gather_bytes
+    # MXU proxy: matmul (block_q x d) @ (d x n_k); MXU tiles are 128x128.
+    mxu_m = min(block_q, 128) / 128.0
+    mxu_k = min(d, 128) / 128.0
+    return {
+        "q_bytes": q_bytes,
+        "k_bytes": k_bytes,
+        "k_packed_bytes": k_packed_bytes,
+        "v_bytes": v_bytes,
+        "gather_bytes": gather_bytes,
+        "out_bytes": out_bytes,
+        "total_bytes": total,
+        "fits_16MiB_vmem": total <= 16 * 1024 * 1024,
+        "mxu_tile_utilization": mxu_m * mxu_k,
+    }

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness ground truth: deliberately simple, no Pallas, no
+bit tricks, no fused ops. The pytest suite (python/tests/) asserts that the
+Pallas kernels and the bit-ops formulations match these to float tolerance
+(and bit-exactly where integers are involved).
+
+Conventions shared with the kernels:
+  * sign(0) = +1 (see binarize.hard_sign)
+  * top-N selection per query row, ties broken by lowest key index
+    (the lax.top_k convention)
+  * softmax is computed over ONLY the selected N logits, after scaling by
+    1/sqrt(d_head) (paper Eq. 7)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .binarize import hard_sign
+
+__all__ = [
+    "standard_attention_ref",
+    "had_scores_ref",
+    "topn_mask_ref",
+    "had_attention_ref",
+    "hamming_distance_ref",
+]
+
+
+def standard_attention_ref(q, k, v, *, scale=None):
+    """Vanilla softmax(QK^T/sqrt(d)) V  (paper Eqs. 1-3).
+
+    q: (..., n_q, d), k: (..., n_k, d), v: (..., n_k, d_v).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)
+
+
+def had_scores_ref(q, k):
+    """Binarized attention logits  A_l = sign(Q) . sign(K)^T  (Eqs. 4-5).
+
+    Output entries are integers in {-d, -d+2, ..., d} represented in the
+    input dtype.
+    """
+    return jnp.einsum("...qd,...kd->...qk", hard_sign(q), hard_sign(k))
+
+
+def hamming_distance_ref(q, k):
+    """Hamming distance between sign patterns, element-count convention.
+
+    ham(q, k) = #{i : sign(q_i) != sign(k_i)}.  Related to the binary dot
+    product by  sign(q).sign(k) = d - 2*ham(q, k).
+    """
+    qs = hard_sign(q)
+    ks = hard_sign(k)
+    neq = (qs[..., :, None, :] != ks[..., None, :, :]).astype(jnp.int32)
+    return jnp.sum(neq, axis=-1)
+
+
+def topn_mask_ref(scores, n_top):
+    """Boolean mask of the top-``n_top`` entries per row (Eq. 6).
+
+    Ties are broken by preferring the lower column index, matching
+    lax.top_k. Implemented with a stable argsort so it shares no code with
+    the kernels it checks.
+    """
+    n = scores.shape[-1]
+    n_top = min(n_top, n)
+    # Stable argsort of descending score; equal scores keep index order.
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return ranks < n_top
+
+
+def had_attention_ref(q, k, v, n_top, *, d_scale=None):
+    """Full HAD attention oracle (paper Eqs. 4-8).
+
+    1. binarize q, k with hard_sign
+    2. integer logits A_l = Q K^T
+    3. keep top-N logits per query
+    4. softmax over the kept logits scaled by 1/sqrt(d_head)
+    5. accumulate over V
+
+    ``d_scale`` overrides the 1/sqrt(d_head) scaling (used by tests).
+    """
+    d = q.shape[-1]
+    if d_scale is None:
+        d_scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = had_scores_ref(q, k)
+    mask = topn_mask_ref(logits, n_top)
+    neg_inf = jnp.asarray(-1e30, logits.dtype)
+    masked = jnp.where(mask, logits * d_scale, neg_inf)
+    probs = jax.nn.softmax(masked, axis=-1)
+    # Entries outside the mask got exp(-1e30 - max) == 0 exactly.
+    probs = jnp.where(mask, probs, 0.0)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)

@@ -1,0 +1,540 @@
+"""L2: transformer encoder with swappable attention variants (HAD + baselines).
+
+This is the build-time model definition. It is lowered ONCE per
+(config, variant, kind) by aot.py into HLO text artifacts that the Rust
+coordinator executes via PJRT — Python never runs on the request path.
+
+Variants (paper §4 columns):
+  standard  — softmax(QK^T/sqrt(d)) V; the teacher and the FP baseline.
+  had       — sign-binarized Q/K + top-N sparse attention (the paper).
+              Training graphs use the differentiable tanh/STE relaxations
+              (kernels.binarize); eval graphs use the fused Pallas kernel.
+  bit       — BiT-like full activation binarization baseline: Q, K, V all
+              binarized with XNOR-net style mean-|x| scales, dense softmax.
+  sab       — the "w/ SAB" ablation: HAD pipeline + BiViT-style
+              softmax-aware binarization of the attention matrix.
+  noattn    — attention block replaced by its V path only (O(n) ablation
+              used for the Figure-1 runtime study).
+
+Model shape: pre-LN encoder; CLS-token classification head. Two input
+modes: token ids (vocab > 0) and dense patch vectors (vocab == 0, ViT-ish).
+Layers are scanned with stacked parameters, which keeps the lowered HLO
+size independent of depth and fixes the parameter layout contract with
+Rust (see param_specs / DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binarize
+from .kernels.had_attention import had_attention
+
+Params = Dict[str, jax.Array]
+
+VARIANTS = ("standard", "had", "bit", "sab", "noattn")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters. `vocab == 0` selects dense-input mode."""
+
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_ctx: int            # total sequence length INCLUDING the CLS position
+    n_classes: int
+    vocab: int = 0        # 0 => dense patch inputs
+    input_dim: int = 0    # patch feature size when vocab == 0
+    n_top: int = 30       # paper's N (top-N attention entries per query)
+    block_q: int = 64     # Pallas query tile
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_patches(self) -> int:
+        return self.n_ctx - 1
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ModelConfig":
+        return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout contract (shared with Rust via the manifest)
+# ---------------------------------------------------------------------------
+
+# init kinds understood by the Rust initializer: "normal" (std 0.02),
+# "zeros", "ones".
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Ordered (name, shape, init) list — THE parameter contract.
+
+    Rust materializes parameters, Adam moments, and checkpoints in exactly
+    this order. Layer tensors are stacked on a leading n_layers axis.
+    """
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    specs: List[Tuple[str, Tuple[int, ...], str]] = []
+    if cfg.vocab > 0:
+        specs.append(("tok_emb", (cfg.vocab, D), "normal"))
+    else:
+        specs.append(("patch_w", (cfg.input_dim, D), "normal"))
+        specs.append(("patch_b", (D,), "zeros"))
+        specs.append(("cls_tok", (D,), "normal"))
+    specs.append(("pos_emb", (cfg.n_ctx, D), "normal"))
+    layer = [
+        ("ln1_g", (L, D), "ones"),
+        ("ln1_b", (L, D), "zeros"),
+        ("wq", (L, D, D), "normal"),
+        ("bq", (L, D), "zeros"),
+        ("wk", (L, D, D), "normal"),
+        ("bk", (L, D), "zeros"),
+        ("wv", (L, D, D), "normal"),
+        ("bv", (L, D), "zeros"),
+        ("wo", (L, D, D), "normal"),
+        ("bo", (L, D), "zeros"),
+        ("ln2_g", (L, D), "ones"),
+        ("ln2_b", (L, D), "zeros"),
+        ("w1", (L, D, F), "normal"),
+        ("b1", (L, F), "zeros"),
+        ("w2", (L, F, D), "normal"),
+        ("b2", (L, D), "zeros"),
+    ]
+    specs.extend(layer)
+    specs.extend(
+        [
+            ("lnf_g", (D,), "ones"),
+            ("lnf_b", (D,), "zeros"),
+            ("head_w", (D, cfg.n_classes), "normal"),
+            ("head_b", (cfg.n_classes,), "zeros"),
+        ]
+    )
+    return specs
+
+
+def params_from_list(cfg: ModelConfig, tensors: List[jax.Array]) -> Params:
+    specs = param_specs(cfg)
+    assert len(tensors) == len(specs), (len(tensors), len(specs))
+    return {name: t for (name, _, _), t in zip(specs, tensors)}
+
+
+def params_to_list(cfg: ModelConfig, params: Params) -> List[jax.Array]:
+    return [params[name] for name, _, _ in param_specs(cfg)]
+
+
+LAYER_PARAM_NAMES = (
+    "ln1_g ln1_b wq bq wk bk wv bv wo bo ln2_g ln2_b w1 b1 w2 b2".split()
+)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Reference initializer (python tests only; Rust owns init at runtime)."""
+    params: Params = {}
+    for name, shape, kind in param_specs(cfg):
+        if kind == "normal":
+            key, sub = jax.random.split(key)
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        elif kind == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = jnp.ones(shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def embed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token-id or dense-patch embedding; returns (B, n_ctx, D)."""
+    if cfg.vocab > 0:
+        h = params["tok_emb"][x]  # (B, n, D)
+    else:
+        h = x @ params["patch_w"] + params["patch_b"]  # (B, n_patches, D)
+        cls = jnp.broadcast_to(params["cls_tok"], (h.shape[0], 1, cfg.d_model))
+        h = jnp.concatenate([cls, h], axis=1)
+    return h + params["pos_emb"][None, :, :]
+
+
+def _split_heads(x, cfg: ModelConfig):
+    b, n, _ = x.shape
+    return x.reshape(b, n, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x, cfg: ModelConfig):
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+@jax.custom_vjp
+def _topk_threshold(logits, n_top):
+    """Value of the N-th largest logit per row; gradient-free by definition.
+
+    custom_vjp keeps jnp.sort's JVP rule — which emits a batched gather the
+    xla_extension 0.5.1 HLO text converter rejects (predates
+    operand_batching_dims) — entirely out of differentiated graphs. The
+    selection is discrete, so a zero cotangent is also the mathematically
+    right answer.
+    """
+    n = logits.shape[-1]
+    k = jnp.clip(n_top.astype(jnp.int32), 1, n)
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    # k-th largest via one-hot contraction instead of a batched gather.
+    sel = jax.nn.one_hot(k - 1, n, dtype=logits.dtype)
+    return jnp.sum(sorted_desc * sel, axis=-1, keepdims=True)
+
+
+def _topk_threshold_fwd(logits, n_top):
+    return _topk_threshold(logits, n_top), (logits, n_top)
+
+
+def _topk_threshold_bwd(res, g):
+    logits, n_top = res
+    del g
+    return jnp.zeros_like(logits), jnp.zeros_like(n_top)
+
+
+_topk_threshold.defvjp(_topk_threshold_fwd, _topk_threshold_bwd)
+
+
+def _topn_sparse_softmax(logits, n_top):
+    """softmax over only the top-N logits per row (Eqs. 6-7).
+
+    ``n_top`` is a RUNTIME scalar (f32, floor'd) so a single lowered
+    artifact serves every N — the Figure-3 N-sweep and the Figure-5
+    linear-N-scaling experiments reuse one graph. Implemented with a full
+    descending sort + dynamic threshold instead of lax.top_k (which needs a
+    static k).
+
+    Threshold semantics: keep entries >= the N-th largest value. With tied
+    logits at the boundary this keeps MORE than N entries (renormalized) —
+    the fused Pallas kernel breaks ties by key index and keeps exactly N;
+    the pytest suite pins down both behaviours. Training graphs only.
+    """
+    thresh = _topk_threshold(logits, jnp.asarray(n_top, jnp.float32))
+    mask = logits >= thresh
+    neg_inf = jnp.asarray(-1e30, logits.dtype)
+    probs = jax.nn.softmax(jnp.where(mask, logits, neg_inf), axis=-1)
+    return jnp.where(mask, probs, 0.0)
+
+
+@jax.custom_vjp
+def _ste_gate(hard, soft):
+    """Forward `hard`, backward as if it were `soft` (identity STE)."""
+    del soft
+    return hard
+
+
+def _ste_gate_fwd(hard, soft):
+    return hard, None
+
+
+def _ste_gate_bwd(_, g):
+    return (jnp.zeros_like(g), g)
+
+
+_ste_gate.defvjp(_ste_gate_fwd, _ste_gate_bwd)
+
+
+def _sab_binarize(probs):
+    """BiViT-style softmax-aware binarization of the attention matrix.
+
+    Softmax outputs are non-negative with a long tail; binarize each row
+    against its mean and rescale with the least-squares optimal scalar
+    s = sum(p*b)/sum(b). STE carries gradients through the thresholding.
+    """
+    thresh = jnp.mean(probs, axis=-1, keepdims=True)
+    b = (probs >= thresh).astype(probs.dtype)
+    s = jnp.sum(probs * b, axis=-1, keepdims=True) / jnp.maximum(
+        jnp.sum(b, axis=-1, keepdims=True), 1.0
+    )
+    hard = b * s
+    return _ste_gate(hard, probs)
+
+
+def _mean_abs_binarize(x):
+    """XNOR-net style binarization used by the `bit` baseline: sign * mean|x|."""
+    alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    return alpha * binarize.ste_sign(x)
+
+
+def attention(
+    x: jax.Array,
+    lp: Params,
+    cfg: ModelConfig,
+    variant: str,
+    *,
+    ste: bool,
+    c,
+    outer_mult,
+    sigma_q,
+    sigma_k,
+    n_top=None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One multi-head attention block under a given variant.
+
+    Returns (output (B,n,D), att_logits (B,H,n,n) scaled by 1/sqrt(d) for
+    the distillation loss, or None for `noattn`). The logits returned are
+    PRE-sparsification, which is what Eq. 9 distills.
+    """
+    q = _split_heads(x @ lp["wq"] + lp["bq"], cfg)
+    k = _split_heads(x @ lp["wk"] + lp["bk"], cfg)
+    v = _split_heads(x @ lp["wv"] + lp["bv"], cfg)
+    scale = 1.0 / (cfg.d_head**0.5)
+    if n_top is None:
+        n_top = cfg.n_top
+
+    if variant == "noattn":
+        out = _merge_heads(v, cfg)
+        return out @ lp["wo"] + lp["bo"], None
+
+    if variant == "standard":
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        out = _merge_heads(ctx, cfg)
+        return out @ lp["wo"] + lp["bo"], logits
+
+    if variant == "fp_topn":
+        # Full-precision Q/K with top-N sparsification only — the Figure-3
+        # progressive-N distillation subject.
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        probs = _topn_sparse_softmax(logits, n_top)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        out = _merge_heads(ctx, cfg)
+        return out @ lp["wo"] + lp["bo"], logits
+
+    if variant == "bit":
+        qb = _mean_abs_binarize(q)
+        kb = _mean_abs_binarize(k)
+        vb = _mean_abs_binarize(v)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vb)
+        out = _merge_heads(ctx, cfg)
+        return out @ lp["wo"] + lp["bo"], logits
+
+    # had / sab: sigma-standardized binarization of Q and K (paper §3.4-3.7)
+    qb = binarize.binarize_stage(q, sigma_q, c, outer_mult, ste=ste)
+    kb = binarize.binarize_stage(k, sigma_k, c, outer_mult, ste=ste)
+
+    if use_pallas and variant == "had" and ste:
+        # Inference path: the fused L1 kernel. sign() inside the kernel
+        # recovers the same ±1 pattern; sigma_q*sigma_k moves into the
+        # softmax temperature. n_top is static here (production kernel).
+        temp = (sigma_q * sigma_k).reshape(())
+        ctx = had_attention(
+            q, k, v, n_top=cfg.n_top, block_q=min(cfg.block_q, cfg.n_ctx), temp=temp
+        )
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+        out = _merge_heads(ctx, cfg)
+        return out @ lp["wo"] + lp["bo"], logits
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale  # Eq. 5 (+ scale)
+
+    if variant == "sab":
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = _sab_binarize(probs)
+    else:
+        probs = _topn_sparse_softmax(logits, n_top)
+
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = _merge_heads(ctx, cfg)
+    return out @ lp["wo"] + lp["bo"], logits
+
+
+def _mlp(x, lp):
+    h = x @ lp["w1"] + lp["b1"]
+    h = jax.nn.gelu(h)
+    return h @ lp["w2"] + lp["b2"]
+
+
+def _layer(h, lp, cfg, variant, *, ste, c, outer_mult, sq, sk, n_top, use_pallas):
+    attn_in = layer_norm(h, lp["ln1_g"], lp["ln1_b"])
+    attn_out, att_logits = attention(
+        attn_in, lp, cfg, variant,
+        ste=ste, c=c, outer_mult=outer_mult, sigma_q=sq, sigma_k=sk,
+        n_top=n_top, use_pallas=use_pallas,
+    )
+    h = h + attn_out
+    h = h + _mlp(layer_norm(h, lp["ln2_g"], lp["ln2_b"]), lp)
+    return h, att_logits
+
+
+def _stacked_layers(params: Params):
+    return {name: params[name] for name in LAYER_PARAM_NAMES}
+
+
+def forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    variant: str = "standard",
+    *,
+    ste: bool = True,
+    c=1.0,
+    outer_mult=1.0,
+    sigma_q=None,
+    sigma_k=None,
+    n_top=None,
+    use_pallas: bool = False,
+    return_att: bool = False,
+):
+    """Full encoder forward. sigma_{q,k}: (n_layers,) runtime arrays.
+
+    Returns logits (B, n_classes); with return_att also the stacked
+    per-layer attention logits (L, B, H, n, n) — training-size models only.
+    """
+    L = cfg.n_layers
+    if sigma_q is None:
+        sigma_q = jnp.ones((L,), jnp.float32)
+    if sigma_k is None:
+        sigma_k = jnp.ones((L,), jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    outer_mult = jnp.asarray(outer_mult, jnp.float32)
+
+    h = embed(params, x, cfg)
+
+    def body(carry, xs):
+        lp, sq, sk = xs
+        h = carry
+        h, att = _layer(
+            h, lp, cfg, variant,
+            ste=ste, c=c, outer_mult=outer_mult, sq=sq, sk=sk,
+            n_top=n_top, use_pallas=use_pallas,
+        )
+        return h, (att if return_att else 0.0)
+
+    h, atts = jax.lax.scan(body, h, (_stacked_layers(params), sigma_q, sigma_k))
+    h = layer_norm(h, params["lnf_g"], params["lnf_b"])
+    logits = h[:, 0, :] @ params["head_w"] + params["head_b"]
+    if return_att:
+        return logits, atts
+    return logits
+
+
+def qk_std(params: Params, x: jax.Array, cfg: ModelConfig):
+    """Per-layer std of the continuous Q_c and K_c activations (paper §3.4).
+
+    Returns (sigma_q (L,), sigma_k (L,)) for one minibatch; the Rust
+    calibration loop averages this over 100 minibatches (Eq. 12).
+    """
+    h = embed(params, x, cfg)
+
+    def body(carry, lp):
+        h = carry
+        attn_in = layer_norm(h, lp["ln1_g"], lp["ln1_b"])
+        q = attn_in @ lp["wq"] + lp["bq"]
+        k = attn_in @ lp["wk"] + lp["bk"]
+        sq = jnp.std(q)
+        sk = jnp.std(k)
+        h, _ = _layer(
+            h, lp, cfg, "standard",
+            ste=True, c=1.0, outer_mult=1.0, sq=1.0, sk=1.0,
+            n_top=None, use_pallas=False,
+        )
+        return h, (sq, sk)
+
+    _, (sqs, sks) = jax.lax.scan(body, h, _stacked_layers(params))
+    return sqs, sks
+
+
+# ---------------------------------------------------------------------------
+# Joint teacher/student forward for distillation (memory-lean: the KL-att
+# accumulates inside the layer scan instead of stacking (L,B,H,n,n) logits)
+# ---------------------------------------------------------------------------
+
+
+def kl_attention_rows(t_logits, s_logits):
+    """Eq. 9 with softmax-normalized teacher weights (numerically stable
+    reading of the paper's exp(A_t) weighting): mean over all rows of all
+    heads of KL(softmax(A_t) || softmax(A_s))."""
+    p_t = jax.nn.softmax(t_logits, axis=-1)
+    lp_t = jax.nn.log_softmax(t_logits, axis=-1)
+    lp_s = jax.nn.log_softmax(s_logits, axis=-1)
+    kl = jnp.sum(p_t * (lp_t - lp_s), axis=-1)  # (B, H, n)
+    return jnp.mean(kl)
+
+
+def kl_output(z_t, z_s):
+    """Eq. 10 with softmax-normalized teacher weights, summed over classes,
+    mean over the batch."""
+    p_t = jax.nn.softmax(z_t, axis=-1)
+    lp_t = jax.nn.log_softmax(z_t, axis=-1)
+    lp_s = jax.nn.log_softmax(z_s, axis=-1)
+    return jnp.mean(jnp.sum(p_t * (lp_t - lp_s), axis=-1))
+
+
+def distill_forward(
+    s_params: Params,
+    t_params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    variant: str,
+    *,
+    ste: bool,
+    c,
+    outer_mult,
+    sigma_q,
+    sigma_k,
+    n_top=None,
+):
+    """Run teacher (standard) and student (variant) in one layer scan.
+
+    Returns (z_s, z_t, kl_att_mean). The per-layer KL contribution is
+    reduced inside the scan so peak memory stays O(B*H*n^2) for ONE layer.
+    """
+    c = jnp.asarray(c, jnp.float32)
+    outer_mult = jnp.asarray(outer_mult, jnp.float32)
+
+    h_t = embed(t_params, x, cfg)
+    h_s = embed(s_params, x, cfg)
+
+    t_stack = _stacked_layers(t_params)
+    s_stack = _stacked_layers(s_params)
+
+    def body(carry, xs):
+        h_t, h_s = carry
+        lp_t, lp_s, sq, sk = xs
+        h_t, att_t = _layer(
+            h_t, lp_t, cfg, "standard",
+            ste=True, c=c, outer_mult=outer_mult, sq=sq, sk=sk,
+            n_top=n_top, use_pallas=False,
+        )
+        h_s, att_s = _layer(
+            h_s, lp_s, cfg, variant,
+            ste=ste, c=c, outer_mult=outer_mult, sq=sq, sk=sk,
+            n_top=n_top, use_pallas=False,
+        )
+        kl = kl_attention_rows(att_t, att_s)
+        return (h_t, h_s), kl
+
+    (h_t, h_s), kls = jax.lax.scan(
+        body, (h_t, h_s), (t_stack, s_stack, sigma_q, sigma_k)
+    )
+
+    def head(params, h):
+        h = layer_norm(h, params["lnf_g"], params["lnf_b"])
+        return h[:, 0, :] @ params["head_w"] + params["head_b"]
+
+    z_t = head(t_params, h_t)
+    z_s = head(s_params, h_s)
+    return z_s, z_t, jnp.mean(kls)

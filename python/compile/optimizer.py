@@ -1,0 +1,57 @@
+"""Adam with global-norm gradient clipping (paper §3.9).
+
+State layout contract with Rust: per parameter tensor, first moment `m`
+then second moment `v`, in param_specs order, plus a single scalar step
+counter `t`. The Rust side allocates/checkpoints this state; the lowered
+train-step artifacts update it functionally.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+# Paper §3.9: Adam, grad clip at magnitude 0.5.
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+CLIP_NORM = 0.5
+
+
+def clip_by_global_norm(grads: Params, max_norm: float = CLIP_NORM) -> Params:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    t: jax.Array,
+    lr: jax.Array,
+) -> Tuple[Params, Params, Params, jax.Array]:
+    """One clipped Adam step; returns (params', m', v', t')."""
+    grads = clip_by_global_norm(grads)
+    t_new = t + 1.0
+    bc1 = 1.0 - BETA1**t_new
+    bc2 = 1.0 - BETA2**t_new
+
+    def upd(p, g, m_, v_):
+        m_n = BETA1 * m_ + (1.0 - BETA1) * g
+        v_n = BETA2 * v_ + (1.0 - BETA2) * (g * g)
+        step = lr * (m_n / bc1) / (jnp.sqrt(v_n / bc2) + EPS)
+        return p - step, m_n, v_n
+
+    new_p: Params = {}
+    new_m: Params = {}
+    new_v: Params = {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = upd(params[k], grads[k], m[k], v[k])
+    return new_p, new_m, new_v, t_new

@@ -1,0 +1,182 @@
+"""Exported step functions: the exact graphs that become HLO artifacts.
+
+Every function here takes/returns FLAT tuples of arrays so the PJRT-side
+calling convention in Rust is positional and dtype-stable:
+
+  teacher_step : params*, m*, v*, t, x, y, lr
+              -> params'*, m'*, v'*, t', loss, acc
+  distill_step : s_params*, m*, v*, t, t_params*, x,
+                 sigma_q, sigma_k, c, outer_mult, att_w, lr, n_top
+              -> s_params'*, m'*, v'*, t', loss_att, loss_out
+  fwd          : params*, x, sigma_q, sigma_k, n_top -> logits
+  calib        : params*, x -> sigma_q, sigma_k
+
+`*` expands in param_specs(cfg) order (model.py — the layout contract).
+Scalars travel as f32[] literals so ONE artifact serves every training
+stage: stage 1/2 differ only in (c, outer_mult); stage 4 sets att_w = 0; the
+sparsity parameter N (n_top, f32 floor'd) is runtime so the Figure-3 N
+sweep and Figure-5 linear-N scaling reuse one artifact per graph.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optimizer
+from .model import ModelConfig, Params
+
+
+def cross_entropy(logits, y):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: the old HLO text
+    # converter in xla_extension 0.5.1 rejects batched gathers.
+    onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=lp.dtype)
+    return -jnp.mean(jnp.sum(lp * onehot, axis=-1))
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def _split3(flat, n):
+    return flat[:n], flat[n : 2 * n], flat[2 * n : 3 * n]
+
+
+def make_teacher_step(cfg: ModelConfig):
+    """Cross-entropy pre-training step for the teacher (standard attn)."""
+    n = len(model.param_specs(cfg))
+
+    def step(*args):
+        flat = list(args)
+        p_list, m_list, v_list = _split3(flat, n)
+        t, x, y, lr = flat[3 * n : 3 * n + 4]
+        params = model.params_from_list(cfg, p_list)
+        m = model.params_from_list(cfg, m_list)
+        v = model.params_from_list(cfg, v_list)
+
+        def loss_fn(params):
+            logits = model.forward(params, x, cfg, "standard")
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, m, v, t = optimizer.adam_update(params, grads, m, v, t, lr)
+        acc = accuracy(logits, y)
+        return tuple(
+            model.params_to_list(cfg, params)
+            + model.params_to_list(cfg, m)
+            + model.params_to_list(cfg, v)
+            + [t, loss, acc]
+        )
+
+    return step
+
+
+def make_distill_step(cfg: ModelConfig, variant: str, ste: bool):
+    """One distillation step (paper Algorithm 1, stages 1-4).
+
+    variant in {"had", "bit", "sab"}; ste=False gives the tanh-relaxation
+    graph (stages 1-2), ste=True the STE graph (stages 3-4).
+    """
+    n = len(model.param_specs(cfg))
+
+    def step(*args):
+        flat = list(args)
+        s_list, m_list, v_list = _split3(flat, n)
+        rest = flat[3 * n :]
+        t = rest[0]
+        t_list = rest[1 : 1 + n]
+        x, sigma_q, sigma_k, c, outer_mult, att_w, lr, n_top = rest[1 + n : 9 + n]
+        s_params = model.params_from_list(cfg, s_list)
+        t_params = model.params_from_list(cfg, t_list)
+        m = model.params_from_list(cfg, m_list)
+        v = model.params_from_list(cfg, v_list)
+
+        def loss_fn(s_params):
+            z_s, z_t, kl_att = model.distill_forward(
+                s_params, t_params, x, cfg, variant,
+                ste=ste, c=c, outer_mult=outer_mult,
+                sigma_q=sigma_q, sigma_k=sigma_k, n_top=n_top,
+            )
+            kl_out = model.kl_output(z_t, z_s)
+            # L = att_w * L_KL-att + L_KL-out  (Eq. 11; att_w=0 in stage 4)
+            return att_w * kl_att + kl_out, (kl_att, kl_out)
+
+        (_, (kl_att, kl_out)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            s_params
+        )
+        s_params, m, v, t = optimizer.adam_update(s_params, grads, m, v, t, lr)
+        return tuple(
+            model.params_to_list(cfg, s_params)
+            + model.params_to_list(cfg, m)
+            + model.params_to_list(cfg, v)
+            + [t, kl_att, kl_out]
+        )
+
+    return step
+
+
+def make_fwd(cfg: ModelConfig, variant: str, use_pallas: bool = False):
+    """Inference forward: params*, x, sigma_q, sigma_k, n_top -> logits."""
+    n = len(model.param_specs(cfg))
+
+    def fwd(*args):
+        p_list = list(args[:n])
+        x, sigma_q, sigma_k, n_top = args[n : n + 4]
+        params = model.params_from_list(cfg, p_list)
+        logits = model.forward(
+            params, x, cfg, variant,
+            ste=True, c=0.05, outer_mult=1.0,
+            sigma_q=sigma_q, sigma_k=sigma_k, n_top=n_top,
+            use_pallas=use_pallas,
+        )
+        return (logits,)
+
+    return fwd
+
+
+def make_calib(cfg: ModelConfig):
+    """Standardization pass: params*, x -> per-layer (sigma_q, sigma_k)."""
+    n = len(model.param_specs(cfg))
+
+    def calib(*args):
+        p_list = list(args[:n])
+        x = args[n]
+        params = model.params_from_list(cfg, p_list)
+        sq, sk = model.qk_std(params, x, cfg)
+        return (sq, sk)
+
+    return calib
+
+
+def example_inputs(cfg: ModelConfig, kind: str, batch: int):
+    """ShapeDtypeStructs for lowering each artifact kind."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    n = len(model.param_specs(cfg))
+    p_specs = [S(shape, f32) for _, shape, _ in model.param_specs(cfg)]
+    if cfg.vocab > 0:
+        x = S((batch, cfg.n_ctx), i32)
+    else:
+        x = S((batch, cfg.n_patches, cfg.input_dim), f32)
+    y = S((batch,), i32)
+    scalar = S((), f32)
+    sig = S((cfg.n_layers,), f32)
+
+    if kind == "teacher_step":
+        return p_specs * 3 + [scalar, x, y, scalar]
+    if kind == "distill_step":
+        return (
+            p_specs * 3
+            + [scalar]
+            + p_specs
+            + [x, sig, sig, scalar, scalar, scalar, scalar, scalar]
+        )
+    if kind == "fwd":
+        return p_specs + [x, sig, sig, scalar]
+    if kind == "calib":
+        return p_specs + [x]
+    raise ValueError(f"unknown artifact kind {kind!r}")

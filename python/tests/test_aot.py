@@ -1,0 +1,72 @@
+"""AOT pipeline: manifest consistency and HLO text round-trip sanity."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import model, steps
+from compile.aot import CONFIGS, artifact_plan, build_fn, to_hlo_text
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_configs_cover_all_experiments():
+    names = set(CONFIGS)
+    assert "tinyglue" in names          # Table 1
+    assert {"vision_base", "vision_tiny"} <= names  # Table 2 + Fig 3
+    assert {f"longqa_{n}" for n in (128, 256, 512, 1024)} <= names  # Fig 5 / Fig 1
+
+
+def test_longqa_n_scales_linearly():
+    """Paper §4.3: N 15 @ 128 ... 120 @ 1024 (constant sparsity fraction)."""
+    for n in (128, 256, 512, 1024):
+        cfg = CONFIGS[f"longqa_{n}"]["model"]
+        assert cfg.n_top == 15 * n // 128
+
+
+def test_artifact_plans_well_formed():
+    for name in CONFIGS:
+        plan = artifact_plan(name)
+        names = [a["name"] for a in plan]
+        assert len(names) == len(set(names))
+        assert "teacher_step" in names and "calib" in names
+        for art in plan:
+            assert art["kind"] in ("teacher_step", "distill_step", "fwd", "calib")
+
+
+def test_example_inputs_signature_lengths():
+    cfg = CONFIGS["tinyglue"]["model"]
+    n = len(model.param_specs(cfg))
+    assert len(steps.example_inputs(cfg, "teacher_step", 4)) == 3 * n + 4
+    assert len(steps.example_inputs(cfg, "distill_step", 4)) == 4 * n + 9
+    assert len(steps.example_inputs(cfg, "fwd", 4)) == n + 4
+    assert len(steps.example_inputs(cfg, "calib", 4)) == n + 1
+
+
+def test_lower_one_artifact_to_hlo_text():
+    cfg = CONFIGS["tinyglue"]["model"]
+    art = {"kind": "fwd", "variant": "standard", "ste": True, "pallas": False, "batch": 2}
+    text = to_hlo_text(build_fn(cfg, art), steps.example_inputs(cfg, "fwd", 2))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    for art in manifest["artifacts"]:
+        path = os.path.join(ARTIFACT_DIR, art["file"])
+        assert os.path.exists(path), art["file"]
+        assert art["config"] in manifest["configs"]
+    for cname, centry in manifest["configs"].items():
+        cfg = model.ModelConfig.from_dict(centry["model"])
+        specs = model.param_specs(cfg)
+        assert [p["name"] for p in centry["params"]] == [s[0] for s in specs]
+        assert [tuple(p["shape"]) for p in centry["params"]] == [s[1] for s in specs]

@@ -1,0 +1,80 @@
+"""Binarization schedule primitives: stage limits, gradients, STE clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binarize
+
+
+def test_hard_sign_zero_maps_to_plus_one():
+    out = np.asarray(binarize.hard_sign(jnp.asarray([0.0, -0.0, 1.0, -1.0])))
+    np.testing.assert_array_equal(out, [1.0, 1.0, 1.0, -1.0])
+
+
+def test_ste_sign_forward_matches_hard_sign():
+    x = jnp.linspace(-3, 3, 41)
+    np.testing.assert_array_equal(
+        np.asarray(binarize.ste_sign(x)), np.asarray(binarize.hard_sign(x))
+    )
+
+
+def test_ste_gradient_clipping():
+    g = jax.grad(lambda x: jnp.sum(binarize.ste_sign(x)))(
+        jnp.asarray([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0])
+    )
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 1, 1, 0])
+
+
+def test_stage1_high_c_is_near_linear():
+    """At c=5 the scaled tanh is close to identity for |x| << c*sigma."""
+    x = jnp.linspace(-0.5, 0.5, 11)
+    y = binarize.tanh_binarize(x, sigma=1.0, c=5.0, outer_mult=5.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=0, atol=5e-3)
+
+
+def test_stage2_small_c_approaches_sign():
+    x = jnp.asarray([-2.0, -0.3, 0.2, 1.5])
+    y = binarize.tanh_binarize(x, sigma=1.0, c=0.01, outer_mult=1.0)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(binarize.hard_sign(x)), atol=1e-6
+    )
+
+
+def test_stage_boundary_continuity():
+    """Stage 1 end (c=1, outer=c) == stage 2 start (c=1, outer=1)."""
+    x = jnp.linspace(-2, 2, 17)
+    s1 = binarize.tanh_binarize(x, sigma=0.7, c=1.0, outer_mult=1.0)
+    s2 = binarize.tanh_binarize(x, sigma=0.7, c=1.0, outer_mult=1.0)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sigma=st.floats(0.05, 10.0),
+    key=st.integers(0, 2**16),
+)
+def test_ste_binarize_magnitude(sigma, key):
+    """STE binarization outputs exactly ±sigma."""
+    x = jax.random.normal(jax.random.PRNGKey(key), (64,), jnp.float32)
+    y = np.asarray(binarize.ste_binarize(x, sigma))
+    np.testing.assert_allclose(np.abs(y), sigma, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.floats(0.05, 5.0), sigma=st.floats(0.1, 5.0), key=st.integers(0, 2**10))
+def test_tanh_binarize_bounded(c, sigma, key):
+    """|tanh relaxation| <= outer_mult * sigma always."""
+    x = 10.0 * jax.random.normal(jax.random.PRNGKey(key), (64,), jnp.float32)
+    for outer in (c, 1.0):
+        y = np.abs(np.asarray(binarize.tanh_binarize(x, sigma, c, outer)))
+        assert (y <= outer * sigma + 1e-5).all()
+
+
+def test_tanh_gradient_finite_and_nonzero():
+    g = jax.grad(
+        lambda x: jnp.sum(binarize.tanh_binarize(x, 1.0, 0.05, 1.0))
+    )(jnp.asarray([0.0, 0.01, -0.01]))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(g[0]) > 0

@@ -1,0 +1,91 @@
+"""Bit-ops Hamming path vs oracles: the identity sign(q).sign(k) = d - 2*ham.
+
+Everything here must be BIT-exact (integer scores), not just allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitops, ref
+from compile.kernels.binarize import hard_sign
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_pack_bits_roundtrip_semantics():
+    x = jnp.asarray([[1.0, -2.0, 0.0, -0.5] * 8])  # d=32
+    packed = bitops.pack_bits(x)
+    assert packed.shape == (1, 1)
+    bits = np.asarray(packed)[0, 0]
+    signs = np.asarray(hard_sign(x))[0]
+    for i in range(32):
+        assert ((bits >> i) & 1) == (1 if signs[i] > 0 else 0)
+
+
+def test_popcount_small_values():
+    xs = jnp.asarray([0, 1, 2, 3, 255, 2**31, 2**32 - 1], dtype=jnp.uint32)
+    want = [0, 1, 1, 2, 8, 1, 32]
+    np.testing.assert_array_equal(np.asarray(bitops.popcount_u32(xs)), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=st.integers(0, 2**32 - 1))
+def test_popcount_hypothesis(v):
+    got = int(bitops.popcount_u32(jnp.asarray([v], jnp.uint32))[0])
+    assert got == bin(v).count("1")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_q=st.integers(1, 16),
+    n_k=st.integers(1, 16),
+    d=st.sampled_from([8, 16, 32, 64, 96, 128]),
+    key=st.integers(0, 2**16),
+)
+def test_hamming_identity(n_q, n_k, d, key):
+    """d - 2*ham == sign-dot, bit-exact, including non-multiple-of-32 d."""
+    q = _rand(key, (n_q, d))
+    k = _rand(key + 1, (n_k, d))
+    want = np.asarray(ref.had_scores_ref(q, k)).astype(np.int32)
+    got = np.asarray(bitops.binary_scores_from_float(q, k))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hamming_distance_range():
+    q = _rand(0, (8, 32))
+    k = _rand(1, (8, 32))
+    ham = np.asarray(ref.hamming_distance_ref(q, k))
+    assert ham.min() >= 0 and ham.max() <= 32
+
+
+def test_hamming_self_distance_zero():
+    q = _rand(2, (8, 32))
+    ham = np.asarray(ref.hamming_distance_ref(q, q))
+    np.testing.assert_array_equal(np.diag(ham), 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    d=st.sampled_from([32, 64]),
+    key=st.integers(0, 2**16),
+)
+def test_pallas_hamming_kernel(bh, d, key):
+    n = 64
+    q = _rand(key, (bh, n, d))
+    k = _rand(key + 1, (bh, n, d))
+    qp = bitops.pack_bits(q)
+    kp = bitops.pack_bits(k)
+    got = np.asarray(bitops.hamming_scores_pallas(qp, kp, d=d, block_q=32))
+    want = np.asarray(ref.had_scores_ref(q, k)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_packed_k_bytes():
+    assert bitops.packed_k_bytes(1024, 64) == 1024 * 2 * 4
+    # 32x smaller than f32 K
+    assert bitops.packed_k_bytes(1024, 64) * 32 == 1024 * 64 * 4

@@ -1,0 +1,130 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""Fused Pallas HAD attention vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, sparsity levels and input distributions; every
+case asserts allclose against ref.had_attention_ref. Integer tie handling
+(binary scores are massively tied) is exercised explicitly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.had_attention import had_attention, vmem_report
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def run_case(b, h, n, d, dv, n_top, block_q, key=0, temp=None):
+    q = _rand(key, (b, h, n, d))
+    k = _rand(key + 1, (b, h, n, d))
+    v = _rand(key + 2, (b, h, n, dv))
+    out = had_attention(q, k, v, n_top=n_top, block_q=block_q, temp=temp)
+    d_scale = (1.0 if temp is None else float(temp)) / (d**0.5)
+    want = ref.had_attention_ref(q, k, v, n_top, d_scale=d_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_basic_shapes():
+    run_case(2, 3, 64, 32, 16, 10, 32)
+
+
+def test_single_block():
+    run_case(1, 1, 16, 16, 16, 4, 16)
+
+
+def test_n_top_full_context():
+    # N == n degenerates to (binarized) dense attention.
+    run_case(1, 2, 32, 16, 8, 32, 32)
+
+
+def test_n_top_one():
+    run_case(1, 2, 32, 16, 8, 1, 32)
+
+
+def test_temp_scaling():
+    run_case(1, 2, 32, 16, 8, 8, 32, temp=jnp.asarray(0.37))
+
+
+def test_blockq_equals_n():
+    run_case(2, 2, 64, 32, 32, 16, 64)
+
+
+def test_indivisible_block_raises():
+    q = _rand(0, (1, 1, 48, 16))
+    with pytest.raises(ValueError):
+        had_attention(q, q, q, n_top=4, block_q=32)
+
+
+def test_dhead_exactness_guard():
+    q = _rand(0, (1, 1, 8, 512))
+    with pytest.raises(ValueError):
+        had_attention(q, q, q, n_top=4, block_q=8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    n_pow=st.integers(3, 6),          # n in {8..64}
+    d=st.sampled_from([8, 16, 32, 64]),
+    dv=st.sampled_from([8, 16, 32]),
+    frac=st.floats(0.05, 1.0),
+    key=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(b, h, n_pow, d, dv, frac, key):
+    n = 2**n_pow
+    n_top = max(1, int(frac * n))
+    run_case(b, h, n, d, dv, n_top, block_q=n, key=key)
+
+
+@settings(max_examples=10, deadline=None)
+@given(key=st.integers(0, 2**16), scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_scale_invariance_of_pattern(key, scale):
+    """Binarization is scale-invariant: outputs identical for scaled Q/K."""
+    b, h, n, d, dv = 1, 2, 32, 16, 8
+    q = _rand(key, (b, h, n, d))
+    k = _rand(key + 1, (b, h, n, d))
+    v = _rand(key + 2, (b, h, n, dv))
+    o1 = had_attention(q, k, v, n_top=8, block_q=32)
+    o2 = had_attention(q * scale, k * scale, v, n_top=8, block_q=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6, atol=1e-6)
+
+
+def test_tied_scores_deterministic():
+    """All-equal inputs => fully tied integer scores; kernel and oracle
+    must agree on the tie-broken top-N selection."""
+    b, h, n, d, dv = 1, 1, 16, 16, 8
+    q = jnp.ones((b, h, n, d), jnp.float32)
+    k = jnp.ones((b, h, n, d), jnp.float32)
+    v = _rand(7, (b, h, n, dv))
+    run_case_direct(q, k, v, n_top=4)
+
+
+def run_case_direct(q, k, v, n_top):
+    out = had_attention(q, k, v, n_top=n_top, block_q=q.shape[2])
+    want = ref.had_attention_ref(q, k, v, n_top)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_output_rows_convex_combination():
+    """Each output row is a convex combination of value rows: within the
+    per-coordinate min/max envelope of V."""
+    q = _rand(3, (1, 2, 32, 16))
+    k = _rand(4, (1, 2, 32, 16))
+    v = _rand(5, (1, 2, 32, 8))
+    out = np.asarray(had_attention(q, k, v, n_top=8, block_q=32))
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+
+def test_vmem_report_long_context():
+    r = vmem_report(n_k=4096, d=64, d_v=64, block_q=128, n_top=120)
+    assert r["fits_16MiB_vmem"]
+    assert r["k_packed_bytes"] * 32 == r["k_bytes"]

@@ -1,0 +1,205 @@
+"""L2 model: shapes, variants, distillation losses, optimizer, param contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, optimizer, steps
+from compile.model import ModelConfig
+
+CFG_TOK = ModelConfig(
+    n_layers=2, d_model=32, n_heads=2, d_ff=64,
+    n_ctx=16, n_classes=4, vocab=64, n_top=5, block_q=16,
+)
+CFG_VIS = ModelConfig(
+    n_layers=2, d_model=32, n_heads=2, d_ff=64,
+    n_ctx=9, n_classes=8, vocab=0, input_dim=12, n_top=4, block_q=9,
+)
+
+
+def _params(cfg, seed=0):
+    return model.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _tok_batch(cfg, b=4, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.n_ctx), 0, cfg.vocab)
+
+
+def _vis_batch(cfg, b=4, seed=1):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (b, cfg.n_patches, cfg.input_dim), jnp.float32
+    )
+
+
+def test_param_specs_roundtrip():
+    p = _params(CFG_TOK)
+    lst = model.params_to_list(CFG_TOK, p)
+    p2 = model.params_from_list(CFG_TOK, lst)
+    assert set(p) == set(p2)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(p2[k]))
+
+
+def test_param_specs_shapes_match_init():
+    for cfg in (CFG_TOK, CFG_VIS):
+        p = _params(cfg)
+        for name, shape, _ in model.param_specs(cfg):
+            assert p[name].shape == shape, name
+
+
+@pytest.mark.parametrize("variant", ["standard", "had", "bit", "sab", "fp_topn", "noattn"])
+@pytest.mark.parametrize("cfg", [CFG_TOK, CFG_VIS], ids=["tok", "vis"])
+def test_forward_shapes_all_variants(cfg, variant):
+    p = _params(cfg)
+    x = _tok_batch(cfg) if cfg.vocab else _vis_batch(cfg)
+    logits = model.forward(p, x, cfg, variant, ste=True, n_top=float(cfg.n_top))
+    assert logits.shape == (4, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_noattn_is_cheaper_graph():
+    """noattn must not contain an n x n contraction (Figure-1 ablation)."""
+    p = _params(CFG_TOK)
+    x = _tok_batch(CFG_TOK)
+    full = model.forward(p, x, CFG_TOK, "standard")
+    no = model.forward(p, x, CFG_TOK, "noattn")
+    # different computation, same interface
+    assert full.shape == no.shape
+    assert not np.allclose(np.asarray(full), np.asarray(no))
+
+
+def test_had_forward_scale_invariance():
+    """sign() makes the HAD student invariant to Q/K input scale at eval."""
+    cfg = CFG_TOK
+    p = _params(cfg)
+    x = _tok_batch(cfg)
+    base = model.forward(p, x, cfg, "had", ste=True, n_top=5.0)
+    p2 = dict(p)
+    p2["wq"] = p["wq"] * 3.0  # scales Q_c; sign(Q_c/sigma) unchanged per sign
+    logits2 = model.forward(p2, x, cfg, "had", ste=True, n_top=5.0)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(logits2), rtol=1e-4, atol=1e-4)
+
+
+def test_distill_forward_losses_nonnegative():
+    cfg = CFG_TOK
+    tp, sp = _params(cfg, 0), _params(cfg, 1)
+    x = _tok_batch(cfg)
+    z_s, z_t, kl_att = model.distill_forward(
+        sp, tp, x, cfg, "had", ste=False, c=2.0, outer_mult=2.0,
+        sigma_q=jnp.ones(2), sigma_k=jnp.ones(2), n_top=5.0,
+    )
+    kl_out = model.kl_output(z_t, z_s)
+    assert float(kl_att) >= 0.0
+    assert float(kl_out) >= 0.0
+
+
+def test_distill_identical_student_zero_loss():
+    """Student == teacher with near-linear binarization (huge c) => KL ~ 0."""
+    cfg = CFG_TOK
+    tp = _params(cfg, 0)
+    x = _tok_batch(cfg)
+    z_s, z_t, kl_att = model.distill_forward(
+        tp, tp, x, cfg, "had", ste=False, c=1e4, outer_mult=1e4,
+        sigma_q=jnp.ones(2), sigma_k=jnp.ones(2), n_top=float(cfg.n_ctx),
+    )
+    assert float(kl_att) < 1e-4
+    assert float(model.kl_output(z_t, z_s)) < 1e-6
+
+
+def test_kl_output_zero_iff_equal():
+    z = jnp.asarray([[1.0, -2.0, 0.3]])
+    assert float(model.kl_output(z, z)) == pytest.approx(0.0, abs=1e-7)
+    assert float(model.kl_output(z, z + 1.0)) == pytest.approx(0.0, abs=1e-6)  # shift invariant
+    assert float(model.kl_output(z, z * 2.0)) > 0.0
+
+
+def test_qk_std_positive():
+    cfg = CFG_TOK
+    p = _params(cfg)
+    sq, sk = model.qk_std(p, _tok_batch(cfg), cfg)
+    assert sq.shape == (cfg.n_layers,) and sk.shape == (cfg.n_layers,)
+    assert (np.asarray(sq) > 0).all() and (np.asarray(sk) > 0).all()
+
+
+def test_adam_reduces_loss():
+    cfg = CFG_TOK
+    p = _params(cfg)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    x = _tok_batch(cfg, 8)
+    y = jax.random.randint(jax.random.PRNGKey(9), (8,), 0, cfg.n_classes)
+    t = jnp.asarray(0.0)
+
+    def loss_fn(p):
+        return steps.cross_entropy(model.forward(p, x, cfg, "standard"), y)
+
+    losses = []
+    for _ in range(20):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        losses.append(float(loss))
+        p, m, v, t = optimizer.adam_update(p, g, m, v, t, jnp.asarray(1e-2))
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_grad_clip_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped = optimizer.clip_by_global_norm(g, 0.5)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.3, 0.4], rtol=1e-6)
+    small = {"a": jnp.asarray([0.1, 0.0])}
+    np.testing.assert_allclose(
+        np.asarray(optimizer.clip_by_global_norm(small, 0.5)["a"]), [0.1, 0.0], rtol=1e-6
+    )
+
+
+def test_teacher_step_flat_signature():
+    cfg = CFG_TOK
+    n = len(model.param_specs(cfg))
+    step = steps.make_teacher_step(cfg)
+    p = model.params_to_list(cfg, _params(cfg))
+    zeros = [jnp.zeros_like(t) for t in p]
+    x = _tok_batch(cfg, 4)
+    y = jnp.zeros((4,), jnp.int32)
+    out = step(*p, *zeros, *zeros, jnp.asarray(0.0), x, y, jnp.asarray(1e-3))
+    assert len(out) == 3 * n + 3
+    assert np.isfinite(float(out[-2]))  # loss
+
+
+def test_distill_step_flat_signature():
+    cfg = CFG_TOK
+    n = len(model.param_specs(cfg))
+    step = steps.make_distill_step(cfg, "had", ste=True)
+    p = model.params_to_list(cfg, _params(cfg, 0))
+    tp = model.params_to_list(cfg, _params(cfg, 1))
+    zeros = [jnp.zeros_like(t) for t in p]
+    x = _tok_batch(cfg, 4)
+    sig = jnp.ones((cfg.n_layers,), jnp.float32)
+    out = step(
+        *p, *zeros, *zeros, jnp.asarray(0.0), *tp, x, sig, sig,
+        jnp.asarray(1.0), jnp.asarray(1.0), jnp.asarray(1.0),
+        jnp.asarray(1e-4), jnp.asarray(5.0),
+    )
+    assert len(out) == 3 * n + 3
+    kl_att, kl_out = float(out[-2]), float(out[-1])
+    assert np.isfinite(kl_att) and np.isfinite(kl_out)
+
+
+def test_topn_sparse_softmax_sparsity():
+    from compile.model import _topn_sparse_softmax
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32), jnp.float32)
+    p = np.asarray(_topn_sparse_softmax(x, 7.0))
+    nz = (p > 0).sum(axis=-1)
+    np.testing.assert_array_equal(nz, 7)  # no ties in continuous inputs
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_topn_runtime_equals_static_reference():
+    from compile.kernels import ref
+    from compile.model import _topn_sparse_softmax
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16), jnp.float32)
+    for n_top in (1, 4, 16):
+        p = np.asarray(_topn_sparse_softmax(x, float(n_top)))
+        mask = np.asarray(ref.topn_mask_ref(x, n_top))
+        np.testing.assert_array_equal(p > 0, mask)

@@ -1,0 +1,212 @@
+//! Fused CPU HAD attention: the paper's full pipeline (Eqs. 4-8) on
+//! bit-packed operands — binarize/pack, XNOR-popcount scores, top-N
+//! selection, sparse softmax, sparse AV accumulation.
+//!
+//! This is the Rust-side production fast path used by the serving
+//! coordinator when a request asks for the `cpu-bitpacked` backend, and
+//! the subject of the attention_kernels bench (vs the dense f32 oracle).
+//! Cross-checked against tensor::ops oracles in unit tests and against
+//! the PJRT artifacts in integration tests.
+
+use crate::binary::bitpack::PackedMat;
+use crate::binary::hamming;
+use crate::binary::topn::select_topn_counting;
+use crate::tensor::{ops, Mat};
+
+/// Configuration of one attention head computation.
+#[derive(Clone, Copy, Debug)]
+pub struct HadAttnConfig {
+    pub n_top: usize,
+    /// softmax temperature multiplier (sigma_q * sigma_k of the calibrated
+    /// model); the 1/sqrt(d) factor is applied automatically.
+    pub temp: f32,
+}
+
+impl Default for HadAttnConfig {
+    fn default() -> Self {
+        HadAttnConfig { n_top: 30, temp: 1.0 }
+    }
+}
+
+/// Pre-packed key/value cache for one head: keys as sign bits, values in
+/// f32. In a serving deployment this is built once per sequence and reused
+/// across queries (the packed-K residency story — 32x smaller than f32 K).
+#[derive(Clone, Debug)]
+pub struct PackedKv {
+    pub keys: PackedMat,
+    pub values: Mat, // (n_k, d_v)
+}
+
+impl PackedKv {
+    pub fn new(k: &Mat, v: &Mat) -> PackedKv {
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        PackedKv { keys: PackedMat::pack(k.rows, k.cols, &k.data), values: v.clone() }
+    }
+}
+
+/// Scratch buffers reused across calls (allocation-free hot loop — §Perf).
+#[derive(Default)]
+pub struct Scratch {
+    scores: Vec<i32>,
+    probs: Vec<f32>,
+}
+
+/// Full HAD attention for a block of queries against one PackedKv.
+/// q: (n_q, d) continuous queries (binarized inside). Returns (n_q, d_v).
+pub fn had_attention(q: &Mat, kv: &PackedKv, cfg: &HadAttnConfig) -> Mat {
+    let mut scratch = Scratch::default();
+    had_attention_with(q, kv, cfg, &mut scratch)
+}
+
+pub fn had_attention_with(
+    q: &Mat,
+    kv: &PackedKv,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+) -> Mat {
+    let d = q.cols;
+    assert_eq!(d, kv.keys.d, "query/key dim mismatch");
+    let n_k = kv.keys.rows;
+    let d_v = kv.values.cols;
+    let n_top = cfg.n_top.clamp(1, n_k);
+    let scale = cfg.temp / (d as f32).sqrt();
+
+    let qp = PackedMat::pack(q.rows, d, &q.data);
+    scratch.scores.resize(n_k, 0);
+    scratch.probs.resize(n_top, 0.0);
+
+    let mut out = Mat::zeros(q.rows, d_v);
+    for i in 0..q.rows {
+        // 1) binary scores via XNOR-popcount (Eqs. 4-5)
+        let qrow = qp.row(i);
+        for (j, s) in scratch.scores.iter_mut().enumerate() {
+            *s = hamming::binary_dot(qrow, kv.keys.row(j), d);
+        }
+        // 2) top-N selection (Eq. 6)
+        let kept = select_topn_counting(&scratch.scores, n_top, d);
+        // 3) softmax over kept logits only (Eq. 7)
+        let probs = &mut scratch.probs[..kept.len()];
+        let max = kept[0].0 as f32 * scale; // kept is sorted descending
+        let mut sum = 0.0f32;
+        for (p, &(s, _)) in probs.iter_mut().zip(&kept) {
+            *p = (s as f32 * scale - max).exp();
+            sum += *p;
+        }
+        let inv = 1.0 / sum;
+        // 4) sparse AV accumulation (Eq. 8)
+        let orow = out.row_mut(i);
+        for (&p, &(_, j)) in probs.iter().zip(&kept) {
+            let w = p * inv;
+            let vrow = kv.values.row(j);
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+    out
+}
+
+/// Oracle: same computation with dense f32 ops (tensor::ops path).
+pub fn had_attention_ref(q: &Mat, k: &Mat, v: &Mat, cfg: &HadAttnConfig) -> Mat {
+    let sign = |m: &Mat| m.map(|x| if x >= 0.0 { 1.0 } else { -1.0 });
+    let logits = sign(q).matmul_nt(&sign(k));
+    let scale = cfg.temp / (q.cols as f32).sqrt();
+    let probs = ops::softmax_topn_rows(&logits, cfg.n_top, scale);
+    probs.matmul(v)
+}
+
+/// Dense standard attention in f32 (the baseline the paper compares
+/// against; used by benches and the Figure-1 analytic model).
+pub fn standard_attention_ref(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let logits = q.matmul_nt(k).map(|x| x * scale);
+    let probs = ops::softmax_rows(&logits);
+    probs.matmul(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::random(r, c, rng, 1.0)
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let mut rng = Rng::new(42);
+        for (n_q, n_k, d, d_v, n_top) in
+            [(8, 32, 16, 8, 5), (4, 64, 64, 16, 30), (1, 100, 96, 32, 10)]
+        {
+            let q = rand_mat(&mut rng, n_q, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, d_v);
+            let cfg = HadAttnConfig { n_top, temp: 1.0 };
+            let kv = PackedKv::new(&k, &v);
+            let fast = had_attention(&q, &kv, &cfg);
+            let want = had_attention_ref(&q, &k, &v, &cfg);
+            assert!(
+                fast.max_abs_diff(&want) < 1e-5,
+                "mismatch n_q={n_q} n_k={n_k} d={d}: {}",
+                fast.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn temp_changes_distribution() {
+        let mut rng = Rng::new(1);
+        let q = rand_mat(&mut rng, 2, 32);
+        let k = rand_mat(&mut rng, 16, 32);
+        let v = rand_mat(&mut rng, 16, 8);
+        let kv = PackedKv::new(&k, &v);
+        let a = had_attention(&q, &kv, &HadAttnConfig { n_top: 8, temp: 1.0 });
+        let b = had_attention(&q, &kv, &HadAttnConfig { n_top: 8, temp: 0.1 });
+        assert!(a.max_abs_diff(&b) > 1e-6);
+    }
+
+    #[test]
+    fn n_top_full_equals_dense_binary_attention() {
+        let mut rng = Rng::new(2);
+        let q = rand_mat(&mut rng, 4, 32);
+        let k = rand_mat(&mut rng, 16, 32);
+        let v = rand_mat(&mut rng, 16, 8);
+        let kv = PackedKv::new(&k, &v);
+        let cfg = HadAttnConfig { n_top: 16, temp: 1.0 };
+        let got = had_attention(&q, &kv, &cfg);
+        let want = had_attention_ref(&q, &k, &v, &cfg);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn output_in_value_envelope() {
+        let mut rng = Rng::new(3);
+        let q = rand_mat(&mut rng, 8, 32);
+        let k = rand_mat(&mut rng, 32, 32);
+        let v = rand_mat(&mut rng, 32, 4);
+        let kv = PackedKv::new(&k, &v);
+        let out = had_attention(&q, &kv, &HadAttnConfig { n_top: 5, temp: 1.0 });
+        for c in 0..4 {
+            let vmin = (0..32).map(|r| v.at(r, c)).fold(f32::INFINITY, f32::min);
+            let vmax = (0..32).map(|r| v.at(r, c)).fold(f32::NEG_INFINITY, f32::max);
+            for r in 0..8 {
+                assert!(out.at(r, c) >= vmin - 1e-5 && out.at(r, c) <= vmax + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_identical_results() {
+        let mut rng = Rng::new(4);
+        let q = rand_mat(&mut rng, 4, 32);
+        let k = rand_mat(&mut rng, 16, 32);
+        let v = rand_mat(&mut rng, 16, 8);
+        let kv = PackedKv::new(&k, &v);
+        let cfg = HadAttnConfig { n_top: 4, temp: 1.0 };
+        let mut scratch = Scratch::default();
+        let a = had_attention_with(&q, &kv, &cfg, &mut scratch);
+        let b = had_attention_with(&q, &kv, &cfg, &mut scratch);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,133 @@
+//! Sign-bit packing: f32 vectors -> u64 words (the paper's binary K/Q at
+//! rest; 32x smaller than f32).
+//!
+//! Convention (shared with python/compile/kernels/bitops.py and the
+//! oracles): bit = 1 iff x >= 0, i.e. sign(0) = +1. Padding bits beyond
+//! the true dimension are 1 in every pattern so they XOR to zero and never
+//! contribute to Hamming distances.
+
+/// Number of u64 words needed to hold `d` sign bits.
+#[inline]
+pub fn words_for(d: usize) -> usize {
+    d.div_ceil(64)
+}
+
+/// Pack one f32 vector into u64 words (little-endian bit order within a
+/// word: bit i of word w = sign of element 64*w + i).
+pub fn pack_vector(x: &[f32], out: &mut [u64]) {
+    let w = words_for(x.len());
+    assert!(out.len() >= w, "output too small");
+    for word in out[..w].iter_mut() {
+        *word = 0;
+    }
+    for (i, &v) in x.iter().enumerate() {
+        if v >= 0.0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    // pad bits = 1 (sign(+1)) so equal padding never adds Hamming distance
+    let used = x.len() % 64;
+    if used != 0 {
+        out[w - 1] |= !0u64 << used;
+    }
+    for word in out[w..].iter_mut() {
+        *word = !0u64;
+    }
+}
+
+/// A matrix of packed sign patterns: `rows` patterns of `d` bits each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMat {
+    pub rows: usize,
+    pub d: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl PackedMat {
+    /// Pack a row-major f32 matrix (rows x d).
+    pub fn pack(rows: usize, d: usize, data: &[f32]) -> PackedMat {
+        assert_eq!(data.len(), rows * d);
+        let wpr = words_for(d);
+        let mut out = vec![0u64; rows * wpr];
+        for r in 0..rows {
+            pack_vector(&data[r * d..(r + 1) * d], &mut out[r * wpr..(r + 1) * wpr]);
+        }
+        PackedMat { rows, d, words_per_row: wpr, data: out }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Bytes of the packed representation (the 32x story vs f32).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    /// Unpack to ±1.0 f32 (test helper / oracle input).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.d);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.d {
+                let bit = (row[i / 64] >> (i % 64)) & 1;
+                out.push(if bit == 1 { 1.0 } else { -1.0 });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn words_for_boundaries() {
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(128), 2);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_signs() {
+        let mut rng = Rng::new(1);
+        for d in [3, 16, 64, 65, 100, 128] {
+            let x = rng.normal_vec(4 * d, 1.0);
+            let packed = PackedMat::pack(4, d, &x);
+            let signs = packed.unpack();
+            for (a, b) in x.iter().zip(&signs) {
+                let want = if *a >= 0.0 { 1.0 } else { -1.0 };
+                assert_eq!(*b, want);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_packs_as_positive() {
+        let x = vec![0.0f32, -0.0, 1.0, -1.0];
+        let p = PackedMat::pack(1, 4, &x);
+        // -0.0 >= 0.0 is true in IEEE: sign(-0.0) = +1 like the jnp oracle
+        assert_eq!(p.unpack(), vec![1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn padding_bits_are_ones() {
+        let x = vec![-1.0f32; 10];
+        let p = PackedMat::pack(1, 10, &x);
+        let w = p.row(0)[0];
+        assert_eq!(w & 0x3FF, 0, "data bits all negative");
+        assert_eq!(w >> 10, !0u64 >> 10, "pad bits all ones");
+    }
+
+    #[test]
+    fn bytes_32x_smaller_than_f32() {
+        let x = vec![1.0f32; 256 * 64];
+        let p = PackedMat::pack(256, 64, &x);
+        assert_eq!(p.bytes() * 32, 256 * 64 * 4);
+    }
+}

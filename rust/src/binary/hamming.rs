@@ -1,0 +1,157 @@
+//! XNOR-popcount Hamming scores: the paper's core compute, CPU-realized.
+//!
+//! For ±1 patterns q, k of dimension d:
+//!     q . k = d - 2 * ham(q, k)
+//! where ham counts differing sign bits. On packed u64 words this is
+//! XOR + POPCNT — the hot loop the paper's CAM hardware replaces with an
+//! analog match, and our TPU kernel replaces with a ±1 MXU matmul.
+
+use super::bitpack::PackedMat;
+
+/// Hamming distance between two packed patterns (pad bits are equal by
+/// construction and cancel in the XOR).
+#[inline]
+pub fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// Binary dot product via the Hamming identity.
+#[inline]
+pub fn binary_dot(a: &[u64], b: &[u64], d: usize) -> i32 {
+    d as i32 - 2 * hamming(a, b) as i32
+}
+
+/// Score matrix: q_packed (n_q patterns) x k_packed (n_k patterns) ->
+/// row-major i32 scores (n_q x n_k), scores[i][j] = sign(q_i).sign(k_j).
+pub fn score_matrix(q: &PackedMat, k: &PackedMat, out: &mut [i32]) {
+    assert_eq!(q.d, k.d, "dimension mismatch");
+    assert_eq!(out.len(), q.rows * k.rows, "output size");
+    let d = q.d as i32;
+    let w = q.words_per_row;
+    match w {
+        1 => score_matrix_w::<1>(q, k, d, out),
+        2 => score_matrix_w::<2>(q, k, d, out),
+        3 => score_matrix_w::<3>(q, k, d, out),
+        4 => score_matrix_w::<4>(q, k, d, out),
+        _ => {
+            for i in 0..q.rows {
+                let qi = q.row(i);
+                let orow = &mut out[i * k.rows..(i + 1) * k.rows];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = d - 2 * hamming(qi, k.row(j)) as i32;
+                }
+            }
+        }
+    }
+}
+
+/// Monomorphized inner loop for small word counts (d <= 256): the
+/// compiler fully unrolls the XOR/popcount chain. This is the §Perf L3
+/// optimization recorded in EXPERIMENTS.md.
+fn score_matrix_w<const W: usize>(q: &PackedMat, k: &PackedMat, d: i32, out: &mut [i32]) {
+    let n_k = k.rows;
+    for i in 0..q.rows {
+        let qi: &[u64] = q.row(i);
+        let mut qw = [0u64; W];
+        qw.copy_from_slice(&qi[..W]);
+        let orow = &mut out[i * n_k..(i + 1) * n_k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let kj = &k.data[j * W..j * W + W];
+            let mut ham = 0u32;
+            for t in 0..W {
+                ham += (qw[t] ^ kj[t]).count_ones();
+            }
+            *o = d - 2 * ham as i32;
+        }
+    }
+}
+
+/// Convenience: scores straight from float inputs (packs internally).
+pub fn score_matrix_from_f32(
+    q: &[f32],
+    k: &[f32],
+    n_q: usize,
+    n_k: usize,
+    d: usize,
+) -> Vec<i32> {
+    let qp = PackedMat::pack(n_q, d, q);
+    let kp = PackedMat::pack(n_k, d, k);
+    let mut out = vec![0i32; n_q * n_k];
+    score_matrix(&qp, &kp, &mut out);
+    out
+}
+
+/// Float reference for the same scores (oracle; O(n^2 d) flops).
+pub fn score_matrix_f32_ref(q: &[f32], k: &[f32], n_q: usize, n_k: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_q * n_k];
+    for i in 0..n_q {
+        for j in 0..n_k {
+            let mut acc = 0.0f32;
+            for t in 0..d {
+                let qs = if q[i * d + t] >= 0.0 { 1.0 } else { -1.0 };
+                let ks = if k[j * d + t] >= 0.0 { 1.0 } else { -1.0 };
+                acc += qs * ks;
+            }
+            out[i * n_k + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hamming_identity_small() {
+        // q = [+,+,-,-], k = [+,-,+,-]: 2 bits differ, dot = 0
+        let q = PackedMat::pack(1, 4, &[1.0, 1.0, -1.0, -1.0]);
+        let k = PackedMat::pack(1, 4, &[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(hamming(q.row(0), k.row(0)), 2);
+        assert_eq!(binary_dot(q.row(0), k.row(0), 4), 0);
+    }
+
+    #[test]
+    fn self_dot_is_d() {
+        let mut rng = Rng::new(3);
+        for d in [7, 64, 65, 128, 200] {
+            let x = rng.normal_vec(d, 1.0);
+            let p = PackedMat::pack(1, d, &x);
+            assert_eq!(binary_dot(p.row(0), p.row(0), d), d as i32);
+        }
+    }
+
+    #[test]
+    fn scores_match_float_reference() {
+        let mut rng = Rng::new(7);
+        for d in [8, 32, 64, 96, 128, 192] {
+            let (n_q, n_k) = (9, 13);
+            let q = rng.normal_vec(n_q * d, 1.0);
+            let k = rng.normal_vec(n_k * d, 1.0);
+            let fast = score_matrix_from_f32(&q, &k, n_q, n_k, d);
+            let slow = score_matrix_f32_ref(&q, &k, n_q, n_k, d);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert_eq!(*a as f32, *b);
+            }
+        }
+    }
+
+    #[test]
+    fn scores_have_correct_parity() {
+        // sign dots over dimension d always have the same parity as d
+        let mut rng = Rng::new(11);
+        let d = 33;
+        let q = rng.normal_vec(4 * d, 1.0);
+        let k = rng.normal_vec(4 * d, 1.0);
+        for s in score_matrix_from_f32(&q, &k, 4, 4, d) {
+            assert_eq!((s - d as i32).rem_euclid(2), 0);
+            assert!(s.abs() <= d as i32);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Binary attention substrate: the paper's Hamming kernel on CPU.
+//!
+//! `bitpack` packs sign bits (32x smaller K at rest), `hamming` computes
+//! the XNOR-popcount score matrix, `topn` does deterministic top-N
+//! selection over the tiny integer score domain, and `attention` fuses
+//! the whole pipeline (Eqs. 4-8) allocation-free.
+
+pub mod attention;
+pub mod bitpack;
+pub mod hamming;
+pub mod topn;
+
+pub use attention::{had_attention, had_attention_ref, standard_attention_ref, HadAttnConfig, PackedKv};
+pub use bitpack::PackedMat;

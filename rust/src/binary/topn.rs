@@ -1,0 +1,146 @@
+//! Top-N selection over integer score rows (paper Eq. 6).
+//!
+//! Binary scores are small integers in [-d, d] with guaranteed ties, so
+//! selection must be deterministic: keep the N largest values, ties broken
+//! by LOWEST index (the lax.top_k convention shared with the kernels and
+//! oracles).
+//!
+//! Two implementations:
+//!  * `select_topn_heap` — classic bounded min-heap, O(n log N).
+//!  * `select_topn_counting` — counting selection exploiting the tiny
+//!    integer domain (2d+1 buckets), O(n + d); the §Perf winner for d<=256.
+
+/// (score, index) pairs of the selected entries, sorted by descending
+/// score then ascending index.
+pub fn select_topn_heap(scores: &[i32], n_top: usize) -> Vec<(i32, usize)> {
+    let n_top = n_top.clamp(1, scores.len().max(1));
+    if scores.is_empty() {
+        return Vec::new();
+    }
+    // Bounded "heap" as a sorted insertion buffer: N is small (<=128), so
+    // linear insertion beats a real heap in practice and is simpler to
+    // keep deterministic. Order: worst kept element last.
+    let mut kept: Vec<(i32, usize)> = Vec::with_capacity(n_top + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if kept.len() == n_top {
+            let (ws, wi) = *kept.last().unwrap();
+            // strictly better, or equal score with smaller index? no —
+            // equal score: the EARLIER index wins, and we scan forward, so
+            // an incoming tie never displaces a kept entry.
+            if s <= ws || (s == ws && i > wi) {
+                continue;
+            }
+        }
+        let pos = kept
+            .binary_search_by(|&(ks, ki)| {
+                // descending score, ascending index
+                s.cmp(&ks).then(ki.cmp(&i))
+            })
+            .unwrap_or_else(|p| p);
+        kept.insert(pos, (s, i));
+        if kept.len() > n_top {
+            kept.pop();
+        }
+    }
+    kept
+}
+
+/// Counting selection: histogram scores (domain [-d, d]), find the cutoff
+/// value, then emit kept entries in index order and sort. `d` bounds
+/// |score|.
+pub fn select_topn_counting(scores: &[i32], n_top: usize, d: usize) -> Vec<(i32, usize)> {
+    let n_top = n_top.clamp(1, scores.len().max(1));
+    if scores.is_empty() {
+        return Vec::new();
+    }
+    let buckets = 2 * d + 1;
+    let mut hist = vec![0u32; buckets];
+    for &s in scores {
+        hist[(s + d as i32) as usize] += 1;
+    }
+    // walk from the top down to find the threshold bucket and how many
+    // threshold-valued entries to keep
+    let mut remaining = n_top as u32;
+    let mut cutoff = 0i32;
+    let mut take_at_cutoff = 0u32;
+    for b in (0..buckets).rev() {
+        let c = hist[b];
+        if c == 0 {
+            continue;
+        }
+        if c >= remaining {
+            cutoff = b as i32 - d as i32;
+            take_at_cutoff = remaining;
+            break;
+        }
+        remaining -= c;
+    }
+    let mut out = Vec::with_capacity(n_top);
+    let mut at_cutoff = 0u32;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > cutoff {
+            out.push((s, i));
+        } else if s == cutoff && at_cutoff < take_at_cutoff {
+            out.push((s, i));
+            at_cutoff += 1;
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reference(scores: &[i32], n_top: usize) -> Vec<(i32, usize)> {
+        let mut all: Vec<(i32, usize)> = scores.iter().copied().zip(0..).map(|(s, i)| (s, i)).collect();
+        all.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        all.truncate(n_top.clamp(1, scores.len().max(1)));
+        all
+    }
+
+    #[test]
+    fn simple_case() {
+        let scores = vec![1, 5, 3, 5, -2];
+        // ties at 5: indices 1 then 3
+        assert_eq!(select_topn_heap(&scores, 3), vec![(5, 1), (5, 3), (3, 2)]);
+        assert_eq!(select_topn_counting(&scores, 3, 8), vec![(5, 1), (5, 3), (3, 2)]);
+    }
+
+    #[test]
+    fn all_tied_keeps_lowest_indices() {
+        let scores = vec![4; 10];
+        let want: Vec<(i32, usize)> = (0..3).map(|i| (4, i)).collect();
+        assert_eq!(select_topn_heap(&scores, 3), want);
+        assert_eq!(select_topn_counting(&scores, 3, 4), want);
+    }
+
+    #[test]
+    fn n_larger_than_len() {
+        let scores = vec![2, 1];
+        assert_eq!(select_topn_heap(&scores, 10).len(), 2);
+        assert_eq!(select_topn_counting(&scores, 10, 4).len(), 2);
+    }
+
+    #[test]
+    fn agree_with_reference_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let d = rng.range_usize(4, 64);
+            let n = rng.range_usize(1, 200);
+            let n_top = rng.range_usize(1, n + 1);
+            let scores: Vec<i32> = (0..n)
+                .map(|_| rng.below((2 * d + 1) as u64) as i32 - d as i32)
+                .collect();
+            let want = reference(&scores, n_top);
+            assert_eq!(select_topn_heap(&scores, n_top), want, "heap d={d} n={n} N={n_top}");
+            assert_eq!(
+                select_topn_counting(&scores, n_top, d),
+                want,
+                "counting d={d} n={n} N={n_top}"
+            );
+        }
+    }
+}

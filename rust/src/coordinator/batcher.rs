@@ -1,0 +1,207 @@
+//! Dynamic batcher: per-bucket queues with a size-or-deadline flush
+//! policy (the standard continuous-batching admission scheme, static
+//! shapes per bucket because PJRT executables are shape-specialized).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Request;
+use crate::coordinator::router::Bucket;
+
+/// Flush policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush as soon as this many requests are queued (the bucket's batch)
+    pub max_batch: usize,
+    /// flush a non-empty queue after this long even if not full
+    pub max_wait: Duration,
+    /// admission bound per bucket (backpressure)
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// One bucket's admission queue.
+pub struct BucketQueue {
+    pub bucket: Bucket,
+    pub policy: BatchPolicy,
+    queue: VecDeque<Request>,
+    oldest: Option<Instant>,
+}
+
+impl BucketQueue {
+    pub fn new(bucket: Bucket, mut policy: BatchPolicy) -> BucketQueue {
+        policy.max_batch = policy.max_batch.min(bucket.batch);
+        BucketQueue { bucket, policy, queue: VecDeque::new(), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Try to admit; returns the request back on overflow (backpressure).
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
+        if self.queue.len() >= self.policy.queue_cap {
+            return Err(req);
+        }
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Should the queue flush now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.policy.max_batch.min(self.bucket.batch) {
+            return true;
+        }
+        match self.oldest {
+            Some(t) => now.duration_since(t) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline flush would fire (for scheduler sleeps).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let t = self.oldest?;
+        let elapsed = now.duration_since(t);
+        Some(self.policy.max_wait.saturating_sub(elapsed))
+    }
+
+    /// Take up to one bucket-batch of requests.
+    pub fn drain_batch(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.bucket.batch);
+        let out: Vec<Request> = self.queue.drain(..n).collect();
+        self.oldest = if self.queue.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        out
+    }
+}
+
+/// Assemble a padded (batch, n_ctx) i32 tensor from requests. Slots beyond
+/// the real requests repeat row 0 (keeps logits well-defined; their
+/// outputs are discarded). Returns (flat tokens, real count).
+pub fn assemble_padded(
+    requests: &[Request],
+    n_ctx: usize,
+    batch: usize,
+    pad_token: i32,
+) -> (Vec<i32>, usize) {
+    assert!(!requests.is_empty() && requests.len() <= batch);
+    let mut xs = vec![pad_token; batch * n_ctx];
+    for (b, req) in requests.iter().enumerate() {
+        let n = req.tokens.len().min(n_ctx);
+        xs[b * n_ctx..b * n_ctx + n].copy_from_slice(&req.tokens[..n]);
+    }
+    // duplicate row 0 into unused slots
+    let row0: Vec<i32> = xs[..n_ctx].to_vec();
+    for b in requests.len()..batch {
+        xs[b * n_ctx..(b + 1) * n_ctx].copy_from_slice(&row0);
+    }
+    (xs, requests.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, len: usize) -> Request {
+        let (tx, _rx) = channel();
+        Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx }
+    }
+
+    fn bucket() -> Bucket {
+        Bucket { config: "longqa_128".into(), n_ctx: 128, batch: 4 }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut q = BucketQueue::new(bucket(), BatchPolicy::default());
+        let now = Instant::now();
+        for i in 0..3 {
+            q.push(req(i, 64)).unwrap();
+        }
+        assert!(!q.ready(now));
+        q.push(req(3, 64)).unwrap();
+        assert!(q.ready(Instant::now()));
+        let batch = q.drain_batch();
+        assert_eq!(batch.len(), 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut q = BucketQueue::new(
+            bucket(),
+            BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        q.push(req(0, 64)).unwrap();
+        assert!(!q.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(q.ready(Instant::now()));
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut q = BucketQueue::new(
+            bucket(),
+            BatchPolicy { queue_cap: 2, ..Default::default() },
+        );
+        q.push(req(0, 8)).unwrap();
+        q.push(req(1, 8)).unwrap();
+        assert!(q.push(req(2, 8)).is_err());
+    }
+
+    #[test]
+    fn drain_respects_bucket_batch() {
+        let mut q = BucketQueue::new(bucket(), BatchPolicy { queue_cap: 100, ..Default::default() });
+        for i in 0..10 {
+            q.push(req(i, 8)).unwrap();
+        }
+        let b = q.drain_batch();
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 6);
+        // FIFO order preserved
+        assert_eq!(b[0].id, 0);
+        assert_eq!(b[3].id, 3);
+    }
+
+    #[test]
+    fn assemble_pads_and_duplicates() {
+        let reqs = vec![req(0, 5), req(1, 200)];
+        let (xs, real) = assemble_padded(&reqs, 128, 4, 0);
+        assert_eq!(real, 2);
+        assert_eq!(xs.len(), 4 * 128);
+        // row 0: 5 tokens then pad
+        assert_eq!(xs[4], 1);
+        assert_eq!(xs[5], 0);
+        // row 1: truncated to n_ctx
+        assert!(xs[128..256].iter().all(|&t| t == 1));
+        // rows 2,3 = row 0
+        assert_eq!(&xs[256..384], &xs[..128]);
+        assert_eq!(&xs[384..512], &xs[..128]);
+    }
+}

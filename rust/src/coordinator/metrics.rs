@@ -1,0 +1,136 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<u128>,
+    batches: u64,
+    requests: u64,
+    rejected: u64,
+    occupancy_sum: u64,
+    started: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared by batcher and server threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub p50_us: u128,
+    pub p90_us: u128,
+    pub p99_us: u128,
+    pub mean_us: f64,
+    pub mean_occupancy: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, latencies_us: &[u128], occupancy: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        g.latencies_us.extend_from_slice(latencies_us);
+        g.requests += latencies_us.len() as u64;
+        g.batches += 1;
+        g.occupancy_sum += occupancy as u64;
+    }
+
+    pub fn record_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u128 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)]
+            }
+        };
+        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            rejected: g.rejected,
+            p50_us: pct(0.50),
+            p90_us: pct(0.90),
+            p99_us: pct(0.99),
+            mean_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<u128>() as f64 / lat.len() as f64
+            },
+            mean_occupancy: if g.batches == 0 {
+                0.0
+            } else {
+                g.occupancy_sum as f64 / g.batches as f64
+            },
+            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label}: {} reqs in {} batches (occ {:.2}), rejected {} | latency p50 {:.2} ms p90 {:.2} ms p99 {:.2} ms mean {:.2} ms | {:.1} req/s",
+            self.requests,
+            self.batches,
+            self.mean_occupancy,
+            self.rejected,
+            self.p50_us as f64 / 1e3,
+            self.p90_us as f64 / 1e3,
+            self.p99_us as f64 / 1e3,
+            self.mean_us / 1e3,
+            self.throughput_rps,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::default();
+        let lats: Vec<u128> = (1..=100).collect();
+        m.record_batch(&lats, 8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.p50_us, 51);
+        assert_eq!(s.p99_us, 100);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_and_rejections() {
+        let m = Metrics::default();
+        m.record_batch(&[10, 10], 2);
+        m.record_batch(&[10, 10, 10, 10], 4);
+        m.record_reject();
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 1);
+        assert!((s.mean_occupancy - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50_us, 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 serving coordinator: the paper's motivating workload (long-context
+//! inference) served through length-bucketed routing, dynamic batching,
+//! and a single-device PJRT engine, with backpressure and metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{assemble_padded, BatchPolicy, BucketQueue};
+pub use metrics::{Metrics, Snapshot};
+pub use request::{RejectReason, Request, Response};
+pub use router::{Bucket, Router};
+pub use server::{Server, ServingModel};

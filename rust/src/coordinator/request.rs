@@ -1,0 +1,50 @@
+//! Request/response types for the long-context serving engine.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A classification request over a token sequence (the paper's motivating
+/// workload: long-context QA served at batch).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrival: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// argmax class
+    pub pred: i32,
+    /// full logits row
+    pub logits: Vec<f32>,
+    /// which length bucket served it
+    pub bucket: String,
+    /// end-to-end latency (arrival -> response ready)
+    pub latency_us: u128,
+    /// how many real requests shared the executed batch
+    pub batch_occupancy: usize,
+}
+
+/// Why a request was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// longer than the largest bucket
+    TooLong,
+    /// admission queue full (backpressure)
+    QueueFull,
+    /// engine shutting down
+    ShuttingDown,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::TooLong => write!(f, "sequence exceeds largest context bucket"),
+            RejectReason::QueueFull => write!(f, "admission queue full"),
+            RejectReason::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Length-bucket router: maps request length -> the smallest compiled
+//! context bucket that fits (one PJRT executable per bucket, as one CUDA
+//! graph per shape in GPU serving stacks).
+
+use crate::coordinator::request::RejectReason;
+
+/// One servable bucket: a config name + its context/batch geometry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub config: String,
+    pub n_ctx: usize,
+    pub batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// sorted ascending by n_ctx
+    buckets: Vec<Bucket>,
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<Bucket>) -> Router {
+        assert!(!buckets.is_empty(), "router needs at least one bucket");
+        buckets.sort_by_key(|b| b.n_ctx);
+        Router { buckets }
+    }
+
+    /// The standard bucket set over the longqa configs.
+    pub fn longqa_default() -> Router {
+        Router::new(
+            [(128usize, 16usize), (256, 16), (512, 8), (1024, 4)]
+                .iter()
+                .map(|&(n, b)| Bucket {
+                    config: format!("longqa_{n}"),
+                    n_ctx: n,
+                    batch: b,
+                })
+                .collect(),
+        )
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket with n_ctx >= len.
+    pub fn route(&self, len: usize) -> Result<&Bucket, RejectReason> {
+        self.buckets
+            .iter()
+            .find(|b| b.n_ctx >= len)
+            .ok_or(RejectReason::TooLong)
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.buckets.last().unwrap().n_ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{quickcheck, usize_in};
+
+    #[test]
+    fn routes_to_smallest_fitting() {
+        let r = Router::longqa_default();
+        assert_eq!(r.route(10).unwrap().n_ctx, 128);
+        assert_eq!(r.route(128).unwrap().n_ctx, 128);
+        assert_eq!(r.route(129).unwrap().n_ctx, 256);
+        assert_eq!(r.route(1000).unwrap().n_ctx, 1024);
+        assert_eq!(r.route(1025).unwrap_err(), RejectReason::TooLong);
+    }
+
+    #[test]
+    fn routing_invariants_property() {
+        // for any length <= max: the chosen bucket fits AND no smaller
+        // bucket fits (minimality) — the core router invariant.
+        let r = Router::longqa_default();
+        quickcheck(&usize_in(1, 1024), |&len| {
+            let b = r.route(len).unwrap();
+            let fits = b.n_ctx >= len;
+            let minimal = r
+                .buckets()
+                .iter()
+                .filter(|c| c.n_ctx >= len)
+                .all(|c| c.n_ctx >= b.n_ctx);
+            fits && minimal
+        });
+    }
+
+    #[test]
+    fn buckets_sorted() {
+        let r = Router::new(vec![
+            Bucket { config: "b".into(), n_ctx: 512, batch: 4 },
+            Bucket { config: "a".into(), n_ctx: 128, batch: 8 },
+        ]);
+        assert_eq!(r.buckets()[0].n_ctx, 128);
+    }
+}

@@ -1,0 +1,266 @@
+//! The serving engine: router + dynamic batcher + PJRT engine thread.
+//!
+//! Architecture (single PJRT device, per DESIGN.md):
+//!
+//!   clients --submit()--> shared bucket queues --scheduler thread-->
+//!     assemble padded batch --> EngineHandle (PJRT thread) -->
+//!     logits --> per-request reply channels ; Metrics throughout
+//!
+//! Backpressure: bounded per-bucket admission queues; `submit` rejects
+//! with `QueueFull` rather than queueing unboundedly.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{RejectReason, Request, Response};
+use crate::coordinator::router::Router;
+use crate::log_info;
+use crate::log_warn;
+use crate::model::Checkpoint;
+use crate::runtime::{EngineHandle, HostTensor, Manifest};
+use crate::tensor::ops::argmax;
+
+/// Weights + calibration served for one bucket.
+#[derive(Clone)]
+pub struct ServingModel {
+    pub params: Vec<HostTensor>,
+    pub sigma_q: Vec<f32>,
+    pub sigma_k: Vec<f32>,
+    pub n_top: f32,
+    /// forward artifact name within the bucket's config ("fwd_had", ...)
+    pub fwd: String,
+}
+
+impl ServingModel {
+    pub fn from_checkpoint(ckpt: &Checkpoint, n_top: f32, fwd: &str) -> ServingModel {
+        ServingModel {
+            params: ckpt.params.tensors.clone(),
+            sigma_q: ckpt.sigma_q.clone(),
+            sigma_k: ckpt.sigma_k.clone(),
+            n_top,
+            fwd: fwd.to_string(),
+        }
+    }
+
+    /// Randomly initialized model (latency/throughput demos where accuracy
+    /// is irrelevant).
+    pub fn random(
+        manifest: &Manifest,
+        config: &str,
+        seed: u64,
+        fwd: &str,
+    ) -> Result<ServingModel> {
+        let cfg = manifest.config(config)?;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let params = crate::model::ParamSet::init(cfg, &mut rng);
+        Ok(ServingModel {
+            params: params.tensors,
+            sigma_q: vec![1.0; cfg.model.n_layers],
+            sigma_k: vec![1.0; cfg.model.n_layers],
+            n_top: cfg.model.n_top as f32,
+            fwd: fwd.to_string(),
+        })
+    }
+}
+
+struct Shared {
+    queues: Mutex<Vec<BucketQueue>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+pub struct Server {
+    router: Router,
+    shared: Arc<Shared>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the scheduler thread. `models[i]` corresponds to
+    /// `router.buckets()[i]`.
+    pub fn start(
+        engine: EngineHandle,
+        router: Router,
+        models: Vec<ServingModel>,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        anyhow::ensure!(
+            models.len() == router.buckets().len(),
+            "one ServingModel per bucket required"
+        );
+        let queues: Vec<BucketQueue> = router
+            .buckets()
+            .iter()
+            .map(|b| BucketQueue::new(b.clone(), policy))
+            .collect();
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(queues),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::default());
+
+        let sched_shared = Arc::clone(&shared);
+        let sched_metrics = Arc::clone(&metrics);
+        let scheduler = std::thread::Builder::new()
+            .name("had-scheduler".into())
+            .spawn(move || scheduler_main(sched_shared, engine, models, sched_metrics))
+            .context("spawning scheduler")?;
+
+        Ok(Server {
+            router,
+            shared,
+            metrics,
+            next_id: AtomicU64::new(0),
+            scheduler: Some(scheduler),
+        })
+    }
+
+    /// Submit a request; returns the reply channel.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Response>, RejectReason> {
+        if self.shared.shutdown.load(Ordering::Relaxed) {
+            return Err(RejectReason::ShuttingDown);
+        }
+        let bucket_idx = {
+            let b = self.router.route(tokens.len())?;
+            self.router
+                .buckets()
+                .iter()
+                .position(|x| x == b)
+                .expect("bucket index")
+        };
+        let (tx, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            arrival: Instant::now(),
+            reply: tx,
+        };
+        let mut queues = self.shared.queues.lock().unwrap();
+        match queues[bucket_idx].push(req) {
+            Ok(()) => {
+                self.shared.cv.notify_one();
+                Ok(rx)
+            }
+            Err(_req) => {
+                self.metrics.record_reject();
+                Err(RejectReason::QueueFull)
+            }
+        }
+    }
+
+    /// Blocking convenience: submit and wait for the response.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        let rx = self
+            .submit(tokens)
+            .map_err(|r| anyhow::anyhow!("rejected: {r}"))?;
+        rx.recv().context("server dropped the request")
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.scheduler.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn scheduler_main(
+    shared: Arc<Shared>,
+    engine: EngineHandle,
+    models: Vec<ServingModel>,
+    metrics: Arc<Metrics>,
+) {
+    let mut served = 0u64;
+    loop {
+        // collect a ready batch under the lock
+        let work: Option<(usize, Vec<Request>)> = {
+            let mut queues = shared.queues.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    // drain everything remaining before exit
+                    if let Some(i) = (0..queues.len()).find(|&i| !queues[i].is_empty()) {
+                        let reqs = queues[i].drain_batch();
+                        break Some((i, reqs));
+                    }
+                    break None;
+                }
+                let now = Instant::now();
+                if let Some(i) = (0..queues.len()).find(|&i| queues[i].ready(now)) {
+                    let reqs = queues[i].drain_batch();
+                    break Some((i, reqs));
+                }
+                // sleep until the nearest deadline (or a notify)
+                let timeout = queues
+                    .iter()
+                    .filter_map(|q| q.next_deadline(now))
+                    .min()
+                    .unwrap_or(std::time::Duration::from_millis(50));
+                let (q, _tmo) = shared
+                    .cv
+                    .wait_timeout(queues, timeout.max(std::time::Duration::from_micros(100)))
+                    .unwrap();
+                queues = q;
+            }
+        };
+        let Some((idx, reqs)) = work else { break };
+        let model = &models[idx];
+        let bucket = {
+            let queues = shared.queues.lock().unwrap();
+            queues[idx].bucket.clone()
+        };
+
+        // assemble and execute OUTSIDE the queue lock
+        let (xs, real) = assemble_padded(&reqs, bucket.n_ctx, bucket.batch, crate::data::PAD);
+        let mut inputs: Vec<HostTensor> = model.params.clone();
+        inputs.push(HostTensor::i32(vec![bucket.batch, bucket.n_ctx], xs));
+        inputs.push(HostTensor::vec_f32(model.sigma_q.clone()));
+        inputs.push(HostTensor::vec_f32(model.sigma_k.clone()));
+        inputs.push(HostTensor::scalar_f32(model.n_top));
+        let artifact = format!("{}__{}", bucket.config, model.fwd);
+
+        match engine.exec(&artifact, inputs) {
+            Ok(out) => {
+                let logits = out[0].as_f32().unwrap_or(&[]);
+                let n_classes = logits.len() / bucket.batch.max(1);
+                // record metrics BEFORE replying: a client that sees its
+                // response must also see it in a subsequent snapshot
+                let lats: Vec<u128> =
+                    reqs.iter().map(|r| r.arrival.elapsed().as_micros()).collect();
+                metrics.record_batch(&lats, real);
+                for ((b, req), latency_us) in reqs.iter().enumerate().zip(&lats) {
+                    let row = &logits[b * n_classes..(b + 1) * n_classes];
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        pred: argmax(row) as i32,
+                        logits: row.to_vec(),
+                        bucket: bucket.config.clone(),
+                        latency_us: *latency_us,
+                        batch_occupancy: real,
+                    });
+                    served += 1;
+                }
+            }
+            Err(e) => {
+                log_warn!("batch execution failed on {artifact}: {e:#}");
+                // drop reply senders: clients observe disconnection
+            }
+        }
+    }
+    log_info!("scheduler exiting after {served} responses");
+}

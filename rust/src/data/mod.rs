@@ -1,0 +1,110 @@
+//! Synthetic task suites standing in for the paper's datasets
+//! (DESIGN.md §3 substitutions):
+//!
+//! * `tinyglue` — 8 sequence-classification tasks with GLUE-shaped
+//!   structure (Table 1 analog).
+//! * `vision`  — procedural shape images, patchified for the ViT analog
+//!   (Table 2 / Figure 3).
+//! * `longqa`  — needle-in-haystack multiple-choice QA over long synthetic
+//!   documents (QuALITY / Figure 5 analog).
+//!
+//! All generators are deterministic in the seed, emit fixed-shape batches
+//! matching the artifact signatures, and split train/eval by disjoint seed
+//! streams.
+
+pub mod longqa;
+pub mod tinyglue;
+pub mod vision;
+
+use crate::runtime::HostTensor;
+
+/// Reserved vocabulary for token-mode tasks (vocab = 256 in the configs).
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+/// First free content token.
+pub const TOK0: i32 = 8;
+
+/// A fixed-size batch ready to feed an artifact.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (B, n_ctx) i32 for token mode, (B, n_patches, input_dim) f32 dense.
+    pub x: HostTensor,
+    /// (B,) labels.
+    pub y: HostTensor,
+    pub labels: Vec<i32>,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+/// A generator of (example, label) pairs at fixed shape.
+pub trait TaskGen {
+    /// Number of classes (labels are in 0..n_classes).
+    fn n_classes(&self) -> usize;
+
+    /// Sample one example into `x` (flattened) and return its label.
+    fn sample(&self, rng: &mut crate::util::rng::Rng, x: &mut [i32]) -> i32;
+
+    /// Human-readable task name (report rows).
+    fn name(&self) -> &str;
+}
+
+/// Assemble a token-mode batch from any TaskGen.
+pub fn token_batch(
+    gen: &dyn TaskGen,
+    rng: &mut crate::util::rng::Rng,
+    batch: usize,
+    n_ctx: usize,
+) -> Batch {
+    let mut xs = vec![PAD; batch * n_ctx];
+    let mut labels = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let label = gen.sample(rng, &mut xs[b * n_ctx..(b + 1) * n_ctx]);
+        labels.push(label);
+    }
+    Batch {
+        x: HostTensor::i32(vec![batch, n_ctx], xs),
+        y: HostTensor::i32(vec![batch], labels.clone()),
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    struct Dummy;
+    impl TaskGen for Dummy {
+        fn n_classes(&self) -> usize {
+            2
+        }
+        fn sample(&self, rng: &mut Rng, x: &mut [i32]) -> i32 {
+            let label = (rng.next_u32() % 2) as i32;
+            x[0] = CLS;
+            x[1] = TOK0 + label;
+            label
+        }
+        fn name(&self) -> &str {
+            "dummy"
+        }
+    }
+
+    #[test]
+    fn token_batch_shapes() {
+        let mut rng = Rng::new(0);
+        let b = token_batch(&Dummy, &mut rng, 4, 16);
+        assert_eq!(b.x.shape(), &[4, 16]);
+        assert_eq!(b.y.shape(), &[4]);
+        assert_eq!(b.batch_size(), 4);
+        // CLS always at position 0
+        let xs = b.x.as_i32().unwrap();
+        for i in 0..4 {
+            assert_eq!(xs[i * 16], CLS);
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! tinyGLUE: eight synthetic sequence-classification tasks mirroring the
+//! structure (single/pair-sentence, classification/ordinal) of the GLUE
+//! tasks in the paper's Table 1.
+//!
+//! Design constraints:
+//!  * every task is solvable by token-pair matching / counting — exactly
+//!    the computations attention performs — so attention fidelity (what
+//!    HAD distills) is the bottleneck, as in the paper;
+//!  * RTE/MRPC analogs are intentionally harder (fewer distinguishing
+//!    tokens, overlapping distributions) matching the paper's observation
+//!    that "all methods significantly struggle with RTE and MRPC";
+//!  * MNLI has matched/mismatched eval domains (token-range shift).
+//!
+//! Sequence layout (n_ctx = 128, vocab = 256, 4 label slots):
+//!   [CLS] seg_a... [SEP] seg_b... [SEP] [PAD]...
+
+use super::{TaskGen, CLS, PAD, SEP, TOK0};
+use crate::util::rng::Rng;
+
+/// Content token helper: tokens TOK0..vocab are content space.
+const VOCAB: i32 = 256;
+/// negation marker used by NLI-style tasks
+const NEG: i32 = 3;
+/// sentiment lexicons
+const POS_LEX: std::ops::Range<i32> = 16..48;
+const NEG_LEX: std::ops::Range<i32> = 48..80;
+
+fn fill_random(rng: &mut Rng, out: &mut [i32], lo: i32, hi: i32) {
+    for x in out.iter_mut() {
+        *x = lo + rng.below((hi - lo) as u64) as i32;
+    }
+}
+
+/// Write CLS seg_a SEP seg_b SEP, padding the rest.
+fn compose(x: &mut [i32], seg_a: &[i32], seg_b: &[i32]) {
+    x.fill(PAD);
+    x[0] = CLS;
+    let mut i = 1;
+    for &t in seg_a {
+        x[i] = t;
+        i += 1;
+    }
+    x[i] = SEP;
+    i += 1;
+    for &t in seg_b {
+        x[i] = t;
+        i += 1;
+    }
+    x[i] = SEP;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlueTask {
+    Mnli,      // 3-way entailment, matched/mismatched domains
+    Qqp,       // paraphrase detection
+    Qnli,      // question/answer containment
+    Sst2,      // sentiment by lexicon counting
+    Cola,      // bigram-grammar acceptability
+    Stsb,      // overlap similarity, 4 ordinal buckets
+    Mrpc,      // hard paraphrase (same topic distractors)
+    Rte,       // binary entailment, low-signal
+}
+
+impl GlueTask {
+    pub const ALL: [GlueTask; 8] = [
+        GlueTask::Mnli,
+        GlueTask::Qqp,
+        GlueTask::Qnli,
+        GlueTask::Sst2,
+        GlueTask::Cola,
+        GlueTask::Stsb,
+        GlueTask::Mrpc,
+        GlueTask::Rte,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Mnli => "MNLI",
+            GlueTask::Qqp => "QQP",
+            GlueTask::Qnli => "QNLI",
+            GlueTask::Sst2 => "SST-2",
+            GlueTask::Cola => "CoLA",
+            GlueTask::Stsb => "STS-B",
+            GlueTask::Mrpc => "MRPC",
+            GlueTask::Rte => "RTE",
+        }
+    }
+
+    /// Metric used in the Table-1 analog (matches the GLUE conventions).
+    pub fn metric(&self) -> &'static str {
+        match self {
+            GlueTask::Cola => "matthews",
+            GlueTask::Stsb => "pearson",
+            _ => "accuracy",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            GlueTask::Stsb => 4,
+            _ => 2,
+        }
+    }
+}
+
+/// Generator for one task. `domain_shift` selects the MNLI "mismatched"
+/// token domain for eval.
+pub struct GlueGen {
+    pub task: GlueTask,
+    pub domain_shift: bool,
+    seg_len: usize,
+}
+
+impl GlueGen {
+    pub fn new(task: GlueTask) -> GlueGen {
+        GlueGen { task, domain_shift: false, seg_len: 24 }
+    }
+
+    pub fn mismatched(task: GlueTask) -> GlueGen {
+        GlueGen { task, domain_shift: true, seg_len: 24 }
+    }
+
+    /// Content token range for the current domain.
+    fn domain(&self) -> (i32, i32) {
+        if self.domain_shift {
+            (128, VOCAB) // mismatched: disjoint upper half of the vocab
+        } else {
+            (TOK0 + 80, 128) // matched: mid-range, clear of the lexicons
+        }
+    }
+}
+
+impl TaskGen for GlueGen {
+    fn n_classes(&self) -> usize {
+        self.task.n_classes()
+    }
+
+    fn name(&self) -> &str {
+        self.task.name()
+    }
+
+    fn sample(&self, rng: &mut Rng, x: &mut [i32]) -> i32 {
+        let l = self.seg_len;
+        let (lo, hi) = self.domain();
+        let mut a = vec![0i32; l];
+        let mut b = vec![0i32; l];
+        match self.task {
+            GlueTask::Mnli | GlueTask::Rte => {
+                // premise: random content; hypothesis by label
+                fill_random(rng, &mut a, lo, hi);
+                let three_way = self.task == GlueTask::Mnli;
+                let label = rng.below(if three_way { 3 } else { 2 }) as i32;
+                match label {
+                    0 => {
+                        // entailment: hypothesis = subset of premise tokens
+                        for i in 0..l {
+                            b[i] = a[rng.range_usize(0, l)];
+                        }
+                    }
+                    1 if three_way => {
+                        // neutral: same domain, fresh tokens
+                        fill_random(rng, &mut b, lo, hi);
+                    }
+                    _ => {
+                        // contradiction / non-entailment: subset + negation
+                        for i in 0..l {
+                            b[i] = a[rng.range_usize(0, l)];
+                        }
+                        // RTE analog: weaker signal — only ONE negation
+                        // marker hidden among content (low-signal task)
+                        let n_neg = if three_way { 3 } else { 1 };
+                        for _ in 0..n_neg {
+                            b[rng.range_usize(0, l)] = NEG;
+                        }
+                    }
+                }
+                compose(x, &a, &b);
+                label
+            }
+            GlueTask::Qqp | GlueTask::Mrpc => {
+                fill_random(rng, &mut a, lo, hi);
+                let label = rng.below(2) as i32;
+                if label == 1 {
+                    // paraphrase: shuffled copy with light noise
+                    b.copy_from_slice(&a);
+                    rng.shuffle(&mut b);
+                    let noise = if self.task == GlueTask::Mrpc { 4 } else { 2 };
+                    for _ in 0..noise {
+                        b[rng.range_usize(0, l)] = lo + rng.below((hi - lo) as u64) as i32;
+                    }
+                } else if self.task == GlueTask::Mrpc {
+                    // hard negative: share HALF the tokens (same topic)
+                    for i in 0..l {
+                        b[i] = if i % 2 == 0 {
+                            a[rng.range_usize(0, l)]
+                        } else {
+                            lo + rng.below((hi - lo) as u64) as i32
+                        };
+                    }
+                    rng.shuffle(&mut b);
+                } else {
+                    fill_random(rng, &mut b, lo, hi);
+                }
+                compose(x, &a, &b);
+                label
+            }
+            GlueTask::Qnli => {
+                // question: contains a probe token Q; sentence either
+                // contains the "answer pair" (Q, Q+1 adjacent) or not
+                fill_random(rng, &mut a, lo, hi);
+                fill_random(rng, &mut b, lo, hi);
+                let probe = lo + rng.below((hi - lo - 1) as u64) as i32;
+                a[0] = probe;
+                let label = rng.below(2) as i32;
+                if label == 1 {
+                    let pos = rng.range_usize(0, l - 1);
+                    b[pos] = probe;
+                    b[pos + 1] = probe + 1;
+                }
+                compose(x, &a, &b);
+                label
+            }
+            GlueTask::Sst2 => {
+                // sentiment: which lexicon dominates (counting task)
+                let label = rng.below(2) as i32;
+                let (major, minor) = if label == 1 {
+                    (POS_LEX, NEG_LEX)
+                } else {
+                    (NEG_LEX, POS_LEX)
+                };
+                let n_major = l / 2 + 2 + rng.range_usize(0, 4);
+                for (i, t) in a.iter_mut().enumerate() {
+                    *t = if i < n_major {
+                        major.start + rng.below((major.end - major.start) as u64) as i32
+                    } else {
+                        minor.start + rng.below((minor.end - minor.start) as u64) as i32
+                    };
+                }
+                rng.shuffle(&mut a);
+                fill_random(rng, &mut b, lo, hi); // filler segment
+                compose(x, &a, &b);
+                label
+            }
+            GlueTask::Cola => {
+                // grammar: even positions hold tokens with even offset,
+                // odd positions odd offset ("agreement rule"); corrupt k
+                // positions for unacceptable sequences
+                for (i, t) in a.iter_mut().enumerate() {
+                    let off = rng.below(((hi - lo) / 2) as u64) as i32 * 2;
+                    *t = lo + off + (i as i32 % 2);
+                }
+                let label = rng.below(2) as i32;
+                if label == 0 {
+                    for _ in 0..3 {
+                        let i = rng.range_usize(0, l);
+                        a[i] ^= 1; // flip parity: breaks the rule
+                    }
+                }
+                fill_random(rng, &mut b, lo, hi);
+                compose(x, &a, &b);
+                label
+            }
+            GlueTask::Stsb => {
+                // similarity: overlap fraction in {~0, ~1/3, ~2/3, ~1}
+                fill_random(rng, &mut a, lo, hi);
+                let label = rng.below(4) as i32;
+                let n_shared = (l * label as usize) / 3;
+                for i in 0..l {
+                    b[i] = if i < n_shared {
+                        a[i]
+                    } else {
+                        lo + rng.below((hi - lo) as u64) as i32
+                    };
+                }
+                rng.shuffle(&mut b);
+                compose(x, &a, &b);
+                label
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::token_batch;
+
+    #[test]
+    fn all_tasks_generate_valid_batches() {
+        let mut rng = Rng::new(1);
+        for task in GlueTask::ALL {
+            let gen = GlueGen::new(task);
+            let b = token_batch(&gen, &mut rng, 8, 128);
+            let xs = b.x.as_i32().unwrap();
+            assert!(xs.iter().all(|&t| (0..VOCAB).contains(&t)), "{task:?}");
+            for &y in &b.labels {
+                assert!((y as usize) < task.n_classes(), "{task:?} label {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let mut rng = Rng::new(2);
+        for task in GlueTask::ALL {
+            let gen = GlueGen::new(task);
+            let mut counts = vec![0usize; task.n_classes()];
+            let mut x = vec![0i32; 128];
+            for _ in 0..600 {
+                counts[gen.sample(&mut rng, &mut x) as usize] += 1;
+            }
+            for (c, &n) in counts.iter().enumerate() {
+                assert!(
+                    n > 600 / task.n_classes() / 2,
+                    "{task:?} class {c} undersampled: {counts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_domain_disjoint() {
+        let mut rng = Rng::new(3);
+        let gen = GlueGen::mismatched(GlueTask::Mnli);
+        let mut x = vec![0i32; 128];
+        gen.sample(&mut rng, &mut x);
+        // content tokens in x (beyond specials) must be >= 128
+        assert!(x.iter().all(|&t| t < 8 || t >= 128));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = GlueGen::new(GlueTask::Qqp);
+        let mut a_rng = Rng::new(42);
+        let mut b_rng = Rng::new(42);
+        let mut xa = vec![0i32; 128];
+        let mut xb = vec![0i32; 128];
+        let la = gen.sample(&mut a_rng, &mut xa);
+        let lb = gen.sample(&mut b_rng, &mut xb);
+        assert_eq!(la, lb);
+        assert_eq!(xa, xb);
+    }
+}

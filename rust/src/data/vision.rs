@@ -1,0 +1,173 @@
+//! Procedural shape-classification images: the ImageNet/DeiT analog
+//! (Table 2, Figure 3).
+//!
+//! 32x32 images with 3 channels, drawn procedurally with noise, then
+//! patchified into an 8x8 grid of 4x4x3 = 48-dim patches — matching the
+//! `vision_*` configs (n_ctx = 65 with the CLS slot, input_dim = 48).
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 32;
+pub const CH: usize = 3;
+pub const PATCH: usize = 4;
+pub const GRID: usize = IMG / PATCH; // 8
+pub const N_PATCHES: usize = GRID * GRID; // 64
+pub const PATCH_DIM: usize = PATCH * PATCH * CH; // 48
+pub const N_CLASSES: usize = 8;
+
+pub const CLASS_NAMES: [&str; N_CLASSES] = [
+    "square-outline",
+    "square-filled",
+    "disk",
+    "cross",
+    "h-stripes",
+    "v-stripes",
+    "diagonal",
+    "checkerboard",
+];
+
+/// Render one image (row-major HWC) of the given class with jittered
+/// geometry, per-class hue, and additive noise.
+pub fn render(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG * IMG * CH];
+    let cx = 12.0 + 8.0 * rng.next_f32();
+    let cy = 12.0 + 8.0 * rng.next_f32();
+    let r = 6.0 + 6.0 * rng.next_f32();
+    // per-class base color, jittered
+    let hue = [
+        (0.9, 0.2, 0.2),
+        (0.2, 0.9, 0.2),
+        (0.2, 0.2, 0.9),
+        (0.9, 0.9, 0.2),
+        (0.9, 0.2, 0.9),
+        (0.2, 0.9, 0.9),
+        (0.7, 0.7, 0.7),
+        (0.9, 0.5, 0.2),
+    ][class];
+    let jitter = 0.2 * rng.next_f32();
+    let color = [hue.0 + jitter, hue.1 + jitter, hue.2 + jitter];
+    let period = 3 + rng.range_usize(0, 3);
+
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            let on = match class {
+                0 => {
+                    let d = dx.abs().max(dy.abs());
+                    d <= r && d >= r - 2.0
+                }
+                1 => dx.abs().max(dy.abs()) <= r,
+                2 => (dx * dx + dy * dy).sqrt() <= r,
+                3 => dx.abs() <= 1.5 || dy.abs() <= 1.5,
+                4 => (y / period) % 2 == 0,
+                5 => (x / period) % 2 == 0,
+                6 => ((x + y) / period) % 2 == 0,
+                _ => (x / period) % 2 == (y / period) % 2,
+            };
+            let base = if on { 1.0 } else { 0.0 };
+            for c in 0..CH {
+                let noise = 0.15 * (rng.next_f32() - 0.5);
+                img[(y * IMG + x) * CH + c] = base * color[c] + noise;
+            }
+        }
+    }
+    img
+}
+
+/// Patchify HWC image into (N_PATCHES, PATCH_DIM), row-major patches.
+pub fn patchify(img: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; N_PATCHES * PATCH_DIM];
+    for py in 0..GRID {
+        for px in 0..GRID {
+            let p = py * GRID + px;
+            let mut k = 0;
+            for dy in 0..PATCH {
+                for dx in 0..PATCH {
+                    let (y, x) = (py * PATCH + dy, px * PATCH + dx);
+                    for c in 0..CH {
+                        out[p * PATCH_DIM + k] = img[(y * IMG + x) * CH + c];
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A batch of patchified images: x (B, N_PATCHES, PATCH_DIM), y (B,).
+pub fn vision_batch(rng: &mut Rng, batch: usize) -> crate::data::Batch {
+    let mut xs = Vec::with_capacity(batch * N_PATCHES * PATCH_DIM);
+    let mut labels = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let class = rng.below(N_CLASSES as u64) as usize;
+        let img = render(class, rng);
+        xs.extend_from_slice(&patchify(&img));
+        labels.push(class as i32);
+    }
+    crate::data::Batch {
+        x: HostTensor::f32(vec![batch, N_PATCHES, PATCH_DIM], xs),
+        y: HostTensor::i32(vec![batch], labels.clone()),
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(0);
+        let b = vision_batch(&mut rng, 4);
+        assert_eq!(b.x.shape(), &[4, N_PATCHES, PATCH_DIM]);
+        assert_eq!(b.y.shape(), &[4]);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean intra-class pixel distance < mean inter-class distance
+        let mut rng = Rng::new(1);
+        let imgs: Vec<(usize, Vec<f32>)> = (0..N_CLASSES)
+            .flat_map(|c| (0..4).map(move |_| c))
+            .map(|c| (c, render(c, &mut Rng::new(rng.next_u64()))))
+            .collect();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        let mut intra = (0.0, 0);
+        let mut inter = (0.0, 0);
+        for i in 0..imgs.len() {
+            for j in i + 1..imgs.len() {
+                let d = dist(&imgs[i].1, &imgs[j].1);
+                if imgs[i].0 == imgs[j].0 {
+                    intra = (intra.0 + d, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + d, inter.1 + 1);
+                }
+            }
+        }
+        assert!(intra.0 / intra.1 as f32 <= inter.0 / inter.1 as f32);
+    }
+
+    #[test]
+    fn patchify_preserves_energy() {
+        let mut rng = Rng::new(2);
+        let img = render(1, &mut rng);
+        let patches = patchify(&img);
+        let e1: f32 = img.iter().map(|x| x * x).sum();
+        let e2: f32 = patches.iter().map(|x| x * x).sum();
+        assert!((e1 - e2).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pixel_range_sane() {
+        let mut rng = Rng::new(3);
+        for c in 0..N_CLASSES {
+            let img = render(c, &mut rng);
+            assert!(img.iter().all(|&x| (-0.5..=1.5).contains(&x)));
+        }
+    }
+}

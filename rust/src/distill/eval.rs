@@ -1,0 +1,155 @@
+//! Evaluation: run a fwd artifact over batches, compute the GLUE-style
+//! metrics the paper's tables report (accuracy, Matthews corr, Pearson r).
+
+use anyhow::{Context, Result};
+
+use crate::data::Batch;
+use crate::model::Checkpoint;
+use crate::runtime::{ConfigEntry, HostTensor, Runtime};
+use crate::tensor::ops::argmax;
+
+/// Predictions + labels for one eval pass.
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub preds: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f32 {
+        if self.preds.is_empty() {
+            return 0.0;
+        }
+        let hits = self.preds.iter().zip(&self.labels).filter(|(p, y)| p == y).count();
+        hits as f32 / self.preds.len() as f32
+    }
+
+    /// Matthews correlation coefficient, binary (CoLA's metric).
+    pub fn matthews(&self) -> f32 {
+        let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+        for (&p, &y) in self.preds.iter().zip(&self.labels) {
+            match (p != 0, y != 0) {
+                (true, true) => tp += 1.0,
+                (false, false) => tn += 1.0,
+                (true, false) => fp += 1.0,
+                (false, true) => fnn += 1.0,
+            }
+        }
+        let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+        if denom == 0.0 {
+            0.0
+        } else {
+            (((tp * tn) - (fp * fnn)) / denom) as f32
+        }
+    }
+
+    /// Pearson correlation of predicted vs true ordinal labels (STS-B's
+    /// metric applied to the bucketed analog).
+    pub fn pearson(&self) -> f32 {
+        let n = self.preds.len() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let (xs, ys): (Vec<f64>, Vec<f64>) = self
+            .preds
+            .iter()
+            .zip(&self.labels)
+            .map(|(&p, &y)| (p as f64, y as f64))
+            .unzip();
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut vx = 0.0;
+        let mut vy = 0.0;
+        for (x, y) in xs.iter().zip(&ys) {
+            cov += (x - mx) * (y - my);
+            vx += (x - mx) * (x - mx);
+            vy += (y - my) * (y - my);
+        }
+        if vx == 0.0 || vy == 0.0 {
+            0.0
+        } else {
+            (cov / (vx * vy).sqrt()) as f32
+        }
+    }
+
+    /// Metric dispatch by name ("accuracy" | "matthews" | "pearson"),
+    /// scaled to percentage points like the paper's tables.
+    pub fn metric(&self, name: &str) -> f32 {
+        100.0
+            * match name {
+                "matthews" => self.matthews(),
+                "pearson" => self.pearson(),
+                _ => self.accuracy(),
+            }
+    }
+}
+
+/// Evaluate `ckpt` with a forward artifact over the given batches.
+/// `n_top` is the runtime sparsity parameter (ignored by dense variants).
+pub fn evaluate(
+    rt: &Runtime,
+    cfg: &ConfigEntry,
+    fwd_artifact: &str,
+    ckpt: &Checkpoint,
+    batches: &[Batch],
+    n_top: f32,
+) -> Result<EvalResult> {
+    let exe = rt.load(&format!("{}__{}", cfg.name, fwd_artifact))?;
+    let sq = HostTensor::vec_f32(ckpt.sigma_q.clone());
+    let sk = HostTensor::vec_f32(ckpt.sigma_k.clone());
+    let mut result = EvalResult::default();
+    for batch in batches {
+        let mut inputs: Vec<HostTensor> = ckpt.params.tensors.clone();
+        inputs.push(batch.x.clone());
+        inputs.push(sq.clone());
+        inputs.push(sk.clone());
+        inputs.push(HostTensor::scalar_f32(n_top));
+        let out = exe.run(&inputs).context("fwd")?;
+        let logits = out[0].as_f32()?;
+        let n_classes = cfg.model.n_classes;
+        for (b, &y) in batch.labels.iter().enumerate() {
+            let row = &logits[b * n_classes..(b + 1) * n_classes];
+            result.preds.push(argmax(row) as i32);
+            result.labels.push(y);
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn er(preds: Vec<i32>, labels: Vec<i32>) -> EvalResult {
+        EvalResult { preds, labels }
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(er(vec![1, 0, 1], vec![1, 1, 1]).accuracy(), 2.0 / 3.0);
+        assert_eq!(er(vec![], vec![]).accuracy(), 0.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverted() {
+        assert!((er(vec![0, 1, 0, 1], vec![0, 1, 0, 1]).matthews() - 1.0).abs() < 1e-6);
+        assert!((er(vec![1, 0, 1, 0], vec![0, 1, 0, 1]).matthews() + 1.0).abs() < 1e-6);
+        // degenerate single-class predictions -> 0
+        assert_eq!(er(vec![1, 1, 1, 1], vec![0, 1, 0, 1]).matthews(), 0.0);
+    }
+
+    #[test]
+    fn pearson_monotone() {
+        assert!((er(vec![0, 1, 2, 3], vec![0, 1, 2, 3]).pearson() - 1.0).abs() < 1e-6);
+        assert!(er(vec![3, 2, 1, 0], vec![0, 1, 2, 3]).pearson() < -0.99);
+        assert_eq!(er(vec![1, 1], vec![0, 1]).pearson(), 0.0);
+    }
+
+    #[test]
+    fn metric_dispatch_scales_to_percent() {
+        let e = er(vec![1, 1, 0, 0], vec![1, 1, 0, 0]);
+        assert_eq!(e.metric("accuracy"), 100.0);
+        assert_eq!(e.metric("matthews"), 100.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! The distillation framework (paper Algorithm 1) driven from Rust:
+//! schedule (c decay, stage transitions), pipeline (teacher training,
+//! sigma calibration, 4-stage student distillation), and evaluation with
+//! the paper's metrics.
+
+pub mod eval;
+pub mod pipeline;
+pub mod schedule;
+
+pub use eval::{evaluate, EvalResult};
+pub use pipeline::{DistillOutcome, Method, Pipeline};
+pub use schedule::{Budget, Schedule, Stage};

@@ -1,0 +1,283 @@
+//! The distillation pipeline driver: teacher pre-training, sigma
+//! calibration, and the 4-stage student distillation of Algorithm 1 —
+//! all executed through the PJRT artifacts; no Python anywhere.
+
+use anyhow::{Context, Result};
+
+use super::schedule::{Schedule, Stage};
+use crate::data::Batch;
+use crate::log_info;
+use crate::model::{Checkpoint, ParamSet, TrainState};
+use crate::runtime::{ConfigEntry, HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// The six Table-1/2 columns (and the Figure-3 subject).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// full-precision teacher = the Baseline row
+    Baseline,
+    /// HAD (ours): full Algorithm-1 pipeline
+    Had,
+    /// "w/ SAB": HAD pipeline + BiViT softmax-aware attention binarization
+    Sab,
+    /// "w/o AD": attention-distillation loss removed throughout
+    HadNoAd,
+    /// "w/o Tanh": tanh stages replaced by equal-length STE training
+    HadNoTanh,
+    /// BiT-like full activation binarization baseline
+    Bit,
+    /// full-precision + top-N only (the Figure-3 subject)
+    FpTopn,
+}
+
+impl Method {
+    pub const TABLE_COLUMNS: [Method; 6] = [
+        Method::Baseline,
+        Method::Had,
+        Method::Bit,
+        Method::Sab,
+        Method::HadNoAd,
+        Method::HadNoTanh,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Baseline => "Baseline",
+            Method::Had => "HAD (ours)",
+            Method::Sab => "w/ SAB",
+            Method::HadNoAd => "w/o AD",
+            Method::HadNoTanh => "w/o Tanh",
+            Method::Bit => "BiT",
+            Method::FpTopn => "FP top-N",
+        }
+    }
+
+    /// distill artifact family: (tanh artifact, ste artifact)
+    fn artifacts(&self) -> Option<(&'static str, &'static str)> {
+        match self {
+            Method::Baseline => None,
+            Method::Had | Method::HadNoAd | Method::HadNoTanh => {
+                Some(("distill_had_tanh", "distill_had_ste"))
+            }
+            Method::Sab => Some(("distill_sab_tanh", "distill_sab_ste")),
+            Method::Bit => Some(("distill_bit_ste", "distill_bit_ste")),
+            Method::FpTopn => Some(("distill_fptopn", "distill_fptopn")),
+        }
+    }
+
+    /// eval forward artifact for the distilled student
+    pub fn fwd_artifact(&self) -> &'static str {
+        match self {
+            Method::Baseline => "fwd_standard",
+            Method::Had | Method::HadNoAd | Method::HadNoTanh => "fwd_had",
+            Method::Sab => "fwd_sab",
+            Method::Bit => "fwd_bit",
+            Method::FpTopn => "fwd_fptopn",
+        }
+    }
+
+    /// "w/o Tanh" replaces stages 1-2 with an equal number of STE steps.
+    fn skip_tanh(&self) -> bool {
+        matches!(self, Method::HadNoTanh | Method::Bit)
+    }
+
+    fn att_loss_enabled(&self) -> bool {
+        !matches!(self, Method::HadNoAd)
+    }
+}
+
+/// Everything produced by one distillation run.
+pub struct DistillOutcome {
+    pub student: Checkpoint,
+    /// (global_step, kl_att, kl_out) trace
+    pub loss_trace: Vec<(usize, f32, f32)>,
+}
+
+/// Supplies training batches (deterministic in its own rng).
+pub type BatchFn<'a> = dyn FnMut(&mut Rng) -> Batch + 'a;
+
+pub struct Pipeline<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: &'rt ConfigEntry,
+    pub schedule: Schedule,
+    pub teacher_lr: f32,
+    /// log every k steps
+    pub log_every: usize,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: &'rt ConfigEntry, schedule: Schedule) -> Pipeline<'rt> {
+        Pipeline { rt, cfg, schedule, teacher_lr: 2e-3, log_every: 100 }
+    }
+
+    fn qual(&self, name: &str) -> String {
+        format!("{}__{}", self.cfg.name, name)
+    }
+
+    /// Teacher pre-training: cross-entropy on the task, standard attention.
+    /// Returns the trained teacher parameters and the final train accuracy.
+    pub fn train_teacher(
+        &self,
+        rng: &mut Rng,
+        batches: &mut BatchFn<'_>,
+    ) -> Result<(ParamSet, f32)> {
+        let exe = self.rt.load(&self.qual("teacher_step"))?;
+        let mut state = TrainState::new(self.cfg, rng);
+        let mut acc_avg = 0.0f32;
+        for step in 0..self.schedule.budget.teacher {
+            let batch = batches(rng);
+            let mut inputs = state.to_inputs();
+            inputs.push(batch.x.clone());
+            inputs.push(batch.y.clone());
+            inputs.push(HostTensor::scalar_f32(self.teacher_lr));
+            let outputs = exe.run(&inputs).context("teacher step")?;
+            let (next, aux) = TrainState::from_outputs(self.cfg, outputs)?;
+            state = next;
+            let loss = aux[0].scalar()?;
+            let acc = aux[1].scalar()?;
+            acc_avg = 0.95 * acc_avg + 0.05 * acc;
+            if step % self.log_every == 0 || step + 1 == self.schedule.budget.teacher {
+                log_info!(
+                    "[{}] teacher step {step}/{}: loss={loss:.4} acc~{acc_avg:.3}",
+                    self.cfg.name,
+                    self.schedule.budget.teacher
+                );
+            }
+        }
+        Ok((state.params, acc_avg))
+    }
+
+    /// Paper §3.4 / Eq. 12: average per-minibatch std over `n_batches`.
+    pub fn calibrate_sigma(
+        &self,
+        teacher: &ParamSet,
+        rng: &mut Rng,
+        batches: &mut BatchFn<'_>,
+        n_batches: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self.rt.load(&self.qual("calib"))?;
+        let l = self.cfg.model.n_layers;
+        let mut sq = vec![0.0f32; l];
+        let mut sk = vec![0.0f32; l];
+        for _ in 0..n_batches {
+            let batch = batches(rng);
+            let mut inputs: Vec<HostTensor> = teacher.tensors.clone();
+            inputs.push(batch.x.clone());
+            let out = exe.run(&inputs).context("calib step")?;
+            for (dst, t) in [(&mut sq, &out[0]), (&mut sk, &out[1])] {
+                for (d, &v) in dst.iter_mut().zip(t.as_f32()?) {
+                    *d += v / n_batches as f32;
+                }
+            }
+        }
+        log_info!("[{}] calibrated sigma_q={sq:?} sigma_k={sk:?}", self.cfg.name);
+        Ok((sq, sk))
+    }
+
+    /// Algorithm 1 stages 1-4. `n_top` is the runtime sparsity parameter N.
+    pub fn distill(
+        &self,
+        method: Method,
+        teacher: &ParamSet,
+        sigma_q: &[f32],
+        sigma_k: &[f32],
+        n_top: f32,
+        rng: &mut Rng,
+        batches: &mut BatchFn<'_>,
+    ) -> Result<DistillOutcome> {
+        let (tanh_art, ste_art) = method
+            .artifacts()
+            .context("Baseline has no distillation run")?;
+        let tanh_exe = if method.skip_tanh() {
+            self.rt.load(&self.qual(ste_art))?
+        } else {
+            self.rt.load(&self.qual(tanh_art))?
+        };
+        let ste_exe = self.rt.load(&self.qual(ste_art))?;
+
+        // Student initialized from teacher weights (Algorithm 1 line 1).
+        let mut state = TrainState::from_params(self.cfg, teacher.clone());
+        let sq = HostTensor::vec_f32(sigma_q.to_vec());
+        let sk = HostTensor::vec_f32(sigma_k.to_vec());
+
+        let total = self.schedule.budget.total_distill();
+        let mut trace = Vec::new();
+        for step in 0..total {
+            let stage = self.schedule.stage(step);
+            let use_ste = self.schedule.uses_ste(step) || method.skip_tanh();
+            let exe = if use_ste { &ste_exe } else { &tanh_exe };
+            let c = self.schedule.c_at(step);
+            let outer = self.schedule.outer_mult_at(step);
+            let att_w = if method.att_loss_enabled() {
+                self.schedule.att_w_at(step)
+            } else {
+                0.0
+            };
+            let lr = self.schedule.lr_at(step);
+
+            let batch = batches(rng);
+            let mut inputs = state.to_inputs();
+            inputs.extend(teacher.tensors.iter().cloned());
+            inputs.push(batch.x.clone());
+            inputs.push(sq.clone());
+            inputs.push(sk.clone());
+            inputs.push(HostTensor::scalar_f32(c));
+            inputs.push(HostTensor::scalar_f32(outer));
+            inputs.push(HostTensor::scalar_f32(att_w));
+            inputs.push(HostTensor::scalar_f32(lr));
+            inputs.push(HostTensor::scalar_f32(n_top));
+            let outputs = exe.run(&inputs).with_context(|| format!("distill step {step}"))?;
+            let (next, aux) = TrainState::from_outputs(self.cfg, outputs)?;
+            state = next;
+            let kl_att = aux[0].scalar()?;
+            let kl_out = aux[1].scalar()?;
+            trace.push((step, kl_att, kl_out));
+            if step % self.log_every == 0 || step + 1 == total {
+                log_info!(
+                    "[{}/{}] {stage:?} step {step}/{total}: c={c:.3} kl_att={kl_att:.4} kl_out={kl_out:.4}",
+                    self.cfg.name,
+                    method.label()
+                );
+            }
+            debug_assert!(
+                stage != Stage::Ste4 || att_w == 0.0 || !method.att_loss_enabled()
+            );
+        }
+
+        Ok(DistillOutcome {
+            student: Checkpoint {
+                config: self.cfg.name.clone(),
+                step: state.t,
+                sigma_q: sigma_q.to_vec(),
+                sigma_k: sigma_k.to_vec(),
+                params: state.params,
+            },
+            loss_trace: trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_artifact_mapping() {
+        assert!(Method::Baseline.artifacts().is_none());
+        assert_eq!(Method::Had.artifacts().unwrap().0, "distill_had_tanh");
+        assert_eq!(Method::Bit.artifacts().unwrap().1, "distill_bit_ste");
+        assert_eq!(Method::Sab.fwd_artifact(), "fwd_sab");
+        assert!(Method::HadNoTanh.skip_tanh());
+        assert!(!Method::Had.skip_tanh());
+        assert!(!Method::HadNoAd.att_loss_enabled());
+    }
+
+    #[test]
+    fn table_columns_order_matches_paper() {
+        let labels: Vec<&str> = Method::TABLE_COLUMNS.iter().map(|m| m.label()).collect();
+        assert_eq!(
+            labels,
+            ["Baseline", "HAD (ours)", "BiT", "w/ SAB", "w/o AD", "w/o Tanh"]
+        );
+    }
+}

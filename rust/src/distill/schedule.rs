@@ -1,0 +1,213 @@
+//! Stage schedule for Algorithm 1 (paper §3.5-3.9).
+//!
+//! The paper decays c exponentially by 0.9998/minibatch over tens of
+//! thousands of iterations. On this testbed the step budget is supplied
+//! per run, so the decay rate is derived from the budget such that the
+//! trajectory (c: 5 -> 1 in stage 1, 1 -> 0.05 in stage 2) is preserved
+//! exactly; the paper's constants fall out when the paper's step counts
+//! are supplied. EXPERIMENTS.md records the budgets used.
+
+/// One of the four distillation stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// scaled tanh, c: 5 -> 1, outer_mult = c, attention loss on
+    Tanh1,
+    /// tightening tanh, c: 1 -> 0.05, outer_mult = 1, attention loss on
+    Tanh2,
+    /// STE, attention loss on
+    Ste3,
+    /// STE, lower LR, attention loss OFF
+    Ste4,
+}
+
+pub const C_START: f32 = 5.0;
+pub const C_MID: f32 = 1.0;
+pub const C_END: f32 = 0.05;
+
+/// Per-run step budget for each stage (+ the teacher pre-training budget).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget {
+    pub teacher: usize,
+    pub stage1: usize,
+    pub stage2: usize,
+    pub stage3: usize,
+    pub stage4: usize,
+}
+
+impl Budget {
+    /// Scale a reference budget by `x` (>= 0), keeping minimums sane.
+    pub fn scaled(&self, x: f64) -> Budget {
+        let s = |v: usize| ((v as f64 * x).round() as usize).max(1);
+        Budget {
+            teacher: s(self.teacher),
+            stage1: s(self.stage1),
+            stage2: s(self.stage2),
+            stage3: s(self.stage3),
+            stage4: s(self.stage4),
+        }
+    }
+
+    pub fn total_distill(&self) -> usize {
+        self.stage1 + self.stage2 + self.stage3 + self.stage4
+    }
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        // Testbed defaults (single-core CPU, d=64 L=2 models).
+        Budget { teacher: 600, stage1: 150, stage2: 150, stage3: 200, stage4: 100 }
+    }
+}
+
+/// The c / outer_mult / att_w / lr trajectory.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub budget: Budget,
+    pub lr: f32,
+    /// stage-4 learning rate (paper: 10x lower)
+    pub lr_final: f32,
+}
+
+impl Schedule {
+    pub fn new(budget: Budget, lr: f32) -> Schedule {
+        Schedule { budget, lr, lr_final: lr * 0.1 }
+    }
+
+    /// Which stage a global distillation step belongs to.
+    pub fn stage(&self, step: usize) -> Stage {
+        let b = &self.budget;
+        if step < b.stage1 {
+            Stage::Tanh1
+        } else if step < b.stage1 + b.stage2 {
+            Stage::Tanh2
+        } else if step < b.stage1 + b.stage2 + b.stage3 {
+            Stage::Ste3
+        } else {
+            Stage::Ste4
+        }
+    }
+
+    /// Exponential-decay value of c at a global step (paper Eq. 13-15
+    /// trajectory). Stages 3/4 pin c at C_END (unused by the STE graph).
+    pub fn c_at(&self, step: usize) -> f32 {
+        let b = &self.budget;
+        match self.stage(step) {
+            Stage::Tanh1 => {
+                let frac = step as f32 / b.stage1.max(1) as f32;
+                C_START * (C_MID / C_START).powf(frac)
+            }
+            Stage::Tanh2 => {
+                let frac = (step - b.stage1) as f32 / b.stage2.max(1) as f32;
+                C_MID * (C_END / C_MID).powf(frac)
+            }
+            _ => C_END,
+        }
+    }
+
+    /// outer_mult: c during stage 1 (Eq. 13), 1 afterwards (Eq. 15+).
+    pub fn outer_mult_at(&self, step: usize) -> f32 {
+        match self.stage(step) {
+            Stage::Tanh1 => self.c_at(step),
+            _ => 1.0,
+        }
+    }
+
+    /// attention-distillation loss weight (Eq. 11; 0 in stage 4).
+    pub fn att_w_at(&self, step: usize) -> f32 {
+        if self.stage(step) == Stage::Ste4 {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.stage(step) == Stage::Ste4 {
+            self.lr_final
+        } else {
+            self.lr
+        }
+    }
+
+    /// Whether the STE artifact (vs the tanh artifact) runs this step.
+    pub fn uses_ste(&self, step: usize) -> bool {
+        matches!(self.stage(step), Stage::Ste3 | Stage::Ste4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Schedule {
+        Schedule::new(Budget { teacher: 0, stage1: 100, stage2: 100, stage3: 50, stage4: 50 }, 1e-4)
+    }
+
+    #[test]
+    fn stage_boundaries() {
+        let s = sched();
+        assert_eq!(s.stage(0), Stage::Tanh1);
+        assert_eq!(s.stage(99), Stage::Tanh1);
+        assert_eq!(s.stage(100), Stage::Tanh2);
+        assert_eq!(s.stage(199), Stage::Tanh2);
+        assert_eq!(s.stage(200), Stage::Ste3);
+        assert_eq!(s.stage(250), Stage::Ste4);
+    }
+
+    #[test]
+    fn c_trajectory_monotone_and_continuous() {
+        let s = sched();
+        assert!((s.c_at(0) - C_START).abs() < 1e-5);
+        // end of stage 1 ~= C_MID; start of stage 2 == C_MID
+        assert!((s.c_at(100) - C_MID).abs() < 0.05);
+        let mut prev = s.c_at(0);
+        for step in 1..200 {
+            let c = s.c_at(step);
+            assert!(c <= prev + 1e-6, "c must decay");
+            prev = c;
+        }
+        assert!((s.c_at(199) - C_END).abs() < 0.2);
+    }
+
+    #[test]
+    fn stage1_outer_mult_tracks_c() {
+        let s = sched();
+        assert_eq!(s.outer_mult_at(50), s.c_at(50));
+        assert_eq!(s.outer_mult_at(150), 1.0);
+    }
+
+    #[test]
+    fn stage4_drops_attention_loss_and_lr() {
+        let s = sched();
+        assert_eq!(s.att_w_at(200), 1.0);
+        assert_eq!(s.att_w_at(250), 0.0);
+        assert!((s.lr_at(250) - 1e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_scaling() {
+        let b = Budget::default().scaled(0.1);
+        assert!(b.stage1 >= 1 && b.teacher >= 1);
+        assert_eq!(Budget::default().scaled(1.0).stage1, Budget::default().stage1);
+    }
+
+    #[test]
+    fn paper_constants_recovered_at_paper_scale() {
+        // With the paper's decay 0.9998/step, c: 5 -> 1 takes
+        // ln(0.2)/ln(0.9998) ~= 8047 steps. Supplying that budget must
+        // reproduce c(t) = 5 * 0.9998^t within rounding.
+        let steps = (f64::ln(0.2) / f64::ln(0.9998)).round() as usize;
+        let s = Schedule::new(
+            Budget { teacher: 0, stage1: steps, stage2: steps, stage3: 0, stage4: 0 },
+            1e-5,
+        );
+        for &t in &[0usize, 1000, 4000, 8000] {
+            let paper_c = 5.0f64 * 0.9998f64.powi(t as i32);
+            assert!(
+                ((s.c_at(t) as f64) - paper_c).abs() / paper_c < 0.01,
+                "step {t}: {} vs {paper_c}",
+                s.c_at(t)
+            );
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Shared experiment plumbing: options, result persistence, and the
+//! teacher→calibrate→distill→evaluate loop reused by the table/figure
+//! harnesses.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::distill::{evaluate, Budget, EvalResult, Method, Pipeline, Schedule};
+use crate::model::{Checkpoint, ParamSet};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Knobs shared by all harnesses.
+#[derive(Clone, Debug)]
+pub struct SuiteOptions {
+    /// multiplies every stage budget (1.0 = testbed reference budget;
+    /// EXPERIMENTS.md records the scale used per run)
+    pub scale: f64,
+    /// separate multiplier for teacher pre-training (teachers need more
+    /// steps than distillation to actually learn the task; a weak teacher
+    /// makes every method column identical)
+    pub teacher_scale: f64,
+    pub seed: u64,
+    /// eval batches per measurement
+    pub eval_batches: usize,
+    /// sigma-calibration minibatches (paper: 100)
+    pub calib_batches: usize,
+    /// distillation learning rate (paper: 1e-5 at BERT scale; the testbed
+    /// reference is higher because runs are ~100x shorter)
+    pub lr: f32,
+    pub teacher_lr: f32,
+    /// where result JSON lines are appended
+    pub results_dir: std::path::PathBuf,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        SuiteOptions {
+            scale: 1.0,
+            teacher_scale: 1.0,
+            seed: 0x4AD,
+            eval_batches: 16,
+            calib_batches: 20,
+            lr: 5e-4,
+            teacher_lr: 2e-3,
+            results_dir: std::path::PathBuf::from("results"),
+        }
+    }
+}
+
+impl SuiteOptions {
+    pub fn budget(&self) -> Budget {
+        let mut b = Budget::default().scaled(self.scale);
+        b.teacher = ((Budget::default().teacher as f64 * self.teacher_scale).round() as usize).max(1);
+        b
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        Schedule::new(self.budget(), self.lr)
+    }
+
+    /// Append one JSON record to results/<name>.jsonl.
+    pub fn record(&self, name: &str, payload: Json) -> Result<()> {
+        std::fs::create_dir_all(&self.results_dir)?;
+        let path = self.results_dir.join(format!("{name}.jsonl"));
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{payload}")?;
+        Ok(())
+    }
+}
+
+/// A trained teacher plus its calibration — the starting point every
+/// method distills from (shared across methods for a fair comparison).
+pub struct TeacherBundle {
+    pub params: ParamSet,
+    pub sigma_q: Vec<f32>,
+    pub sigma_k: Vec<f32>,
+    pub train_acc: f32,
+}
+
+/// Train + calibrate a teacher on one task.
+pub fn prepare_teacher(
+    rt: &Runtime,
+    config: &str,
+    opts: &SuiteOptions,
+    batches: &mut dyn FnMut(&mut Rng) -> Batch,
+) -> Result<TeacherBundle> {
+    let cfg = rt.manifest.config(config)?;
+    let mut pipeline = Pipeline::new(rt, cfg, opts.schedule());
+    pipeline.teacher_lr = opts.teacher_lr;
+    let mut rng = Rng::new(opts.seed);
+    let (params, train_acc) = pipeline.train_teacher(&mut rng, batches)?;
+    let (sigma_q, sigma_k) =
+        pipeline.calibrate_sigma(&params, &mut rng, batches, opts.calib_batches)?;
+    Ok(TeacherBundle { params, sigma_q, sigma_k, train_acc })
+}
+
+/// Distill one method from a prepared teacher and evaluate it.
+/// Returns (eval result, checkpoint).
+#[allow(clippy::too_many_arguments)]
+pub fn distill_and_eval(
+    rt: &Runtime,
+    config: &str,
+    method: Method,
+    teacher: &TeacherBundle,
+    opts: &SuiteOptions,
+    n_top: f32,
+    train_batches: &mut dyn FnMut(&mut Rng) -> Batch,
+    eval_batches: &[Batch],
+) -> Result<(EvalResult, Checkpoint)> {
+    let cfg = rt.manifest.config(config)?;
+    if method == Method::Baseline {
+        let ckpt = Checkpoint {
+            config: config.to_string(),
+            step: 0.0,
+            sigma_q: teacher.sigma_q.clone(),
+            sigma_k: teacher.sigma_k.clone(),
+            params: teacher.params.clone(),
+        };
+        let ev = evaluate(rt, cfg, method.fwd_artifact(), &ckpt, eval_batches, n_top)?;
+        return Ok((ev, ckpt));
+    }
+    let pipeline = Pipeline::new(rt, cfg, opts.schedule());
+    let mut rng = Rng::new(opts.seed ^ ((method as u64) << 8) ^ 0x9E37);
+    let outcome = pipeline.distill(
+        method,
+        &teacher.params,
+        &teacher.sigma_q,
+        &teacher.sigma_k,
+        n_top,
+        &mut rng,
+        train_batches,
+    )?;
+    let ev = evaluate(rt, cfg, method.fwd_artifact(), &outcome.student, eval_batches, n_top)?;
+    Ok((ev, outcome.student))
+}
+
+/// Deterministic eval set, disjoint seed stream from training.
+pub fn make_eval_batches(
+    opts: &SuiteOptions,
+    n: usize,
+    mut f: impl FnMut(&mut Rng) -> Batch,
+) -> Vec<Batch> {
+    let mut rng = Rng::new(opts.seed ^ 0xE7A1);
+    (0..n).map(|_| f(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_scale_budget() {
+        let mut o = SuiteOptions::default();
+        o.scale = 0.5;
+        o.teacher_scale = 0.5;
+        assert_eq!(o.budget(), Budget::default().scaled(0.5));
+        // teacher budget is scaled independently (weak teachers make all
+        // method columns identical — DESIGN.md §10)
+        o.teacher_scale = 1.0;
+        assert_eq!(o.budget().teacher, Budget::default().teacher);
+        assert_eq!(o.budget().stage1, Budget::default().scaled(0.5).stage1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Figure 1: encoder latency with and without attention vs context
+//! length, plus the attention share of total runtime.
+//!
+//! Measured on the CPU-PJRT executables (fwd_standard_b1 vs fwd_noattn_b1
+//! per longqa length), plus an analytic FLOP model extrapolating beyond
+//! the compiled lengths. The paper's claim is the SHAPE: attention share
+//! grows toward dominance as context rises (O(n^2) vs O(n)).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::SuiteOptions;
+use crate::data::longqa::{longqa_batch, LongQaGen};
+use crate::model::ParamSet;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const CONTEXTS: [usize; 4] = [128, 256, 512, 1024];
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub n_ctx: usize,
+    pub full_ms: f64,
+    pub noattn_ms: f64,
+    pub had_ms: f64,
+    /// fraction of full-model latency attributable to attention
+    pub attn_share: f64,
+}
+
+fn bench_artifact(
+    rt: &Runtime,
+    config: &str,
+    artifact: &str,
+    x: &HostTensor,
+    params: &ParamSet,
+    n_layers: usize,
+    n_top: f32,
+    reps: usize,
+) -> Result<f64> {
+    let exe = rt.load(&format!("{config}__{artifact}"))?;
+    let mut inputs: Vec<HostTensor> = params.tensors.clone();
+    inputs.push(x.clone());
+    inputs.push(HostTensor::vec_f32(vec![1.0; n_layers]));
+    inputs.push(HostTensor::vec_f32(vec![1.0; n_layers]));
+    inputs.push(HostTensor::scalar_f32(n_top));
+    // warmup
+    exe.run(&inputs)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        exe.run(&inputs)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e3 / reps as f64)
+}
+
+pub fn run(rt: &Runtime, opts: &SuiteOptions, reps: usize) -> Result<Vec<Point>> {
+    let mut rng = Rng::new(opts.seed ^ 0xF161);
+    let mut points = Vec::new();
+    for n_ctx in CONTEXTS {
+        let config = format!("longqa_{n_ctx}");
+        let cfg = rt.manifest.config(&config)?;
+        let params = ParamSet::init(cfg, &mut rng);
+        let gen = LongQaGen::new(n_ctx);
+        let batch = longqa_batch(&gen, &mut rng, 1);
+        let l = cfg.model.n_layers;
+        let n_top = cfg.model.n_top as f32;
+
+        let full_ms = bench_artifact(rt, &config, "fwd_standard_b1", &batch.x, &params, l, n_top, reps)?;
+        let noattn_ms = bench_artifact(rt, &config, "fwd_noattn_b1", &batch.x, &params, l, n_top, reps)?;
+        let had_ms = bench_artifact(rt, &config, "fwd_had_b1", &batch.x, &params, l, n_top, reps)?;
+        let attn_share = ((full_ms - noattn_ms) / full_ms).max(0.0);
+        println!(
+            "[fig1] n={n_ctx:<5} full={full_ms:.2}ms noattn={noattn_ms:.2}ms had={had_ms:.2}ms attn-share={:.1}%",
+            100.0 * attn_share
+        );
+        opts.record(
+            "fig1",
+            Json::obj(vec![
+                ("n_ctx", Json::num(n_ctx as f64)),
+                ("full_ms", Json::num(full_ms)),
+                ("noattn_ms", Json::num(noattn_ms)),
+                ("had_ms", Json::num(had_ms)),
+                ("attn_share", Json::num(attn_share)),
+            ]),
+        )?;
+        points.push(Point { n_ctx, full_ms, noattn_ms, had_ms, attn_share });
+    }
+
+    println!("\n=== Figure 1 (latency w/ and w/o attention vs context) ===");
+    println!(
+        "{:>8} {:>10} {:>12} {:>10} {:>12}",
+        "n_ctx", "full ms", "no-attn ms", "HAD ms", "attn share"
+    );
+    for p in &points {
+        println!(
+            "{:>8} {:>10.2} {:>12.2} {:>10.2} {:>11.1}%",
+            p.n_ctx,
+            p.full_ms,
+            p.noattn_ms,
+            p.had_ms,
+            100.0 * p.attn_share
+        );
+    }
+    println!("\nAnalytic FLOP model (per token, d={}, layers as compiled):", 64);
+    analytic_model(&points);
+    Ok(points)
+}
+
+/// O(n^2 d) attention vs O(n d^2 + n d_ff d) rest — the asymptotic story
+/// extrapolated to contexts beyond the compiled buckets.
+fn analytic_model(points: &[Point]) {
+    let d = 64.0f64;
+    let dff = 128.0f64;
+    println!("{:>8} {:>14} {:>14} {:>12}", "n_ctx", "attn FLOPs", "other FLOPs", "attn share");
+    for &n in &[128usize, 256, 512, 1024, 2048, 4096, 8192] {
+        let nf = n as f64;
+        let attn = 2.0 * nf * nf * d * 2.0; // QK^T + AV per layer
+        let other = nf * (8.0 * d * d + 4.0 * d * dff);
+        let share = attn / (attn + other);
+        println!("{n:>8} {attn:>14.3e} {other:>14.3e} {:>11.1}%", 100.0 * share);
+    }
+    let _ = points;
+}

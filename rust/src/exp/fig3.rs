@@ -1,0 +1,75 @@
+//! Figure 3: accuracy while PROGRESSIVELY distilling a full-precision
+//! student with decreasing top-N (vision_tiny subject, as in the paper).
+//!
+//! One continuous run: the student keeps training as N steps down through
+//! the sweep; accuracy is measured at the end of each N segment. Runtime
+//! n_top makes this a single-artifact experiment.
+
+use anyhow::Result;
+
+use super::common::{make_eval_batches, prepare_teacher, SuiteOptions};
+use crate::data::vision::vision_batch;
+use crate::distill::{evaluate, Method, Pipeline};
+use crate::model::Checkpoint;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const CONFIG: &str = "vision_tiny";
+/// Decreasing N sweep (context is 65): the paper swept 100 -> ~1 on a
+/// 197-token DeiT; scaled to our context.
+pub const N_SWEEP: [usize; 9] = [64, 48, 32, 24, 16, 10, 6, 3, 1];
+
+pub fn run(rt: &Runtime, opts: &SuiteOptions) -> Result<Vec<(usize, f32)>> {
+    let cfg = rt.manifest.config(CONFIG)?;
+    let tb = cfg.train_batch;
+    let mut train = |rng: &mut Rng| vision_batch(rng, tb);
+    let teacher = prepare_teacher(rt, CONFIG, opts, &mut train)?;
+    let evals = make_eval_batches(opts, opts.eval_batches, |rng| vision_batch(rng, tb));
+
+    // Progressive distillation: continue from the previous student.
+    let pipeline = Pipeline::new(rt, cfg, opts.schedule());
+    let mut rng = Rng::new(opts.seed ^ 0xF16_3);
+    let mut params = teacher.params.clone();
+    let mut series = Vec::new();
+    for n_top in N_SWEEP {
+        let outcome = pipeline.distill(
+            Method::FpTopn,
+            &params,
+            &teacher.sigma_q,
+            &teacher.sigma_k,
+            n_top as f32,
+            &mut rng,
+            &mut train,
+        )?;
+        params = outcome.student.params.clone();
+        let ckpt = Checkpoint {
+            config: CONFIG.into(),
+            step: outcome.student.step,
+            sigma_q: teacher.sigma_q.clone(),
+            sigma_k: teacher.sigma_k.clone(),
+            params: params.clone(),
+        };
+        let ev = evaluate(rt, cfg, Method::FpTopn.fwd_artifact(), &ckpt, &evals, n_top as f32)?;
+        let acc = ev.metric("accuracy");
+        println!("[fig3] N={n_top:<3} accuracy={acc:.2}");
+        opts.record(
+            "fig3",
+            Json::obj(vec![
+                ("n_top", Json::num(n_top as f64)),
+                ("accuracy", Json::num(acc as f64)),
+            ]),
+        )?;
+        series.push((n_top, acc));
+    }
+    println!("\n=== Figure 3 (accuracy vs N, progressive FP distillation) ===");
+    for (n, acc) in &series {
+        println!("N={n:<4} {acc:6.2}  {}", bar(*acc));
+    }
+    Ok(series)
+}
+
+fn bar(acc: f32) -> String {
+    let n = (acc / 2.0).round().max(0.0) as usize;
+    "#".repeat(n.min(60))
+}

@@ -1,0 +1,108 @@
+//! Figure 4: for standard-Gaussian softmax inputs of size n, what
+//! fraction of the largest outputs is needed to reach a given probability
+//! mass? The paper's §3.2 long-context scaling argument: the fraction
+//! approaches a constant as n grows, justifying N ∝ n.
+//!
+//! Pure math — reproduced exactly (no substitution needed).
+
+use anyhow::Result;
+
+use super::common::SuiteOptions;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const THRESHOLDS: [f64; 3] = [0.50, 0.90, 0.99];
+
+/// (n, per-threshold fraction-of-elements-needed)
+pub fn run(opts: &SuiteOptions) -> Result<Vec<(usize, Vec<f64>)>> {
+    let mut rng = Rng::new(opts.seed ^ 0xF164);
+    let sizes: Vec<usize> = (4..=14).map(|p| 1usize << p).collect();
+    let trials = 32;
+    let mut out = Vec::new();
+    for &n in &sizes {
+        let mut fracs = vec![0.0f64; THRESHOLDS.len()];
+        for _ in 0..trials {
+            // softmax of n standard normals
+            let mut logits: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let max = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0.0;
+            for x in logits.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            for x in logits.iter_mut() {
+                *x /= sum;
+            }
+            logits.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            // count largest elements to reach each threshold
+            for (ti, &thresh) in THRESHOLDS.iter().enumerate() {
+                let mut acc = 0.0;
+                let mut count = 0usize;
+                for &p in &logits {
+                    acc += p;
+                    count += 1;
+                    if acc >= thresh {
+                        break;
+                    }
+                }
+                fracs[ti] += count as f64 / n as f64 / trials as f64;
+            }
+        }
+        opts.record(
+            "fig4",
+            Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("fractions", Json::arr(fracs.iter().map(|&f| Json::num(f)))),
+            ]),
+        )?;
+        out.push((n, fracs));
+    }
+
+    println!("\n=== Figure 4 (softmax mass concentration, Gaussian inputs) ===");
+    print!("{:>8}", "n");
+    for t in THRESHOLDS {
+        print!(" {:>10}", format!("p>={t}"));
+    }
+    println!();
+    for (n, fracs) in &out {
+        print!("{n:>8}");
+        for f in fracs {
+            print!(" {:>9.2}%", 100.0 * f);
+        }
+        println!();
+    }
+    println!("(fractions approach a constant: N should scale linearly with n)");
+    Ok(out)
+}
+
+/// The asymptotic check used by tests and EXPERIMENTS.md: the fraction at
+/// the two largest n differ by less than `tol` relative.
+pub fn converged(series: &[(usize, Vec<f64>)], ti: usize, tol: f64) -> bool {
+    if series.len() < 2 {
+        return false;
+    }
+    let a = series[series.len() - 2].1[ti];
+    let b = series[series.len() - 1].1[ti];
+    ((a - b) / a).abs() < tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_converge_to_constant() {
+        let opts = SuiteOptions {
+            results_dir: std::env::temp_dir().join("had_fig4_test"),
+            ..Default::default()
+        };
+        let series = run(&opts).unwrap();
+        // mass concentrates: 50% threshold needs well under half the
+        // elements, and the needed FRACTION stabilizes with n
+        let (_, last) = series.last().unwrap();
+        assert!(last[0] < 0.25, "50% mass from <25% of elements: {last:?}");
+        assert!(converged(&series, 0, 0.15), "p50 fraction converged");
+        assert!(converged(&series, 1, 0.15), "p90 fraction converged");
+        std::fs::remove_dir_all(std::env::temp_dir().join("had_fig4_test")).ok();
+    }
+}

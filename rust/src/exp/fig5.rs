@@ -1,0 +1,84 @@
+//! Figure 5: long-context QA accuracy vs context length — baseline
+//! (full-precision teacher) vs HAD student, with N scaled linearly in
+//! context (15 @ 128 ... 120 @ 1024, the paper's rule).
+
+use anyhow::Result;
+
+use super::common::{distill_and_eval, make_eval_batches, prepare_teacher, SuiteOptions};
+use crate::data::longqa::{longqa_batch, LongQaGen};
+use crate::distill::Method;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub const CONTEXTS: [usize; 4] = [128, 256, 512, 1024];
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub n_ctx: usize,
+    pub n_top: usize,
+    pub baseline: f32,
+    pub had: f32,
+}
+
+pub fn run(rt: &Runtime, opts: &SuiteOptions, only: Option<usize>) -> Result<Vec<Point>> {
+    let mut points = Vec::new();
+    for n_ctx in CONTEXTS {
+        if let Some(f) = only {
+            if n_ctx != f {
+                continue;
+            }
+        }
+        let config = format!("longqa_{n_ctx}");
+        let cfg = rt.manifest.config(&config)?;
+        let tb = cfg.train_batch;
+        let n_top = cfg.model.n_top as f32;
+        let gen = LongQaGen::new(n_ctx);
+        let mut train = |rng: &mut crate::util::rng::Rng| longqa_batch(&gen, rng, tb);
+        let teacher = prepare_teacher(rt, &config, opts, &mut train)?;
+        let eval_gen = LongQaGen::new(n_ctx);
+        let evals = make_eval_batches(opts, opts.eval_batches, |rng| {
+            longqa_batch(&eval_gen, rng, tb)
+        });
+
+        let (base_ev, _) = distill_and_eval(
+            rt, &config, Method::Baseline, &teacher, opts, n_top, &mut train, &evals,
+        )?;
+        let (had_ev, _) = distill_and_eval(
+            rt, &config, Method::Had, &teacher, opts, n_top, &mut train, &evals,
+        )?;
+        let p = Point {
+            n_ctx,
+            n_top: cfg.model.n_top,
+            baseline: base_ev.metric("accuracy"),
+            had: had_ev.metric("accuracy"),
+        };
+        println!(
+            "[fig5] n_ctx={n_ctx:<5} N={:<4} baseline={:.2} HAD={:.2}",
+            p.n_top, p.baseline, p.had
+        );
+        opts.record(
+            "fig5",
+            Json::obj(vec![
+                ("n_ctx", Json::num(n_ctx as f64)),
+                ("n_top", Json::num(p.n_top as f64)),
+                ("baseline", Json::num(p.baseline as f64)),
+                ("had", Json::num(p.had as f64)),
+            ]),
+        )?;
+        points.push(p);
+    }
+
+    println!("\n=== Figure 5 (QuALITY analog: accuracy vs context) ===");
+    println!("{:>8} {:>6} {:>10} {:>10} {:>8}", "n_ctx", "N", "Baseline", "HAD", "gap");
+    for p in &points {
+        println!(
+            "{:>8} {:>6} {:>10.2} {:>10.2} {:>8.2}",
+            p.n_ctx,
+            p.n_top,
+            p.baseline,
+            p.had,
+            p.baseline - p.had
+        );
+    }
+    Ok(points)
+}

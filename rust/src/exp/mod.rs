@@ -1,0 +1,16 @@
+//! Experiment harnesses: one module per table/figure in the paper's
+//! evaluation section (DESIGN.md §7 maps each to its workload).
+//!
+//! Every harness prints the paper-shaped rows to stdout and appends a
+//! JSON record under results/ for EXPERIMENTS.md bookkeeping.
+
+pub mod common;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use common::SuiteOptions;

@@ -1,0 +1,102 @@
+//! Table 1: tinyGLUE benchmark — Baseline / HAD / BiT / w-SAB / w-o-AD /
+//! w-o-Tanh across the eight task analogs (MNLI reported
+//! matched/mismatched like the paper).
+
+use anyhow::Result;
+
+use super::common::{distill_and_eval, make_eval_batches, prepare_teacher, SuiteOptions};
+use crate::data::tinyglue::{GlueGen, GlueTask};
+use crate::data::token_batch;
+use crate::distill::Method;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub const CONFIG: &str = "tinyglue";
+
+/// One table row: task name -> metric per method column.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub task: String,
+    pub cells: Vec<(Method, String, f32)>, // (method, rendered, value)
+}
+
+pub fn run(rt: &Runtime, opts: &SuiteOptions, tasks: Option<Vec<GlueTask>>) -> Result<Vec<Row>> {
+    let cfg = rt.manifest.config(CONFIG)?;
+    let n_ctx = cfg.model.n_ctx;
+    let tb = cfg.train_batch;
+    let n_top = cfg.model.n_top as f32;
+    let tasks = tasks.unwrap_or_else(|| GlueTask::ALL.to_vec());
+
+    let mut rows = Vec::new();
+    for task in tasks {
+        let gen = GlueGen::new(task);
+        let mut train = |rng: &mut crate::util::rng::Rng| token_batch(&gen, rng, tb, n_ctx);
+        let teacher = prepare_teacher(rt, CONFIG, opts, &mut train)?;
+        let eval_gen = GlueGen::new(task);
+        let evals = make_eval_batches(opts, opts.eval_batches, |rng| {
+            token_batch(&eval_gen, rng, tb, n_ctx)
+        });
+        // MNLI also gets a mismatched-domain eval set
+        let mm_gen = GlueGen::mismatched(task);
+        let evals_mm = if task == GlueTask::Mnli {
+            Some(make_eval_batches(opts, opts.eval_batches, |rng| {
+                token_batch(&mm_gen, rng, tb, n_ctx)
+            }))
+        } else {
+            None
+        };
+
+        let mut cells = Vec::new();
+        for method in Method::TABLE_COLUMNS {
+            let (ev, ckpt) =
+                distill_and_eval(rt, CONFIG, method, &teacher, opts, n_top, &mut train, &evals)?;
+            let metric = ev.metric(task.metric());
+            let rendered = if let Some(mm) = &evals_mm {
+                // matched/mismatched pair, like the paper's MNLI cells
+                let ev_mm = crate::distill::evaluate(
+                    rt, cfg, method.fwd_artifact(), &ckpt, mm, n_top,
+                )?;
+                format!("{metric:.2}/{:.2}", ev_mm.metric(task.metric()))
+            } else {
+                format!("{metric:.2}")
+            };
+            println!("[table1] {} / {:<12} {} = {rendered}", task.name(), method.label(), task.metric());
+            opts.record(
+                "table1",
+                Json::obj(vec![
+                    ("task", Json::str(task.name())),
+                    ("method", Json::str(method.label())),
+                    ("metric", Json::str(task.metric())),
+                    ("value", Json::num(metric as f64)),
+                ]),
+            )?;
+            cells.push((method, rendered, metric));
+        }
+        rows.push(Row { task: task.name().to_string(), cells });
+    }
+    print_table(&rows);
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[Row]) {
+    println!("\n=== Table 1 (tinyGLUE analog) ===");
+    print!("{:<10}", "Benchmark");
+    for m in Method::TABLE_COLUMNS {
+        print!(" {:>12}", m.label());
+    }
+    println!();
+    let mut sums = vec![0.0f32; Method::TABLE_COLUMNS.len()];
+    for row in rows {
+        print!("{:<10}", row.task);
+        for (i, (_m, cell, v)) in row.cells.iter().enumerate() {
+            print!(" {cell:>12}");
+            sums[i] += v;
+        }
+        println!();
+    }
+    print!("{:<10}", "Avg");
+    for s in &sums {
+        print!(" {:>12.2}", s / rows.len().max(1) as f32);
+    }
+    println!();
+}

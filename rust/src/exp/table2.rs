@@ -1,0 +1,74 @@
+//! Table 2: vision benchmark (ImageNet/DeiT analog) — base and tiny
+//! encoder sizes across the six method columns.
+
+use anyhow::Result;
+
+use super::common::{distill_and_eval, make_eval_batches, prepare_teacher, SuiteOptions};
+use crate::data::vision::vision_batch;
+use crate::distill::Method;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub const CONFIGS: [&str; 2] = ["vision_base", "vision_tiny"];
+
+#[derive(Clone, Debug)]
+pub struct Column {
+    pub config: String,
+    pub accs: Vec<(Method, f32)>,
+}
+
+pub fn run(rt: &Runtime, opts: &SuiteOptions, only: Option<&str>) -> Result<Vec<Column>> {
+    let mut cols = Vec::new();
+    for config in CONFIGS {
+        if let Some(f) = only {
+            if !config.contains(f) {
+                continue;
+            }
+        }
+        let cfg = rt.manifest.config(config)?;
+        let tb = cfg.train_batch;
+        let n_top = cfg.model.n_top as f32;
+        let mut train = |rng: &mut crate::util::rng::Rng| vision_batch(rng, tb);
+        let teacher = prepare_teacher(rt, config, opts, &mut train)?;
+        let evals = make_eval_batches(opts, opts.eval_batches, |rng| vision_batch(rng, tb));
+
+        let mut accs = Vec::new();
+        for method in Method::TABLE_COLUMNS {
+            let (ev, _) =
+                distill_and_eval(rt, config, method, &teacher, opts, n_top, &mut train, &evals)?;
+            let acc = ev.metric("accuracy");
+            println!("[table2] {config} / {:<12} acc = {acc:.2}", method.label());
+            opts.record(
+                "table2",
+                Json::obj(vec![
+                    ("config", Json::str(config)),
+                    ("method", Json::str(method.label())),
+                    ("accuracy", Json::num(acc as f64)),
+                ]),
+            )?;
+            accs.push((method, acc));
+        }
+        cols.push(Column { config: config.to_string(), accs });
+    }
+    print_table(&cols);
+    Ok(cols)
+}
+
+pub fn print_table(cols: &[Column]) {
+    println!("\n=== Table 2 (vision analog) ===");
+    print!("{:<12}", "");
+    for c in cols {
+        print!(" {:>12}", c.config);
+    }
+    println!();
+    if cols.is_empty() {
+        return;
+    }
+    for (i, (method, _)) in cols[0].accs.iter().enumerate() {
+        print!("{:<12}", method.label());
+        for c in cols {
+            print!(" {:>12.2}", c.accs[i].1);
+        }
+        println!();
+    }
+}

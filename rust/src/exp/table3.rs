@@ -1,0 +1,36 @@
+//! Table 3: hardware area/power comparison (SA vs HAD attention head),
+//! straight from the hwsim component model, plus the context-scaling
+//! energy sweep the model enables.
+
+use anyhow::Result;
+
+use super::common::SuiteOptions;
+use crate::hwsim::{breakdown, context_sweep, Design, Tech, Workload};
+use crate::util::json::Json;
+
+pub fn run(opts: &SuiteOptions) -> Result<()> {
+    let tech = Tech::default();
+    println!("\n=== Table 3 (hardware: SA vs HAD attention head) ===");
+    print!("{}", crate::hwsim::table3_text(&tech));
+
+    let sa = breakdown(Design::Standard, Workload::paper(), &tech);
+    let had = breakdown(Design::Had, Workload::paper(), &tech);
+    opts.record(
+        "table3",
+        Json::obj(vec![
+            ("sa_area_mm2", Json::num(sa.total_area())),
+            ("had_area_mm2", Json::num(had.total_area())),
+            ("sa_power_w", Json::num(sa.total_power())),
+            ("had_power_w", Json::num(had.total_power())),
+            ("sa_energy_nj", Json::num(sa.energy_per_query_nj(&tech))),
+            ("had_energy_nj", Json::num(had.energy_per_query_nj(&tech))),
+        ]),
+    )?;
+
+    println!("\nContext-scaling sweep (N ∝ n, energy per query):");
+    println!("{:>8} {:>12} {:>12} {:>10}", "n_ctx", "SA nJ", "HAD nJ", "ratio");
+    for (n, sa_nj, had_nj, _) in context_sweep(&tech, &[128, 256, 512, 1024, 2048, 4096]) {
+        println!("{n:>8} {sa_nj:>12.2} {had_nj:>12.2} {:>9.1}x", sa_nj / had_nj);
+    }
+    Ok(())
+}

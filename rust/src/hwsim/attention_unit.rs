@@ -1,0 +1,216 @@
+//! Component-level designs of one attention head engine:
+//! standard BF16 attention (SA) vs the paper's CAM-based HAD unit.
+
+use super::tech::Tech;
+
+/// Workload geometry for one attention evaluation (one query vector
+/// against an n_ctx-deep K/V cache, d_model-wide — the paper's Table-3
+//  setting).
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub n_ctx: usize,
+    pub d_model: usize,
+    pub n_top: usize,
+}
+
+impl Workload {
+    pub fn paper() -> Workload {
+        Workload {
+            n_ctx: super::tech::PAPER_N_CTX,
+            d_model: super::tech::PAPER_D_MODEL,
+            n_top: super::tech::PAPER_N_TOP,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    /// dense BF16 digital attention
+    Standard,
+    /// CAM XNOR scores + top-N sorter + sparse AV
+    Had,
+}
+
+impl Design {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Design::Standard => "SA",
+            Design::Had => "HAD",
+        }
+    }
+}
+
+/// One row of the Table-3 breakdown.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// cycles to process one query (fully-pipelined array model)
+    pub cycles: f64,
+}
+
+/// Full breakdown for one design at one workload.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub design: Design,
+    pub workload: Workload,
+    pub components: Vec<Component>,
+}
+
+impl Breakdown {
+    pub fn total_area(&self) -> f64 {
+        self.components.iter().map(|c| c.area_mm2).sum()
+    }
+
+    pub fn total_power(&self) -> f64 {
+        self.components.iter().map(|c| c.power_w).sum()
+    }
+
+    pub fn total_cycles(&self) -> f64 {
+        self.components.iter().map(|c| c.cycles).sum()
+    }
+
+    /// energy per query in nJ at the model clock
+    pub fn energy_per_query_nj(&self, tech: &Tech) -> f64 {
+        // each component is active for its own cycles: E = P * t
+        self.components
+            .iter()
+            .map(|c| c.power_w * (c.cycles / (tech.clock_ghz * 1e9)) * 1e9)
+            .sum()
+    }
+}
+
+/// Build the component breakdown for a design at a workload.
+pub fn breakdown(design: Design, w: Workload, t: &Tech) -> Breakdown {
+    let n = w.n_ctx as f64;
+    let d = w.d_model as f64;
+    let ntop = w.n_top.min(w.n_ctx) as f64;
+    let components = match design {
+        Design::Standard => {
+            // Fully-parallel d x n BF16 MAC array for QK^T; the same-size
+            // array for AV; softmax over n. One query per pipeline beat;
+            // cycles ~ pipeline depth ~ log2(d) for the reduction tree.
+            let qk_units = d * n;
+            vec![
+                Component {
+                    name: "Q K",
+                    area_mm2: qk_units * t.mac_area_um2 / 1e6,
+                    power_w: qk_units * t.mac_power_uw / 1e6,
+                    cycles: d.log2().ceil(),
+                },
+                Component { name: "Top N", area_mm2: 0.0, power_w: 0.0, cycles: 0.0 },
+                Component {
+                    name: "SoftMax",
+                    area_mm2: t.softmax_fixed_mm2 + n * t.softmax_per_el_mm2,
+                    power_w: t.softmax_fixed_w + n * t.softmax_per_el_w,
+                    cycles: 4.0, // exp LUT + normalize, pipelined
+                },
+                Component {
+                    name: "A V",
+                    area_mm2: qk_units * t.mac_area_um2 / 1e6,
+                    power_w: qk_units * t.mac_power_uw / 1e6,
+                    cycles: n.log2().ceil(),
+                },
+            ]
+        }
+        Design::Had => {
+            // CAM XNOR array scores all n keys in one associative match;
+            // top-N via a comparator network; sparse AV gathers N rows.
+            let cam_cells = d * n;
+            let comparators = n * n.log2().ceil();
+            let av_macs = ntop * d;
+            vec![
+                Component {
+                    name: "Q K",
+                    area_mm2: cam_cells * t.xnor_area_um2 / 1e6,
+                    power_w: cam_cells * t.xnor_power_uw / 1e6,
+                    cycles: 1.0, // associative match
+                },
+                Component {
+                    name: "Top N",
+                    area_mm2: comparators * t.comparator_area_um2 / 1e6,
+                    power_w: comparators * t.comparator_power_uw / 1e6,
+                    cycles: n.log2().ceil(),
+                },
+                Component {
+                    name: "SoftMax",
+                    area_mm2: t.softmax_fixed_mm2 + ntop * t.softmax_per_el_mm2,
+                    power_w: t.softmax_fixed_w + ntop * t.softmax_per_el_w,
+                    cycles: 4.0,
+                },
+                Component {
+                    name: "A V",
+                    area_mm2: av_macs * t.mac_area_um2 * t.sparse_area_factor / 1e6,
+                    power_w: av_macs * t.mac_power_uw * t.sparse_power_factor / 1e6,
+                    cycles: ntop.log2().ceil(),
+                },
+            ]
+        }
+    };
+    Breakdown { design, workload: w, components }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_totals() {
+        let t = Tech::default();
+        let sa = breakdown(Design::Standard, Workload::paper(), &t);
+        let had = breakdown(Design::Had, Workload::paper(), &t);
+        assert!((sa.total_area() - 31.795).abs() < 0.01, "{}", sa.total_area());
+        assert!((sa.total_power() - 25.491).abs() < 0.01, "{}", sa.total_power());
+        assert!((had.total_area() - 6.724).abs() < 0.01, "{}", had.total_area());
+        assert!((had.total_power() - 3.301).abs() < 0.01, "{}", had.total_power());
+    }
+
+    #[test]
+    fn reproduces_table3_components() {
+        let t = Tech::default();
+        let sa = breakdown(Design::Standard, Workload::paper(), &t);
+        let had = breakdown(Design::Had, Workload::paper(), &t);
+        let row = |b: &Breakdown, name: &str| -> (f64, f64) {
+            let c = b.components.iter().find(|c| c.name == name).unwrap();
+            (c.area_mm2, c.power_w)
+        };
+        assert!((row(&sa, "Q K").0 - 15.880).abs() < 1e-3);
+        assert!((row(&had, "Q K").0 - 1.108).abs() < 1e-3);
+        assert!((row(&had, "Top N").1 - 0.009).abs() < 1e-3);
+        assert!((row(&sa, "SoftMax").0 - 0.035).abs() < 1e-3);
+        assert!((row(&had, "A V").0 - 5.591).abs() < 1e-3);
+    }
+
+    #[test]
+    fn paper_reduction_percentages() {
+        let t = Tech::default();
+        let sa = breakdown(Design::Standard, Workload::paper(), &t);
+        let had = breakdown(Design::Had, Workload::paper(), &t);
+        let area_red = 100.0 * (1.0 - had.total_area() / sa.total_area());
+        let power_red = 100.0 * (1.0 - had.total_power() / sa.total_power());
+        // paper: "79% area reduction and 87% power reduction"
+        assert!((area_red - 79.0).abs() < 1.0, "area reduction {area_red}");
+        assert!((power_red - 87.0).abs() < 1.0, "power reduction {power_red}");
+    }
+
+    #[test]
+    fn scaling_monotone_in_context() {
+        let t = Tech::default();
+        let mut prev_area = 0.0;
+        for n in [128usize, 256, 512, 1024] {
+            let w = Workload { n_ctx: n, d_model: 1024, n_top: 30 * n / 256 };
+            let b = breakdown(Design::Had, w, &t);
+            assert!(b.total_area() > prev_area);
+            prev_area = b.total_area();
+        }
+    }
+
+    #[test]
+    fn had_energy_below_sa_energy() {
+        let t = Tech::default();
+        let sa = breakdown(Design::Standard, Workload::paper(), &t);
+        let had = breakdown(Design::Had, Workload::paper(), &t);
+        assert!(had.energy_per_query_nj(&t) < sa.energy_per_query_nj(&t) / 3.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Custom-hardware cost simulator (paper §4.4, Table 3): a CAM-based HAD
+//! attention unit vs a conventional BF16 digital attention unit, with a
+//! component-level area/power/energy model calibrated at the paper's
+//! workload and extrapolated across (n_ctx, d_model, N).
+
+pub mod attention_unit;
+pub mod report;
+pub mod tech;
+
+pub use attention_unit::{breakdown, Breakdown, Component, Design, Workload};
+pub use report::{context_sweep, render_comparison, table3_text};
+pub use tech::Tech;

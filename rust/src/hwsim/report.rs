@@ -1,0 +1,88 @@
+//! Table-3 report and hardware scaling sweeps.
+
+use super::attention_unit::{breakdown, Breakdown, Design, Workload};
+use super::tech::Tech;
+
+/// Render the paper's Table 3 (component x {SA, HAD} x {area, power}).
+pub fn table3_text(tech: &Tech) -> String {
+    let sa = breakdown(Design::Standard, Workload::paper(), tech);
+    let had = breakdown(Design::Had, Workload::paper(), tech);
+    render_comparison(&sa, &had)
+}
+
+pub fn render_comparison(sa: &Breakdown, had: &Breakdown) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Attention head @ n_ctx={}, d_model={}, N={}\n",
+        sa.workload.n_ctx, sa.workload.d_model, had.workload.n_top
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
+        "Component", "SA mm^2", "HAD mm^2", "SA W", "HAD W"
+    ));
+    for (cs, ch) in sa.components.iter().zip(&had.components) {
+        debug_assert_eq!(cs.name, ch.name);
+        out.push_str(&format!(
+            "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>12.3}\n",
+            cs.name, cs.area_mm2, ch.area_mm2, cs.power_w, ch.power_w
+        ));
+    }
+    out.push_str(&format!(
+        "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>12.3}\n",
+        "Total",
+        sa.total_area(),
+        had.total_area(),
+        sa.total_power(),
+        had.total_power()
+    ));
+    out.push_str(&format!(
+        "Reduction: area {:.1}%  power {:.1}%\n",
+        100.0 * (1.0 - had.total_area() / sa.total_area()),
+        100.0 * (1.0 - had.total_power() / sa.total_power()),
+    ));
+    out
+}
+
+/// Sweep context length, N scaled linearly (the paper's §4.3 rule),
+/// returning (n_ctx, sa_energy_nj, had_energy_nj, area_ratio).
+pub fn context_sweep(tech: &Tech, contexts: &[usize]) -> Vec<(usize, f64, f64, f64)> {
+    contexts
+        .iter()
+        .map(|&n| {
+            let w = Workload {
+                n_ctx: n,
+                d_model: super::tech::PAPER_D_MODEL,
+                n_top: (super::tech::PAPER_N_TOP * n / super::tech::PAPER_N_CTX).max(1),
+            };
+            let sa = breakdown(Design::Standard, w, tech);
+            let had = breakdown(Design::Had, w, tech);
+            (
+                n,
+                sa.energy_per_query_nj(tech),
+                had.energy_per_query_nj(tech),
+                had.total_area() / sa.total_area(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_contains_paper_totals() {
+        let text = table3_text(&Tech::default());
+        assert!(text.contains("31.795"), "{text}");
+        assert!(text.contains("6.724"), "{text}");
+        assert!(text.contains("25.491"), "{text}");
+        assert!(text.contains("3.301"), "{text}");
+    }
+
+    #[test]
+    fn sweep_energy_gap_grows_with_context() {
+        let sweep = context_sweep(&Tech::default(), &[128, 256, 512, 1024]);
+        let gaps: Vec<f64> = sweep.iter().map(|(_, sa, had, _)| sa / had).collect();
+        assert!(gaps.iter().all(|&g| g > 2.0));
+    }
+}

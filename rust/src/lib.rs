@@ -1,0 +1,31 @@
+//! # HAD — Hamming Attention Distillation
+//!
+//! Production-shaped reproduction of *"Hamming Attention Distillation:
+//! Binarizing Keys and Queries for Efficient Long-Context Transformers"*
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): Pallas kernels — fused binarized top-N attention
+//!   (`python/compile/kernels/`).
+//! * **L2** (build time): JAX transformer + 4-stage distillation graphs,
+//!   AOT-lowered to HLO text artifacts (`python/compile/`).
+//! * **L3** (this crate): the runtime — PJRT execution, the distillation
+//!   pipeline driver, a long-context serving coordinator, synthetic data
+//!   generators, a bit-packed CPU fast path, the custom-hardware cost
+//!   simulator, and the paper's experiment harnesses.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `had` binary is self-contained.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod binary;
+pub mod coordinator;
+pub mod data;
+pub mod distill;
+pub mod exp;
+pub mod hwsim;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

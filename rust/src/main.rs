@@ -1,0 +1,126 @@
+//! `had` — the leader binary: experiment harnesses, the distillation
+//! pipeline, and the long-context serving demo, all driven from the AOT
+//! artifacts (run `make artifacts` once; Python never runs here).
+
+use anyhow::{bail, Result};
+
+use had::exp::{self, SuiteOptions};
+use had::runtime::{default_artifact_dir, Runtime};
+use had::util::cli::Args;
+
+const USAGE: &str = "\
+had — Hamming Attention Distillation (paper reproduction CLI)
+
+USAGE:
+  had exp <table1|table2|table3|fig1|fig3|fig4|fig5|all> [--scale X] [--seed N]
+          [--task MNLI] [--config vision_tiny] [--ctx 256] [--reps 20]
+  had hwsim                     print the Table-3 hardware comparison
+  had artifacts                 list artifacts in the manifest
+  had --help
+
+Common flags:
+  --artifacts DIR   artifact directory (default: ./artifacts or $HAD_ARTIFACTS)
+  --scale X         scale every training budget (default 1.0; see EXPERIMENTS.md)
+  --seed N          RNG seed (default 0x4AD)
+  --results DIR     results sink (default ./results)
+";
+
+fn suite_options(args: &Args) -> SuiteOptions {
+    let mut opts = SuiteOptions::default();
+    opts.scale = args.get_f64("scale", opts.scale);
+    opts.teacher_scale = args.get_f64("teacher-scale", opts.scale);
+    opts.seed = args.get_u64("seed", opts.seed);
+    opts.eval_batches = args.get_usize("eval-batches", opts.eval_batches);
+    opts.calib_batches = args.get_usize("calib-batches", opts.calib_batches);
+    opts.lr = args.get_f64("lr", opts.lr as f64) as f32;
+    opts.teacher_lr = args.get_f64("teacher-lr", opts.teacher_lr as f64) as f32;
+    opts.results_dir = args.get_str("results", "results").into();
+    opts
+}
+
+fn main() -> Result<()> {
+    had::util::log::init_from_env();
+    let args = Args::from_env();
+    let artifact_dir = args
+        .flag("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+
+    match args.command.as_deref() {
+        Some("exp") => {
+            let which = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            let opts = suite_options(&args);
+            // fig4 and table3 need no runtime
+            match which {
+                "fig4" => {
+                    exp::fig4::run(&opts)?;
+                    return Ok(());
+                }
+                "table3" => {
+                    exp::table3::run(&opts)?;
+                    return Ok(());
+                }
+                _ => {}
+            }
+            let rt = Runtime::new(&artifact_dir)?;
+            match which {
+                "table1" => {
+                    // --task accepts a comma-separated list
+                    let tasks = args.flag("task").map(|t| {
+                        had::data::tinyglue::GlueTask::ALL
+                            .iter()
+                            .copied()
+                            .filter(|x| {
+                                t.split(',').any(|n| x.name().eq_ignore_ascii_case(n.trim()))
+                            })
+                            .collect::<Vec<_>>()
+                    });
+                    exp::table1::run(&rt, &opts, tasks)?;
+                }
+                "table2" => {
+                    exp::table2::run(&rt, &opts, args.flag("config"))?;
+                }
+                "fig1" => {
+                    exp::fig1::run(&rt, &opts, args.get_usize("reps", 10))?;
+                }
+                "fig3" => {
+                    exp::fig3::run(&rt, &opts)?;
+                }
+                "fig5" => {
+                    let only = args.flag("ctx").map(|c| c.parse::<usize>().unwrap());
+                    exp::fig5::run(&rt, &opts, only)?;
+                }
+                "all" => {
+                    exp::fig4::run(&opts)?;
+                    exp::table3::run(&opts)?;
+                    exp::fig1::run(&rt, &opts, args.get_usize("reps", 10))?;
+                    exp::table1::run(&rt, &opts, None)?;
+                    exp::table2::run(&rt, &opts, None)?;
+                    exp::fig3::run(&rt, &opts)?;
+                    exp::fig5::run(&rt, &opts, None)?;
+                }
+                other => bail!("unknown experiment {other:?}\n{USAGE}"),
+            }
+        }
+        Some("hwsim") => {
+            let opts = suite_options(&args);
+            exp::table3::run(&opts)?;
+        }
+        Some("artifacts") => {
+            let m = had::runtime::Manifest::load(&artifact_dir)?;
+            println!("{} configs, {} artifacts in {:?}", m.configs.len(), m.artifacts.len(), m.dir);
+            for (name, art) in &m.artifacts {
+                println!("  {name:<40} kind={:<13} batch={}", art.kind, art.batch);
+            }
+        }
+        Some("--help") | None => {
+            println!("{USAGE}");
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Checkpoint IO: a simple self-describing binary format (no serde in
+//! this environment — DESIGN.md §Substrates).
+//!
+//! Layout (little-endian):
+//!   magic  "HADCKPT1"
+//!   u32    json header length
+//!   bytes  json header: {config, step, sigmas, tensor names+shapes}
+//!   f32[]  tensor data back-to-back in header order
+//!
+//! The JSON header keeps checkpoints debuggable (`head -c 400 file`).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::params::ParamSet;
+use crate::runtime::{ConfigEntry, HostTensor};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"HADCKPT1";
+
+/// Everything needed to resume / evaluate a distilled model.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub config: String,
+    pub step: f32,
+    /// per-layer calibrated standardization coefficients (paper §3.4)
+    pub sigma_q: Vec<f32>,
+    pub sigma_k: Vec<f32>,
+    pub params: ParamSet,
+}
+
+pub fn save_checkpoint(path: impl AsRef<Path>, cfg: &ConfigEntry, ckpt: &Checkpoint) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let tensors = Json::arr(cfg.params.iter().map(|p| {
+        Json::obj(vec![
+            ("name", Json::str(p.name.clone())),
+            ("shape", Json::arr(p.shape.iter().map(|&d| Json::num(d as f64)))),
+        ])
+    }));
+    let header = Json::obj(vec![
+        ("config", Json::str(ckpt.config.clone())),
+        ("step", Json::num(ckpt.step as f64)),
+        ("sigma_q", Json::arr(ckpt.sigma_q.iter().map(|&x| Json::num(x as f64)))),
+        ("sigma_k", Json::arr(ckpt.sigma_k.iter().map(|&x| Json::num(x as f64)))),
+        ("tensors", tensors),
+    ])
+    .to_string();
+
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in &ckpt.params.tensors {
+        let data = t.as_f32().context("checkpoint tensors must be f32")?;
+        // safe byte-level serialization without unsafe: chunked copy
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: impl AsRef<Path>, cfg: &ConfigEntry) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf).context("header utf8")?)
+        .context("header json")?;
+
+    let config = header.get("config").and_then(Json::as_str).context("config")?.to_string();
+    ensure!(
+        config == cfg.name,
+        "checkpoint is for config {config:?}, expected {:?}",
+        cfg.name
+    );
+    let step = header.get("step").and_then(Json::as_f64).context("step")? as f32;
+    let sig = |k: &str| -> Result<Vec<f32>> {
+        Ok(header
+            .get(k)
+            .and_then(Json::as_arr)
+            .with_context(|| k.to_string())?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(1.0) as f32)
+            .collect())
+    };
+    let sigma_q = sig("sigma_q")?;
+    let sigma_k = sig("sigma_k")?;
+
+    // validate tensor list against the manifest contract
+    let tensors_j = header.get("tensors").and_then(Json::as_arr).context("tensors")?;
+    ensure!(
+        tensors_j.len() == cfg.params.len(),
+        "checkpoint has {} tensors, config expects {}",
+        tensors_j.len(),
+        cfg.params.len()
+    );
+    let mut tensors = Vec::with_capacity(cfg.params.len());
+    for (tj, spec) in tensors_j.iter().zip(&cfg.params) {
+        let name = tj.get("name").and_then(Json::as_str).context("tensor name")?;
+        if name != spec.name {
+            bail!("tensor order mismatch: {name} vs {}", spec.name);
+        }
+        let n = spec.numel();
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf).with_context(|| format!("reading tensor {name}"))?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push(HostTensor::f32(spec.shape.clone(), data));
+    }
+    let params = ParamSet::from_tensors(cfg, tensors)?;
+    Ok(Checkpoint { config, step, sigma_q, sigma_k, params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Init, ModelCfg, ParamSpec};
+    use crate::util::rng::Rng;
+
+    fn fake_cfg() -> ConfigEntry {
+        ConfigEntry {
+            name: "fake".into(),
+            model: ModelCfg {
+                n_layers: 2, d_model: 4, n_heads: 1, d_ff: 8, n_ctx: 4,
+                n_classes: 2, vocab: 8, input_dim: 0, n_top: 2, block_q: 4,
+            },
+            train_batch: 2,
+            eval_batch: 2,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![4, 4], init: Init::Normal },
+                ParamSpec { name: "b".into(), shape: vec![4], init: Init::Zeros },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(7);
+        let params = ParamSet::init(&cfg, &mut rng);
+        let ckpt = Checkpoint {
+            config: "fake".into(),
+            step: 123.0,
+            sigma_q: vec![0.5, 0.6],
+            sigma_k: vec![0.7, 0.8],
+            params,
+        };
+        let dir = std::env::temp_dir().join("had_ckpt_test");
+        let path = dir.join("test.ckpt");
+        save_checkpoint(&path, &cfg, &ckpt).unwrap();
+        let loaded = load_checkpoint(&path, &cfg).unwrap();
+        assert_eq!(loaded.step, 123.0);
+        assert_eq!(loaded.sigma_q, vec![0.5, 0.6]);
+        assert_eq!(loaded.params.tensors[0], ckpt.params.tensors[0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_config() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(8);
+        let ckpt = Checkpoint {
+            config: "fake".into(),
+            step: 0.0,
+            sigma_q: vec![1.0; 2],
+            sigma_k: vec![1.0; 2],
+            params: ParamSet::init(&cfg, &mut rng),
+        };
+        let path = std::env::temp_dir().join("had_ckpt_test2.ckpt");
+        save_checkpoint(&path, &cfg, &ckpt).unwrap();
+        let mut other = fake_cfg();
+        other.name = "other".into();
+        assert!(load_checkpoint(&path, &other).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let path = std::env::temp_dir().join("had_ckpt_trunc.ckpt");
+        std::fs::write(&path, b"HADCKPT1\x10\x00\x00\x00{}").unwrap();
+        assert!(load_checkpoint(&path, &fake_cfg()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side state owned by Rust: parameter/optimizer tensors laid out
+//! per the manifest contract, initialization, and checkpoint IO.
+
+pub mod checkpoint;
+pub mod params;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use params::{ParamSet, TrainState};

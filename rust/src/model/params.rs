@@ -1,0 +1,233 @@
+//! Parameter and optimizer-state tensors, in manifest order.
+//!
+//! The order contract: python's `model.param_specs(cfg)` == the manifest's
+//! `params` list == `ParamSet::tensors` here. Train-step artifacts take
+//! params, then Adam m, then Adam v, then the step counter — `TrainState`
+//! packages exactly that.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{ConfigEntry, HostTensor, Init};
+use crate::util::rng::Rng;
+
+/// One named tensor set in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamSet {
+    /// Initialize per the manifest's init kinds: Normal => N(0, 0.02),
+    /// matching the python reference initializer.
+    pub fn init(cfg: &ConfigEntry, rng: &mut Rng) -> ParamSet {
+        let tensors = cfg
+            .params
+            .iter()
+            .map(|spec| {
+                let n = spec.numel();
+                let data = match spec.init {
+                    Init::Normal => rng.normal_vec(n, 0.02),
+                    Init::Zeros => vec![0.0; n],
+                    Init::Ones => vec![1.0; n],
+                };
+                HostTensor::f32(spec.shape.clone(), data)
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    /// All-zeros set with the same shapes (Adam moments).
+    pub fn zeros_like(cfg: &ConfigEntry) -> ParamSet {
+        let tensors = cfg
+            .params
+            .iter()
+            .map(|spec| HostTensor::f32(spec.shape.clone(), vec![0.0; spec.numel()]))
+            .collect();
+        ParamSet { tensors }
+    }
+
+    pub fn from_tensors(cfg: &ConfigEntry, tensors: Vec<HostTensor>) -> Result<ParamSet> {
+        ensure!(
+            tensors.len() == cfg.params.len(),
+            "expected {} tensors, got {}",
+            cfg.params.len(),
+            tensors.len()
+        );
+        for (t, spec) in tensors.iter().zip(&cfg.params) {
+            ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "tensor {} shape {:?} != spec {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(HostTensor::numel).sum()
+    }
+
+    /// Look up a tensor by name (manifest order defines the index).
+    pub fn by_name<'a>(&'a self, cfg: &ConfigEntry, name: &str) -> Option<&'a HostTensor> {
+        cfg.params
+            .iter()
+            .position(|p| p.name == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    /// L2 distance to another set (training-progress diagnostics).
+    pub fn l2_distance(&self, other: &ParamSet) -> f32 {
+        let mut acc = 0.0f64;
+        for (a, b) in self.tensors.iter().zip(&other.tensors) {
+            let (Ok(da), Ok(db)) = (a.as_f32(), b.as_f32()) else { continue };
+            for (x, y) in da.iter().zip(db) {
+                let d = (x - y) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt() as f32
+    }
+}
+
+/// Parameters + Adam state + step counter: the mutable state a train-step
+/// artifact consumes and reproduces.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: ParamSet,
+    pub m: ParamSet,
+    pub v: ParamSet,
+    pub t: f32,
+}
+
+impl TrainState {
+    pub fn new(cfg: &ConfigEntry, rng: &mut Rng) -> TrainState {
+        TrainState {
+            params: ParamSet::init(cfg, rng),
+            m: ParamSet::zeros_like(cfg),
+            v: ParamSet::zeros_like(cfg),
+            t: 0.0,
+        }
+    }
+
+    /// Fresh optimizer state around existing parameters (each distillation
+    /// run restarts Adam, per the paper's stage transitions keeping only
+    /// weights).
+    pub fn from_params(cfg: &ConfigEntry, params: ParamSet) -> TrainState {
+        TrainState { params, m: ParamSet::zeros_like(cfg), v: ParamSet::zeros_like(cfg), t: 0.0 }
+    }
+
+    /// Flatten into artifact input order: params*, m*, v*, t.
+    pub fn to_inputs(&self) -> Vec<HostTensor> {
+        let mut out = Vec::with_capacity(3 * self.params.len() + 1);
+        out.extend(self.params.tensors.iter().cloned());
+        out.extend(self.m.tensors.iter().cloned());
+        out.extend(self.v.tensors.iter().cloned());
+        out.push(HostTensor::scalar_f32(self.t));
+        out
+    }
+
+    /// Rebuild from artifact outputs laid out params*, m*, v*, t, <aux...>.
+    /// Returns (state, aux outputs).
+    pub fn from_outputs(
+        cfg: &ConfigEntry,
+        outputs: Vec<HostTensor>,
+    ) -> Result<(TrainState, Vec<HostTensor>)> {
+        let p = cfg.params.len();
+        ensure!(outputs.len() >= 3 * p + 1, "short output: {}", outputs.len());
+        let mut it = outputs.into_iter();
+        let params = ParamSet::from_tensors(cfg, it.by_ref().take(p).collect())?;
+        let m = ParamSet::from_tensors(cfg, it.by_ref().take(p).collect())?;
+        let v = ParamSet::from_tensors(cfg, it.by_ref().take(p).collect())?;
+        let t = it.next().unwrap().scalar()?;
+        let aux: Vec<HostTensor> = it.collect();
+        Ok((TrainState { params, m, v, t }, aux))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelCfg, ParamSpec};
+
+    fn fake_cfg() -> ConfigEntry {
+        ConfigEntry {
+            name: "fake".into(),
+            model: ModelCfg {
+                n_layers: 1, d_model: 4, n_heads: 1, d_ff: 8, n_ctx: 4,
+                n_classes: 2, vocab: 8, input_dim: 0, n_top: 2, block_q: 4,
+            },
+            train_batch: 2,
+            eval_batch: 2,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 3], init: Init::Normal },
+                ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
+                ParamSpec { name: "g".into(), shape: vec![3], init: Init::Ones },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(0);
+        let p = ParamSet::init(&cfg, &mut rng);
+        assert_eq!(p.len(), 3);
+        assert!(p.tensors[0].as_f32().unwrap().iter().any(|&x| x != 0.0));
+        assert!(p.tensors[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(p.tensors[2].as_f32().unwrap().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn train_state_roundtrip() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(1);
+        let st = TrainState::new(&cfg, &mut rng);
+        let mut inputs = st.to_inputs();
+        assert_eq!(inputs.len(), 10);
+        // simulate artifact output: same tensors + 2 aux scalars
+        inputs.push(HostTensor::scalar_f32(0.5));
+        inputs.push(HostTensor::scalar_f32(0.9));
+        let (st2, aux) = TrainState::from_outputs(&cfg, inputs).unwrap();
+        assert_eq!(aux.len(), 2);
+        assert_eq!(st2.params.tensors[0], st.params.tensors[0]);
+        assert_eq!(st2.t, st.t);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(2);
+        let p = ParamSet::init(&cfg, &mut rng);
+        assert!(p.by_name(&cfg, "b").is_some());
+        assert!(p.by_name(&cfg, "nope").is_none());
+    }
+
+    #[test]
+    fn l2_distance_zero_for_self() {
+        let cfg = fake_cfg();
+        let mut rng = Rng::new(3);
+        let p = ParamSet::init(&cfg, &mut rng);
+        assert_eq!(p.l2_distance(&p), 0.0);
+    }
+
+    #[test]
+    fn from_tensors_rejects_bad_shapes() {
+        let cfg = fake_cfg();
+        let bad = vec![
+            HostTensor::f32(vec![3, 2], vec![0.0; 6]),
+            HostTensor::f32(vec![3], vec![0.0; 3]),
+            HostTensor::f32(vec![3], vec![0.0; 3]),
+        ];
+        assert!(ParamSet::from_tensors(&cfg, bad).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax>=0.5 protos with
+//! 64-bit instruction ids; the text parser reassigns ids).
+//!
+//! All xla types are !Send: a Runtime must live and be used on a single
+//! thread. Cross-thread serving goes through `engine::Engine` instead.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor_data::HostTensor;
+use crate::log_debug;
+use crate::log_info;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall-clock spent compiling (reported by `had exp fig1` and §Perf)
+    pub compile_time_ms: u128,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log_info!(
+            "PJRT client up: platform={} devices={} | {} artifacts, {} configs",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len(),
+            manifest.configs.len()
+        );
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact by qualified name (cached).
+    pub fn load(&self, qualified: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(qualified) {
+            return Ok(Rc::clone(exe));
+        }
+        let path = self.manifest.artifact_path(qualified)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {qualified}"))?;
+        let compile_time_ms = t0.elapsed().as_millis();
+        log_info!("compiled {qualified} in {compile_time_ms} ms");
+        let exe = Rc::new(Executable { name: qualified.to_string(), exe, compile_time_ms });
+        self.cache.borrow_mut().insert(qualified.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; returns the un-tupled outputs.
+    /// Validates inputs against the manifest signature (cheap; shape bugs
+    /// caught here rather than inside XLA).
+    pub fn exec(&self, qualified: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(qualified)?;
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{qualified}: got {} inputs, want {}",
+            inputs.len(),
+            meta.inputs.len()
+        );
+        for (i, (t, sig)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            t.check_sig(&sig.shape, &sig.dtype)
+                .with_context(|| format!("{qualified} input #{i}"))?;
+        }
+        let exe = self.load(qualified)?;
+        exe.run(inputs)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors (converted to literals at the boundary).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let out = self.run_literals(&lits)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Literal-level execution (used by the distillation hot loop to skip
+    /// redundant host conversions — §Perf).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let outs = tuple.to_tuple().context("untupling result")?;
+        log_debug!("{} ran in {:?} ({} outputs)", self.name, t0.elapsed(), outs.len());
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    #[test]
+    fn exec_rejects_wrong_arity() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.exec("tinyglue__calib", &[]).unwrap_err();
+        assert!(format!("{err}").contains("inputs"));
+    }
+
+    #[test]
+    fn cache_hits() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.load("tinyglue__fwd_standard").unwrap();
+        let b = rt.load("tinyglue__fwd_standard").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(rt.cache_len(), 1);
+    }
+}

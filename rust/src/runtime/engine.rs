@@ -1,0 +1,164 @@
+//! Engine: a dedicated thread that owns the (!Send) PJRT runtime and
+//! serves execution requests over channels.
+//!
+//! This is the boundary between the multi-threaded coordinator (router,
+//! batcher, metrics — all Send) and single-threaded PJRT. Handles are
+//! cheap to clone; requests are processed FIFO by the engine thread.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::Runtime;
+use super::tensor_data::HostTensor;
+use crate::log_info;
+
+enum Msg {
+    Exec {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    /// Pre-compile an artifact (warmup) without running it.
+    Warmup {
+        artifact: String,
+        reply: Sender<Result<u128>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+}
+
+// Sender<Msg> is Send but not Sync; wrap sends behind per-clone channels.
+// We instead make EngineHandle cheap-clone with its own Sender.
+
+pub struct Engine {
+    handle: EngineHandle,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread; it builds the Runtime from `artifact_dir`.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Engine> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("had-engine".into())
+            .spawn(move || engine_main(dir, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Engine { handle: EngineHandle { tx }, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Blocking execute on the engine thread.
+    pub fn exec(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Exec { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))?
+    }
+
+    /// Compile an artifact ahead of time; returns compile time in ms.
+    pub fn warmup(&self, artifact: &str) -> Result<u128> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warmup { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))?
+    }
+}
+
+fn engine_main(dir: std::path::PathBuf, rx: Receiver<Msg>, ready: Sender<Result<()>>) {
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut served = 0u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Exec { artifact, inputs, reply } => {
+                let out = rt.exec(&artifact, &inputs);
+                served += 1;
+                let _ = reply.send(out);
+            }
+            Msg::Warmup { artifact, reply } => {
+                let out = rt.load(&artifact).map(|e| e.compile_time_ms);
+                let _ = reply.send(out);
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    log_info!("engine thread exiting after {served} requests");
+}
+
+/// A shared engine for tests/benches that want a singleton (compiling
+/// artifacts is expensive; reuse across test cases).
+pub fn shared_engine(dir: &std::path::Path) -> Result<Arc<Mutex<Engine>>> {
+    Ok(Arc::new(Mutex::new(Engine::start(dir)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn engine_round_trip_from_other_threads() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::start(dir).unwrap();
+        let h = engine.handle();
+        // error path crosses the thread boundary cleanly
+        let err = h.exec("tinyglue__calib", vec![]).unwrap_err();
+        assert!(format!("{err}").contains("inputs"));
+        // concurrent handles from several threads
+        let mut joins = vec![];
+        for _ in 0..4 {
+            let h = engine.handle();
+            joins.push(std::thread::spawn(move || {
+                h.exec("nonexistent__artifact", vec![]).unwrap_err();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Artifact manifest: the contract written by python/compile/aot.py.
+//!
+//! The manifest pins down (a) every model configuration (architecture +
+//! batch sizes), (b) the exact parameter layout (name/shape/init order —
+//! Rust materializes parameters and optimizer state in THIS order), and
+//! (c) every artifact's signature.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parameter initializer kinds understood by `model::init`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    Normal, // N(0, 0.02)
+    Zeros,
+    Ones,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Mirror of python ModelConfig.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_ctx: usize,
+    pub n_classes: usize,
+    pub vocab: usize,
+    pub input_dim: usize,
+    pub n_top: usize,
+    pub block_q: usize,
+}
+
+impl ModelCfg {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn is_token_mode(&self) -> bool {
+        self.vocab > 0
+    }
+
+    pub fn n_patches(&self) -> usize {
+        self.n_ctx - 1
+    }
+
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("model config missing {k}"))
+        };
+        Ok(ModelCfg {
+            n_layers: g("n_layers")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            n_ctx: g("n_ctx")?,
+            n_classes: g("n_classes")?,
+            vocab: g("vocab")?,
+            input_dim: g("input_dim")?,
+            n_top: g("n_top")?,
+            block_q: g("block_q")?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub model: ModelCfg,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ConfigEntry {
+    pub fn n_params_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+}
+
+/// Signature entry for one artifact input.
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub config: String,
+    pub name: String, // e.g. "distill_had_tanh"
+    pub file: String,
+    pub kind: String,    // teacher_step | distill_step | fwd | calib
+    pub variant: String, // standard | had | bit | sab | fp_topn | noattn
+    pub ste: bool,
+    pub pallas: bool,
+    pub batch: usize,
+    pub inputs: Vec<TensorSig>,
+}
+
+impl ArtifactMeta {
+    /// Fully-qualified name used as the runtime cache key.
+    pub fn qualified(&self) -> String {
+        format!("{}__{}", self.config, self.name)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>, // keyed by qualified name
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version").and_then(Json::as_usize) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.get("configs").and_then(Json::as_obj).context("configs")? {
+            let model = ModelCfg::from_json(cj.get("model").context("model")?)?;
+            let params = cj
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("params")?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    let name = p.get("name").and_then(Json::as_str).context("param name")?;
+                    let shape = p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    let init = match p.get("init").and_then(Json::as_str) {
+                        Some("normal") => Init::Normal,
+                        Some("zeros") => Init::Zeros,
+                        Some("ones") => Init::Ones,
+                        other => bail!("unknown init {other:?}"),
+                    };
+                    Ok(ParamSpec { name: name.to_string(), shape, init })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    name: name.clone(),
+                    model,
+                    train_batch: cj.get("train_batch").and_then(Json::as_usize).context("train_batch")?,
+                    eval_batch: cj.get("eval_batch").and_then(Json::as_usize).context("eval_batch")?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).context("artifacts")? {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k).and_then(Json::as_str).with_context(|| format!("artifact {k}"))?.to_string())
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(|i| -> Result<TensorSig> {
+                    Ok(TensorSig {
+                        shape: i
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("sig shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<Vec<_>>>()?,
+                        dtype: i.get("dtype").and_then(Json::as_str).context("dtype")?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = ArtifactMeta {
+                config: s("config")?,
+                name: s("name")?,
+                file: s("file")?,
+                kind: s("kind")?,
+                variant: s("variant")?,
+                ste: a.get("ste").and_then(Json::as_bool).unwrap_or(true),
+                pallas: a.get("pallas").and_then(Json::as_bool).unwrap_or(false),
+                batch: a.get("batch").and_then(Json::as_usize).context("batch")?,
+                inputs,
+            };
+            if !configs.contains_key(&meta.config) {
+                bail!("artifact {} references unknown config {}", meta.name, meta.config);
+            }
+            artifacts.insert(meta.qualified(), meta);
+        }
+
+        Ok(Manifest { dir, configs, artifacts })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("unknown config {name:?} (have: {:?})", self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, qualified: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(qualified)
+            .with_context(|| format!("unknown artifact {qualified:?}"))
+    }
+
+    pub fn artifact_path(&self, qualified: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(qualified)?.file))
+    }
+
+    /// All artifacts belonging to one config.
+    pub fn artifacts_for(&self, config: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.values().filter(|a| a.config == config).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.configs.contains_key("tinyglue"));
+        let art = m.artifact("tinyglue__distill_had_tanh").unwrap();
+        assert_eq!(art.kind, "distill_step");
+        let cfg = m.config("tinyglue").unwrap();
+        // distill signature: 3P + 1 + P + 7 tensors + n_top
+        let p = cfg.n_params_tensors();
+        assert_eq!(art.inputs.len(), 4 * p + 9);
+        assert!(m.artifact_path("tinyglue__teacher_step").unwrap().exists());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! Runtime layer: PJRT execution of the AOT artifacts.
+//!
+//! * `manifest` — the python→rust artifact contract (configs, param
+//!   layout, signatures).
+//! * `tensor_data` — Send-able host tensors, Literal conversion.
+//! * `client` — single-threaded Runtime: load HLO text, compile, execute.
+//! * `engine` — the engine thread owning the Runtime; Send handles for
+//!   the coordinator.
+
+pub mod client;
+pub mod engine;
+pub mod manifest;
+pub mod tensor_data;
+
+pub use client::{Executable, Runtime};
+pub use engine::{Engine, EngineHandle};
+pub use manifest::{ArtifactMeta, ConfigEntry, Init, Manifest, ModelCfg, ParamSpec};
+pub use tensor_data::HostTensor;
+
+/// Default artifact directory: $HAD_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("HAD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,152 @@
+//! Host-side tensors: the Send-able currency between coordinator threads
+//! and the (single) PJRT engine thread. Converts to/from xla::Literal at
+//! the engine boundary.
+
+use anyhow::{bail, Context, Result};
+
+/// Plain host tensor. Shapes are explicit; data is row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> HostTensor {
+        HostTensor::F32 { shape: vec![data.len()], data }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => bail!("not a scalar (numel={})", self.numel()),
+        }
+    }
+
+    /// Build an xla::Literal with this tensor's shape and contents.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims).context("reshape literal")?)
+    }
+
+    /// Read a Literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().context("to_vec f32")?,
+            }),
+            xla::PrimitiveType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().context("to_vec i32")?,
+            }),
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+
+    /// Validate against a manifest signature entry.
+    pub fn check_sig(&self, shape: &[usize], dtype: &str) -> Result<()> {
+        if self.shape() != shape {
+            bail!("shape mismatch: got {:?}, want {:?}", self.shape(), shape);
+        }
+        if self.dtype_str() != dtype {
+            bail!("dtype mismatch: got {}, want {}", self.dtype_str(), dtype);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.check_sig(&[2, 3], "float32").is_ok());
+        assert!(t.check_sig(&[3, 2], "float32").is_err());
+        assert!(t.check_sig(&[2, 3], "int32").is_err());
+    }
+
+    #[test]
+    fn scalar_access() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert!(HostTensor::f32(vec![2], vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar_shapes() {
+        let t = HostTensor::i32(vec![3], vec![7, -1, 0]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = HostTensor::scalar_f32(1.5);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+}

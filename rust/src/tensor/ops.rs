@@ -1,0 +1,161 @@
+//! Reference numerics: softmax, layernorm, metrics helpers.
+//!
+//! `softmax_topn_rows` is the Rust-side oracle for the paper's Eqs. 6-8
+//! (used to cross-check `binary::attention` and, in integration tests, the
+//! PJRT artifacts).
+
+use super::Mat;
+
+/// Numerically-stable softmax over a slice, in place.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// Row-wise softmax of a matrix.
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        softmax_inplace(out.row_mut(r));
+    }
+    out
+}
+
+/// Paper Eqs. 6-7 oracle: keep the top-N entries per row (ties broken by
+/// lower column index, the lax.top_k convention), scale by `scale`,
+/// softmax over the kept set; other entries exactly 0.
+pub fn softmax_topn_rows(m: &Mat, n_top: usize, scale: f32) -> Mat {
+    let mut out = Mat::zeros(m.rows, m.cols);
+    let n_top = n_top.clamp(1, m.cols);
+    let mut idx: Vec<usize> = Vec::with_capacity(m.cols);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        idx.clear();
+        idx.extend(0..m.cols);
+        // stable sort by descending value; ties keep ascending index
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+        let kept = &idx[..n_top];
+        let max = kept.iter().map(|&j| row[j] * scale).fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for &j in kept {
+            let e = (row[j] * scale - max).exp();
+            *out.at_mut(r, j) = e;
+            sum += e;
+        }
+        for &j in kept {
+            *out.at_mut(r, j) /= sum;
+        }
+    }
+    out
+}
+
+/// Layer norm over the last axis of each row.
+pub fn layernorm_rows(m: &Mat, gamma: &[f32], beta: &[f32], eps: f32) -> Mat {
+    assert_eq!(gamma.len(), m.cols);
+    assert_eq!(beta.len(), m.cols);
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let mean = row.iter().sum::<f32>() / row.len() as f32;
+        let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, x) in row.iter_mut().enumerate() {
+            *x = (*x - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+    out
+}
+
+/// Standard deviation over all elements (population).
+pub fn std_all(m: &Mat) -> f32 {
+    let n = m.data.len() as f32;
+    let mean = m.data.iter().sum::<f32>() / n;
+    (m.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n).sqrt()
+}
+
+/// argmax of a slice (first max wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut xs = vec![1e30, 1e30 - 1.0];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn topn_keeps_exactly_n_without_ties() {
+        let m = Mat::from_vec(1, 5, vec![0.1, 5.0, 3.0, -1.0, 4.0]);
+        let p = softmax_topn_rows(&m, 3, 1.0);
+        let nz: Vec<usize> = (0..5).filter(|&j| p.at(0, j) > 0.0).collect();
+        assert_eq!(nz, vec![1, 2, 4]);
+        assert!((p.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topn_tie_break_lowest_index() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let p = softmax_topn_rows(&m, 2, 1.0);
+        assert!(p.at(0, 0) > 0.0 && p.at(0, 1) > 0.0);
+        assert_eq!(p.at(0, 2), 0.0);
+        assert_eq!(p.at(0, 3), 0.0);
+    }
+
+    #[test]
+    fn topn_full_equals_softmax() {
+        let m = Mat::from_vec(2, 3, vec![0.5, -0.5, 2.0, 1.0, 1.0, 1.0]);
+        let a = softmax_topn_rows(&m, 3, 1.0);
+        let b = softmax_rows(&m);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let out = layernorm_rows(&m, &g, &b, 1e-5);
+        let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+    }
+
+    #[test]
+    fn std_all_known() {
+        let m = Mat::from_vec(1, 2, vec![0.0, 2.0]);
+        assert!((std_all(&m) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Micro-benchmark harness substrate (replaces criterion — DESIGN.md
+//! §Substrates).
+//!
+//! Measures wall-clock of a closure with warmup, reports min / p50 / p90 /
+//! mean and derived throughput. Used by the `benches/` targets (declared
+//! with `harness = false`) and the §Perf iteration loop.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl Stats {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    /// items/sec given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  min {:>12}  p50 {:>12}  p90 {:>12}  mean {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.min),
+            fmt_dur(self.p50),
+            fmt_dur(self.p90),
+            fmt_dur(self.mean),
+        );
+    }
+
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        println!(
+            "{:<44} mean {:>12}   {:>14.1} {unit}/s",
+            self.name,
+            fmt_dur(self.mean),
+            self.throughput(items),
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// target total measurement time per benchmark
+    pub budget: Duration,
+    /// warmup time before measurement
+    pub warmup: Duration,
+    /// hard cap on measured iterations
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: the whole bench suite must fit the CI budget.
+        Bencher {
+            budget: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(250),
+            warmup: Duration::from_millis(50),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Benchmark `f`, preventing dead-code elimination via the returned
+    /// value (use `std::hint::black_box` inside `f` for inputs).
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+        let target_iters = if per_iter.as_nanos() == 0 {
+            self.max_iters
+        } else {
+            ((self.budget.as_nanos() / per_iter.as_nanos().max(1)) as usize)
+                .clamp(3, self.max_iters)
+        };
+
+        let mut samples = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            min: samples[0],
+            p50: samples[samples.len() / 2],
+            p90: samples[(samples.len() * 9 / 10).min(samples.len() - 1)],
+            mean: total / samples.len() as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let s = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

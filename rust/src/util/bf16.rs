@@ -1,0 +1,84 @@
+//! bfloat16 helpers (replaces the `half` crate — DESIGN.md §Substrates).
+//!
+//! Used by the hardware simulator's BF16 MAC model and by the
+//! integer-exactness argument behind the ±1-matmul mapping (DESIGN.md
+//! §Hardware-Adaptation): bf16 has an 8-bit mantissa, so signed integer
+//! accumulation is exact up to |x| <= 256 — which bounds d_head.
+
+/// Round-to-nearest-even f32 -> bf16 (stored in the high 16 bits).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // NaN: preserve a quiet NaN
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 -> bf16 -> f32 round trip (the precision a bf16 MXU sees).
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Largest integer magnitude exactly representable in bf16 (2^8).
+pub const BF16_EXACT_INT_MAX: i32 = 256;
+
+/// True iff every integer in [-m, m] is exactly representable in bf16 —
+/// the precondition for running binary score matmuls on the MXU.
+pub fn integer_exact_up_to(m: i32) -> bool {
+    m <= BF16_EXACT_INT_MAX
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small_integers_exact() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(bf16_round(x), x, "integer {i} must round-trip");
+        }
+    }
+
+    #[test]
+    fn beyond_exact_range_loses_integers() {
+        // 257 = 0x101 needs 9 mantissa bits; bf16 rounds it.
+        assert_ne!(bf16_round(257.0), 257.0);
+        assert!(integer_exact_up_to(256));
+        assert!(!integer_exact_up_to(257));
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // halfway cases round to even mantissa
+        let x = f32::from_bits(0x3F80_8000); // 1.00390625: exactly halfway
+        let r = bf16_round(x);
+        assert!(r == 1.0 || r == f32::from_bits(0x3F81_0000));
+        assert_eq!(bf16_round(1.0), 1.0);
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sign_values_exact() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-1.0), -1.0);
+    }
+}

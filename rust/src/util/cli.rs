@@ -1,0 +1,120 @@
+//! Minimal CLI argument parser substrate (replaces clap — DESIGN.md
+//! §Substrates). Supports subcommands, `--flag`, `--key value`,
+//! `--key=value`, and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name). The first non-flag
+    /// token becomes the subcommand; later non-flag tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another flag
+                    let is_flag_next = iter
+                        .peek()
+                        .map(|n| n.starts_with("--"))
+                        .unwrap_or(true);
+                    if is_flag_next {
+                        out.flags.insert(stripped.to_string(), "true".to_string());
+                    } else {
+                        out.flags.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true" | "1" | "yes"))
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NOTE: `--flag value` binds greedily; boolean flags must use
+        // `--flag=true`, be last, or precede another --flag.
+        let a = parse("distill run1 --config tinyglue --steps=200 --verbose");
+        assert_eq!(a.command.as_deref(), Some("distill"));
+        assert_eq!(a.flag("config"), Some("tinyglue"));
+        assert_eq!(a.get_usize("steps", 0), 200);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["run1"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("x --dry-run --out path");
+        assert!(a.get_bool("dry-run"));
+        assert_eq!(a.flag("out"), Some("path"));
+    }
+
+    #[test]
+    fn trailing_boolean() {
+        let a = parse("x --force");
+        assert!(a.get_bool("force"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_str("missing", "d"), "d");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert!(!a.get_bool("missing"));
+    }
+}

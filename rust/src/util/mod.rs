@@ -1,0 +1,12 @@
+//! From-scratch substrates (the cargo registry is unreachable in this
+//! environment — see DESIGN.md §Substrates for the inventory and the
+//! crates each module replaces).
+
+pub mod bench;
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod quickcheck;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,187 @@
+//! Property-based testing substrate (replaces proptest — DESIGN.md
+//! §Substrates).
+//!
+//! A property runs against `cases` random inputs drawn from a generator;
+//! on failure it greedily shrinks the input via the generator's `shrink`
+//! before reporting the minimal counterexample. Coordinator invariants
+//! (routing, batching, state) are checked with this in rust/tests/.
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type T with an attached shrinker.
+pub struct Gen<T> {
+    pub sample: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        sample: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { sample: Box::new(sample), shrink: Box::new(shrink) }
+    }
+
+    /// Generator without shrinking.
+    pub fn opaque(sample: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen::new(sample, |_| Vec::new())
+    }
+
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + Clone + 'static) -> Gen<U> {
+        let sample = self.sample;
+        let f2 = f.clone();
+        Gen::new(move |r| f(sample(r)), move |_| {
+            let _ = &f2;
+            Vec::new()
+        })
+    }
+}
+
+/// usize in [lo, hi] shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(
+        move |r| r.range_usize(lo, hi + 1),
+        move |&v| {
+            // halving ladder toward lo: v-(v-lo), v-(v-lo)/2, ..., v-1
+            let mut out = Vec::new();
+            let mut delta = v.saturating_sub(lo);
+            while delta > 0 {
+                out.push(v - delta);
+                delta /= 2;
+            }
+            out.dedup();
+            out
+        },
+    )
+}
+
+/// f32 in [lo, hi) shrinking toward 0/lo.
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(
+        move |r| lo + (hi - lo) * r.next_f32(),
+        move |&v| {
+            let mut out = vec![lo, v / 2.0];
+            out.retain(|x| (*x - v).abs() > 1e-9 && *x >= lo && *x < hi);
+            out
+        },
+    )
+}
+
+/// Vec<f32> of length in [min_len, max_len] with normal(0,1) entries;
+/// shrinks by halving the length.
+pub fn normal_vec(min_len: usize, max_len: usize) -> Gen<Vec<f32>> {
+    Gen::new(
+        move |r| {
+            let n = r.range_usize(min_len, max_len + 1);
+            (0..n).map(|_| r.normal()).collect()
+        },
+        move |v: &Vec<f32>| {
+            let mut out = Vec::new();
+            if v.len() > min_len {
+                out.push(v[..(min_len.max(v.len() / 2))].to_vec());
+                let mut tail = v.clone();
+                tail.remove(0);
+                out.push(tail);
+            }
+            out
+        },
+    )
+}
+
+/// Pair combinator.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let (sa, sha) = (a.sample, a.shrink);
+    let (sb, shb) = (b.sample, b.shrink);
+    Gen::new(
+        move |r| (sa(r), sb(r)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> = sha(x).into_iter().map(|x2| (x2, y.clone())).collect();
+            out.extend(shb(y).into_iter().map(|y2| (x.clone(), y2)));
+            out
+        },
+    )
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0x5EED, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` against `cfg.cases` random inputs; panic with the minimal
+/// shrunk counterexample on failure.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    cfg: &Config,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = (gen.sample)(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink greedily
+        let mut cur = input;
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in (gen.shrink)(&cur) {
+                steps += 1;
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}/{}, seed {:#x}); minimal counterexample: {:?}",
+            cfg.cases, cfg.seed, cur
+        );
+    }
+}
+
+/// Shorthand with default config.
+pub fn quickcheck<T: Clone + std::fmt::Debug + 'static>(gen: &Gen<T>, prop: impl Fn(&T) -> bool) {
+    check(&Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quickcheck(&usize_in(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            quickcheck(&usize_in(0, 1000), |&x| x < 500);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal counterexample for x < 500 is exactly 500
+        assert!(msg.contains("500"), "{msg}");
+    }
+
+    #[test]
+    fn pair_generator() {
+        quickcheck(&pair(usize_in(1, 8), usize_in(1, 8)), |&(a, b)| a * b <= 64);
+    }
+
+    #[test]
+    fn vec_generator_lengths() {
+        quickcheck(&normal_vec(2, 16), |v| v.len() >= 2 && v.len() <= 16);
+    }
+}

@@ -1,0 +1,173 @@
+//! Thread-pool substrate (replaces tokio/rayon — DESIGN.md §Substrates).
+//!
+//! A fixed pool of workers over an mpsc channel, plus a scoped
+//! `parallel_for` used by the coordinator's worker pool and benches. On
+//! this single-core testbed parallelism buys little, but the coordinator's
+//! design (leader + N workers) is preserved faithfully and is exercised by
+//! the tests with >1 logical worker.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs run FIFO; `wait_idle` blocks until every
+/// submitted job has finished (the barrier used by tests and shutdown).
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize) -> Self {
+        let n = n_workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("had-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // A panicking job must not wedge wait_idle.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => return, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map over a slice: applies `f(index, &item)` on `pool`,
+/// collecting results in order. Results are produced via per-item slots so
+/// no unsafe and no result reordering.
+pub fn parallel_map<T, R, F>(pool: &ThreadPool, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + 'static,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let n_workers = pool.n_workers().min(items.len().max(1));
+        let slots = &slots;
+        let f = &f;
+        let next = &next;
+        for _ in 0..n_workers {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    return;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.submit(|| {});
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<usize> = (0..50).collect();
+        let out = parallel_map(&pool, &items, |i, &x| i * 1000 + x * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 1000 + i * 2);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = parallel_map(&pool, &[] as &[usize], |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

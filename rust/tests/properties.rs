@@ -1,0 +1,221 @@
+//! Property-based tests (util::quickcheck substrate) over the paper's
+//! core invariants and the coordinator's routing/batching/state logic.
+//! These need no artifacts and run everywhere.
+
+use had::binary::topn::{select_topn_counting, select_topn_heap};
+use had::binary::{had_attention, had_attention_ref, HadAttnConfig, PackedKv, PackedMat};
+use had::coordinator::{BatchPolicy, BucketQueue, Router};
+use had::tensor::Mat;
+use had::util::quickcheck::{check, pair, usize_in, Config, Gen};
+use had::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xC0FFEE, max_shrink_steps: 100 }
+}
+
+#[test]
+fn prop_hamming_identity_all_dims() {
+    // sign(q).sign(k) == d - 2*ham for every dimension, including ragged
+    let gen = pair(usize_in(1, 200), usize_in(0, 1 << 20));
+    check(&cfg(120), &gen, |&(d, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(d, 1.0);
+        let qp = PackedMat::pack(1, d, &q);
+        let kp = PackedMat::pack(1, d, &k);
+        let fast = had::binary::hamming::binary_dot(qp.row(0), kp.row(0), d);
+        let slow: i32 = (0..d)
+            .map(|i| {
+                let qs = if q[i] >= 0.0 { 1 } else { -1 };
+                let ks = if k[i] >= 0.0 { 1 } else { -1 };
+                qs * ks
+            })
+            .sum();
+        fast == slow
+    });
+}
+
+#[test]
+fn prop_topn_selection_agrees_across_algorithms() {
+    let gen = pair(usize_in(1, 300), pair(usize_in(1, 64), usize_in(0, 1 << 20)));
+    check(&cfg(150), &gen, |&(n, (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let scores: Vec<i32> = (0..n)
+            .map(|_| rng.below((2 * d + 1) as u64) as i32 - d as i32)
+            .collect();
+        let n_top = 1 + (seed % n);
+        select_topn_heap(&scores, n_top) == select_topn_counting(&scores, n_top, d)
+    });
+}
+
+#[test]
+fn prop_topn_output_invariants() {
+    // selected scores are >= every unselected score; indices unique
+    let gen = pair(usize_in(2, 200), usize_in(0, 1 << 20));
+    check(&cfg(100), &gen, |&(n, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let d = 32usize;
+        let scores: Vec<i32> = (0..n)
+            .map(|_| rng.below((2 * d + 1) as u64) as i32 - d as i32)
+            .collect();
+        let n_top = 1 + (seed % (n - 1));
+        let kept = select_topn_counting(&scores, n_top, d);
+        let mut kept_idx: Vec<usize> = kept.iter().map(|&(_, i)| i).collect();
+        kept_idx.sort_unstable();
+        kept_idx.dedup();
+        if kept_idx.len() != kept.len() {
+            return false;
+        }
+        let min_kept = kept.iter().map(|&(s, _)| s).min().unwrap();
+        scores
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !kept_idx.contains(i))
+            .all(|(_, &s)| s <= min_kept)
+    });
+}
+
+#[test]
+fn prop_attention_rows_are_convex_weights() {
+    // fused attention output stays inside the convex hull of V rows
+    let gen = pair(usize_in(4, 64), usize_in(0, 1 << 20));
+    check(&cfg(40), &gen, |&(n_k, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let (n_q, d, d_v) = (4usize, 32usize, 8usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        let n_top = 1 + seed % n_k;
+        let out = had_attention(&q, &kv, &HadAttnConfig { n_top, temp: 1.0 });
+        (0..d_v).all(|c| {
+            let vmin = (0..n_k).map(|r| v.at(r, c)).fold(f32::INFINITY, f32::min);
+            let vmax = (0..n_k).map(|r| v.at(r, c)).fold(f32::NEG_INFINITY, f32::max);
+            (0..n_q).all(|r| out.at(r, c) >= vmin - 1e-4 && out.at(r, c) <= vmax + 1e-4)
+        })
+    });
+}
+
+#[test]
+fn prop_fused_matches_oracle_randomized() {
+    let gen = pair(usize_in(1, 48), pair(usize_in(2, 96), usize_in(0, 1 << 20)));
+    check(&cfg(30), &gen, |&(n_q, (n_k, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (d, d_v) = (48usize, 16usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let c = HadAttnConfig { n_top: 1 + seed % n_k, temp: 0.8 };
+        let kv = PackedKv::new(&k, &v);
+        had_attention(&q, &kv, &c).max_abs_diff(&had_attention_ref(&q, &k, &v, &c)) < 1e-4
+    });
+}
+
+#[test]
+fn prop_router_minimality_and_totality() {
+    let router = Router::longqa_default();
+    check(&cfg(200), &usize_in(1, 2048), |&len| {
+        match router.route(len) {
+            Ok(b) => {
+                b.n_ctx >= len
+                    && router
+                        .buckets()
+                        .iter()
+                        .all(|c| c.n_ctx < len || c.n_ctx >= b.n_ctx)
+            }
+            Err(_) => len > router.max_ctx(),
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_capacity_or_loses_requests() {
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+    let gen = pair(usize_in(1, 64), usize_in(1, 32));
+    check(&cfg(80), &gen, |&(n_reqs, cap)| {
+        let bucket = had::coordinator::Bucket {
+            config: "longqa_128".into(),
+            n_ctx: 128,
+            batch: 8,
+        };
+        let mut q = BucketQueue::new(
+            bucket,
+            BatchPolicy { queue_cap: cap, ..Default::default() },
+        );
+        let mut admitted = 0usize;
+        let mut rejected = 0usize;
+        for i in 0..n_reqs {
+            let (tx, _rx) = channel();
+            let req = had::coordinator::Request {
+                id: i as u64,
+                tokens: vec![1; 64],
+                arrival: Instant::now(),
+                reply: tx,
+            };
+            if q.len() >= cap {
+                // must reject at capacity
+                if q.push(req).is_ok() {
+                    return false;
+                }
+                rejected += 1;
+            } else if q.push(req).is_ok() {
+                admitted += 1;
+            } else {
+                return false; // rejected below capacity
+            }
+        }
+        // drain everything back out, in FIFO batches of <= bucket.batch
+        let mut drained = 0usize;
+        let mut last_id = None::<u64>;
+        while !q.is_empty() {
+            let batch = q.drain_batch();
+            if batch.is_empty() || batch.len() > 8 {
+                return false;
+            }
+            for r in &batch {
+                if let Some(prev) = last_id {
+                    if r.id <= prev {
+                        return false; // FIFO violated
+                    }
+                }
+                last_id = Some(r.id);
+            }
+            drained += batch.len();
+        }
+        admitted == drained && admitted + rejected == n_reqs
+    });
+}
+
+#[test]
+fn prop_packed_bytes_32x_reduction() {
+    check(&cfg(60), &pair(usize_in(1, 128), usize_in(32, 256)), |&(rows, d)| {
+        let mut rng = Rng::new((rows * 1000 + d) as u64);
+        let xs = rng.normal_vec(rows * d, 1.0);
+        let p = PackedMat::pack(rows, d, &xs);
+        // packed size is within one word/row of f32/32
+        p.bytes() <= rows * (d.div_ceil(64)) * 8 && p.bytes() * 8 >= rows * d / 8
+    });
+}
+
+#[test]
+fn prop_schedule_c_monotone_nonincreasing() {
+    use had::distill::{Budget, Schedule};
+    let gen = pair(usize_in(2, 500), usize_in(2, 500));
+    check(&cfg(50), &gen, |&(s1, s2)| {
+        let s = Schedule::new(
+            Budget { teacher: 0, stage1: s1, stage2: s2, stage3: 10, stage4: 10 },
+            1e-4,
+        );
+        let total = s.budget.total_distill();
+        let mut prev = f32::INFINITY;
+        for step in 0..total {
+            let c = s.c_at(step);
+            if c > prev + 1e-5 || !(0.0..=5.0 + 1e-6).contains(&c) {
+                return false;
+            }
+            prev = c;
+        }
+        true
+    });
+}

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Render results/*.jsonl into the markdown tables EXPERIMENTS.md embeds.
+
+Usage: python3 scripts/summarize_results.py [results_dir]
+"""
+
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+RES = Path(sys.argv[1] if len(sys.argv) > 1 else "results")
+
+METHODS = ["Baseline", "HAD (ours)", "BiT", "w/ SAB", "w/o AD", "w/o Tanh"]
+
+
+def rows(name):
+    path = RES / f"{name}.jsonl"
+    if not path.exists():
+        return []
+    return [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
+
+
+def table1():
+    recs = rows("table1")
+    if not recs:
+        return
+    by_task = defaultdict(dict)
+    for r in recs:
+        by_task[r["task"]][r["method"]] = r["value"]  # last write wins
+    print("\n### Table 1 (measured)\n")
+    print("| Task | " + " | ".join(METHODS) + " |")
+    print("|" + "---|" * (len(METHODS) + 1))
+    sums = defaultdict(float)
+    n = 0
+    for task, vals in by_task.items():
+        cells = [f"{vals.get(m, float('nan')):.2f}" for m in METHODS]
+        print(f"| {task} | " + " | ".join(cells) + " |")
+        for m in METHODS:
+            sums[m] += vals.get(m, 0.0)
+        n += 1
+    if n:
+        print("| **Avg** | " + " | ".join(f"{sums[m]/n:.2f}" for m in METHODS) + " |")
+
+
+def table2():
+    recs = rows("table2")
+    if not recs:
+        return
+    by_cfg = defaultdict(dict)
+    for r in recs:
+        by_cfg[r["config"]][r["method"]] = r["accuracy"]
+    print("\n### Table 2 (measured)\n")
+    cfgs = list(by_cfg)
+    print("| Method | " + " | ".join(cfgs) + " |")
+    print("|" + "---|" * (len(cfgs) + 1))
+    for m in METHODS:
+        cells = [f"{by_cfg[c].get(m, float('nan')):.2f}" for c in cfgs]
+        print(f"| {m} | " + " | ".join(cells) + " |")
+
+
+def fig(name, cols):
+    recs = rows(name)
+    if not recs:
+        return
+    print(f"\n### {name} (measured)\n")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in recs:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            if isinstance(v, float):
+                cells.append(f"{v:.3f}")
+            elif isinstance(v, list):
+                cells.append("/".join(f"{x:.3f}" for x in v))
+            else:
+                cells.append(str(v))
+        print("| " + " | ".join(cells) + " |")
+
+
+if __name__ == "__main__":
+    table1()
+    table2()
+    fig("fig1", ["n_ctx", "full_ms", "noattn_ms", "had_ms", "attn_share"])
+    fig("fig3", ["n_top", "accuracy"])
+    fig("fig4", ["n", "fractions"])
+    fig("fig5", ["n_ctx", "n_top", "baseline", "had"])
+    t3 = rows("table3")
+    if t3:
+        r = t3[-1]
+        print("\n### table3 (measured)\n")
+        print(
+            f"SA {r['sa_area_mm2']:.3f} mm² / {r['sa_power_w']:.3f} W ; "
+            f"HAD {r['had_area_mm2']:.3f} mm² / {r['had_power_w']:.3f} W ; "
+            f"reductions {100*(1-r['had_area_mm2']/r['sa_area_mm2']):.1f}% area, "
+            f"{100*(1-r['had_power_w']/r['sa_power_w']):.1f}% power"
+        )
