@@ -5,15 +5,16 @@
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
-use had::coordinator::{assemble_padded, BatchPolicy, BucketQueue, Router};
+use had::coordinator::{assemble_padded, BatchPolicy, BucketQueue, Router, SessionStore};
 use had::coordinator::request::Request;
+use had::kvcache::KvCacheConfig;
 use had::util::bench::Bencher;
 use had::util::rng::Rng;
 
 fn mk_request(id: u64, len: usize) -> Request {
     let (tx, rx) = channel();
     std::mem::forget(rx); // keep the channel alive for the bench
-    Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx }
+    Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx, session: None }
 }
 
 fn main() {
@@ -79,4 +80,39 @@ fn main() {
         admitted
     });
     s.print_throughput(256.0, "req");
+
+    // session admission: incremental packing of multi-turn traffic.
+    // 16 sessions x 8 turns x 32 tokens; after the first turn every
+    // admission reuses the resident pages (warm suffix packing only).
+    let s = b.run("coordinator/session admit 16x8 turns", || {
+        let mut store = SessionStore::new(KvCacheConfig::default(), 64, 64, 7);
+        let mut packed = 0usize;
+        for turn in 0..8 {
+            for sid in 0..16u64 {
+                let tokens: Vec<i32> = (0..32).map(|t| (sid as i32 * 37 + turn * 13 + t) % 256).collect();
+                let info = store.admit(sid, &tokens);
+                packed += info.appended_tokens;
+            }
+        }
+        packed
+    });
+    s.print_throughput((16 * 8) as f64, "admit");
+
+    // steady-state cache accounting over one long-lived store
+    let mut store = SessionStore::new(KvCacheConfig::default(), 64, 64, 9);
+    for turn in 0..20i32 {
+        for sid in 0..8u64 {
+            let tokens: Vec<i32> = (0..16).map(|t| (turn * 16 + t) % 256).collect();
+            store.admit(sid, &tokens);
+        }
+    }
+    let stats = store.pool().stats();
+    println!(
+        "coordinator/session cache: {} hits {} misses ({:.1}% hit rate), {} evictions, {} KiB resident",
+        stats.hits,
+        stats.misses,
+        100.0 * stats.hit_rate(),
+        stats.evictions,
+        store.pool().bytes() / 1024,
+    );
 }

@@ -1,0 +1,146 @@
+//! Bench: packed-KV residency — the serving claim behind the kvcache
+//! subsystem. Compares COLD full-prefill (rebuild every page, what a
+//! stateless coordinator does per request) against WARM incremental
+//! append (session pages resident, pack only this turn's tokens) across
+//! context lengths, plus page-pool hit/miss accounting under skewed
+//! multi-session traffic.
+//!
+//! Appends machine-readable records to results/kvcache.jsonl for
+//! scripts/summarize_results.py (warm-vs-cold p50/p99 and hit rate).
+
+use had::binary::attention::{had_attention_paged_with, Scratch};
+use had::binary::HadAttnConfig;
+use had::kvcache::{KvCacheConfig, PagePool, SessionKv};
+use had::tensor::Mat;
+use had::util::bench::{Bencher, Stats};
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+fn latency_record(mode: &str, n_ctx: usize, s: &Stats) -> Json {
+    let us = |d: std::time::Duration| d.as_nanos() as f64 / 1e3;
+    Json::obj(vec![
+        ("kind", Json::str("latency")),
+        ("mode", Json::str(mode)),
+        ("n_ctx", Json::num(n_ctx as f64)),
+        ("p50_us", Json::num(us(s.p50))),
+        ("p99_us", Json::num(us(s.p99))),
+        ("mean_us", Json::num(us(s.mean))),
+    ])
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(17);
+    let (d, d_v, n_q, turn, page_tokens) = (64usize, 64usize, 16usize, 16usize, 64usize);
+    let mut records: Vec<Json> = Vec::new();
+
+    println!("== paged KV cache: cold full-prefill vs warm incremental append ==");
+    let mut longest: Option<(Stats, Stats)> = None;
+    for n_ctx in [512usize, 2048, 8192] {
+        let k = Mat::random(n_ctx, d, &mut rng, 1.0);
+        let v = Mat::random(n_ctx, d_v, &mut rng, 1.0);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let cfg = HadAttnConfig { n_top: (30 * n_ctx / 256).max(1), temp: 1.0 };
+        let mut scratch = Scratch::default();
+
+        // cold: rebuild the whole session, then attend
+        let s_cold = b.run(&format!("kvcache/cold prefill+attend n_ctx={n_ctx}"), || {
+            let mut kv = SessionKv::new(d, d_v, page_tokens);
+            kv.append(&k, &v);
+            had_attention_paged_with(&q, &kv, &cfg, &mut scratch)
+        });
+
+        // warm: resident session, pack only the final `turn` tokens
+        let base = n_ctx - turn;
+        let turn_k = Mat::from_vec(turn, d, k.data[base * d..].to_vec());
+        let turn_v = Mat::from_vec(turn, d_v, v.data[base * d_v..].to_vec());
+        let mut warm = SessionKv::new(d, d_v, page_tokens);
+        warm.append(&k, &v);
+        let s_warm = b.run(&format!("kvcache/warm append+attend  n_ctx={n_ctx}"), || {
+            warm.truncate(base);
+            warm.append(&turn_k, &turn_v);
+            had_attention_paged_with(&q, &warm, &cfg, &mut scratch)
+        });
+
+        s_cold.print();
+        s_warm.print();
+        println!(
+            "  -> warm incremental speedup {:.2}x (prefill work: {n_ctx} vs {turn} tokens)",
+            s_cold.mean_ns() / s_warm.mean_ns()
+        );
+        records.push(latency_record("cold", n_ctx, &s_cold));
+        records.push(latency_record("warm", n_ctx, &s_warm));
+        longest = Some((s_cold.clone(), s_warm.clone()));
+    }
+    // the acceptance gate: on the longest context, warm must win
+    let (cold, warm) = longest.expect("at least one context bucket");
+    assert!(
+        warm.mean < cold.mean,
+        "warm incremental append must beat cold full prefill on the longest context"
+    );
+
+    println!("\n== page-pool residency under skewed multi-turn traffic ==");
+    // 2 hot sessions speak every turn; 8 one-shot cold sessions pass
+    // through. The budget holds two full hot sessions only: cold sessions
+    // get evicted (LRU), hot ones stay resident and keep hitting.
+    let full_turns = 8usize;
+    let per_turn = page_tokens; // one page per turn
+    let page_payload = KvCacheConfig::default().page_payload_bytes(d, d_v);
+    let pool_cfg = KvCacheConfig {
+        page_tokens,
+        byte_budget: 2 * full_turns * page_payload,
+    };
+    let mut pool = PagePool::new(pool_cfg);
+    let mk = |rng: &mut Rng| {
+        (Mat::random(per_turn, d, rng, 1.0), Mat::random(per_turn, d_v, rng, 1.0))
+    };
+    for t in 0..full_turns as u64 {
+        // hot sessions 0 and 1 speak every turn and stay resident
+        for id in 0..2u64 {
+            let (k, v) = mk(&mut rng);
+            pool.append(id, &k, &v);
+        }
+        // a different cold session appears each turn and is evicted later
+        let (k, v) = mk(&mut rng);
+        pool.append(100 + t, &k, &v);
+    }
+    let stats = pool.stats();
+    println!(
+        "pool: {} sessions resident, {} KiB / {} KiB budget | {} hits {} misses ({:.1}% hit) | {} evictions ({} KiB freed)",
+        pool.len(),
+        pool.bytes() / 1024,
+        pool.budget() / 1024,
+        stats.hits,
+        stats.misses,
+        100.0 * stats.hit_rate(),
+        stats.evictions,
+        stats.evicted_bytes / 1024,
+    );
+    records.push(Json::obj(vec![
+        ("kind", Json::str("pool")),
+        ("hits", Json::num(stats.hits as f64)),
+        ("misses", Json::num(stats.misses as f64)),
+        ("hit_rate", Json::num(stats.hit_rate())),
+        ("evictions", Json::num(stats.evictions as f64)),
+        ("resident_bytes", Json::num(pool.bytes() as f64)),
+    ]));
+
+    // persist for scripts/summarize_results.py
+    if let Err(e) = write_records(&records) {
+        eprintln!("could not write results/kvcache.jsonl: {e}");
+    }
+    println!("\nkvcache bench OK");
+}
+
+fn write_records(records: &[Json]) -> std::io::Result<()> {
+    use std::io::Write;
+    std::fs::create_dir_all("results")?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("results/kvcache.jsonl")?;
+    for r in records {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}

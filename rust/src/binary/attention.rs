@@ -11,6 +11,7 @@
 use crate::binary::bitpack::PackedMat;
 use crate::binary::hamming;
 use crate::binary::topn::select_topn_counting;
+use crate::kvcache::SessionKv;
 use crate::tensor::{ops, Mat};
 
 /// Configuration of one attention head computation.
@@ -39,16 +40,25 @@ pub struct PackedKv {
 
 impl PackedKv {
     pub fn new(k: &Mat, v: &Mat) -> PackedKv {
+        PackedKv::from_parts(k, v.clone())
+    }
+
+    /// Like `new` but takes ownership of V — callers that own their value
+    /// matrix (cache builders, benches) skip the clone.
+    pub fn from_parts(k: &Mat, v: Mat) -> PackedKv {
         assert_eq!(k.rows, v.rows, "K/V length mismatch");
-        PackedKv { keys: PackedMat::pack(k.rows, k.cols, &k.data), values: v.clone() }
+        PackedKv { keys: PackedMat::pack(k.rows, k.cols, &k.data), values: v }
     }
 }
 
-/// Scratch buffers reused across calls (allocation-free hot loop — §Perf).
+/// Scratch buffers reused across calls (allocation-free hot loop — §Perf):
+/// integer scores, softmax probabilities, and the packed-query buffer
+/// (query packing re-binarizes per call but reuses this allocation).
 #[derive(Default)]
 pub struct Scratch {
     scores: Vec<i32>,
     probs: Vec<f32>,
+    qp: PackedMat,
 }
 
 /// Full HAD attention for a block of queries against one PackedKv.
@@ -71,21 +81,22 @@ pub fn had_attention_with(
     let n_top = cfg.n_top.clamp(1, n_k);
     let scale = cfg.temp / (d as f32).sqrt();
 
-    let qp = PackedMat::pack(q.rows, d, &q.data);
-    scratch.scores.resize(n_k, 0);
-    scratch.probs.resize(n_top, 0.0);
+    let Scratch { scores, probs, qp } = scratch;
+    qp.pack_into(q.rows, d, &q.data);
+    scores.resize(n_k, 0);
+    probs.resize(n_top, 0.0);
 
     let mut out = Mat::zeros(q.rows, d_v);
     for i in 0..q.rows {
         // 1) binary scores via XNOR-popcount (Eqs. 4-5)
         let qrow = qp.row(i);
-        for (j, s) in scratch.scores.iter_mut().enumerate() {
+        for (j, s) in scores.iter_mut().enumerate() {
             *s = hamming::binary_dot(qrow, kv.keys.row(j), d);
         }
         // 2) top-N selection (Eq. 6)
-        let kept = select_topn_counting(&scratch.scores, n_top, d);
+        let kept = select_topn_counting(scores, n_top, d);
         // 3) softmax over kept logits only (Eq. 7)
-        let probs = &mut scratch.probs[..kept.len()];
+        let probs = &mut probs[..kept.len()];
         let max = kept[0].0 as f32 * scale; // kept is sorted descending
         let mut sum = 0.0f32;
         for (p, &(s, _)) in probs.iter_mut().zip(&kept) {
@@ -98,6 +109,70 @@ pub fn had_attention_with(
         for (&p, &(_, j)) in probs.iter().zip(&kept) {
             let w = p * inv;
             let vrow = kv.values.row(j);
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+    out
+}
+
+/// Full HAD attention for a block of queries against a paged session
+/// cache, scoring XNOR-popcount directly over the non-contiguous pages
+/// without gathering them. Arithmetic, selection, and accumulation order
+/// are identical to `had_attention`, so outputs match bit-for-bit.
+pub fn had_attention_paged(q: &Mat, kv: &SessionKv, cfg: &HadAttnConfig) -> Mat {
+    let mut scratch = Scratch::default();
+    had_attention_paged_with(q, kv, cfg, &mut scratch)
+}
+
+pub fn had_attention_paged_with(
+    q: &Mat,
+    kv: &SessionKv,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+) -> Mat {
+    let d = q.cols;
+    assert_eq!(d, kv.d(), "query/key dim mismatch");
+    let n_k = kv.len();
+    assert!(n_k > 0, "attention over an empty session");
+    let d_v = kv.d_v();
+    let n_top = cfg.n_top.clamp(1, n_k);
+    let scale = cfg.temp / (d as f32).sqrt();
+
+    let Scratch { scores, probs, qp } = scratch;
+    qp.pack_into(q.rows, d, &q.data);
+    scores.resize(n_k, 0);
+    probs.resize(n_top, 0.0);
+
+    let mut out = Mat::zeros(q.rows, d_v);
+    for i in 0..q.rows {
+        // 1) binary scores, page by page (global key index = page base + j)
+        let qrow = qp.row(i);
+        let mut base = 0usize;
+        for page in kv.pages() {
+            let prow = &mut scores[base..base + page.len()];
+            for (j, s) in prow.iter_mut().enumerate() {
+                *s = hamming::binary_dot(qrow, page.key(j), d);
+            }
+            base += page.len();
+        }
+        // 2) top-N selection over the full score row
+        let kept = select_topn_counting(scores, n_top, d);
+        // 3) sparse softmax
+        let probs = &mut probs[..kept.len()];
+        let max = kept[0].0 as f32 * scale;
+        let mut sum = 0.0f32;
+        for (p, &(s, _)) in probs.iter_mut().zip(&kept) {
+            *p = (s as f32 * scale - max).exp();
+            sum += *p;
+        }
+        let inv = 1.0 / sum;
+        // 4) sparse AV accumulation; value rows resolved through the pages
+        let orow = out.row_mut(i);
+        for (&p, &(_, j)) in probs.iter().zip(&kept) {
+            let w = p * inv;
+            let vrow = kv.value(j);
             for (o, &v) in orow.iter_mut().zip(vrow) {
                 *o += w * v;
             }
@@ -197,6 +272,63 @@ mod tests {
     }
 
     #[test]
+    fn paged_matches_contiguous_bit_for_bit() {
+        let mut rng = Rng::new(7);
+        // page sizes that divide, straddle, and exceed n_k; ragged dims
+        for (n_k, d, page_tokens) in
+            [(32usize, 64usize, 8usize), (33, 65, 8), (100, 96, 7), (5, 16, 64)]
+        {
+            let (n_q, d_v) = (6, 8);
+            let q = rand_mat(&mut rng, n_q, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, d_v);
+            let cfg = HadAttnConfig { n_top: 9, temp: 1.0 };
+            let kv = PackedKv::new(&k, &v);
+            let mut paged = SessionKv::new(d, d_v, page_tokens);
+            paged.append(&k, &v);
+            let a = had_attention(&q, &kv, &cfg);
+            let b = had_attention_paged(&q, &paged, &cfg);
+            assert_eq!(a, b, "n_k={n_k} d={d} page={page_tokens}");
+            let want = had_attention_ref(&q, &k, &v, &cfg);
+            assert!(b.max_abs_diff(&want) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn paged_incremental_append_matches_full_prefill() {
+        let mut rng = Rng::new(8);
+        let (n_k, d, d_v) = (50usize, 48, 16);
+        let k = rand_mat(&mut rng, n_k, d);
+        let v = rand_mat(&mut rng, n_k, d_v);
+        let q = rand_mat(&mut rng, 3, d);
+        let cfg = HadAttnConfig { n_top: 12, temp: 0.7 };
+        let mut cold = SessionKv::new(d, d_v, 16);
+        cold.append(&k, &v);
+        // warm: same tokens arriving over four uneven turns
+        let mut warm = SessionKv::new(d, d_v, 16);
+        let chunk = |m: &Mat, lo: usize, hi: usize| {
+            Mat::from_vec(hi - lo, m.cols, m.data[lo * m.cols..hi * m.cols].to_vec())
+        };
+        for (lo, hi) in [(0usize, 20usize), (20, 21), (21, 37), (37, 50)] {
+            warm.append(&chunk(&k, lo, hi), &chunk(&v, lo, hi));
+        }
+        let a = had_attention_paged(&q, &cold, &cfg);
+        let b = had_attention_paged(&q, &warm, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_parts_equals_new() {
+        let mut rng = Rng::new(9);
+        let k = rand_mat(&mut rng, 16, 32);
+        let v = rand_mat(&mut rng, 16, 8);
+        let a = PackedKv::new(&k, &v);
+        let b = PackedKv::from_parts(&k, v.clone());
+        assert_eq!(a.keys, b.keys);
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
     fn scratch_reuse_identical_results() {
         let mut rng = Rng::new(4);
         let q = rand_mat(&mut rng, 4, 32);
@@ -208,5 +340,10 @@ mod tests {
         let a = had_attention_with(&q, &kv, &cfg, &mut scratch);
         let b = had_attention_with(&q, &kv, &cfg, &mut scratch);
         assert_eq!(a, b);
+        // the same scratch serves paged calls of different geometry
+        let mut paged = SessionKv::new(32, 8, 5);
+        paged.append(&k, &v);
+        let c = had_attention_paged_with(&q, &paged, &cfg, &mut scratch);
+        assert_eq!(a, c);
     }
 }

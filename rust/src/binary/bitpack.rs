@@ -44,16 +44,35 @@ pub struct PackedMat {
     pub data: Vec<u64>,
 }
 
+impl Default for PackedMat {
+    /// Empty matrix; useful as a reusable pack buffer (see `pack_into`).
+    fn default() -> Self {
+        PackedMat { rows: 0, d: 0, words_per_row: 0, data: Vec::new() }
+    }
+}
+
 impl PackedMat {
     /// Pack a row-major f32 matrix (rows x d).
     pub fn pack(rows: usize, d: usize, data: &[f32]) -> PackedMat {
+        let mut out = PackedMat::default();
+        out.pack_into(rows, d, data);
+        out
+    }
+
+    /// Re-pack in place, reusing this matrix's allocation (the hot-path
+    /// variant: per-call query packing in attention allocates nothing
+    /// once the scratch buffer has warmed up).
+    pub fn pack_into(&mut self, rows: usize, d: usize, data: &[f32]) {
         assert_eq!(data.len(), rows * d);
         let wpr = words_for(d);
-        let mut out = vec![0u64; rows * wpr];
+        self.rows = rows;
+        self.d = d;
+        self.words_per_row = wpr;
+        self.data.clear();
+        self.data.resize(rows * wpr, 0);
         for r in 0..rows {
-            pack_vector(&data[r * d..(r + 1) * d], &mut out[r * wpr..(r + 1) * wpr]);
+            pack_vector(&data[r * d..(r + 1) * d], &mut self.data[r * wpr..(r + 1) * wpr]);
         }
-        PackedMat { rows, d, words_per_row: wpr, data: out }
     }
 
     #[inline]
@@ -122,6 +141,21 @@ mod tests {
         let w = p.row(0)[0];
         assert_eq!(w & 0x3FF, 0, "data bits all negative");
         assert_eq!(w >> 10, !0u64 >> 10, "pad bits all ones");
+    }
+
+    #[test]
+    fn pack_into_reuses_buffer_and_matches_pack() {
+        let mut rng = Rng::new(9);
+        let mut buf = PackedMat::default();
+        for (rows, d) in [(4usize, 100usize), (2, 64), (7, 33)] {
+            let x = rng.normal_vec(rows * d, 1.0);
+            buf.pack_into(rows, d, &x);
+            assert_eq!(buf, PackedMat::pack(rows, d, &x), "rows={rows} d={d}");
+        }
+        // shrinking re-pack keeps capacity but not stale contents
+        let x = rng.normal_vec(3, 1.0);
+        buf.pack_into(1, 3, &x);
+        assert_eq!(buf.data.len(), 1);
     }
 
     #[test]

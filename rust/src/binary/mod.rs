@@ -10,5 +10,8 @@ pub mod bitpack;
 pub mod hamming;
 pub mod topn;
 
-pub use attention::{had_attention, had_attention_ref, standard_attention_ref, HadAttnConfig, PackedKv};
+pub use attention::{
+    had_attention, had_attention_paged, had_attention_ref, standard_attention_ref,
+    HadAttnConfig, PackedKv,
+};
 pub use bitpack::PackedMat;

@@ -130,7 +130,7 @@ mod tests {
 
     fn req(id: u64, len: usize) -> Request {
         let (tx, _rx) = channel();
-        Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx }
+        Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx, session: None }
     }
 
     fn bucket() -> Bucket {

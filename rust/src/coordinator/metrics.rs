@@ -11,6 +11,13 @@ struct Inner {
     rejected: u64,
     occupancy_sum: u64,
     started: Option<Instant>,
+    // KV-cache session counters (token granularity)
+    cache_hit_tokens: u64,
+    cache_miss_tokens: u64,
+    session_requests: u64,
+    // absolute pool gauges, refreshed at each session admission
+    cache_bytes: u64,
+    cache_evictions: u64,
 }
 
 /// Thread-safe metrics sink shared by batcher and server threads.
@@ -30,6 +37,18 @@ pub struct Snapshot {
     pub mean_us: f64,
     pub mean_occupancy: f64,
     pub throughput_rps: f64,
+    /// requests admitted through the session path
+    pub session_requests: u64,
+    /// tokens served from resident KV pages across all session admissions
+    pub cache_hit_tokens: u64,
+    /// tokens packed cold at admission
+    pub cache_miss_tokens: u64,
+    /// hit_tokens / (hit_tokens + miss_tokens); 0 with no session traffic
+    pub cache_hit_rate: f64,
+    /// resident pool bytes at the last admission
+    pub cache_bytes: u64,
+    /// cumulative pool evictions at the last admission
+    pub cache_evictions: u64,
 }
 
 impl Metrics {
@@ -46,6 +65,22 @@ impl Metrics {
 
     pub fn record_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One session admission: `hit_tokens` were already resident,
+    /// `miss_tokens` were packed cold this turn.
+    pub fn record_session(&self, hit_tokens: usize, miss_tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.session_requests += 1;
+        g.cache_hit_tokens += hit_tokens as u64;
+        g.cache_miss_tokens += miss_tokens as u64;
+    }
+
+    /// Refresh the pool gauges (absolute values, taken after admission).
+    pub fn update_cache_pool(&self, bytes: usize, evictions: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.cache_bytes = bytes as u64;
+        g.cache_evictions = evictions;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -78,6 +113,19 @@ impl Metrics {
                 g.occupancy_sum as f64 / g.batches as f64
             },
             throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+            session_requests: g.session_requests,
+            cache_hit_tokens: g.cache_hit_tokens,
+            cache_miss_tokens: g.cache_miss_tokens,
+            cache_hit_rate: {
+                let total = g.cache_hit_tokens + g.cache_miss_tokens;
+                if total == 0 {
+                    0.0
+                } else {
+                    g.cache_hit_tokens as f64 / total as f64
+                }
+            },
+            cache_bytes: g.cache_bytes,
+            cache_evictions: g.cache_evictions,
         }
     }
 }
@@ -96,6 +144,17 @@ impl Snapshot {
             self.mean_us / 1e3,
             self.throughput_rps,
         );
+        if self.session_requests > 0 {
+            println!(
+                "{label}: kv-cache: {} session reqs | {} hit / {} miss tokens ({:.1}% hit) | {} KiB resident, {} evictions",
+                self.session_requests,
+                self.cache_hit_tokens,
+                self.cache_miss_tokens,
+                100.0 * self.cache_hit_rate,
+                self.cache_bytes / 1024,
+                self.cache_evictions,
+            );
+        }
     }
 }
 
@@ -132,5 +191,22 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_us, 0);
+        assert_eq!(s.cache_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn cache_counters() {
+        let m = Metrics::default();
+        m.record_session(0, 128); // cold first turn
+        m.record_session(128, 16); // warm follow-up
+        m.record_session(144, 16);
+        m.update_cache_pool(4096, 1);
+        let s = m.snapshot();
+        assert_eq!(s.session_requests, 3);
+        assert_eq!(s.cache_hit_tokens, 272);
+        assert_eq!(s.cache_miss_tokens, 160);
+        let want = 272.0 / (272.0 + 160.0);
+        assert!((s.cache_hit_rate - want).abs() < 1e-12);
+        assert_eq!((s.cache_bytes, s.cache_evictions), (4096, 1));
     }
 }

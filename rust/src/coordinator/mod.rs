@@ -10,6 +10,6 @@ pub mod server;
 
 pub use batcher::{assemble_padded, BatchPolicy, BucketQueue};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{RejectReason, Request, Response};
+pub use request::{RejectReason, Request, Response, SessionInfo};
 pub use router::{Bucket, Router};
-pub use server::{Server, ServingModel};
+pub use server::{Server, ServingModel, SessionStore};

@@ -3,6 +3,18 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+/// Session context attached to a multi-turn request admitted through
+/// `Server::submit_session`: identifies the KV-cache session and records
+/// how much of the sequence was already resident at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionInfo {
+    pub id: u64,
+    /// tokens whose packed pages were already resident (reused work)
+    pub cached_tokens: usize,
+    /// tokens newly packed at admission (this turn's work)
+    pub appended_tokens: usize,
+}
+
 /// A classification request over a token sequence (the paper's motivating
 /// workload: long-context QA served at batch).
 #[derive(Debug)]
@@ -11,6 +23,8 @@ pub struct Request {
     pub tokens: Vec<i32>,
     pub arrival: Instant,
     pub reply: Sender<Response>,
+    /// Present when admitted via the session path.
+    pub session: Option<SessionInfo>,
 }
 
 #[derive(Clone, Debug)]
@@ -26,6 +40,8 @@ pub struct Response {
     pub latency_us: u128,
     /// how many real requests shared the executed batch
     pub batch_occupancy: usize,
+    /// tokens served from resident KV pages (0 for sessionless requests)
+    pub cached_tokens: usize,
 }
 
 /// Why a request was rejected.

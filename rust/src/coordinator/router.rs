@@ -45,10 +45,42 @@ impl Router {
 
     /// Smallest bucket with n_ctx >= len.
     pub fn route(&self, len: usize) -> Result<&Bucket, RejectReason> {
+        self.route_idx(len).map(|i| &self.buckets[i])
+    }
+
+    /// Index of the smallest fitting bucket (the queue index the server
+    /// admits into).
+    pub fn route_idx(&self, len: usize) -> Result<usize, RejectReason> {
         self.buckets
             .iter()
-            .find(|b| b.n_ctx >= len)
+            .position(|b| b.n_ctx >= len)
             .ok_or(RejectReason::TooLong)
+    }
+
+    /// Session-aware admission: a multi-turn request executes over its
+    /// full resident sequence (cached prefix + appended suffix), so it is
+    /// routed by the TOTAL length even though only the suffix is new
+    /// work. Overflow-checked so a hostile `cached + appended` cannot
+    /// wrap into a small bucket.
+    pub fn route_session(
+        &self,
+        cached_tokens: usize,
+        appended_tokens: usize,
+    ) -> Result<&Bucket, RejectReason> {
+        self.route_session_idx(cached_tokens, appended_tokens)
+            .map(|i| &self.buckets[i])
+    }
+
+    /// Index form of `route_session` (what `Server::submit_session` uses).
+    pub fn route_session_idx(
+        &self,
+        cached_tokens: usize,
+        appended_tokens: usize,
+    ) -> Result<usize, RejectReason> {
+        let total = cached_tokens
+            .checked_add(appended_tokens)
+            .ok_or(RejectReason::TooLong)?;
+        self.route_idx(total)
     }
 
     pub fn max_ctx(&self) -> usize {
@@ -86,6 +118,16 @@ mod tests {
                 .all(|c| c.n_ctx >= b.n_ctx);
             fits && minimal
         });
+    }
+
+    #[test]
+    fn session_routing_uses_total_length() {
+        let r = Router::longqa_default();
+        // 120 cached + 20 appended = 140 total -> 256 bucket, not 128
+        assert_eq!(r.route_session(120, 20).unwrap().n_ctx, 256);
+        assert_eq!(r.route_session(0, 128).unwrap().n_ctx, 128);
+        assert_eq!(r.route_session(1024, 1).unwrap_err(), RejectReason::TooLong);
+        assert_eq!(r.route_session(usize::MAX, 2).unwrap_err(), RejectReason::TooLong);
     }
 
     #[test]

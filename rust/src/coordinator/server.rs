@@ -9,6 +9,7 @@
 //! Backpressure: bounded per-bucket admission queues; `submit` rejects
 //! with `QueueFull` rather than queueing unboundedly.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
@@ -18,13 +19,15 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{RejectReason, Request, Response};
+use crate::coordinator::request::{RejectReason, Request, Response, SessionInfo};
 use crate::coordinator::router::Router;
+use crate::kvcache::{CacheStats, KvCacheConfig, PagePool, SessionKv};
 use crate::log_info;
 use crate::log_warn;
 use crate::model::Checkpoint;
 use crate::runtime::{EngineHandle, HostTensor, Manifest};
 use crate::tensor::ops::argmax;
+use crate::tensor::Mat;
 
 /// Weights + calibration served for one bucket.
 #[derive(Clone)]
@@ -69,6 +72,126 @@ impl ServingModel {
     }
 }
 
+/// Token vocabulary of the session featurizer (matches `data`'s configs).
+pub const SESSION_VOCAB: usize = 256;
+/// Head geometry of the admission-side packed KV pages.
+pub const SESSION_KEY_DIM: usize = 64;
+pub const SESSION_VAL_DIM: usize = 64;
+
+/// Session-side admission state: per-session token histories plus the
+/// byte-budgeted page pool holding each session's packed K/V.
+///
+/// K/V rows come from a fixed embedding-style featurizer (a seeded random
+/// projection per vocabulary entry) — the admission-path stand-in for the
+/// model's per-layer K/V projections until a full CPU-bitpacked serving
+/// backend lands (ROADMAP §KV cache & sessions). The work it models is
+/// real: each turn binarizes/packs exactly the non-resident suffix, and
+/// the resident pages are scoreable with `had_attention_paged`.
+pub struct SessionStore {
+    pool: PagePool,
+    histories: HashMap<u64, Vec<i32>>,
+    key_emb: Mat,
+    val_emb: Mat,
+}
+
+/// Map tokens to K/V rows via the embedding tables (row = token % vocab).
+/// Free function so `admit` can featurize a borrowed history slice.
+fn featurize(key_emb: &Mat, val_emb: &Mat, tokens: &[i32]) -> (Mat, Mat) {
+    let mut k = Mat::zeros(tokens.len(), key_emb.cols);
+    let mut v = Mat::zeros(tokens.len(), val_emb.cols);
+    for (i, &t) in tokens.iter().enumerate() {
+        let row = t.rem_euclid(SESSION_VOCAB as i32) as usize;
+        k.row_mut(i).copy_from_slice(key_emb.row(row));
+        v.row_mut(i).copy_from_slice(val_emb.row(row));
+    }
+    (k, v)
+}
+
+impl SessionStore {
+    pub fn new(cfg: KvCacheConfig, d: usize, d_v: usize, seed: u64) -> SessionStore {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        SessionStore {
+            pool: PagePool::new(cfg),
+            histories: HashMap::new(),
+            key_emb: Mat::random(SESSION_VOCAB, d, &mut rng, 1.0),
+            val_emb: Mat::random(SESSION_VOCAB, d_v, &mut rng, 1.0),
+        }
+    }
+
+    /// Tokens the session has accumulated across turns.
+    pub fn history_len(&self, session_id: u64) -> usize {
+        self.histories.get(&session_id).map_or(0, Vec::len)
+    }
+
+    pub fn tokens(&self, session_id: u64) -> &[i32] {
+        self.histories
+            .get(&session_id)
+            .map_or(&[] as &[i32], |v| v.as_slice())
+    }
+
+    /// Admit one turn: extend the history, then binarize-pack exactly the
+    /// non-resident suffix.
+    ///
+    /// Histories live exactly as long as the session's pages: when the
+    /// pool evicts a session its token history is dropped too, so the
+    /// store is bounded by the byte budget rather than by how many
+    /// distinct session ids clients ever used. An evicted session's next
+    /// turn therefore starts a fresh context (`cached_tokens == 0` in
+    /// the response tells the client to resend context if it needs the
+    /// old prefix).
+    pub fn admit(&mut self, session_id: u64, append: &[i32]) -> SessionInfo {
+        let cached = self.pool.cached_tokens(session_id);
+        if cached == 0 {
+            // absent or evicted: restart the history with this turn
+            self.histories.remove(&session_id);
+        }
+        let hist = self.histories.entry(session_id).or_default();
+        hist.extend_from_slice(append);
+        let appended_tokens = hist.len() - cached;
+        if appended_tokens > 0 {
+            let (k, v) = featurize(&self.key_emb, &self.val_emb, &hist[cached..]);
+            self.pool.append(session_id, &k, &v);
+        }
+        // drop histories of sessions the pool just evicted (boundedness)
+        let pool = &self.pool;
+        self.histories
+            .retain(|id, _| *id == session_id || pool.peek(*id).is_some());
+        SessionInfo { id: session_id, cached_tokens: cached, appended_tokens }
+    }
+
+    /// Borrow the resident pages for paged scoring (refreshes LRU).
+    pub fn kv(&mut self, session_id: u64) -> Option<&SessionKv> {
+        self.pool.get(session_id)
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Undo one `admit` (queue-full rollback): restore the history and
+    /// pages to the lengths captured before the turn. Evictions of OTHER
+    /// sessions the transient growth triggered are not undone — eviction
+    /// is always semantically safe. When the session was absent or
+    /// evicted before the turn (`cached_before == 0`) it is dropped
+    /// outright.
+    pub fn rollback_turn(&mut self, session_id: u64, hist_before: usize, cached_before: usize) {
+        if cached_before == 0 {
+            self.end_session(session_id);
+            return;
+        }
+        if let Some(hist) = self.histories.get_mut(&session_id) {
+            hist.truncate(hist_before);
+        }
+        self.pool.truncate_session(session_id, cached_before);
+    }
+
+    /// Conversation over: drop history and pages (not counted as eviction).
+    pub fn end_session(&mut self, session_id: u64) {
+        self.histories.remove(&session_id);
+        self.pool.remove(session_id);
+    }
+}
+
 struct Shared {
     queues: Mutex<Vec<BucketQueue>>,
     cv: Condvar,
@@ -79,18 +202,32 @@ pub struct Server {
     router: Router,
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
+    sessions: Arc<Mutex<SessionStore>>,
     next_id: AtomicU64,
     scheduler: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Start the scheduler thread. `models[i]` corresponds to
-    /// `router.buckets()[i]`.
+    /// `router.buckets()[i]`. The KV-cache pool uses default sizing; use
+    /// `start_with_kv` to tune it.
     pub fn start(
         engine: EngineHandle,
         router: Router,
         models: Vec<ServingModel>,
         policy: BatchPolicy,
+    ) -> Result<Server> {
+        Server::start_with_kv(engine, router, models, policy, KvCacheConfig::default(), 0x5E55)
+    }
+
+    /// Start with an explicit KV-cache configuration and featurizer seed.
+    pub fn start_with_kv(
+        engine: EngineHandle,
+        router: Router,
+        models: Vec<ServingModel>,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+        kv_seed: u64,
     ) -> Result<Server> {
         anyhow::ensure!(
             models.len() == router.buckets().len(),
@@ -119,6 +256,12 @@ impl Server {
             router,
             shared,
             metrics,
+            sessions: Arc::new(Mutex::new(SessionStore::new(
+                kv,
+                SESSION_KEY_DIM,
+                SESSION_VAL_DIM,
+                kv_seed,
+            ))),
             next_id: AtomicU64::new(0),
             scheduler: Some(scheduler),
         })
@@ -129,20 +272,14 @@ impl Server {
         if self.shared.shutdown.load(Ordering::Relaxed) {
             return Err(RejectReason::ShuttingDown);
         }
-        let bucket_idx = {
-            let b = self.router.route(tokens.len())?;
-            self.router
-                .buckets()
-                .iter()
-                .position(|x| x == b)
-                .expect("bucket index")
-        };
+        let bucket_idx = self.router.route_idx(tokens.len())?;
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
             arrival: Instant::now(),
             reply: tx,
+            session: None,
         };
         let mut queues = self.shared.queues.lock().unwrap();
         match queues[bucket_idx].push(req) {
@@ -157,6 +294,69 @@ impl Server {
         }
     }
 
+    /// Submit one turn of a multi-turn session: `append_tokens` extends
+    /// the session's history and only the non-resident suffix is packed
+    /// into the page pool; the request then executes over the full
+    /// sequence, routed by total length (`Router::route_session_idx`).
+    ///
+    /// Rejection is side-effect-free: admission (featurize + bit-pack)
+    /// runs under the sessions lock only — the global queue lock is taken
+    /// just for the push, and a `QueueFull` push rolls the turn back —
+    /// so a rejected turn can simply be retried with the same
+    /// `append_tokens`.
+    pub fn submit_session(
+        &self,
+        session_id: u64,
+        append_tokens: Vec<i32>,
+    ) -> Result<Receiver<Response>, RejectReason> {
+        if self.shared.shutdown.load(Ordering::Relaxed) {
+            return Err(RejectReason::ShuttingDown);
+        }
+        let mut store = self.sessions.lock().unwrap();
+        let hist_before = store.history_len(session_id);
+        let cached_before = store.pool().cached_tokens(session_id);
+        // An evicted session restarts its context on admit (see
+        // SessionStore::admit), so the served length is append-only then.
+        let resident_prefix = if cached_before == 0 { 0 } else { hist_before };
+        let bucket_idx = self
+            .router
+            .route_session_idx(resident_prefix, append_tokens.len())?;
+        let info = store.admit(session_id, &append_tokens);
+        let tokens = store.tokens(session_id).to_vec();
+
+        let (tx, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            arrival: Instant::now(),
+            reply: tx,
+            session: Some(info),
+        };
+        let pushed = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            match queues[bucket_idx].push(req) {
+                Ok(()) => {
+                    self.shared.cv.notify_one();
+                    true
+                }
+                Err(_req) => false,
+            }
+        };
+        if !pushed {
+            store.rollback_turn(session_id, hist_before, cached_before);
+            drop(store);
+            self.metrics.record_reject();
+            return Err(RejectReason::QueueFull);
+        }
+        // publish gauges before releasing the sessions lock so a
+        // concurrent admission cannot overwrite them with older values
+        self.metrics.record_session(info.cached_tokens, info.appended_tokens);
+        self.metrics
+            .update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+        drop(store);
+        Ok(rx)
+    }
+
     /// Blocking convenience: submit and wait for the response.
     pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
         let rx = self
@@ -165,8 +365,26 @@ impl Server {
         rx.recv().context("server dropped the request")
     }
 
+    /// Blocking convenience for one session turn.
+    pub fn infer_session(&self, session_id: u64, append_tokens: Vec<i32>) -> Result<Response> {
+        let rx = self
+            .submit_session(session_id, append_tokens)
+            .map_err(|r| anyhow::anyhow!("rejected: {r}"))?;
+        rx.recv().context("server dropped the request")
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// Shared handle to the session store (demos, draining, inspection).
+    pub fn sessions(&self) -> Arc<Mutex<SessionStore>> {
+        Arc::clone(&self.sessions)
+    }
+
+    /// Snapshot of the page-pool counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.sessions.lock().unwrap().pool().stats()
     }
 }
 
@@ -252,6 +470,7 @@ fn scheduler_main(
                         bucket: bucket.config.clone(),
                         latency_us: *latency_us,
                         batch_occupancy: real,
+                        cached_tokens: req.session.map_or(0, |s| s.cached_tokens),
                     });
                     served += 1;
                 }
@@ -263,4 +482,68 @@ fn scheduler_main(
         }
     }
     log_info!("scheduler exiting after {served} responses");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(budget_pages: usize) -> KvCacheConfig {
+        // d=16 -> 8 B/token keys; d_v=8 -> 32 B/token values; 4-token pages
+        KvCacheConfig { page_tokens: 4, byte_budget: budget_pages * 4 * (8 + 32) }
+    }
+
+    #[test]
+    fn session_store_incremental_admission() {
+        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 1);
+        let a = store.admit(42, &[1, 2, 3, 4]);
+        assert_eq!((a.cached_tokens, a.appended_tokens), (0, 4));
+        let b = store.admit(42, &[5, 6]);
+        assert_eq!((b.cached_tokens, b.appended_tokens), (4, 2));
+        assert_eq!(store.history_len(42), 6);
+        assert_eq!(store.tokens(42), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(store.kv(42).unwrap().len(), 6);
+        let stats = store.pool().stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        store.end_session(42);
+        assert_eq!(store.history_len(42), 0);
+        assert!(store.kv(42).is_none());
+    }
+
+    #[test]
+    fn identical_tokens_pack_identically_across_sessions() {
+        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 2);
+        store.admit(1, &[7, 8, 9]);
+        store.admit(2, &[7, 8, 9]);
+        let k1 = store.kv(1).unwrap().key(0).to_vec();
+        let k2 = store.kv(2).unwrap().key(0).to_vec();
+        assert_eq!(k1, k2, "featurizer must be deterministic per token");
+    }
+
+    #[test]
+    fn evicted_session_restarts_fresh_and_history_is_bounded() {
+        let mut store = SessionStore::new(tiny_cfg(1), 16, 8, 3);
+        store.admit(1, &[1, 2, 3, 4]);
+        store.admit(2, &[5, 6, 7, 8]); // evicts session 1's page
+        assert!(store.kv(1).is_none());
+        // eviction dropped the history too: the store stays bounded by
+        // the byte budget, not by how many session ids were ever seen
+        assert_eq!(store.history_len(1), 0);
+        let again = store.admit(1, &[9, 10]);
+        // the turn starts a fresh context; cached_tokens == 0 signals it
+        assert_eq!((again.cached_tokens, again.appended_tokens), (0, 2));
+        assert_eq!(store.history_len(1), 2);
+        assert_eq!(store.tokens(1), &[9, 10]);
+        assert_eq!(store.kv(1).unwrap().len(), 2);
+        assert!(store.pool().stats().evictions >= 1);
+    }
+
+    #[test]
+    fn empty_append_is_a_pure_hit() {
+        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 4);
+        store.admit(9, &[1, 2]);
+        let a = store.admit(9, &[]);
+        assert_eq!((a.cached_tokens, a.appended_tokens), (2, 0));
+        assert_eq!(store.kv(9).unwrap().len(), 2);
+    }
 }

@@ -1,0 +1,57 @@
+//! Sizing knobs for the paged KV cache.
+
+use crate::binary::bitpack::words_for;
+
+/// Configuration of the paged bit-packed KV cache.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Tokens per page. Pages are allocated at full capacity up front so
+    /// byte accounting is exact and appends never reallocate.
+    pub page_tokens: usize,
+    /// Total resident-byte budget of the pool across all sessions; the
+    /// pool evicts least-recently-used sessions to stay under it.
+    pub byte_budget: usize,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            page_tokens: 64,
+            byte_budget: 32 * 1024 * 1024,
+        }
+    }
+}
+
+impl KvCacheConfig {
+    /// Payload bytes of one full page for the given head geometry:
+    /// packed sign-bit keys (`ceil(d/64)` u64 words/token) + f32 values.
+    pub fn page_payload_bytes(&self, d: usize, d_v: usize) -> usize {
+        self.page_tokens * (words_for(d) * 8 + d_v * 4)
+    }
+
+    /// How many full pages fit the byte budget for one head geometry
+    /// (capacity planning for admission control).
+    pub fn pages_in_budget(&self, d: usize, d_v: usize) -> usize {
+        self.byte_budget / self.page_payload_bytes(d, d_v).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_payload_math() {
+        let cfg = KvCacheConfig { page_tokens: 64, byte_budget: 1 << 20 };
+        // d=64: one u64 word per key -> 8 B/token; d_v=64 f32 -> 256 B/token
+        assert_eq!(cfg.page_payload_bytes(64, 64), 64 * (8 + 256));
+        // ragged d=65 needs two words
+        assert_eq!(cfg.page_payload_bytes(65, 64), 64 * (16 + 256));
+    }
+
+    #[test]
+    fn budget_capacity() {
+        let cfg = KvCacheConfig { page_tokens: 64, byte_budget: 64 * (8 + 256) * 10 };
+        assert_eq!(cfg.pages_in_budget(64, 64), 10);
+    }
+}

@@ -1,0 +1,42 @@
+//! Paged bit-packed KV cache with session-aware incremental serving.
+//!
+//! The paper's central efficiency claim for long-context inference is
+//! **packed-K residency**: binarized keys cost 1 bit per element, so the
+//! score-side state of a sequence is 32x smaller than f32 keys and can
+//! stay resident across queries instead of being rebuilt per request.
+//! This module turns that claim into a serving subsystem:
+//!
+//! * [`page::Page`] — fixed-size pages holding `page_tokens` tokens of
+//!   packed sign-bit keys (`ceil(d/64)` u64 words per token) plus f32
+//!   values, allocated at full capacity so accounting is exact.
+//! * [`session::SessionKv`] — a per-session chain of pages with
+//!   append/seal/truncate handles: turn N packs only its new tokens
+//!   (incremental prefill and decode), resident pages are never copied.
+//! * [`pool::PagePool`] — a global byte-budgeted pool with LRU eviction
+//!   at session granularity and hit/miss/eviction accounting.
+//! * [`config::KvCacheConfig`] — sizing knobs and capacity math.
+//!
+//! `binary::attention::had_attention_paged` scores XNOR-popcount directly
+//! over the non-contiguous pages, bit-identical to the contiguous
+//! `had_attention` fast path (property-tested in rust/tests).
+//!
+//! ## Residency math
+//!
+//! For head dim `d = 64` and `page_tokens = 64`, one page's keys cost
+//! `64 tokens x 8 B = 512 B` versus `64 x 64 x 4 B = 16 KiB` for f32 keys
+//! — the 32x reduction (64x vs bf16 would be 2 B/element, 16x). Values
+//! remain dense f32 (`d_v = 64` -> 16 KiB/page): the paper binarizes only
+//! Q and K, so the *scoring* working set shrinks 32x while values are
+//! touched just `n_top` times per query after selection. A 32 MiB default
+//! budget therefore holds ~2000 pages (~128k tokens) of full KV state —
+//! and at 8 B/token of packed keys, ~4M tokens of key-only scoring state.
+
+pub mod config;
+pub mod page;
+pub mod pool;
+pub mod session;
+
+pub use config::KvCacheConfig;
+pub use page::Page;
+pub use pool::{Admission, CacheStats, PagePool};
+pub use session::SessionKv;

@@ -1,0 +1,158 @@
+//! A fixed-size KV page: packed sign-bit keys + f32 values for up to
+//! `capacity` tokens. Pages are the unit of pool accounting and of the
+//! non-contiguous layout `had_attention_paged` scores over.
+
+use crate::binary::bitpack::{pack_vector, words_for};
+
+/// One page of KV state. Storage is allocated at full capacity on
+/// construction, so `bytes()` is constant over the page's lifetime and
+/// appends never move memory (slices handed out stay valid).
+#[derive(Clone, Debug)]
+pub struct Page {
+    d: usize,
+    words_per_key: usize,
+    d_v: usize,
+    capacity: usize,
+    len: usize,
+    /// capacity * words_per_key packed sign words, filled up to len rows.
+    keys: Vec<u64>,
+    /// capacity * d_v f32 values, filled up to len rows.
+    values: Vec<f32>,
+}
+
+impl Page {
+    pub fn new(capacity: usize, d: usize, d_v: usize) -> Page {
+        assert!(capacity > 0, "page capacity must be positive");
+        assert!(d > 0, "key dim must be positive");
+        let words_per_key = words_for(d);
+        Page {
+            d,
+            words_per_key,
+            d_v,
+            capacity,
+            len: 0,
+            keys: vec![0u64; capacity * words_per_key],
+            values: vec![0.0f32; capacity * d_v],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.len == self.capacity
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn words_per_key(&self) -> usize {
+        self.words_per_key
+    }
+
+    /// Append one token's key (continuous f32, binarized here) and value.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(!self.is_full(), "page overflow");
+        assert_eq!(k_row.len(), self.d, "key dim mismatch");
+        assert_eq!(v_row.len(), self.d_v, "value dim mismatch");
+        let w = self.words_per_key;
+        pack_vector(k_row, &mut self.keys[self.len * w..(self.len + 1) * w]);
+        self.values[self.len * self.d_v..(self.len + 1) * self.d_v].copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// Packed sign words of token `i`'s key.
+    #[inline]
+    pub fn key(&self, i: usize) -> &[u64] {
+        debug_assert!(i < self.len);
+        &self.keys[i * self.words_per_key..(i + 1) * self.words_per_key]
+    }
+
+    /// f32 value row of token `i`.
+    #[inline]
+    pub fn value(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.values[i * self.d_v..(i + 1) * self.d_v]
+    }
+
+    /// Roll back to `len` tokens (decode rollback / bench reset).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate beyond length");
+        self.len = len;
+    }
+
+    /// Resident payload bytes (full capacity — allocation, not fill).
+    pub fn bytes(&self) -> usize {
+        self.keys.len() * 8 + self.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binary::bitpack::PackedMat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn push_then_read_matches_packedmat() {
+        let mut rng = Rng::new(1);
+        for d in [3usize, 32, 64, 65, 100, 128] {
+            let d_v = 8;
+            let n = 5;
+            let ks = rng.normal_vec(n * d, 1.0);
+            let vs = rng.normal_vec(n * d_v, 1.0);
+            let mut page = Page::new(8, d, d_v);
+            for i in 0..n {
+                page.push(&ks[i * d..(i + 1) * d], &vs[i * d_v..(i + 1) * d_v]);
+            }
+            assert_eq!(page.len(), n);
+            assert!(!page.is_full());
+            let reference = PackedMat::pack(n, d, &ks);
+            for i in 0..n {
+                assert_eq!(page.key(i), reference.row(i), "d={d} token {i}");
+                assert_eq!(page.value(i), &vs[i * d_v..(i + 1) * d_v]);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_constant_over_fill() {
+        let mut page = Page::new(16, 64, 32);
+        let before = page.bytes();
+        assert_eq!(before, 16 * 8 + 16 * 32 * 4);
+        page.push(&[1.0; 64], &[0.5; 32]);
+        assert_eq!(page.bytes(), before);
+    }
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut page = Page::new(3, 16, 4);
+        for _ in 0..3 {
+            page.push(&[-1.0; 16], &[0.0; 4]);
+        }
+        assert!(page.is_full());
+        page.truncate(1);
+        assert_eq!(page.len(), 1);
+        page.push(&[1.0; 16], &[1.0; 4]);
+        assert_eq!(page.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "page overflow")]
+    fn overflow_panics() {
+        let mut page = Page::new(1, 8, 2);
+        page.push(&[1.0; 8], &[0.0; 2]);
+        page.push(&[1.0; 8], &[0.0; 2]);
+    }
+}

@@ -1,0 +1,353 @@
+//! Global byte-budgeted page pool: owns every resident session's pages,
+//! evicts least-recently-used sessions when the budget is exceeded, and
+//! keeps hit/miss/eviction accounting for the serving metrics.
+
+use std::collections::HashMap;
+
+use crate::kvcache::config::KvCacheConfig;
+use crate::kvcache::session::SessionKv;
+use crate::tensor::Mat;
+
+/// Cumulative cache counters (monotone; snapshot and diff as needed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// admissions that found the session resident
+    pub hits: u64,
+    /// admissions that had to start (or restart) a session cold
+    pub misses: u64,
+    /// sessions evicted to honor the byte budget
+    pub evictions: u64,
+    /// bytes released by evictions
+    pub evicted_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Outcome of one admission: how much of the sequence was already
+/// resident vs. newly packed.
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    pub hit: bool,
+    /// tokens already resident before this admission (reused work)
+    pub reused_tokens: usize,
+    /// tokens packed by this admission (new work)
+    pub appended_tokens: usize,
+}
+
+struct Entry {
+    kv: SessionKv,
+    last_used: u64,
+}
+
+/// The pool. Not internally synchronized — the coordinator wraps it in a
+/// Mutex (admission is cheap next to model execution).
+pub struct PagePool {
+    cfg: KvCacheConfig,
+    sessions: HashMap<u64, Entry>,
+    clock: u64,
+    bytes: usize,
+    stats: CacheStats,
+}
+
+impl PagePool {
+    pub fn new(cfg: KvCacheConfig) -> PagePool {
+        PagePool {
+            cfg,
+            sessions: HashMap::new(),
+            clock: 0,
+            bytes: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Resident payload bytes across all sessions.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.cfg.byte_budget
+    }
+
+    /// Number of resident sessions.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Tokens resident for a session (0 when absent). Does not touch LRU.
+    pub fn cached_tokens(&self, session_id: u64) -> usize {
+        self.sessions.get(&session_id).map_or(0, |e| e.kv.len())
+    }
+
+    /// Admit `k`/`v` rows for a session (head geometry is `k.cols` /
+    /// `v.cols`): appends to the resident pages on a hit, starts a cold
+    /// session on a miss, then enforces the byte budget by evicting LRU
+    /// sessions (never the one just admitted).
+    pub fn append(&mut self, session_id: u64, k: &Mat, v: &Mat) -> Admission {
+        let (d, d_v) = (k.cols, v.cols);
+        let now = self.tick();
+        let page_tokens = self.cfg.page_tokens;
+        // A geometry change is a protocol error from the same session id;
+        // treat it as a cold restart rather than corrupting pages.
+        let stale = self
+            .sessions
+            .get(&session_id)
+            .map_or(false, |e| e.kv.d() != d || e.kv.d_v() != d_v);
+        if stale {
+            self.remove(session_id);
+        }
+        let hit = self.sessions.contains_key(&session_id);
+        let entry = self.sessions.entry(session_id).or_insert_with(|| Entry {
+            kv: SessionKv::new(d, d_v, page_tokens),
+            last_used: now,
+        });
+        entry.last_used = now;
+        let before = entry.kv.bytes();
+        let reused_tokens = entry.kv.len();
+        entry.kv.append(k, v);
+        let after = entry.kv.bytes();
+        self.bytes += after - before;
+        if hit {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        self.enforce_budget(session_id);
+        Admission { hit, reused_tokens, appended_tokens: k.rows }
+    }
+
+    /// Borrow a resident session for scoring; refreshes its LRU position.
+    pub fn get(&mut self, session_id: u64) -> Option<&SessionKv> {
+        let now = self.tick();
+        let entry = self.sessions.get_mut(&session_id)?;
+        entry.last_used = now;
+        Some(&entry.kv)
+    }
+
+    /// Borrow without touching LRU (introspection/tests).
+    pub fn peek(&self, session_id: u64) -> Option<&SessionKv> {
+        self.sessions.get(&session_id).map(|e| &e.kv)
+    }
+
+    /// Seal a session (no further appends accepted by SessionKv).
+    pub fn seal(&mut self, session_id: u64) {
+        if let Some(e) = self.sessions.get_mut(&session_id) {
+            e.kv.seal();
+        }
+    }
+
+    /// Roll a session back to `len` tokens, releasing now-empty pages
+    /// (admission rollback, speculative-decode rewind). Removes the
+    /// session entirely at `len == 0`. No-op when absent or already at
+    /// or below `len`.
+    pub fn truncate_session(&mut self, session_id: u64, len: usize) {
+        if len == 0 {
+            self.remove(session_id);
+            return;
+        }
+        if let Some(e) = self.sessions.get_mut(&session_id) {
+            if e.kv.len() > len {
+                let before = e.kv.bytes();
+                e.kv.truncate(len);
+                self.bytes -= before - e.kv.bytes();
+            }
+        }
+    }
+
+    /// Drop a session outright (client disconnect). Not counted as an
+    /// eviction. Returns true if it was resident.
+    pub fn remove(&mut self, session_id: u64) -> bool {
+        match self.sessions.remove(&session_id) {
+            Some(e) => {
+                self.bytes -= e.kv.bytes();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict LRU sessions until the budget holds. `protect` (the session
+    /// just admitted) is never evicted, so one session larger than the
+    /// whole budget stays resident — admission control is the router's
+    /// job, not the pool's.
+    fn enforce_budget(&mut self, protect: u64) {
+        while self.bytes > self.cfg.byte_budget {
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(&id, _)| id != protect)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            if let Some(e) = self.sessions.remove(&id) {
+                let freed = e.kv.bytes();
+                self.bytes -= freed;
+                self.stats.evictions += 1;
+                self.stats.evicted_bytes += freed as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const D: usize = 64;
+    const DV: usize = 16;
+
+    fn kvmats(rng: &mut Rng, rows: usize) -> (Mat, Mat) {
+        (Mat::random(rows, D, rng, 1.0), Mat::random(rows, DV, rng, 1.0))
+    }
+
+    /// page payload for the test geometry: 8 tokens * (8 B key + 64 B val)
+    fn page_bytes() -> usize {
+        8 * (8 + DV * 4)
+    }
+
+    fn pool(budget_pages: usize) -> PagePool {
+        PagePool::new(KvCacheConfig {
+            page_tokens: 8,
+            byte_budget: budget_pages * page_bytes(),
+        })
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut rng = Rng::new(1);
+        let mut p = pool(100);
+        let (k, v) = kvmats(&mut rng, 8);
+        let a = p.append(1, &k, &v);
+        assert!(!a.hit);
+        assert_eq!((a.reused_tokens, a.appended_tokens), (0, 8));
+        let (k2, v2) = kvmats(&mut rng, 4);
+        let b = p.append(1, &k2, &v2);
+        assert!(b.hit);
+        assert_eq!((b.reused_tokens, b.appended_tokens), (8, 4));
+        let stats = p.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(p.cached_tokens(1), 12);
+        assert_eq!(p.cached_tokens(2), 0);
+    }
+
+    #[test]
+    fn byte_budget_enforced() {
+        let mut rng = Rng::new(2);
+        let mut p = pool(3); // room for 3 pages total
+        for id in 0..5u64 {
+            let (k, v) = kvmats(&mut rng, 8); // one page per session
+            p.append(id, &k, &v);
+            assert!(p.bytes() <= p.budget(), "over budget after session {id}");
+        }
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.stats().evictions, 2);
+        assert_eq!(p.stats().evicted_bytes, 2 * page_bytes() as u64);
+        // oldest sessions 0 and 1 are gone; 2..=4 resident
+        assert!(p.peek(0).is_none() && p.peek(1).is_none());
+        assert!(p.peek(2).is_some() && p.peek(4).is_some());
+    }
+
+    #[test]
+    fn lru_order_respects_touch() {
+        let mut rng = Rng::new(3);
+        let mut p = pool(3);
+        for id in 0..3u64 {
+            let (k, v) = kvmats(&mut rng, 8);
+            p.append(id, &k, &v);
+        }
+        // touch 0 so 1 becomes LRU
+        assert!(p.get(0).is_some());
+        let (k, v) = kvmats(&mut rng, 8);
+        p.append(3, &k, &v);
+        assert!(p.peek(1).is_none(), "LRU victim must be the untouched session");
+        assert!(p.peek(0).is_some() && p.peek(2).is_some() && p.peek(3).is_some());
+    }
+
+    #[test]
+    fn admitted_session_never_evicted_even_oversized() {
+        let mut rng = Rng::new(4);
+        let mut p = pool(2);
+        let (k, v) = kvmats(&mut rng, 5 * 8); // 5 pages > 2-page budget
+        p.append(7, &k, &v);
+        assert!(p.peek(7).is_some());
+        assert_eq!(p.len(), 1);
+        assert!(p.bytes() > p.budget(), "oversized single session stays");
+        // next admission of another session evicts the oversized one
+        let (k2, v2) = kvmats(&mut rng, 8);
+        p.append(8, &k2, &v2);
+        assert!(p.peek(7).is_none() && p.peek(8).is_some());
+        assert!(p.bytes() <= p.budget());
+    }
+
+    #[test]
+    fn truncate_session_releases_page_bytes() {
+        let mut rng = Rng::new(7);
+        let mut p = pool(10);
+        let (k, v) = kvmats(&mut rng, 20); // 3 pages at 8 tokens/page
+        p.append(1, &k, &v);
+        assert_eq!(p.bytes(), 3 * page_bytes());
+        p.truncate_session(1, 8);
+        assert_eq!(p.cached_tokens(1), 8);
+        assert_eq!(p.bytes(), page_bytes());
+        p.truncate_session(1, 64); // above current length: no-op
+        assert_eq!(p.cached_tokens(1), 8);
+        p.truncate_session(1, 0);
+        assert_eq!((p.bytes(), p.len()), (0, 0));
+        p.truncate_session(99, 5); // absent session: no-op
+        assert_eq!(p.stats().evictions, 0);
+    }
+
+    #[test]
+    fn remove_releases_bytes_without_eviction_count() {
+        let mut rng = Rng::new(5);
+        let mut p = pool(10);
+        let (k, v) = kvmats(&mut rng, 8);
+        p.append(1, &k, &v);
+        assert_eq!(p.bytes(), page_bytes());
+        assert!(p.remove(1));
+        assert!(!p.remove(1));
+        assert_eq!(p.bytes(), 0);
+        assert_eq!(p.stats().evictions, 0);
+    }
+
+    #[test]
+    fn geometry_change_restarts_cold() {
+        let mut rng = Rng::new(6);
+        let mut p = pool(10);
+        let (k, v) = kvmats(&mut rng, 8);
+        p.append(1, &k, &v);
+        let k2 = Mat::random(4, 32, &mut rng, 1.0);
+        let v2 = Mat::random(4, 8, &mut rng, 1.0);
+        let a = p.append(1, &k2, &v2);
+        assert!(!a.hit);
+        assert_eq!(p.cached_tokens(1), 4);
+    }
+}

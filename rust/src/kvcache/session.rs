@@ -1,0 +1,195 @@
+//! Per-session KV state: an append-only (plus rollback) chain of pages
+//! supporting incremental prefill and decode. Turn N appends only its new
+//! tokens; the packed keys of turns 0..N stay resident and are re-scored
+//! in place by `binary::attention::had_attention_paged`.
+
+use crate::kvcache::page::Page;
+use crate::tensor::Mat;
+
+/// One session's paged KV cache for a single head geometry.
+#[derive(Clone, Debug)]
+pub struct SessionKv {
+    d: usize,
+    d_v: usize,
+    page_tokens: usize,
+    pages: Vec<Page>,
+    len: usize,
+    sealed: bool,
+}
+
+impl SessionKv {
+    pub fn new(d: usize, d_v: usize, page_tokens: usize) -> SessionKv {
+        assert!(page_tokens > 0, "page_tokens must be positive");
+        SessionKv { d, d_v, page_tokens, pages: Vec::new(), len: 0, sealed: false }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn d_v(&self) -> usize {
+        self.d_v
+    }
+
+    #[inline]
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn pages(&self) -> &[Page] {
+        &self.pages
+    }
+
+    /// Incremental prefill/decode: binarize-pack and append `k.rows` new
+    /// tokens. Only the appended rows are packed — resident pages are
+    /// untouched (the warm-path saving the kvcache bench measures).
+    pub fn append(&mut self, k: &Mat, v: &Mat) {
+        assert!(!self.sealed, "append to sealed session");
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        assert_eq!(k.cols, self.d, "key dim mismatch");
+        assert_eq!(v.cols, self.d_v, "value dim mismatch");
+        for r in 0..k.rows {
+            if self.pages.last().map_or(true, Page::is_full) {
+                self.pages.push(Page::new(self.page_tokens, self.d, self.d_v));
+            }
+            self.pages.last_mut().unwrap().push(k.row(r), v.row(r));
+            self.len += 1;
+        }
+    }
+
+    /// Freeze the session: no further appends (end of conversation; the
+    /// pool may still evict it).
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    #[inline]
+    pub fn is_sealed(&self) -> bool {
+        self.sealed
+    }
+
+    /// Roll back to `len` tokens, dropping now-empty pages (speculative
+    /// decode rollback; also the bench's warm-turn reset).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate beyond length");
+        let full_pages = len / self.page_tokens;
+        let tail = len % self.page_tokens;
+        let keep = if tail == 0 { full_pages } else { full_pages + 1 };
+        self.pages.truncate(keep);
+        if tail != 0 {
+            if let Some(last) = self.pages.last_mut() {
+                last.truncate(tail);
+            }
+        }
+        self.len = len;
+    }
+
+    /// Packed key words of global token `i`.
+    #[inline]
+    pub fn key(&self, i: usize) -> &[u64] {
+        debug_assert!(i < self.len);
+        self.pages[i / self.page_tokens].key(i % self.page_tokens)
+    }
+
+    /// f32 value row of global token `i`.
+    #[inline]
+    pub fn value(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        self.pages[i / self.page_tokens].value(i % self.page_tokens)
+    }
+
+    /// Resident payload bytes across all pages (page-granular: partially
+    /// filled pages count at full capacity).
+    pub fn bytes(&self) -> usize {
+        self.pages.iter().map(Page::bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binary::bitpack::PackedMat;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::random(r, c, rng, 1.0)
+    }
+
+    #[test]
+    fn chunked_appends_match_contiguous_pack() {
+        let mut rng = Rng::new(11);
+        let (d, d_v, page_tokens) = (65, 8, 7); // ragged dim, odd page size
+        let mut kv = SessionKv::new(d, d_v, page_tokens);
+        let k = rand_mat(&mut rng, 23, d);
+        let v = rand_mat(&mut rng, 23, d_v);
+        // append in uneven chunks: 23 = 5 + 1 + 17
+        let chunk = |m: &Mat, lo: usize, hi: usize| {
+            Mat::from_vec(hi - lo, m.cols, m.data[lo * m.cols..hi * m.cols].to_vec())
+        };
+        for (lo, hi) in [(0usize, 5usize), (5, 6), (6, 23)] {
+            kv.append(&chunk(&k, lo, hi), &chunk(&v, lo, hi));
+        }
+        assert_eq!(kv.len(), 23);
+        assert_eq!(kv.pages().len(), 23usize.div_ceil(7));
+        let reference = PackedMat::pack(23, d, &k.data);
+        for i in 0..23 {
+            assert_eq!(kv.key(i), reference.row(i), "token {i}");
+            assert_eq!(kv.value(i), v.row(i), "token {i}");
+        }
+    }
+
+    #[test]
+    fn truncate_drops_pages_and_allows_reappend() {
+        let mut rng = Rng::new(3);
+        let mut kv = SessionKv::new(32, 4, 8);
+        let k = rand_mat(&mut rng, 20, 32);
+        let v = rand_mat(&mut rng, 20, 4);
+        kv.append(&k, &v);
+        assert_eq!(kv.pages().len(), 3);
+        kv.truncate(16);
+        assert_eq!((kv.len(), kv.pages().len()), (16, 2));
+        kv.truncate(5);
+        assert_eq!((kv.len(), kv.pages().len()), (5, 1));
+        let k2 = rand_mat(&mut rng, 4, 32);
+        let v2 = rand_mat(&mut rng, 4, 4);
+        kv.append(&k2, &v2);
+        assert_eq!(kv.len(), 9);
+        assert_eq!(kv.key(5), PackedMat::pack(4, 32, &k2.data).row(0));
+        kv.truncate(0);
+        assert!(kv.is_empty() && kv.pages().is_empty());
+    }
+
+    #[test]
+    fn bytes_grow_page_granular() {
+        let mut rng = Rng::new(5);
+        let mut kv = SessionKv::new(64, 16, 16);
+        assert_eq!(kv.bytes(), 0);
+        kv.append(&rand_mat(&mut rng, 1, 64), &rand_mat(&mut rng, 1, 16));
+        let one_page = 16 * (8 + 16 * 4);
+        assert_eq!(kv.bytes(), one_page);
+        kv.append(&rand_mat(&mut rng, 15, 64), &rand_mat(&mut rng, 15, 16));
+        assert_eq!(kv.bytes(), one_page);
+        kv.append(&rand_mat(&mut rng, 1, 64), &rand_mat(&mut rng, 1, 16));
+        assert_eq!(kv.bytes(), 2 * one_page);
+    }
+
+    #[test]
+    #[should_panic(expected = "sealed")]
+    fn sealed_rejects_append() {
+        let mut kv = SessionKv::new(8, 2, 4);
+        kv.seal();
+        kv.append(&Mat::zeros(1, 8), &Mat::zeros(1, 2));
+    }
+}

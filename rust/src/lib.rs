@@ -25,6 +25,7 @@ pub mod data;
 pub mod distill;
 pub mod exp;
 pub mod hwsim;
+pub mod kvcache;
 pub mod model;
 pub mod runtime;
 pub mod tensor;

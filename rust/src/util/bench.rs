@@ -14,6 +14,7 @@ pub struct Stats {
     pub min: Duration,
     pub p50: Duration,
     pub p90: Duration,
+    pub p99: Duration,
     pub mean: Duration,
 }
 
@@ -29,12 +30,13 @@ impl Stats {
 
     pub fn print(&self) {
         println!(
-            "{:<44} {:>10} iters  min {:>12}  p50 {:>12}  p90 {:>12}  mean {:>12}",
+            "{:<44} {:>10} iters  min {:>12}  p50 {:>12}  p90 {:>12}  p99 {:>12}  mean {:>12}",
             self.name,
             self.iters,
             fmt_dur(self.min),
             fmt_dur(self.p50),
             fmt_dur(self.p90),
+            fmt_dur(self.p99),
             fmt_dur(self.mean),
         );
     }
@@ -126,6 +128,7 @@ impl Bencher {
             min: samples[0],
             p50: samples[samples.len() / 2],
             p90: samples[(samples.len() * 9 / 10).min(samples.len() - 1)],
+            p99: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
             mean: total / samples.len() as u32,
         }
     }
@@ -146,7 +149,7 @@ mod tests {
             acc
         });
         assert!(s.iters >= 3);
-        assert!(s.min <= s.p50 && s.p50 <= s.p90);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99);
     }
 
     #[test]

@@ -179,9 +179,25 @@ fn serving_end_to_end_one_bucket() {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.bucket, "longqa_128");
         assert!((0..4).contains(&resp.pred));
+        assert_eq!(resp.cached_tokens, 0, "sessionless requests hit no cache");
     }
     let snap = server.metrics.snapshot();
     assert_eq!(snap.requests, 3);
-    // too-long requests are rejected up front
+
+    // session path: two turns through the same pipeline; the second turn
+    // reuses the first turn's resident pages and reports it
+    let turn1 = server.infer_session(7, vec![3; 40]).unwrap();
+    assert_eq!(turn1.bucket, "longqa_128");
+    assert_eq!(turn1.cached_tokens, 0, "first turn is cold");
+    let turn2 = server.infer_session(7, vec![4; 30]).unwrap();
+    assert_eq!(turn2.cached_tokens, 40, "second turn reuses the prefix");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.session_requests, 2);
+    assert_eq!(snap.cache_hit_tokens, 40);
+    assert_eq!(snap.cache_miss_tokens, 70);
+    assert!(server.cache_stats().hits >= 1);
+
+    // too-long requests are rejected up front (both paths)
     assert!(server.submit(vec![0; 4096]).is_err());
+    assert!(server.submit_session(8, vec![0; 4096]).is_err());
 }

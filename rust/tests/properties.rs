@@ -3,8 +3,11 @@
 //! These need no artifacts and run everywhere.
 
 use had::binary::topn::{select_topn_counting, select_topn_heap};
-use had::binary::{had_attention, had_attention_ref, HadAttnConfig, PackedKv, PackedMat};
+use had::binary::{
+    had_attention, had_attention_paged, had_attention_ref, HadAttnConfig, PackedKv, PackedMat,
+};
 use had::coordinator::{BatchPolicy, BucketQueue, Router};
+use had::kvcache::{KvCacheConfig, PagePool, SessionKv};
 use had::tensor::Mat;
 use had::util::quickcheck::{check, pair, usize_in, Config, Gen};
 use had::util::rng::Rng;
@@ -112,6 +115,77 @@ fn prop_fused_matches_oracle_randomized() {
 }
 
 #[test]
+fn prop_paged_attention_equals_contiguous_and_oracle() {
+    // paged scoring over non-contiguous pages must agree with the
+    // contiguous fast path bit-for-bit and with the dense oracle to 1e-5,
+    // for random page sizes, ragged (non-multiple-of-64) head dims, and
+    // partial final pages — appended in random-sized chunks.
+    let gen = pair(
+        pair(usize_in(1, 24), usize_in(2, 90)), // (page_tokens, n_k)
+        pair(usize_in(1, 130), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(40), &gen, |&((page_tokens, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (n_q, d_v) = (3usize, 8usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let c = HadAttnConfig { n_top: 1 + seed % n_k, temp: 0.9 };
+
+        let mut paged = SessionKv::new(d, d_v, page_tokens);
+        let mut lo = 0usize;
+        while lo < n_k {
+            let hi = (lo + 1 + rng.range_usize(0, n_k)).min(n_k);
+            let rows = hi - lo;
+            let kc = Mat::from_vec(rows, d, k.data[lo * d..hi * d].to_vec());
+            let vc = Mat::from_vec(rows, d_v, v.data[lo * d_v..hi * d_v].to_vec());
+            paged.append(&kc, &vc);
+            lo = hi;
+        }
+
+        let fast = had_attention(&q, &PackedKv::new(&k, &v), &c);
+        let from_pages = had_attention_paged(&q, &paged, &c);
+        let oracle = had_attention_ref(&q, &k, &v, &c);
+        from_pages == fast && from_pages.max_abs_diff(&oracle) < 1e-5
+    });
+}
+
+#[test]
+fn prop_pool_respects_byte_budget_and_accounting() {
+    // After any admission sequence: pool bytes equal the sum of resident
+    // session bytes, and the budget holds whenever more than the single
+    // protected session is resident. hits+misses equals admissions.
+    let gen = pair(usize_in(1, 40), pair(usize_in(1, 6), usize_in(0, 1 << 20)));
+    check(&cfg(40), &gen, |&(n_ops, (budget_pages, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (d, d_v, page_tokens) = (32usize, 8usize, 4usize);
+        let page_bytes = page_tokens * (8 + d_v * 4);
+        let mut pool = PagePool::new(KvCacheConfig {
+            page_tokens,
+            byte_budget: budget_pages * page_bytes,
+        });
+        let mut last_id = 0u64;
+        for _ in 0..n_ops {
+            let id = rng.range_usize(0, 5) as u64;
+            let rows = rng.range_usize(1, 2 * page_tokens + 1);
+            let k = Mat::random(rows, d, &mut rng, 1.0);
+            let v = Mat::random(rows, d_v, &mut rng, 1.0);
+            pool.append(id, &k, &v);
+            last_id = id;
+        }
+        let resident: usize = (0..5u64)
+            .filter_map(|id| pool.peek(id).map(|kv| kv.bytes()))
+            .sum();
+        let stats = pool.stats();
+        let budget_ok = pool.bytes() <= pool.budget()
+            || (pool.len() == 1 && pool.peek(last_id).is_some());
+        resident == pool.bytes()
+            && budget_ok
+            && stats.hits + stats.misses == n_ops as u64
+    });
+}
+
+#[test]
 fn prop_router_minimality_and_totality() {
     let router = Router::longqa_default();
     check(&cfg(200), &usize_in(1, 2048), |&len| {
@@ -152,6 +226,7 @@ fn prop_batcher_never_exceeds_capacity_or_loses_requests() {
                 tokens: vec![1; 64],
                 arrival: Instant::now(),
                 reply: tx,
+                session: None,
             };
             if q.len() >= cap {
                 // must reject at capacity

@@ -79,6 +79,38 @@ def fig(name, cols):
         print("| " + " | ".join(cells) + " |")
 
 
+def kvcache():
+    recs = rows("kvcache")
+    if not recs:
+        return
+    lat = [r for r in recs if r.get("kind") == "latency"]
+    by_ctx = defaultdict(dict)
+    for r in lat:
+        by_ctx[int(r["n_ctx"])][r["mode"]] = r  # last write wins
+    if by_ctx:
+        print("\n### KV cache: warm incremental append vs cold full prefill (measured)\n")
+        print("| n_ctx | cold p50 (µs) | cold p99 (µs) | warm p50 (µs) | warm p99 (µs) | speedup (mean) |")
+        print("|---|---|---|---|---|---|")
+        for n_ctx in sorted(by_ctx):
+            m = by_ctx[n_ctx]
+            if {"cold", "warm"} <= m.keys():
+                c, w = m["cold"], m["warm"]
+                speed = c["mean_us"] / w["mean_us"] if w["mean_us"] else float("nan")
+                print(
+                    f"| {n_ctx} | {c['p50_us']:.1f} | {c['p99_us']:.1f} "
+                    f"| {w['p50_us']:.1f} | {w['p99_us']:.1f} | {speed:.2f}x |"
+                )
+    pools = [r for r in recs if r.get("kind") == "pool"]
+    if pools:
+        p = pools[-1]
+        print(
+            f"\nKV pool: hit rate {100 * p['hit_rate']:.1f}% "
+            f"({int(p['hits'])} hits / {int(p['misses'])} misses), "
+            f"{int(p['evictions'])} evictions, "
+            f"{int(p['resident_bytes']) // 1024} KiB resident"
+        )
+
+
 if __name__ == "__main__":
     table1()
     table2()
@@ -86,6 +118,7 @@ if __name__ == "__main__":
     fig("fig3", ["n_top", "accuracy"])
     fig("fig4", ["n", "fractions"])
     fig("fig5", ["n_ctx", "n_top", "baseline", "had"])
+    kvcache()
     t3 = rows("table3")
     if t3:
         r = t3[-1]
