@@ -29,7 +29,7 @@ fn latency_record(mode: &str, n_ctx: usize, s: &Stats) -> Json {
 }
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::from_env(); // HAD_BENCH_QUICK=1 for the CI smoke step
     let mut rng = Rng::new(17);
     let (d, d_v, n_q, turn, page_tokens) = (64usize, 64usize, 16usize, 16usize, 64usize);
     let mut records: Vec<Json> = Vec::new();
@@ -72,12 +72,18 @@ fn main() {
         records.push(latency_record("warm", n_ctx, &s_warm));
         longest = Some((s_cold.clone(), s_warm.clone()));
     }
-    // the acceptance gate: on the longest context, warm must win
+    // the acceptance gate: on the longest context, warm must win.
+    // Relaxed in quick mode — the CI smoke step's tiny budgets on noisy
+    // shared runners would make a hard perf assert flaky.
     let (cold, warm) = longest.expect("at least one context bucket");
-    assert!(
-        warm.mean < cold.mean,
-        "warm incremental append must beat cold full prefill on the longest context"
-    );
+    if had::util::bench::quick_env() {
+        println!("(HAD_BENCH_QUICK set: skipping the warm-vs-cold perf gate)");
+    } else {
+        assert!(
+            warm.mean < cold.mean,
+            "warm incremental append must beat cold full prefill on the longest context"
+        );
+    }
 
     println!("\n== page-pool residency under skewed multi-turn traffic ==");
     // 2 hot sessions speak every turn; 8 one-shot cold sessions pass

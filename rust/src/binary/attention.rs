@@ -2,17 +2,30 @@
 //! bit-packed operands — binarize/pack, XNOR-popcount scores, top-N
 //! selection, sparse softmax, sparse AV accumulation.
 //!
+//! Since the kernel rewrite, `had_attention{,_paged}` run on the tiled
+//! `binary::kernel` engine (4-query register blocking, page-major key
+//! streaming, fused streaming top-N — see that module's docs). The
+//! original one-pair-at-a-time implementations are kept here as
+//! `had_attention_scalar{,_paged_scalar}`: they are the bit-exactness
+//! oracle the kernel is property-tested against, and the baseline the
+//! attention_kernels bench measures the blocked engine over.
+//!
 //! This is the Rust-side production fast path used by the serving
-//! coordinator when a request asks for the `cpu-bitpacked` backend, and
-//! the subject of the attention_kernels bench (vs the dense f32 oracle).
+//! coordinator when a request asks for the `cpu-bitpacked` backend.
 //! Cross-checked against tensor::ops oracles in unit tests and against
 //! the PJRT artifacts in integration tests.
 
 use crate::binary::bitpack::PackedMat;
 use crate::binary::hamming;
+use crate::binary::kernel::{self, StreamTopN};
 use crate::binary::topn::select_topn_counting;
 use crate::kvcache::SessionKv;
 use crate::tensor::{ops, Mat};
+
+/// Shared empty-cache contract: every attention entry point (contiguous,
+/// paged, scalar, blocked, pooled) rejects an empty KV with this exact
+/// message instead of panicking obscurely mid-loop.
+pub(crate) const EMPTY_KV_MSG: &str = "attention over an empty KV cache";
 
 /// Configuration of one attention head computation.
 #[derive(Clone, Copy, Debug)]
@@ -52,17 +65,20 @@ impl PackedKv {
 }
 
 /// Scratch buffers reused across calls (allocation-free hot loop — §Perf):
-/// integer scores, softmax probabilities, and the packed-query buffer
-/// (query packing re-binarizes per call but reuses this allocation).
+/// the packed-query buffer and softmax probabilities serve every path;
+/// `scores` is the full integer row only the scalar oracle materializes;
+/// `tops` is the kernel's per-query-block streaming top-N state.
 #[derive(Default)]
 pub struct Scratch {
-    scores: Vec<i32>,
-    probs: Vec<f32>,
-    qp: PackedMat,
+    pub(crate) scores: Vec<i32>,
+    pub(crate) probs: Vec<f32>,
+    pub(crate) qp: PackedMat,
+    pub(crate) tops: Vec<StreamTopN>,
 }
 
-/// Full HAD attention for a block of queries against one PackedKv.
-/// q: (n_q, d) continuous queries (binarized inside). Returns (n_q, d_v).
+/// Full HAD attention for a block of queries against one PackedKv, on the
+/// tiled kernel engine. q: (n_q, d) continuous queries (binarized
+/// inside). Returns (n_q, d_v). Bit-identical to `had_attention_scalar`.
 pub fn had_attention(q: &Mat, kv: &PackedKv, cfg: &HadAttnConfig) -> Mat {
     let mut scratch = Scratch::default();
     had_attention_with(q, kv, cfg, &mut scratch)
@@ -74,14 +90,51 @@ pub fn had_attention_with(
     cfg: &HadAttnConfig,
     scratch: &mut Scratch,
 ) -> Mat {
+    kernel::run_serial(q, &kernel::ContiguousSrc::new(kv), cfg, scratch)
+}
+
+/// Full HAD attention for a block of queries against a paged session
+/// cache, scoring XNOR-popcount directly over the non-contiguous pages
+/// without gathering them (page-major: each resident page is streamed
+/// once per 4-query block). Bit-identical to `had_attention` on the same
+/// keys and to `had_attention_paged_scalar`.
+pub fn had_attention_paged(q: &Mat, kv: &SessionKv, cfg: &HadAttnConfig) -> Mat {
+    let mut scratch = Scratch::default();
+    had_attention_paged_with(q, kv, cfg, &mut scratch)
+}
+
+pub fn had_attention_paged_with(
+    q: &Mat,
+    kv: &SessionKv,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+) -> Mat {
+    kernel::run_serial(q, &kernel::PagedSrc::new(kv), cfg, scratch)
+}
+
+/// The original scalar fast path, kept as the kernel's bit-exactness
+/// oracle: one (query, key) pair per iteration, full score-row
+/// materialization, top-N as a separate counting pass.
+pub fn had_attention_scalar(q: &Mat, kv: &PackedKv, cfg: &HadAttnConfig) -> Mat {
+    let mut scratch = Scratch::default();
+    had_attention_scalar_with(q, kv, cfg, &mut scratch)
+}
+
+pub fn had_attention_scalar_with(
+    q: &Mat,
+    kv: &PackedKv,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+) -> Mat {
     let d = q.cols;
     assert_eq!(d, kv.keys.d, "query/key dim mismatch");
     let n_k = kv.keys.rows;
+    assert!(n_k > 0, "{}", EMPTY_KV_MSG);
     let d_v = kv.values.cols;
     let n_top = cfg.n_top.clamp(1, n_k);
     let scale = cfg.temp / (d as f32).sqrt();
 
-    let Scratch { scores, probs, qp } = scratch;
+    let Scratch { scores, probs, qp, .. } = scratch;
     qp.pack_into(q.rows, d, &q.data);
     scores.resize(n_k, 0);
     probs.resize(n_top, 0.0);
@@ -117,16 +170,14 @@ pub fn had_attention_with(
     out
 }
 
-/// Full HAD attention for a block of queries against a paged session
-/// cache, scoring XNOR-popcount directly over the non-contiguous pages
-/// without gathering them. Arithmetic, selection, and accumulation order
-/// are identical to `had_attention`, so outputs match bit-for-bit.
-pub fn had_attention_paged(q: &Mat, kv: &SessionKv, cfg: &HadAttnConfig) -> Mat {
+/// Scalar oracle over a paged session cache (same arithmetic, selection,
+/// and accumulation order as `had_attention_scalar`, page-resolved keys).
+pub fn had_attention_paged_scalar(q: &Mat, kv: &SessionKv, cfg: &HadAttnConfig) -> Mat {
     let mut scratch = Scratch::default();
-    had_attention_paged_with(q, kv, cfg, &mut scratch)
+    had_attention_paged_scalar_with(q, kv, cfg, &mut scratch)
 }
 
-pub fn had_attention_paged_with(
+pub fn had_attention_paged_scalar_with(
     q: &Mat,
     kv: &SessionKv,
     cfg: &HadAttnConfig,
@@ -135,12 +186,12 @@ pub fn had_attention_paged_with(
     let d = q.cols;
     assert_eq!(d, kv.d(), "query/key dim mismatch");
     let n_k = kv.len();
-    assert!(n_k > 0, "attention over an empty session");
+    assert!(n_k > 0, "{}", EMPTY_KV_MSG);
     let d_v = kv.d_v();
     let n_top = cfg.n_top.clamp(1, n_k);
     let scale = cfg.temp / (d as f32).sqrt();
 
-    let Scratch { scores, probs, qp } = scratch;
+    let Scratch { scores, probs, qp, .. } = scratch;
     qp.pack_into(q.rows, d, &q.data);
     scores.resize(n_k, 0);
     probs.resize(n_top, 0.0);
@@ -225,6 +276,25 @@ mod tests {
                 fast.max_abs_diff(&want) < 1e-5,
                 "mismatch n_q={n_q} n_k={n_k} d={d}: {}",
                 fast.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_matches_scalar_bit_for_bit() {
+        let mut rng = Rng::new(40);
+        for (n_q, n_k, d, d_v, n_top) in
+            [(8, 32, 16, 8, 5), (3, 64, 64, 16, 64), (6, 100, 96, 32, 1), (1, 9, 33, 4, 4)]
+        {
+            let q = rand_mat(&mut rng, n_q, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, d_v);
+            let cfg = HadAttnConfig { n_top, temp: 0.9 };
+            let kv = PackedKv::new(&k, &v);
+            assert_eq!(
+                had_attention(&q, &kv, &cfg),
+                had_attention_scalar(&q, &kv, &cfg),
+                "n_q={n_q} n_k={n_k} d={d}"
             );
         }
     }
@@ -340,10 +410,34 @@ mod tests {
         let a = had_attention_with(&q, &kv, &cfg, &mut scratch);
         let b = had_attention_with(&q, &kv, &cfg, &mut scratch);
         assert_eq!(a, b);
-        // the same scratch serves paged calls of different geometry
+        // the same scratch serves paged, scalar, and kernel calls of
+        // different geometry
         let mut paged = SessionKv::new(32, 8, 5);
         paged.append(&k, &v);
         let c = had_attention_paged_with(&q, &paged, &cfg, &mut scratch);
         assert_eq!(a, c);
+        let d = had_attention_scalar_with(&q, &kv, &cfg, &mut scratch);
+        assert_eq!(a, d);
+    }
+
+    #[test]
+    #[should_panic(expected = "attention over an empty KV cache")]
+    fn contiguous_empty_kv_panics_with_unified_message() {
+        let kv = PackedKv::new(&Mat::zeros(0, 16), &Mat::zeros(0, 8));
+        had_attention(&Mat::zeros(1, 16), &kv, &HadAttnConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "attention over an empty KV cache")]
+    fn paged_empty_kv_panics_with_unified_message() {
+        let kv = SessionKv::new(16, 8, 4);
+        had_attention_paged(&Mat::zeros(1, 16), &kv, &HadAttnConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "attention over an empty KV cache")]
+    fn scalar_empty_kv_panics_with_unified_message() {
+        let kv = PackedKv::new(&Mat::zeros(0, 16), &Mat::zeros(0, 8));
+        had_attention_scalar(&Mat::zeros(1, 16), &kv, &HadAttnConfig::default());
     }
 }

@@ -80,6 +80,14 @@ impl PackedMat {
         &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
     }
 
+    /// Contiguous packed words of rows `lo..hi` — the tile-friendly block
+    /// view the blocked kernel streams (`(hi - lo) * words_per_row`
+    /// words).
+    #[inline]
+    pub fn block(&self, lo: usize, hi: usize) -> &[u64] {
+        &self.data[lo * self.words_per_row..hi * self.words_per_row]
+    }
+
     /// Bytes of the packed representation (the 32x story vs f32).
     pub fn bytes(&self) -> usize {
         self.data.len() * 8

@@ -26,6 +26,20 @@ pub fn binary_dot(a: &[u64], b: &[u64], d: usize) -> i32 {
     d as i32 - 2 * hamming(a, b) as i32
 }
 
+/// Monomorphized W-word Hamming distance: the fully-unrolled XOR/POPCNT
+/// chain shared by `score_matrix_w` and the tiled `binary::kernel`
+/// engine (`a` is a register-resident pattern, `b` a key-row slice of at
+/// least W words).
+#[inline(always)]
+pub(crate) fn hamming_w<const W: usize>(a: &[u64; W], b: &[u64]) -> u32 {
+    let b = &b[..W];
+    let mut ham = 0u32;
+    for t in 0..W {
+        ham += (a[t] ^ b[t]).count_ones();
+    }
+    ham
+}
+
 /// Score matrix: q_packed (n_q patterns) x k_packed (n_k patterns) ->
 /// row-major i32 scores (n_q x n_k), scores[i][j] = sign(q_i).sign(k_j).
 pub fn score_matrix(q: &PackedMat, k: &PackedMat, out: &mut [i32]) {
@@ -56,17 +70,11 @@ pub fn score_matrix(q: &PackedMat, k: &PackedMat, out: &mut [i32]) {
 fn score_matrix_w<const W: usize>(q: &PackedMat, k: &PackedMat, d: i32, out: &mut [i32]) {
     let n_k = k.rows;
     for i in 0..q.rows {
-        let qi: &[u64] = q.row(i);
         let mut qw = [0u64; W];
-        qw.copy_from_slice(&qi[..W]);
+        qw.copy_from_slice(&q.row(i)[..W]);
         let orow = &mut out[i * n_k..(i + 1) * n_k];
         for (j, o) in orow.iter_mut().enumerate() {
-            let kj = &k.data[j * W..j * W + W];
-            let mut ham = 0u32;
-            for t in 0..W {
-                ham += (qw[t] ^ kj[t]).count_ones();
-            }
-            *o = d - 2 * ham as i32;
+            *o = d - 2 * hamming_w::<W>(&qw, &k.data[j * W..j * W + W]) as i32;
         }
     }
 }

@@ -1,0 +1,653 @@
+//! Tiled multi-threaded XNOR-popcount scoring engine with fused
+//! streaming top-N — the blocked rewrite of the paper's Hamming scoring
+//! loop (Eqs. 4-6) that both attention fast paths now run on.
+//!
+//! ## Why a kernel module
+//!
+//! The original fast path (`binary::attention`, kept as the scalar
+//! oracle) scores one (query, key) pair at a time, materializes the full
+//! integer score row, and then runs top-N selection as a second pass over
+//! that row. Three structural costs fall out of that shape:
+//!
+//! 1. every packed key row is re-read once per query (no register reuse),
+//! 2. an `n_k`-sized score buffer is written and re-read per query (for a
+//!    128k-token context that is 512 KiB of traffic per query row), and
+//! 3. the whole computation runs on one core even though the serving
+//!    coordinator already owns a worker pool.
+//!
+//! ## Tile / threshold design
+//!
+//! **Register-blocked tiles.** Queries are processed in blocks of
+//! [`QUERY_BLOCK`] (= 4) rows. The block's packed query words are hoisted
+//! into stack arrays (`[[u64; W]; 4]`, monomorphized over `W =
+//! words_per_row` exactly like `hamming::score_matrix_w`), and the key
+//! stream is walked page-major: each contiguous key block — the whole
+//! `PackedMat` for the contiguous path, each resident `kvcache` page for
+//! the paged path — is streamed exactly once per query block, and every
+//! key row loaded from memory is scored against all 4 resident queries
+//! before moving on. Key-side memory traffic drops 4x; the XOR+POPCNT
+//! chain stays fully unrolled.
+//!
+//! **Fused streaming top-N.** Binary scores live in the tiny integer
+//! domain `[-d, +d]` (with the parity of `d`), so a counting histogram
+//! over the scores a query has *kept so far* is enough to maintain the
+//! exact running top-N threshold while scoring ([`StreamTopN`]). Each
+//! score is compared against the threshold the moment it is produced:
+//! once `n_top` candidates are live, a score at or below the cutoff is
+//! discarded inline — one compare, no write — and a better score bumps
+//! the cutoff via the histogram. Selection (Eq. 6) therefore finishes
+//! when scoring finishes: there is no second full-row pass and no
+//! `O(n_k)` score buffer at all, only `O(n_top)` candidate state per
+//! query. The kept set — including the "ties broken by lowest index"
+//! rule — is bit-identical to `topn::select_topn_counting` on the
+//! materialized row, which the property suite asserts.
+//!
+//! **Data parallelism.** [`had_attention_pooled`] /
+//! [`had_attention_paged_pooled`] shard query blocks via
+//! `util::threadpool::parallel_map`, with the pool supplying the
+//! concurrency budget (execution runs on scoped threads so shards may
+//! borrow the caller's stack); each shard owns its scratch, writes a
+//! disjoint range of output rows, and performs the exact same per-row
+//! arithmetic, so threaded output equals serial output bit for bit
+//! (also property-tested). The serving coordinator layers the second
+//! axis on top: sessions within a drained batch are sharded across its
+//! `kernel_workers` budget (`coordinator::server`).
+//!
+//! Everything downstream of selection — sparse softmax (Eq. 7) and
+//! sparse AV accumulation (Eq. 8) — deliberately reproduces the scalar
+//! oracle's operation order so outputs stay bit-identical end to end.
+
+use crate::binary::attention::{HadAttnConfig, PackedKv, Scratch, EMPTY_KV_MSG};
+use crate::binary::bitpack::PackedMat;
+use crate::binary::hamming::hamming_w;
+use crate::binary::topn::sort_entries;
+use crate::kvcache::SessionKv;
+use crate::tensor::Mat;
+use crate::util::threadpool::{parallel_map, shard_ranges, ThreadPool};
+
+/// Queries scored per tile: each key row loaded from memory is scored
+/// against this many resident queries before the next row is touched.
+pub const QUERY_BLOCK: usize = 4;
+
+/// Streaming exact top-N over the bounded integer score domain.
+///
+/// Scores arrive in ascending index order; `push` keeps the invariant
+/// that the live candidate set is exactly the top-`n_top` of the prefix
+/// seen so far, ties broken by lowest index (the shared lax.top_k
+/// convention). State is a `2d+1`-bucket histogram of live candidate
+/// scores plus an append-only candidate buffer that is compacted in
+/// place whenever it reaches twice the kept size, so memory stays
+/// `O(n_top)` regardless of context length.
+#[derive(Clone, Debug, Default)]
+pub struct StreamTopN {
+    d: usize,
+    n_top: usize,
+    /// Cutoff once `live == n_top`: scores <= thr can no longer enter.
+    thr: i32,
+    live: usize,
+    /// Histogram of live candidate scores, bucket `s + d`.
+    hist: Vec<u32>,
+    /// Admitted candidates in index order; may carry dead entries until
+    /// the next compaction. A dead entry is one whose score fell below
+    /// the advancing threshold after it was admitted.
+    cand: Vec<(i32, usize)>,
+    /// Compaction trigger for `cand`.
+    cap: usize,
+}
+
+impl StreamTopN {
+    pub fn new() -> StreamTopN {
+        StreamTopN::default()
+    }
+
+    /// Prepare for one score stream keeping `n_top` of scores in
+    /// `[-d, d]`. Reuses the histogram/candidate allocations.
+    pub fn reset(&mut self, n_top: usize, d: usize) {
+        self.d = d;
+        self.n_top = n_top.max(1);
+        self.thr = i32::MIN;
+        self.live = 0;
+        self.hist.clear();
+        self.hist.resize(2 * d + 1, 0);
+        self.cand.clear();
+        self.cap = 2 * self.n_top + 8;
+    }
+
+    /// Offer score `s` for key index `idx`. Indices must arrive in
+    /// ascending order (the tie-break rule depends on it). The common
+    /// long-context case — a score at or below the established cutoff —
+    /// is a single compare.
+    #[inline]
+    pub fn push(&mut self, s: i32, idx: usize) {
+        debug_assert!(s.unsigned_abs() as usize <= self.d, "score outside [-d, d]");
+        if self.live == self.n_top && s <= self.thr {
+            return;
+        }
+        self.admit(s, idx);
+    }
+
+    fn admit(&mut self, s: i32, idx: usize) {
+        if self.cand.len() == self.cap {
+            self.compact();
+        }
+        self.cand.push((s, idx));
+        let d = self.d as i32;
+        self.hist[(s + d) as usize] += 1;
+        if self.live < self.n_top {
+            self.live += 1;
+            if self.live == self.n_top {
+                // establish the cutoff: lowest non-empty bucket
+                let mut b = 0usize;
+                while self.hist[b] == 0 {
+                    b += 1;
+                }
+                self.thr = b as i32 - d;
+            }
+        } else {
+            // drop one live candidate at the cutoff (the latest-admitted
+            // one — future keeps never resurrect it, see compact())
+            let mut b = (self.thr + d) as usize;
+            self.hist[b] -= 1;
+            if self.hist[b] == 0 {
+                // terminates: the entry just admitted sits above thr
+                while self.hist[b] == 0 {
+                    b += 1;
+                }
+                self.thr = b as i32 - d;
+            }
+        }
+    }
+
+    /// Drop dead candidates: the live set is every entry above the
+    /// cutoff plus the FIRST `hist[thr]` entries at the cutoff (admission
+    /// is in index order and drops always removed the latest-admitted
+    /// cutoff entry, so earliest-index ties survive — the oracle rule).
+    fn compact(&mut self) {
+        let thr = self.thr;
+        let mut take = self.hist[(thr + self.d as i32) as usize];
+        self.cand.retain(|&(s, _)| {
+            if s > thr {
+                true
+            } else if s == thr && take > 0 {
+                take -= 1;
+                true
+            } else {
+                false
+            }
+        });
+    }
+
+    /// Finish the stream: the kept entries sorted by descending score,
+    /// ties by ascending index — exactly `select_topn_counting`'s output
+    /// on the full score row.
+    pub fn finish(&mut self) -> &[(i32, usize)] {
+        if self.live == self.n_top {
+            self.compact();
+        }
+        sort_entries(&mut self.cand);
+        &self.cand
+    }
+}
+
+/// A key store the kernel can stream: contiguous packed key blocks in
+/// ascending global-index order, plus value-row resolution. Implemented
+/// by the contiguous `PackedKv` layout (one block) and the paged
+/// `SessionKv` layout (one block per resident page).
+pub(crate) trait KeyBlocks: Sync {
+    fn d(&self) -> usize;
+    fn d_v(&self) -> usize;
+    fn n_k(&self) -> usize;
+    /// Visit every key block as `(base_index, n_rows, packed_words)`,
+    /// in ascending base order (`packed_words.len() == n_rows * w`).
+    fn for_each_block(&self, visit: &mut dyn FnMut(usize, usize, &[u64]));
+    fn value(&self, i: usize) -> &[f32];
+}
+
+/// Contiguous layout: the whole `PackedMat` is one tile-aligned block.
+pub(crate) struct ContiguousSrc<'a> {
+    keys: &'a PackedMat,
+    values: &'a Mat,
+}
+
+impl<'a> ContiguousSrc<'a> {
+    pub(crate) fn new(kv: &'a PackedKv) -> ContiguousSrc<'a> {
+        ContiguousSrc { keys: &kv.keys, values: &kv.values }
+    }
+}
+
+impl KeyBlocks for ContiguousSrc<'_> {
+    fn d(&self) -> usize {
+        self.keys.d
+    }
+    fn d_v(&self) -> usize {
+        self.values.cols
+    }
+    fn n_k(&self) -> usize {
+        self.keys.rows
+    }
+    fn for_each_block(&self, visit: &mut dyn FnMut(usize, usize, &[u64])) {
+        visit(0, self.keys.rows, self.keys.block(0, self.keys.rows));
+    }
+    fn value(&self, i: usize) -> &[f32] {
+        self.values.row(i)
+    }
+}
+
+/// Paged layout: one block per resident page, streamed page-major so each
+/// page is touched exactly once per query block.
+pub(crate) struct PagedSrc<'a> {
+    kv: &'a SessionKv,
+}
+
+impl<'a> PagedSrc<'a> {
+    pub(crate) fn new(kv: &'a SessionKv) -> PagedSrc<'a> {
+        PagedSrc { kv }
+    }
+}
+
+impl KeyBlocks for PagedSrc<'_> {
+    fn d(&self) -> usize {
+        self.kv.d()
+    }
+    fn d_v(&self) -> usize {
+        self.kv.d_v()
+    }
+    fn n_k(&self) -> usize {
+        self.kv.len()
+    }
+    fn for_each_block(&self, visit: &mut dyn FnMut(usize, usize, &[u64])) {
+        let mut base = 0usize;
+        for page in self.kv.pages() {
+            if !page.is_empty() {
+                visit(base, page.len(), page.keys_packed());
+            }
+            base += page.len();
+        }
+    }
+    fn value(&self, i: usize) -> &[f32] {
+        self.kv.value(i)
+    }
+}
+
+/// Score one key block against a resident query block, feeding each
+/// score straight into its query's streaming top-N (the fusion point:
+/// selection happens here, not in a second pass).
+fn score_block_w<const W: usize>(
+    d: i32,
+    qw: &[[u64; W]],
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    debug_assert_eq!(keys.len(), n_rows * W);
+    debug_assert_eq!(qw.len(), tops.len());
+    for j in 0..n_rows {
+        let kj = &keys[j * W..j * W + W];
+        for (qi, top) in qw.iter().zip(tops.iter_mut()) {
+            top.push(d - 2 * hamming_w::<W>(qi, kj) as i32, base + j);
+        }
+    }
+}
+
+/// Monomorphized query-block scorer: hoist the block's packed query
+/// words into registers, then stream every key block once.
+fn stream_scores_w<const W: usize>(
+    d: i32,
+    qp: &PackedMat,
+    q0: usize,
+    qb: usize,
+    src: &dyn KeyBlocks,
+    tops: &mut [StreamTopN],
+) {
+    debug_assert_eq!(qp.words_per_row, W);
+    let mut qw = [[0u64; W]; QUERY_BLOCK];
+    for (t, qwt) in qw.iter_mut().take(qb).enumerate() {
+        qwt.copy_from_slice(&qp.row(q0 + t)[..W]);
+    }
+    src.for_each_block(&mut |base, n_rows, keys| {
+        score_block_w::<W>(d, &qw[..qb], n_rows, keys, base, &mut *tops);
+    });
+}
+
+/// Fallback for wide heads (d > 256): dynamic word count, same blocking.
+fn stream_scores_dyn(
+    d: i32,
+    qp: &PackedMat,
+    q0: usize,
+    qb: usize,
+    src: &dyn KeyBlocks,
+    tops: &mut [StreamTopN],
+) {
+    let w = qp.words_per_row;
+    src.for_each_block(&mut |base, n_rows, keys| {
+        for j in 0..n_rows {
+            let kj = &keys[j * w..(j + 1) * w];
+            for t in 0..qb {
+                let qi = qp.row(q0 + t);
+                let mut ham = 0u32;
+                for (x, y) in qi.iter().zip(kj) {
+                    ham += (x ^ y).count_ones();
+                }
+                tops[t].push(d - 2 * ham as i32, base + j);
+            }
+        }
+    });
+}
+
+fn stream_scores(
+    d_bits: usize,
+    qp: &PackedMat,
+    q0: usize,
+    qb: usize,
+    src: &dyn KeyBlocks,
+    tops: &mut [StreamTopN],
+) {
+    let d = d_bits as i32;
+    match qp.words_per_row {
+        1 => stream_scores_w::<1>(d, qp, q0, qb, src, tops),
+        2 => stream_scores_w::<2>(d, qp, q0, qb, src, tops),
+        3 => stream_scores_w::<3>(d, qp, q0, qb, src, tops),
+        4 => stream_scores_w::<4>(d, qp, q0, qb, src, tops),
+        _ => stream_scores_dyn(d, qp, q0, qb, src, tops),
+    }
+}
+
+/// Sparse softmax + AV accumulation over the kept entries — operation
+/// order copied verbatim from the scalar oracle (Eqs. 7-8) so outputs
+/// match bit for bit.
+fn finalize_row(
+    kept: &[(i32, usize)],
+    scale: f32,
+    src: &dyn KeyBlocks,
+    probs: &mut [f32],
+    orow: &mut [f32],
+) {
+    let probs = &mut probs[..kept.len()];
+    let max = kept[0].0 as f32 * scale; // kept is sorted descending
+    let mut sum = 0.0f32;
+    for (p, &(s, _)) in probs.iter_mut().zip(kept) {
+        *p = (s as f32 * scale - max).exp();
+        sum += *p;
+    }
+    let inv = 1.0 / sum;
+    for (&p, &(_, j)) in probs.iter().zip(kept) {
+        let w = p * inv;
+        let vrow = src.value(j);
+        for (o, &v) in orow.iter_mut().zip(vrow) {
+            *o += w * v;
+        }
+    }
+}
+
+/// Score query rows `[lo, hi)` (`lo` tile-aligned) and write their
+/// output rows into `out_rows` (`(hi - lo) * d_v` floats). This is the
+/// single shared per-shard body of the serial and pooled engines — one
+/// copy of the block loop, so the two cannot drift apart and break the
+/// pooled == serial bit-identity invariant.
+#[allow(clippy::too_many_arguments)]
+fn score_rows(
+    qp: &PackedMat,
+    src: &dyn KeyBlocks,
+    lo: usize,
+    hi: usize,
+    d: usize,
+    n_top: usize,
+    scale: f32,
+    tops: &mut [StreamTopN],
+    probs: &mut [f32],
+    out_rows: &mut [f32],
+) {
+    let d_v = src.d_v();
+    let mut q0 = lo;
+    while q0 < hi {
+        let qb = QUERY_BLOCK.min(hi - q0);
+        for top in tops.iter_mut().take(qb) {
+            top.reset(n_top, d);
+        }
+        stream_scores(d, qp, q0, qb, src, &mut tops[..qb]);
+        for t in 0..qb {
+            let kept = tops[t].finish();
+            let r0 = (q0 - lo + t) * d_v;
+            finalize_row(kept, scale, src, probs, &mut out_rows[r0..r0 + d_v]);
+        }
+        q0 += qb;
+    }
+}
+
+/// Serial blocked engine: the body behind `had_attention_with` and
+/// `had_attention_paged_with`.
+pub(crate) fn run_serial(
+    q: &Mat,
+    src: &dyn KeyBlocks,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+) -> Mat {
+    let d = q.cols;
+    assert_eq!(d, src.d(), "query/key dim mismatch");
+    let n_k = src.n_k();
+    assert!(n_k > 0, "{}", EMPTY_KV_MSG);
+    let d_v = src.d_v();
+    let n_top = cfg.n_top.clamp(1, n_k);
+    let scale = cfg.temp / (d as f32).sqrt();
+
+    let Scratch { probs, qp, tops, .. } = scratch;
+    qp.pack_into(q.rows, d, &q.data);
+    probs.resize(n_top, 0.0);
+    if tops.len() < QUERY_BLOCK {
+        tops.resize_with(QUERY_BLOCK, StreamTopN::default);
+    }
+
+    let mut out = Mat::zeros(q.rows, d_v);
+    score_rows(qp, src, 0, q.rows, d, n_top, scale, tops, probs, &mut out.data);
+    out
+}
+
+/// Threaded blocked engine: shard query blocks across the pool via
+/// `parallel_map`. Each shard runs the same `score_rows` body on a
+/// disjoint output range, so the result equals `run_serial` bit for bit
+/// regardless of worker count.
+pub(crate) fn run_pooled(
+    q: &Mat,
+    src: &dyn KeyBlocks,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+) -> Mat {
+    let d = q.cols;
+    assert_eq!(d, src.d(), "query/key dim mismatch");
+    let n_k = src.n_k();
+    assert!(n_k > 0, "{}", EMPTY_KV_MSG);
+    let d_v = src.d_v();
+    let n_top = cfg.n_top.clamp(1, n_k);
+    let scale = cfg.temp / (d as f32).sqrt();
+
+    let qp = PackedMat::pack(q.rows, d, &q.data);
+    let shards = shard_ranges(q.rows, pool.n_workers(), QUERY_BLOCK);
+    let chunks: Vec<Vec<f32>> = parallel_map(pool, &shards, |_, &(lo, hi)| {
+        let mut tops: Vec<StreamTopN> = Vec::new();
+        tops.resize_with(QUERY_BLOCK, StreamTopN::default);
+        let mut probs = vec![0.0f32; n_top];
+        let mut rows = vec![0.0f32; (hi - lo) * d_v];
+        score_rows(&qp, src, lo, hi, d, n_top, scale, &mut tops, &mut probs, &mut rows);
+        rows
+    });
+
+    let mut out = Mat::zeros(q.rows, d_v);
+    for (chunk, &(lo, hi)) in chunks.iter().zip(&shards) {
+        out.data[lo * d_v..hi * d_v].copy_from_slice(chunk);
+    }
+    out
+}
+
+/// Threaded HAD attention over a contiguous `PackedKv`; bit-identical to
+/// `had_attention` at any worker count.
+pub fn had_attention_pooled(
+    q: &Mat,
+    kv: &PackedKv,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+) -> Mat {
+    run_pooled(q, &ContiguousSrc::new(kv), cfg, pool)
+}
+
+/// Threaded HAD attention over a paged session cache; bit-identical to
+/// `had_attention_paged` at any worker count.
+pub fn had_attention_paged_pooled(
+    q: &Mat,
+    kv: &SessionKv,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+) -> Mat {
+    run_pooled(q, &PagedSrc::new(kv), cfg, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binary::attention::{
+        had_attention, had_attention_paged, had_attention_paged_scalar, had_attention_scalar,
+    };
+    use crate::binary::topn::select_topn_counting;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::random(r, c, rng, 1.0)
+    }
+
+    fn stream_all(scores: &[i32], n_top: usize, d: usize) -> Vec<(i32, usize)> {
+        let mut st = StreamTopN::new();
+        st.reset(n_top, d);
+        for (i, &s) in scores.iter().enumerate() {
+            st.push(s, i);
+        }
+        st.finish().to_vec()
+    }
+
+    #[test]
+    fn stream_topn_matches_counting_randomized() {
+        let mut rng = Rng::new(31);
+        for _ in 0..300 {
+            let d = rng.range_usize(1, 96);
+            let n = rng.range_usize(1, 400);
+            let n_top = match rng.range_usize(0, 3) {
+                0 => 1,
+                1 => n,
+                _ => rng.range_usize(1, n + 1),
+            };
+            let scores: Vec<i32> = (0..n)
+                .map(|_| rng.below((2 * d + 1) as u64) as i32 - d as i32)
+                .collect();
+            assert_eq!(
+                stream_all(&scores, n_top, d),
+                select_topn_counting(&scores, n_top, d),
+                "d={d} n={n} N={n_top}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_topn_adversarial_orders() {
+        // ascending scores force maximal admissions (every score beats
+        // the cutoff), exercising compaction; constant scores force
+        // maximal ties.
+        let d = 16usize;
+        for n_top in [1usize, 5, 64] {
+            let asc: Vec<i32> = (0..500).map(|i| (i % (2 * d as i32 + 1)) - d as i32).collect();
+            let mut sorted = asc.clone();
+            sorted.sort_unstable();
+            for scores in [&sorted, &asc, &vec![3i32; 500]] {
+                assert_eq!(
+                    stream_all(scores, n_top, d),
+                    select_topn_counting(scores, n_top, d),
+                    "N={n_top}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_topn_memory_stays_bounded() {
+        // worst case (sorted ascending) must not grow past the
+        // compaction cap even with 50k keys
+        let mut st = StreamTopN::new();
+        st.reset(10, 32);
+        for i in 0..50_000usize {
+            st.push((i % 65) as i32 - 32, i);
+        }
+        assert!(st.cand.len() <= st.cap, "{} > {}", st.cand.len(), st.cap);
+        assert_eq!(st.finish().len(), 10);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_contiguous() {
+        let mut rng = Rng::new(5);
+        // n_q covering full and partial query blocks; ragged dims
+        for (n_q, n_k, d, n_top) in
+            [(1usize, 7usize, 16usize, 3usize), (4, 64, 64, 9), (5, 33, 65, 33), (11, 100, 96, 1)]
+        {
+            let q = rand_mat(&mut rng, n_q, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, 8);
+            let kv = PackedKv::new(&k, &v);
+            let cfg = HadAttnConfig { n_top, temp: 0.8 };
+            assert_eq!(
+                had_attention(&q, &kv, &cfg),
+                had_attention_scalar(&q, &kv, &cfg),
+                "n_q={n_q} n_k={n_k} d={d} N={n_top}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_paged() {
+        let mut rng = Rng::new(6);
+        // page sizes that straddle the 4-query tile and word boundaries
+        for (n_k, d, page_tokens) in [(32usize, 64usize, 3usize), (33, 65, 8), (100, 130, 7)] {
+            let q = rand_mat(&mut rng, 6, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, 8);
+            let mut paged = SessionKv::new(d, 8, page_tokens);
+            paged.append(&k, &v);
+            let cfg = HadAttnConfig { n_top: 9, temp: 1.0 };
+            assert_eq!(
+                had_attention_paged(&q, &paged, &cfg),
+                had_attention_paged_scalar(&q, &paged, &cfg),
+                "n_k={n_k} d={d} page={page_tokens}"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_matches_serial_any_worker_count() {
+        let mut rng = Rng::new(7);
+        let (n_q, n_k, d, d_v) = (13usize, 70usize, 48usize, 8usize);
+        let q = rand_mat(&mut rng, n_q, d);
+        let k = rand_mat(&mut rng, n_k, d);
+        let v = rand_mat(&mut rng, n_k, d_v);
+        let kv = PackedKv::new(&k, &v);
+        let cfg = HadAttnConfig { n_top: 12, temp: 1.0 };
+        let want = had_attention(&q, &kv, &cfg);
+        let mut paged = SessionKv::new(d, d_v, 16);
+        paged.append(&k, &v);
+        let want_paged = had_attention_paged(&q, &paged, &cfg);
+        assert_eq!(want, want_paged);
+        for workers in 1..=4 {
+            let pool = ThreadPool::new(workers);
+            assert_eq!(want, had_attention_pooled(&q, &kv, &cfg, &pool), "w={workers}");
+            assert_eq!(
+                want,
+                had_attention_paged_pooled(&q, &paged, &cfg, &pool),
+                "paged w={workers}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "attention over an empty KV cache")]
+    fn pooled_empty_kv_panics_with_unified_message() {
+        let pool = ThreadPool::new(1);
+        let kv = SessionKv::new(8, 4, 4);
+        let q = Mat::zeros(1, 8);
+        had_attention_paged_pooled(&q, &kv, &HadAttnConfig::default(), &pool);
+    }
+}

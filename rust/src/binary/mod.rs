@@ -2,16 +2,20 @@
 //!
 //! `bitpack` packs sign bits (32x smaller K at rest), `hamming` computes
 //! the XNOR-popcount score matrix, `topn` does deterministic top-N
-//! selection over the tiny integer score domain, and `attention` fuses
-//! the whole pipeline (Eqs. 4-8) allocation-free.
+//! selection over the tiny integer score domain, `kernel` is the tiled
+//! multi-threaded scoring engine with fused streaming top-N, and
+//! `attention` exposes the whole pipeline (Eqs. 4-8) — kernel-backed
+//! fast paths plus the retained scalar oracles.
 
 pub mod attention;
 pub mod bitpack;
 pub mod hamming;
+pub mod kernel;
 pub mod topn;
 
 pub use attention::{
-    had_attention, had_attention_paged, had_attention_ref, standard_attention_ref,
-    HadAttnConfig, PackedKv,
+    had_attention, had_attention_paged, had_attention_paged_scalar, had_attention_ref,
+    had_attention_scalar, standard_attention_ref, HadAttnConfig, PackedKv,
 };
 pub use bitpack::PackedMat;
+pub use kernel::{had_attention_paged_pooled, had_attention_pooled, StreamTopN, QUERY_BLOCK};

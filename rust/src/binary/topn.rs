@@ -10,6 +10,13 @@
 //!  * `select_topn_counting` — counting selection exploiting the tiny
 //!    integer domain (2d+1 buckets), O(n + d); the §Perf winner for d<=256.
 
+/// Canonical kept-entry order: descending score, ties by ascending index
+/// — the one comparator every selection path (counting, heap, and the
+/// kernel's streaming top-N) must share for bit-identical outputs.
+pub fn sort_entries(entries: &mut [(i32, usize)]) {
+    entries.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+}
+
 /// (score, index) pairs of the selected entries, sorted by descending
 /// score then ascending index.
 pub fn select_topn_heap(scores: &[i32], n_top: usize) -> Vec<(i32, usize)> {
@@ -85,7 +92,7 @@ pub fn select_topn_counting(scores: &[i32], n_top: usize, d: usize) -> Vec<(i32,
             at_cutoff += 1;
         }
     }
-    out.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    sort_entries(&mut out);
     out
 }
 

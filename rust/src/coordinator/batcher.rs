@@ -17,6 +17,11 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// admission bound per bucket (backpressure)
     pub queue_cap: usize,
+    /// worker budget for the CPU kernel pass backing batch execution: a
+    /// drained batch's session requests are sharded across this many
+    /// scoped threads for blocked XNOR-popcount scoring (per-request
+    /// kernel timing lands in Metrics)
+    pub kernel_workers: usize,
 }
 
 impl Default for BatchPolicy {
@@ -25,6 +30,7 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_cap: 256,
+            kernel_workers: 2,
         }
     }
 }
@@ -135,6 +141,15 @@ mod tests {
 
     fn bucket() -> Bucket {
         Bucket { config: "longqa_128".into(), n_ctx: 128, batch: 4 }
+    }
+
+    #[test]
+    fn default_policy_backs_execution_with_workers() {
+        let p = BatchPolicy::default();
+        assert!(p.kernel_workers >= 1, "batch execution needs a worker pool");
+        // queue knobs unchanged by the kernel pool addition
+        assert_eq!(p.max_batch, 8);
+        assert_eq!(p.queue_cap, 256);
     }
 
     #[test]

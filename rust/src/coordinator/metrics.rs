@@ -18,6 +18,19 @@ struct Inner {
     // absolute pool gauges, refreshed at each session admission
     cache_bytes: u64,
     cache_evictions: u64,
+    // per-request CPU kernel timings from the scheduler's blocked
+    // XNOR-popcount scoring pass over resident session pages
+    kernel_us: Vec<u128>,
+}
+
+/// Percentile of a sorted sample (0 on empty) — shared by the latency and
+/// kernel-timing snapshots.
+fn pct(sorted: &[u128], p: f64) -> u128 {
+    if sorted.is_empty() {
+        0
+    } else {
+        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+    }
 }
 
 /// Thread-safe metrics sink shared by batcher and server threads.
@@ -49,6 +62,12 @@ pub struct Snapshot {
     pub cache_bytes: u64,
     /// cumulative pool evictions at the last admission
     pub cache_evictions: u64,
+    /// requests that went through the scheduler's CPU kernel pass
+    pub kernel_requests: u64,
+    /// per-request kernel time percentiles/mean (µs; 0 with no kernel traffic)
+    pub kernel_p50_us: u128,
+    pub kernel_p99_us: u128,
+    pub kernel_mean_us: f64,
 }
 
 impl Metrics {
@@ -83,25 +102,26 @@ impl Metrics {
         g.cache_evictions = evictions;
     }
 
+    /// One request's share of the batch kernel pass: the CPU time the
+    /// blocked XNOR-popcount kernel spent scoring its session pages.
+    pub fn record_kernel(&self, us: u128) {
+        self.inner.lock().unwrap().kernel_us.push(us);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
         lat.sort_unstable();
-        let pct = |p: f64| -> u128 {
-            if lat.is_empty() {
-                0
-            } else {
-                lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)]
-            }
-        };
+        let mut kern = g.kernel_us.clone();
+        kern.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
             requests: g.requests,
             batches: g.batches,
             rejected: g.rejected,
-            p50_us: pct(0.50),
-            p90_us: pct(0.90),
-            p99_us: pct(0.99),
+            p50_us: pct(&lat, 0.50),
+            p90_us: pct(&lat, 0.90),
+            p99_us: pct(&lat, 0.99),
             mean_us: if lat.is_empty() {
                 0.0
             } else {
@@ -126,6 +146,14 @@ impl Metrics {
             },
             cache_bytes: g.cache_bytes,
             cache_evictions: g.cache_evictions,
+            kernel_requests: kern.len() as u64,
+            kernel_p50_us: pct(&kern, 0.50),
+            kernel_p99_us: pct(&kern, 0.99),
+            kernel_mean_us: if kern.is_empty() {
+                0.0
+            } else {
+                kern.iter().sum::<u128>() as f64 / kern.len() as f64
+            },
         }
     }
 }
@@ -153,6 +181,15 @@ impl Snapshot {
                 100.0 * self.cache_hit_rate,
                 self.cache_bytes / 1024,
                 self.cache_evictions,
+            );
+        }
+        if self.kernel_requests > 0 {
+            println!(
+                "{label}: kernel: {} reqs scored | p50 {:.2} ms p99 {:.2} ms mean {:.2} ms per request",
+                self.kernel_requests,
+                self.kernel_p50_us as f64 / 1e3,
+                self.kernel_p99_us as f64 / 1e3,
+                self.kernel_mean_us / 1e3,
             );
         }
     }
@@ -192,6 +229,20 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.cache_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn kernel_timings() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().kernel_requests, 0);
+        for us in [10u128, 20, 30, 40] {
+            m.record_kernel(us);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.kernel_requests, 4);
+        assert_eq!(s.kernel_p50_us, 30);
+        assert_eq!(s.kernel_p99_us, 40);
+        assert!((s.kernel_mean_us - 25.0).abs() < 1e-9);
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct Response {
     pub batch_occupancy: usize,
     /// tokens served from resident KV pages (0 for sessionless requests)
     pub cached_tokens: usize,
+    /// CPU time the scheduler's blocked XNOR-popcount kernel spent
+    /// scoring this request's resident session pages (0 when no kernel
+    /// pass ran, e.g. sessionless requests)
+    pub kernel_us: u128,
 }
 
 /// Why a request was rejected.

@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::binary::HadAttnConfig;
 use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{RejectReason, Request, Response, SessionInfo};
@@ -28,6 +29,7 @@ use crate::model::Checkpoint;
 use crate::runtime::{EngineHandle, HostTensor, Manifest};
 use crate::tensor::ops::argmax;
 use crate::tensor::Mat;
+use crate::util::threadpool::parallel_map_n;
 
 /// Weights + calibration served for one bucket.
 #[derive(Clone)]
@@ -77,6 +79,11 @@ pub const SESSION_VOCAB: usize = 256;
 /// Head geometry of the admission-side packed KV pages.
 pub const SESSION_KEY_DIM: usize = 64;
 pub const SESSION_VAL_DIM: usize = 64;
+/// Query rows the scheduler's kernel pass featurizes per session request
+/// (a decode-style block over the turn's most recent tokens).
+const KERNEL_QUERY_ROWS: usize = 8;
+/// Top-N the scheduler's kernel pass keeps (clamped to the context).
+const KERNEL_TOP_N: usize = 32;
 
 /// Session-side admission state: per-session token histories plus the
 /// byte-budgeted page pool holding each session's packed K/V.
@@ -94,17 +101,21 @@ pub struct SessionStore {
     val_emb: Mat,
 }
 
+/// Map tokens to rows of one embedding table (row = token % vocab) — the
+/// key-only half, enough for query featurization.
+fn featurize_one(emb: &Mat, tokens: &[i32]) -> Mat {
+    let mut out = Mat::zeros(tokens.len(), emb.cols);
+    for (i, &t) in tokens.iter().enumerate() {
+        let row = t.rem_euclid(SESSION_VOCAB as i32) as usize;
+        out.row_mut(i).copy_from_slice(emb.row(row));
+    }
+    out
+}
+
 /// Map tokens to K/V rows via the embedding tables (row = token % vocab).
 /// Free function so `admit` can featurize a borrowed history slice.
 fn featurize(key_emb: &Mat, val_emb: &Mat, tokens: &[i32]) -> (Mat, Mat) {
-    let mut k = Mat::zeros(tokens.len(), key_emb.cols);
-    let mut v = Mat::zeros(tokens.len(), val_emb.cols);
-    for (i, &t) in tokens.iter().enumerate() {
-        let row = t.rem_euclid(SESSION_VOCAB as i32) as usize;
-        k.row_mut(i).copy_from_slice(key_emb.row(row));
-        v.row_mut(i).copy_from_slice(val_emb.row(row));
-    }
-    (k, v)
+    (featurize_one(key_emb, tokens), featurize_one(val_emb, tokens))
 }
 
 impl SessionStore {
@@ -162,6 +173,20 @@ impl SessionStore {
     /// Borrow the resident pages for paged scoring (refreshes LRU).
     pub fn kv(&mut self, session_id: u64) -> Option<&SessionKv> {
         self.pool.get(session_id)
+    }
+
+    /// Featurize the last `n_q` tokens of a session's history as a query
+    /// block for the kernel scoring pass (same embedding space as the
+    /// keys, so Hamming scores are meaningful; the value half is not
+    /// computed — this runs under the sessions lock). None when the
+    /// session has no history.
+    pub fn featurize_queries(&self, session_id: u64, n_q: usize) -> Option<Mat> {
+        let hist = self.histories.get(&session_id)?;
+        if hist.is_empty() {
+            return None;
+        }
+        let lo = hist.len().saturating_sub(n_q);
+        Some(featurize_one(&self.key_emb, &hist[lo..]))
     }
 
     pub fn pool(&self) -> &PagePool {
@@ -244,24 +269,36 @@ impl Server {
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
+        let sessions = Arc::new(Mutex::new(SessionStore::new(
+            kv,
+            SESSION_KEY_DIM,
+            SESSION_VAL_DIM,
+            kv_seed,
+        )));
 
         let sched_shared = Arc::clone(&shared);
         let sched_metrics = Arc::clone(&metrics);
+        let sched_sessions = Arc::clone(&sessions);
+        let kernel_workers = policy.kernel_workers.max(1);
         let scheduler = std::thread::Builder::new()
             .name("had-scheduler".into())
-            .spawn(move || scheduler_main(sched_shared, engine, models, sched_metrics))
+            .spawn(move || {
+                scheduler_main(
+                    sched_shared,
+                    engine,
+                    models,
+                    sched_metrics,
+                    sched_sessions,
+                    kernel_workers,
+                )
+            })
             .context("spawning scheduler")?;
 
         Ok(Server {
             router,
             shared,
             metrics,
-            sessions: Arc::new(Mutex::new(SessionStore::new(
-                kv,
-                SESSION_KEY_DIM,
-                SESSION_VAL_DIM,
-                kv_seed,
-            ))),
+            sessions,
             next_id: AtomicU64::new(0),
             scheduler: Some(scheduler),
         })
@@ -398,11 +435,72 @@ impl Drop for Server {
     }
 }
 
+/// Score one drained batch's session requests with the blocked
+/// XNOR-popcount kernel, sessions sharded across `workers` scoped
+/// threads. Returns the per-request kernel time (µs; 0 for sessionless
+/// requests or sessions whose pages were evicted between admission and
+/// execution).
+///
+/// The sessions lock is taken once per request, only long enough to
+/// snapshot that request's `SessionKv` and featurize its query block —
+/// the snapshot copies the f32 value pages too, which dominates its
+/// cost, so holds are kept per-request rather than one batch-wide hold
+/// (Arc-shared pages are the follow-up that would drop the copy, see
+/// ROADMAP). Scoring itself runs lock-free, so concurrent admissions
+/// stall at most for one snapshot, never for the scoring pass.
+///
+/// This is the CPU-bitpacked scoring pass of batch execution: each
+/// request's decode-style query block (its most recent tokens,
+/// featurized like the keys) attends over the session's resident packed
+/// pages. Until the full CPU serving backend replaces PJRT re-execution
+/// (ROADMAP §attention kernel), its product is the per-request kernel
+/// timing recorded in `Metrics` and echoed on the `Response`.
+fn kernel_pass(
+    workers: usize,
+    sessions: &Mutex<SessionStore>,
+    reqs: &[Request],
+    metrics: &Metrics,
+) -> Vec<u128> {
+    let mut kernel_us = vec![0u128; reqs.len()];
+    if !reqs.iter().any(|r| r.session.is_some()) {
+        return kernel_us;
+    }
+    let mut jobs: Vec<(usize, Mat, SessionKv)> = Vec::new();
+    for (slot, r) in reqs.iter().enumerate() {
+        let Some(s) = r.session else { continue };
+        // one bounded lock hold per request, released before scoring
+        let store = sessions.lock().unwrap();
+        let Some(kv) = store.pool().peek(s.id) else { continue };
+        if kv.is_empty() {
+            continue;
+        }
+        let Some(q) = store.featurize_queries(s.id, KERNEL_QUERY_ROWS) else { continue };
+        jobs.push((slot, q, kv.clone()));
+    }
+    if jobs.is_empty() {
+        return kernel_us;
+    }
+    let cfg = HadAttnConfig { n_top: KERNEL_TOP_N, temp: 1.0 };
+    let timed = parallel_map_n(workers, &jobs, |_, (slot, q, kv)| {
+        let t0 = Instant::now();
+        let out = crate::binary::had_attention_paged(q, kv, &cfg);
+        std::hint::black_box(&out);
+        (*slot, t0.elapsed().as_micros())
+    });
+    for (slot, us) in timed {
+        kernel_us[slot] = us;
+        metrics.record_kernel(us);
+    }
+    kernel_us
+}
+
 fn scheduler_main(
     shared: Arc<Shared>,
     engine: EngineHandle,
     models: Vec<ServingModel>,
     metrics: Arc<Metrics>,
+    sessions: Arc<Mutex<SessionStore>>,
+    kernel_workers: usize,
 ) {
     let mut served = 0u64;
     loop {
@@ -444,6 +542,7 @@ fn scheduler_main(
         };
 
         // assemble and execute OUTSIDE the queue lock
+        let kernel_us = kernel_pass(kernel_workers, &sessions, &reqs, &metrics);
         let (xs, real) = assemble_padded(&reqs, bucket.n_ctx, bucket.batch, crate::data::PAD);
         let mut inputs: Vec<HostTensor> = model.params.clone();
         inputs.push(HostTensor::i32(vec![bucket.batch, bucket.n_ctx], xs));
@@ -471,6 +570,7 @@ fn scheduler_main(
                         latency_us: *latency_us,
                         batch_occupancy: real,
                         cached_tokens: req.session.map_or(0, |s| s.cached_tokens),
+                        kernel_us: kernel_us[b],
                     });
                     served += 1;
                 }
@@ -536,6 +636,47 @@ mod tests {
         assert_eq!(store.tokens(1), &[9, 10]);
         assert_eq!(store.kv(1).unwrap().len(), 2);
         assert!(store.pool().stats().evictions >= 1);
+    }
+
+    #[test]
+    fn featurize_queries_matches_key_featurization_of_tail() {
+        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 5);
+        assert!(store.featurize_queries(1, 4).is_none(), "no history yet");
+        store.admit(1, &[1, 2, 3, 4, 5, 6]);
+        let q = store.featurize_queries(1, 4).unwrap();
+        assert_eq!((q.rows, q.cols), (4, 16));
+        // queries share the keys' embedding space: packing the query
+        // block must reproduce the resident packed keys of the last 4
+        // tokens exactly
+        let qp = crate::binary::PackedMat::pack(4, 16, &q.data);
+        let kv = store.kv(1).unwrap();
+        for (i, tok) in (2..6).enumerate() {
+            assert_eq!(qp.row(i), kv.key(tok), "token {tok}");
+        }
+        // n_q larger than the history clamps to the whole history
+        assert_eq!(store.featurize_queries(1, 100).unwrap().rows, 6);
+    }
+
+    #[test]
+    fn kernel_pass_times_session_requests_only() {
+        let sessions = Mutex::new(SessionStore::new(tiny_cfg(100), 16, 8, 6));
+        let info = sessions.lock().unwrap().admit(3, &[1, 2, 3, 4, 5]);
+        let metrics = Metrics::default();
+        let mk = |id: u64, session: Option<SessionInfo>| {
+            let (tx, rx) = channel();
+            std::mem::forget(rx); // keep the reply channel alive
+            Request { id, tokens: vec![1; 5], arrival: Instant::now(), reply: tx, session }
+        };
+        let reqs = vec![mk(0, None), mk(1, Some(info))];
+        let us = kernel_pass(2, &sessions, &reqs, &metrics);
+        assert_eq!(us.len(), 2);
+        assert_eq!(us[0], 0, "sessionless requests skip the kernel pass");
+        assert_eq!(metrics.snapshot().kernel_requests, 1, "one session request scored");
+        // a session whose pages are gone is skipped, not an error
+        let ghost = SessionInfo { id: 999, cached_tokens: 0, appended_tokens: 1 };
+        let us2 = kernel_pass(2, &sessions, &[mk(2, Some(ghost))], &metrics);
+        assert_eq!(us2, vec![0]);
+        assert_eq!(metrics.snapshot().kernel_requests, 1);
     }
 
     #[test]

@@ -79,6 +79,14 @@ impl Page {
         &self.keys[i * self.words_per_key..(i + 1) * self.words_per_key]
     }
 
+    /// All packed key words of the filled rows as one contiguous block
+    /// (`len * words_per_key` words) — the tile the blocked kernel
+    /// streams so a resident page is touched once per query block.
+    #[inline]
+    pub fn keys_packed(&self) -> &[u64] {
+        &self.keys[..self.len * self.words_per_key]
+    }
+
     /// f32 value row of token `i`.
     #[inline]
     pub fn value(&self, i: usize) -> &[f32] {
@@ -122,6 +130,25 @@ mod tests {
             for i in 0..n {
                 assert_eq!(page.key(i), reference.row(i), "d={d} token {i}");
                 assert_eq!(page.value(i), &vs[i * d_v..(i + 1) * d_v]);
+            }
+        }
+    }
+
+    #[test]
+    fn keys_packed_is_the_concatenation_of_rows() {
+        let mut rng = Rng::new(2);
+        for d in [16usize, 64, 65] {
+            let n = 6;
+            let ks = rng.normal_vec(n * d, 1.0);
+            let mut page = Page::new(8, d, 4);
+            for i in 0..n {
+                page.push(&ks[i * d..(i + 1) * d], &[0.0; 4]);
+            }
+            let block = page.keys_packed();
+            assert_eq!(block.len(), n * page.words_per_key());
+            for i in 0..n {
+                let w = page.words_per_key();
+                assert_eq!(&block[i * w..(i + 1) * w], page.key(i), "d={d} row {i}");
             }
         }
     }

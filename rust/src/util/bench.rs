@@ -64,6 +64,13 @@ pub fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// Is `HAD_BENCH_QUICK` set (to a non-"0" value)? The single source of
+/// truth for quick mode — `Bencher::from_env` and bench-side perf gates
+/// (which should relax under tiny budgets) must agree on it.
+pub fn quick_env() -> bool {
+    std::env::var("HAD_BENCH_QUICK").map_or(false, |v| v != "0")
+}
+
 pub struct Bencher {
     /// target total measurement time per benchmark
     pub budget: Duration,
@@ -90,6 +97,17 @@ impl Bencher {
             budget: Duration::from_millis(250),
             warmup: Duration::from_millis(50),
             max_iters: 2_000,
+        }
+    }
+
+    /// Default budgets, or `quick()` when [`quick_env`] says so — the
+    /// tiny-iteration mode CI's bench smoke step runs so kernel
+    /// regressions in bench code are caught cheaply.
+    pub fn from_env() -> Self {
+        if quick_env() {
+            Bencher::quick()
+        } else {
+            Bencher::default()
         }
     }
 

@@ -94,10 +94,24 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Scoped parallel map over a slice: applies `f(index, &item)` on `pool`,
-/// collecting results in order. Results are produced via per-item slots so
-/// no unsafe and no result reordering.
+/// Scoped parallel map over a slice: applies `f(index, &item)` with the
+/// pool supplying the concurrency budget, collecting results in order.
+/// Execution uses scoped threads (so `f` and the items may borrow stack
+/// data); results go into per-item slots so no unsafe and no result
+/// reordering.
 pub fn parallel_map<T, R, F>(pool: &ThreadPool, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + 'static,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    parallel_map_n(pool.n_workers(), items, f)
+}
+
+/// `parallel_map` with an explicit worker budget — for callers that want
+/// bounded data parallelism without keeping a `ThreadPool` (and its
+/// parked worker threads) alive between calls.
+pub fn parallel_map_n<T, R, F>(n_workers: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send + 'static,
@@ -106,7 +120,7 @@ where
     let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        let n_workers = pool.n_workers().min(items.len().max(1));
+        let n_workers = n_workers.max(1).min(items.len().max(1));
         let slots = &slots;
         let f = &f;
         let next = &next;
@@ -125,6 +139,32 @@ where
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("slot filled"))
         .collect()
+}
+
+/// Split `n_items` into at most `n_shards` contiguous `(lo, hi)` ranges
+/// whose starts are aligned to `align` (the kernel's query-block size, so
+/// a shard never splits a tile). Ranges cover `0..n_items` exactly, in
+/// order, each non-empty; fewer shards are returned when there are not
+/// enough aligned units to go around.
+pub fn shard_ranges(n_items: usize, n_shards: usize, align: usize) -> Vec<(usize, usize)> {
+    let align = align.max(1);
+    let n_units = n_items.div_ceil(align);
+    let n_shards = n_shards.clamp(1, n_units.max(1));
+    let base = n_units / n_shards;
+    let extra = n_units % n_shards;
+    let mut out = Vec::with_capacity(n_shards);
+    let mut unit = 0usize;
+    for s in 0..n_shards {
+        let take = base + usize::from(s < extra);
+        if take == 0 {
+            continue;
+        }
+        let lo = unit * align;
+        unit += take;
+        let hi = (unit * align).min(n_items);
+        out.push((lo, hi));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -169,5 +209,40 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<usize> = parallel_map(&pool, &[] as &[usize], |_, &x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_n_matches_serial_for_any_budget() {
+        let items: Vec<usize> = (0..37).collect();
+        for workers in [0usize, 1, 3, 64] {
+            let out = parallel_map_n(workers, &items, |i, &x| i + x);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, 2 * i, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_aligned_and_ordered() {
+        for (n_items, n_shards, align) in [
+            (0usize, 3usize, 4usize),
+            (1, 3, 4),
+            (7, 3, 4),
+            (16, 4, 4),
+            (17, 4, 4),
+            (100, 3, 1),
+            (5, 16, 4), // more shards than tiles
+        ] {
+            let shards = shard_ranges(n_items, n_shards, align);
+            assert!(shards.len() <= n_shards.max(1));
+            let mut next = 0usize;
+            for &(lo, hi) in &shards {
+                assert_eq!(lo, next, "contiguous coverage");
+                assert!(lo < hi, "non-empty shard");
+                assert_eq!(lo % align, 0, "aligned start");
+                next = hi;
+            }
+            assert_eq!(next, n_items, "full coverage n={n_items} s={n_shards} a={align}");
+        }
     }
 }

@@ -4,13 +4,16 @@
 
 use had::binary::topn::{select_topn_counting, select_topn_heap};
 use had::binary::{
-    had_attention, had_attention_paged, had_attention_ref, HadAttnConfig, PackedKv, PackedMat,
+    had_attention, had_attention_paged, had_attention_paged_pooled, had_attention_paged_scalar,
+    had_attention_pooled, had_attention_ref, had_attention_scalar, HadAttnConfig, PackedKv,
+    PackedMat, StreamTopN,
 };
 use had::coordinator::{BatchPolicy, BucketQueue, Router};
 use had::kvcache::{KvCacheConfig, PagePool, SessionKv};
 use had::tensor::Mat;
 use had::util::quickcheck::{check, pair, usize_in, Config, Gen};
 use had::util::rng::Rng;
+use had::util::threadpool::ThreadPool;
 
 fn cfg(cases: usize) -> Config {
     Config { cases, seed: 0xC0FFEE, max_shrink_steps: 100 }
@@ -147,6 +150,106 @@ fn prop_paged_attention_equals_contiguous_and_oracle() {
         let from_pages = had_attention_paged(&q, &paged, &c);
         let oracle = had_attention_ref(&q, &k, &v, &c);
         from_pages == fast && from_pages.max_abs_diff(&oracle) < 1e-5
+    });
+}
+
+#[test]
+fn prop_blocked_kernel_equals_scalar_bit_for_bit() {
+    // the tiled engine (4-query blocking + fused streaming top-N) must
+    // reproduce the scalar oracle exactly: ragged head dims crossing u64
+    // word boundaries, ragged n_q covering partial query blocks, and
+    // n_top at both extremes {1, n_k} plus a random interior value
+    let gen = pair(
+        pair(usize_in(1, 11), usize_in(1, 90)), // (n_q, n_k)
+        pair(usize_in(1, 130), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(40), &gen, |&((n_q, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let d_v = 1 + seed % 9;
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        [1usize, 1 + seed % n_k, n_k].into_iter().all(|n_top| {
+            let c = HadAttnConfig { n_top, temp: 0.9 };
+            had_attention(&q, &kv, &c) == had_attention_scalar(&q, &kv, &c)
+        })
+    });
+}
+
+#[test]
+fn prop_paged_kernel_equals_scalar_over_straddling_pages() {
+    // page sizes that straddle the 4-query tile and the page-major
+    // traversal must not change a single bit vs the scalar paged oracle
+    // (and the contiguous kernel, closing the square)
+    let gen = pair(
+        pair(usize_in(1, 24), usize_in(2, 90)), // (page_tokens, n_k)
+        pair(usize_in(1, 130), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(30), &gen, |&((page_tokens, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (n_q, d_v) = (5usize, 8usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let mut paged = SessionKv::new(d, d_v, page_tokens);
+        paged.append(&k, &v);
+        [1usize, 1 + seed % n_k, n_k].into_iter().all(|n_top| {
+            let c = HadAttnConfig { n_top, temp: 1.1 };
+            let fast = had_attention_paged(&q, &paged, &c);
+            fast == had_attention_paged_scalar(&q, &paged, &c)
+                && fast == had_attention(&q, &PackedKv::new(&k, &v), &c)
+        })
+    });
+}
+
+#[test]
+fn prop_threaded_kernel_equals_serial_for_1_to_4_workers() {
+    // sharding query blocks across the pool must be invisible in the
+    // output at every worker count, contiguous and paged alike
+    let pools: Vec<ThreadPool> = (1..=4).map(ThreadPool::new).collect();
+    let gen = pair(
+        pair(usize_in(1, 13), usize_in(1, 70)), // (n_q, n_k)
+        pair(usize_in(1, 100), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(20), &gen, |&((n_q, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let d_v = 6usize;
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        let mut paged = SessionKv::new(d, d_v, 1 + seed % 16);
+        paged.append(&k, &v);
+        let c = HadAttnConfig { n_top: 1 + seed % n_k, temp: 0.8 };
+        let serial = had_attention(&q, &kv, &c);
+        let serial_paged = had_attention_paged(&q, &paged, &c);
+        serial == serial_paged
+            && pools.iter().all(|pool| {
+                had_attention_pooled(&q, &kv, &c, pool) == serial
+                    && had_attention_paged_pooled(&q, &paged, &c, pool) == serial
+            })
+    });
+}
+
+#[test]
+fn prop_streaming_topn_equals_counting_selection() {
+    // the kernel's inline threshold selection must equal the two-pass
+    // counting oracle on the materialized row, including tie handling
+    let gen = pair(usize_in(1, 300), pair(usize_in(1, 64), usize_in(0, 1 << 20)));
+    check(&cfg(100), &gen, |&(n, (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let scores: Vec<i32> = (0..n)
+            .map(|_| rng.below((2 * d + 1) as u64) as i32 - d as i32)
+            .collect();
+        [1usize, 1 + seed % n, n].into_iter().all(|n_top| {
+            let mut st = StreamTopN::new();
+            st.reset(n_top, d);
+            for (i, &s) in scores.iter().enumerate() {
+                st.push(s, i);
+            }
+            st.finish() == select_topn_counting(&scores, n_top, d).as_slice()
+        })
     });
 }
 

@@ -79,6 +79,49 @@ def fig(name, cols):
         print("| " + " | ".join(cells) + " |")
 
 
+def attention():
+    recs = rows("attention")
+    if not recs:
+        return
+    kern = [r for r in recs if r.get("kind") == "kernel"]
+    by_ctx = defaultdict(dict)
+    for r in kern:
+        by_ctx[int(r["n_k"])][r["variant"]] = r  # last write wins
+    want = {"scalar", "blocked", "threaded", "standard"}
+    if by_ctx:
+        print("\n### Attention kernel: scalar vs blocked vs blocked+threaded (measured)\n")
+        print(
+            "| n_k | f32 standard (µs) | scalar (µs) | blocked (µs) | threaded (µs) "
+            "| blocked keys/s | blocked vs scalar | threaded vs f32 |"
+        )
+        print("|---|---|---|---|---|---|---|---|")
+        for n_ctx in sorted(by_ctx):
+            m = by_ctx[n_ctx]
+            if want <= m.keys():
+                st, sc, bl, th = (m[v] for v in ("standard", "scalar", "blocked", "threaded"))
+                vs_scalar = sc["mean_us"] / bl["mean_us"] if bl["mean_us"] else float("nan")
+                print(
+                    f"| {n_ctx} | {st['mean_us']:.1f} | {sc['mean_us']:.1f} "
+                    f"| {bl['mean_us']:.1f} | {th['mean_us']:.1f} "
+                    f"| {bl['keys_per_s']:.3g} | {vs_scalar:.2f}x "
+                    f"| {th['speedup_vs_standard']:.1f}x |"
+                )
+    scaling = [r for r in recs if r.get("kind") == "scaling"]
+    by_workers = defaultdict(dict)
+    for r in scaling:
+        by_workers[int(r["n_k"])][int(r["workers"])] = r["speedup_vs_serial"]
+    if by_workers:
+        workers = sorted({w for m in by_workers.values() for w in m})
+        print("\nThreaded scaling (speedup vs serial blocked kernel):\n")
+        print("| n_k | " + " | ".join(f"{w} workers" for w in workers) + " |")
+        print("|" + "---|" * (len(workers) + 1))
+        for n_ctx in sorted(by_workers):
+            cells = [
+                f"{by_workers[n_ctx].get(w, float('nan')):.2f}x" for w in workers
+            ]
+            print(f"| {n_ctx} | " + " | ".join(cells) + " |")
+
+
 def kvcache():
     recs = rows("kvcache")
     if not recs:
@@ -118,6 +161,7 @@ if __name__ == "__main__":
     fig("fig3", ["n_top", "accuracy"])
     fig("fig4", ["n", "fractions"])
     fig("fig5", ["n_ctx", "n_top", "baseline", "had"])
+    attention()
     kvcache()
     t3 = rows("table3")
     if t3:
