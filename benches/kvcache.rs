@@ -95,8 +95,9 @@ fn main() {
     let pool_cfg = KvCacheConfig {
         page_tokens,
         byte_budget: 2 * full_turns * page_payload,
+        ..Default::default()
     };
-    let mut pool = PagePool::new(pool_cfg);
+    let mut pool: PagePool = PagePool::new(pool_cfg);
     let mk = |rng: &mut Rng| {
         (Mat::random(per_turn, d, rng, 1.0), Mat::random(per_turn, d_v, rng, 1.0))
     };

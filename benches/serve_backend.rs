@@ -1,0 +1,156 @@
+//! Bench: the CPU serving backend end to end — decode throughput
+//! (tokens/sec) for cold prefill vs warm per-turn suffix decode, the
+//! per-layer kernel share of decode time, and session serving through
+//! the full coordinator (hit rate + latency percentiles).
+//!
+//! Appends machine-readable records to results/serve.jsonl for
+//! scripts/summarize_results.py.
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::bench::{quick_env, Bencher};
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::from_env(); // HAD_BENCH_QUICK=1 for the CI smoke step
+    let quick = quick_env();
+    let contexts: &[usize] = if quick { &[256] } else { &[256, 1024] };
+    let turn = 16usize;
+
+    let cfg = demo_config("serve_bench", 1024, 64);
+    let vocab = cfg.model.vocab as u64;
+    let model = ServeModel::random(&cfg, 0xFACE).expect("bench model");
+    let kv = KvCacheConfig { page_tokens: 64, ..Default::default() };
+    let backend = HadBackend::new(model.clone(), &kv);
+    let mut rng = Rng::new(3);
+    let mut records: Vec<Json> = Vec::new();
+
+    println!("== serving backend: cold prefill vs warm suffix decode ==");
+    let mut longest: Option<(f64, f64)> = None; // (cold mean ns, warm mean ns)
+    for &n_ctx in contexts {
+        let tokens: Vec<i32> = (0..n_ctx).map(|_| rng.below(vocab) as i32).collect();
+
+        // cold: full-sequence decode into a fresh per-layer cache
+        let mut cold_share = 0.0f64;
+        let s_cold = b.run(&format!("serve/cold prefill n_ctx={n_ctx}"), || {
+            let mut state = backend.fresh_kv();
+            let (caps, stats) = backend.decode(&mut state, &tokens, &[n_ctx]);
+            cold_share = stats.attn_us as f64 / (stats.decode_us.max(1)) as f64;
+            caps
+        });
+        s_cold.print_throughput(n_ctx as f64, "tok");
+
+        // warm: resident context, decode only a +`turn`-token suffix
+        let mut state = backend.fresh_kv();
+        backend.decode(&mut state, &tokens, &[n_ctx]);
+        let mut warm_share = 0.0f64;
+        let s_warm = b.run(&format!("serve/warm +{turn} turn  n_ctx={n_ctx}"), || {
+            state.truncate(n_ctx - turn);
+            let (caps, stats) = backend.decode(&mut state, &tokens, &[n_ctx]);
+            debug_assert_eq!(stats.resumed_at, n_ctx - turn);
+            warm_share = stats.attn_us as f64 / (stats.decode_us.max(1)) as f64;
+            caps
+        });
+        s_warm.print_throughput(turn as f64, "tok");
+        println!(
+            "  -> kernel share of decode: cold {:.1}% warm {:.1}% | warm turn {:.2}x cheaper than prefill",
+            100.0 * cold_share,
+            100.0 * warm_share,
+            s_cold.mean_ns() / s_warm.mean_ns(),
+        );
+        for (mode, s, items, share) in [
+            ("prefill", &s_cold, n_ctx, cold_share),
+            ("turn", &s_warm, turn, warm_share),
+        ] {
+            records.push(Json::obj(vec![
+                ("kind", Json::str("decode")),
+                ("mode", Json::str(mode)),
+                ("n_ctx", Json::num(n_ctx as f64)),
+                ("tokens_per_s", Json::num(s.throughput(items as f64))),
+                ("mean_us", Json::num(s.mean_ns() / 1e3)),
+                ("kernel_share", Json::num(share)),
+            ]));
+        }
+        longest = Some((s_cold.mean_ns(), s_warm.mean_ns()));
+    }
+    // acceptance gate: a warm turn must beat re-running the prefill.
+    // Relaxed in quick mode (noisy shared CI runners, tiny budgets).
+    let (cold, warm) = longest.expect("at least one context");
+    if quick {
+        println!("(HAD_BENCH_QUICK set: skipping the warm-vs-cold perf gate)");
+    } else {
+        assert!(
+            warm < cold,
+            "suffix decode must beat full re-execution on the longest context"
+        );
+    }
+
+    println!("\n== session serving through the coordinator ==");
+    let (n_sessions, n_turns) = if quick { (3u64, 3usize) } else { (4, 5) };
+    let router = Router::new(vec![Bucket { config: "serve_bench".into(), n_ctx: 1024, batch: 8 }]);
+    let server = Server::start_cpu_with_kv(
+        HadBackend::new(model, &kv),
+        router,
+        BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..Default::default() },
+        kv,
+    )
+    .expect("server start");
+    for sid in 0..n_sessions {
+        for t in 0..n_turns {
+            let rows = if t == 0 { 96 } else { turn };
+            let append: Vec<i32> = (0..rows).map(|_| rng.below(vocab) as i32).collect();
+            server.infer_session(sid, append).expect("turn served");
+        }
+    }
+    let snap = server.metrics.snapshot();
+    let stats = server.cache_stats();
+    let kernel_share = if snap.decode_mean_us > 0.0 {
+        snap.kernel_mean_us / snap.decode_mean_us
+    } else {
+        0.0
+    };
+    println!(
+        "sessions: {} reqs | hit rate {:.1}% ({} hits / {} misses) | latency p50 {:.2} ms p99 {:.2} ms | decode mean {:.2} ms (kernel share {:.1}%)",
+        snap.requests,
+        100.0 * stats.hit_rate(),
+        stats.hits,
+        stats.misses,
+        snap.p50_us as f64 / 1e3,
+        snap.p99_us as f64 / 1e3,
+        snap.decode_mean_us / 1e3,
+        100.0 * kernel_share,
+    );
+    assert!(
+        stats.hits >= n_sessions * (n_turns as u64 - 1),
+        "warm turns must resume from resident pages"
+    );
+    records.push(Json::obj(vec![
+        ("kind", Json::str("sessions")),
+        ("requests", Json::num(snap.requests as f64)),
+        ("hit_rate", Json::num(stats.hit_rate())),
+        ("p50_us", Json::num(snap.p50_us as f64)),
+        ("p99_us", Json::num(snap.p99_us as f64)),
+        ("decode_mean_us", Json::num(snap.decode_mean_us)),
+        ("kernel_share", Json::num(kernel_share)),
+    ]));
+
+    if let Err(e) = write_records(&records) {
+        eprintln!("could not write results/serve.jsonl: {e}");
+    }
+    println!("\nserve_backend bench OK");
+}
+
+fn write_records(records: &[Json]) -> std::io::Result<()> {
+    use std::io::Write;
+    std::fs::create_dir_all("results")?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("results/serve.jsonl")?;
+    for r in records {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}

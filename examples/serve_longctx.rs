@@ -1,78 +1,98 @@
-//! Long-context serving demo: the L3 coordinator serving batched
-//! requests across length buckets with the binarized (fwd_had) models.
+//! Long-context serving demo: the L3 coordinator serving a mixed-length
+//! batched workload with REAL logits from the CPU bitpacked backend —
+//! no PJRT artifacts required (the engine is now an optional cross-check
+//! path, not the decode path).
 //!
-//! Spawns client threads generating a mixed-length workload, routes
-//! through the length-bucket router + dynamic batcher onto the PJRT
-//! engine thread, and reports latency percentiles / throughput / batch
-//! occupancy per the paper's serving motivation.
+//! Spawns client threads generating mixed-length sessionless requests
+//! plus a set of multi-turn sessions, routes through the length-bucket
+//! router + dynamic batcher onto the backend decode pass, and reports
+//! latency percentiles, throughput, batch occupancy, AND cache hit rate
+//! (the serving metrics pair from the paper's motivation).
 //!
-//! Run: cargo run --release --example serve_longctx -- [--requests 64] [--clients 4]
+//! Run: cargo run --release --example serve_longctx -- [--requests 32] [--clients 4]
 
 use anyhow::Result;
-use had::coordinator::{BatchPolicy, Router, Server, ServingModel};
-use had::data::longqa::LongQaGen;
-use had::runtime::{default_artifact_dir, Engine};
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
 use had::util::cli::Args;
 use had::util::rng::Rng;
 
 fn main() -> Result<()> {
     had::util::log::init_from_env();
     let args = Args::parse(std::env::args().skip(1));
-    let n_requests = args.get_usize("requests", 64);
+    let n_requests = args.get_usize("requests", 32);
     let n_clients = args.get_usize("clients", 4);
-    let fwd = args.get_str("fwd", "fwd_had");
+    let session_turns = args.get_usize("session-turns", 4);
 
-    // engine thread owns PJRT; handles are Send
-    let engine = Engine::start(default_artifact_dir())?;
-    let router = Router::longqa_default();
-
-    // one serving model per bucket (random weights: serving-path demo)
-    let manifest = had::runtime::Manifest::load(default_artifact_dir())?;
-    let models: Vec<ServingModel> = router
-        .buckets()
-        .iter()
-        .map(|b| ServingModel::random(&manifest, &b.config, 7, &fwd))
-        .collect::<Result<_>>()?;
-
-    // pre-compile every bucket so latency numbers are steady-state
-    for b in router.buckets() {
-        let ms = engine.handle().warmup(&format!("{}__{}", b.config, fwd))?;
-        println!("warmed {}__{fwd} in {ms} ms", b.config);
-    }
-
-    let server = Server::start(
-        engine.handle(),
+    // one model serves every bucket (the backend is shape-agnostic; the
+    // buckets only partition batching by length)
+    let max_ctx = 1024usize;
+    let cfg = demo_config("cpu_longctx", max_ctx, 64);
+    let vocab = cfg.model.vocab as u64;
+    let model = ServeModel::random(&cfg, 7).expect("demo model");
+    let kv = KvCacheConfig { page_tokens: 64, ..Default::default() };
+    let backend = HadBackend::new(model, &kv);
+    let router = Router::new(
+        [(128usize, 16usize), (256, 16), (512, 8), (1024, 4)]
+            .iter()
+            .map(|&(n, b)| Bucket { config: format!("cpu_{n}"), n_ctx: n, batch: b })
+            .collect(),
+    );
+    let server = Server::start_cpu_with_kv(
+        backend,
         router,
-        models,
         BatchPolicy { max_wait: std::time::Duration::from_millis(4), ..Default::default() },
+        kv,
     )?;
 
-    println!("\nserving {n_requests} requests from {n_clients} client threads...");
+    println!("\nserving {n_requests} mixed-length requests from {n_clients} client threads...");
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..n_clients {
-            let server = &server;
+            // &Server is Copy: each move closure gets its own copy of the
+            // reference to the outer server
+            let srv = &server;
             scope.spawn(move || {
                 let mut rng = Rng::new(1000 + c as u64);
                 for i in 0..n_requests / n_clients {
                     // mixed-length workload across all buckets
                     let n_ctx = [128usize, 256, 512, 1024][rng.range_usize(0, 4)];
-                    let gen = LongQaGen::new(n_ctx);
-                    let mut tokens = vec![0i32; n_ctx];
-                    let _label = gen.sample(&mut rng, &mut tokens);
-                    match server.infer(tokens) {
+                    let tokens: Vec<i32> =
+                        (0..n_ctx).map(|_| rng.below(vocab) as i32).collect();
+                    match srv.infer(tokens) {
                         Ok(resp) => {
+                            assert!(resp.logits.iter().all(|x| x.is_finite()));
                             if i == 0 {
                                 println!(
-                                    "client {c}: first response from {} in {:.2} ms (pred {}, occ {})",
+                                    "client {c}: first response from {} in {:.2} ms (pred {}, occ {}, kernel share {:.0}%)",
                                     resp.bucket,
                                     resp.latency_us as f64 / 1e3,
                                     resp.pred,
-                                    resp.batch_occupancy
+                                    resp.batch_occupancy,
+                                    if resp.decode_us > 0 {
+                                        100.0 * resp.kernel_us as f64 / resp.decode_us as f64
+                                    } else {
+                                        0.0
+                                    },
                                 );
                             }
                         }
                         Err(e) => eprintln!("client {c}: {e:#}"),
+                    }
+                }
+            });
+            // one multi-turn session per client rides along: its warm
+            // turns decode only the appended suffix (cache hits)
+            scope.spawn(move || {
+                let mut rng = Rng::new(2000 + c as u64);
+                let sid = 9000 + c as u64;
+                for turn in 0..session_turns {
+                    let rows = if turn == 0 { 96 } else { 24 };
+                    let append: Vec<i32> =
+                        (0..rows).map(|_| rng.below(vocab) as i32).collect();
+                    if let Err(e) = srv.infer_session(sid, append) {
+                        eprintln!("session {sid}: {e:#}");
                     }
                 }
             });
@@ -82,6 +102,15 @@ fn main() -> Result<()> {
 
     let snap = server.metrics.snapshot();
     snap.print("serve_longctx");
+    let stats = server.cache_stats();
+    println!(
+        "cache hit rate {:.1}% ({} hits / {} misses) | latency p50 {:.2} ms p99 {:.2} ms",
+        100.0 * stats.hit_rate(),
+        stats.hits,
+        stats.misses,
+        snap.p50_us as f64 / 1e3,
+        snap.p99_us as f64 / 1e3,
+    );
     println!(
         "wall time {elapsed:?} => {:.1} req/s end-to-end",
         snap.requests as f64 / elapsed.as_secs_f64()

@@ -1,127 +1,101 @@
-//! Session-aware serving demo: multi-turn conversations over the paged
-//! bit-packed KV cache, end to end on the CPU fast path.
+//! Session-aware serving demo: multi-turn conversations served END TO
+//! END by the CPU bitpacked backend through the full coordinator —
+//! router, dynamic batcher, per-layer paged KV cache, real logits.
 //!
-//! Each turn appends a few tokens to its session, packs ONLY the
-//! non-resident suffix into the byte-budgeted page pool (packed-K
-//! residency: pages from earlier turns are reused in place), then answers
-//! the turn with `had_attention_paged` scored directly over the
-//! non-contiguous pages. Warm turns are compared against rebuilding the
-//! cache from scratch — the cost a stateless coordinator pays — and every
-//! output is cross-checked against the contiguous `had_attention` path.
+//! Each turn appends a few tokens to its session; the batch decode
+//! checks the session's per-layer page chains out of the byte-budgeted
+//! pool and executes ONLY the non-resident suffix (packed-K residency:
+//! pages from earlier turns are re-scored in place). Responses carry the
+//! backend's real logits, which are cross-checked here against a fresh
+//! full-sequence forward of the same weights — bit for bit, because
+//! causal decode makes incremental serving exact.
 //!
-//! Runs without PJRT artifacts (pure CPU). For the PJRT-backed
-//! coordinator variant of the same flow see `Server::submit_session`.
+//! Reports cache hit rate alongside latency percentiles (the serving
+//! metrics pair the ROADMAP asks the demos to show). Runs without PJRT
+//! artifacts (pure CPU).
 //!
-//! Run: cargo run --release --example serve_sessions -- [--sessions 4] [--turns 6]
+//! Run: cargo run --release --example serve_sessions -- [--sessions 4] [--turns 5]
 
-use std::time::Instant;
-
-use had::binary::attention::{had_attention_paged_with, had_attention_with, Scratch};
-use had::binary::{HadAttnConfig, PackedKv};
-use had::kvcache::{KvCacheConfig, PagePool};
-use had::tensor::Mat;
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
 use had::util::cli::Args;
 use had::util::rng::Rng;
-
-/// Append `rows` onto a row-major matrix transcript.
-fn append_rows(m: &mut Mat, rows: &Mat) {
-    assert_eq!(m.cols, rows.cols, "column mismatch");
-    m.data.extend_from_slice(&rows.data);
-    m.rows += rows.rows;
-}
-
-/// Copy rows [lo..] of a transcript into an owned Mat.
-fn tail_rows(m: &Mat, lo: usize) -> Mat {
-    Mat::from_vec(m.rows - lo, m.cols, m.data[lo * m.cols..].to_vec())
-}
 
 fn main() {
     had::util::log::init_from_env();
     let args = Args::parse(std::env::args().skip(1));
     let n_sessions = args.get_usize("sessions", 4) as u64;
-    let n_turns = args.get_usize("turns", 6);
-    let (d, d_v, page_tokens) = (64usize, 64usize, 64usize);
-    let prefill = 512usize; // first-turn context
-    let turn_tokens = 32usize; // follow-up appends
-    let n_q = 8usize; // query block answering each turn
+    let n_turns = args.get_usize("turns", 5);
+    let prefill = args.get_usize("prefill", 128); // first-turn context
+    let turn_tokens = args.get_usize("turn-tokens", 24); // follow-up appends
+    let n_ctx = 512usize;
 
-    let pool_cfg = KvCacheConfig { page_tokens, ..Default::default() };
-    let mut pool = PagePool::new(pool_cfg);
-    let cfg = HadAttnConfig { n_top: 48, temp: 1.0 };
-    let mut scratch = Scratch::default();
-    let mut rng = Rng::new(0xCAFE);
+    let cfg = demo_config("cpu_512", n_ctx, 48);
+    let vocab = cfg.model.vocab as u64;
+    let model = ServeModel::random(&cfg, 0xCAFE).expect("demo model");
+    let kv = KvCacheConfig { page_tokens: 32, ..Default::default() };
+    // identical probe backend = the full-sequence oracle
+    let probe = HadBackend::new(model.clone(), &kv);
+    let backend = HadBackend::new(model, &kv);
+    let router = Router::new(vec![Bucket { config: "cpu_512".into(), n_ctx, batch: 8 }]);
+    let server = Server::start_cpu_with_kv(
+        backend,
+        router,
+        BatchPolicy { max_wait: std::time::Duration::from_millis(2), ..Default::default() },
+        kv,
+    )
+    .expect("server start");
 
-    // Full per-session K/V transcript: the cold oracle rebuilds from it;
-    // the warm path only ever packs its non-resident tail.
-    let mut transcripts: Vec<(Mat, Mat)> = (0..n_sessions)
-        .map(|_| (Mat::zeros(0, d), Mat::zeros(0, d_v)))
-        .collect();
-
-    let mut warm_us = 0.0f64;
-    let mut cold_us = 0.0f64;
+    let mut rng = Rng::new(0xBEEF);
+    let mut transcripts: Vec<Vec<i32>> = vec![Vec::new(); n_sessions as usize];
     let mut checked = 0usize;
     println!(
-        "serving {n_sessions} sessions x {n_turns} turns (prefill {prefill}, +{turn_tokens}/turn)\n"
+        "serving {n_sessions} sessions x {n_turns} turns (prefill {prefill}, +{turn_tokens}/turn) on the CPU backend\n"
     );
     for turn in 0..n_turns {
         for sid in 0..n_sessions {
             let rows = if turn == 0 { prefill } else { turn_tokens };
-            let k_new = Mat::random(rows, d, &mut rng, 1.0);
-            let v_new = Mat::random(rows, d_v, &mut rng, 1.0);
-            let q = Mat::random(n_q, d, &mut rng, 1.0);
-            let (tk, tv) = &mut transcripts[sid as usize];
-            append_rows(tk, &k_new);
-            append_rows(tv, &v_new);
-
-            // --- warm path: pack only what the pool doesn't hold (the new
-            // turn; the full transcript again if the session was evicted)
-            let t0 = Instant::now();
-            let cached = pool.cached_tokens(sid);
-            let (k_fresh, v_fresh) = (tail_rows(tk, cached), tail_rows(tv, cached));
-            pool.append(sid, &k_fresh, &v_fresh);
-            let kv = pool.get(sid).expect("session resident after append");
-            let out_warm = had_attention_paged_with(&q, kv, &cfg, &mut scratch);
-            warm_us += t0.elapsed().as_nanos() as f64 / 1e3;
-
-            // --- cold oracle: rebuild the contiguous cache every turn
-            let t1 = Instant::now();
-            let rebuilt = PackedKv::from_parts(tk, tv.clone());
-            let out_cold = had_attention_with(&q, &rebuilt, &cfg, &mut scratch);
-            cold_us += t1.elapsed().as_nanos() as f64 / 1e3;
-
+            let append: Vec<i32> = (0..rows).map(|_| rng.below(vocab) as i32).collect();
+            transcripts[sid as usize].extend_from_slice(&append);
+            let resp = server.infer_session(sid, append).expect("turn served");
             assert_eq!(
-                out_warm, out_cold,
-                "paged warm path must match contiguous rebuild (session {sid}, turn {turn})"
+                resp.logits,
+                probe.forward_logits(&transcripts[sid as usize]),
+                "served logits must equal the full-sequence forward (session {sid}, turn {turn})"
             );
             checked += 1;
         }
-        let stats = pool.stats();
+        let stats = server.cache_stats();
+        let snap = server.metrics.snapshot();
         println!(
-            "turn {turn}: pool {} sessions / {} KiB | {} hits {} misses | warm {:.0} µs vs cold-rebuild {:.0} µs (cum)",
-            pool.len(),
-            pool.bytes() / 1024,
+            "turn {turn}: pool {} KiB resident | {} hits {} misses ({:.1}% hit) | decode mean {:.2} ms (kernel share {:.1}%)",
+            snap.cache_bytes / 1024,
             stats.hits,
             stats.misses,
-            warm_us,
-            cold_us,
+            100.0 * stats.hit_rate(),
+            snap.decode_mean_us / 1e3,
+            if snap.decode_mean_us > 0.0 { 100.0 * snap.kernel_mean_us / snap.decode_mean_us } else { 0.0 },
         );
     }
 
-    let stats = pool.stats();
-    let tokens_resident: usize = transcripts.iter().map(|(tk, _)| tk.rows).sum();
+    let snap = server.metrics.snapshot();
+    snap.print("serve_sessions");
+    let stats = server.cache_stats();
+    // the serving pair the ROADMAP wants demos to report: hit rate
+    // alongside latency percentiles
     println!(
-        "\n{checked} turns served, every output matched the contiguous oracle; cache hit rate {:.1}%",
-        100.0 * stats.hit_rate()
+        "\ncache hit rate {:.1}% ({} hits / {} misses) | latency p50 {:.2} ms p99 {:.2} ms",
+        100.0 * stats.hit_rate(),
+        stats.hits,
+        stats.misses,
+        snap.p50_us as f64 / 1e3,
+        snap.p99_us as f64 / 1e3,
     );
-    println!(
-        "packed-K residency: {} KiB of sign-bit keys vs {} KiB as f32 ({}x smaller)",
-        tokens_resident * 8 / 1024,
-        tokens_resident * d * 4 / 1024,
-        d * 4 / 8,
+    assert!(
+        stats.hits as usize >= n_sessions as usize * (n_turns - 1),
+        "every warm turn must resume from resident pages"
     );
-    println!(
-        "warm incremental serving was {:.1}x faster than per-turn rebuilds",
-        cold_us / warm_us.max(1.0)
-    );
+    println!("{checked} turns served, every response matched the full-sequence oracle");
     println!("serve_sessions OK");
 }

@@ -220,13 +220,11 @@ pub fn had_attention_paged_scalar_with(
         }
         let inv = 1.0 / sum;
         // 4) sparse AV accumulation; value rows resolved through the pages
+        //    (accum_value so bf16-valued sessions decode inline, exactly
+        //    as the blocked kernel's PagedSrc does)
         let orow = out.row_mut(i);
         for (&p, &(_, j)) in probs.iter().zip(&kept) {
-            let w = p * inv;
-            let vrow = kv.value(j);
-            for (o, &v) in orow.iter_mut().zip(vrow) {
-                *o += w * v;
-            }
+            kv.accum_value(j, p * inv, orow);
         }
     }
     out

@@ -190,7 +190,7 @@ impl StreamTopN {
 }
 
 /// A key store the kernel can stream: contiguous packed key blocks in
-/// ascending global-index order, plus value-row resolution. Implemented
+/// ascending global-index order, plus value-row accumulation. Implemented
 /// by the contiguous `PackedKv` layout (one block) and the paged
 /// `SessionKv` layout (one block per resident page).
 pub(crate) trait KeyBlocks: Sync {
@@ -200,7 +200,10 @@ pub(crate) trait KeyBlocks: Sync {
     /// Visit every key block as `(base_index, n_rows, packed_words)`,
     /// in ascending base order (`packed_words.len() == n_rows * w`).
     fn for_each_block(&self, visit: &mut dyn FnMut(usize, usize, &[u64]));
-    fn value(&self, i: usize) -> &[f32];
+    /// `orow += w * value_row(i)` — accumulation lives behind the source
+    /// so paged stores can decode bf16 values inline instead of handing
+    /// out borrowed f32 rows.
+    fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]);
 }
 
 /// Contiguous layout: the whole `PackedMat` is one tile-aligned block.
@@ -228,8 +231,10 @@ impl KeyBlocks for ContiguousSrc<'_> {
     fn for_each_block(&self, visit: &mut dyn FnMut(usize, usize, &[u64])) {
         visit(0, self.keys.rows, self.keys.block(0, self.keys.rows));
     }
-    fn value(&self, i: usize) -> &[f32] {
-        self.values.row(i)
+    fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]) {
+        for (o, &v) in orow.iter_mut().zip(self.values.row(i)) {
+            *o += w * v;
+        }
     }
 }
 
@@ -264,8 +269,8 @@ impl KeyBlocks for PagedSrc<'_> {
             base += page.len();
         }
     }
-    fn value(&self, i: usize) -> &[f32] {
-        self.kv.value(i)
+    fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]) {
+        self.kv.accum_value(i, w, orow);
     }
 }
 
@@ -372,11 +377,7 @@ fn finalize_row(
     }
     let inv = 1.0 / sum;
     for (&p, &(_, j)) in probs.iter().zip(kept) {
-        let w = p * inv;
-        let vrow = src.value(j);
-        for (o, &v) in orow.iter_mut().zip(vrow) {
-            *o += w * v;
-        }
+        src.accum_value(j, p * inv, orow);
     }
 }
 

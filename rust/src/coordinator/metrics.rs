@@ -18,9 +18,11 @@ struct Inner {
     // absolute pool gauges, refreshed at each session admission
     cache_bytes: u64,
     cache_evictions: u64,
-    // per-request CPU kernel timings from the scheduler's blocked
-    // XNOR-popcount scoring pass over resident session pages
+    // per-request CPU kernel timings from the backend's blocked
+    // XNOR-popcount scoring inside batch decode
     kernel_us: Vec<u128>,
+    // per-request total backend decode time (kernel + projections/MLP)
+    decode_us: Vec<u128>,
 }
 
 /// Percentile of a sorted sample (0 on empty) — shared by the latency and
@@ -62,12 +64,18 @@ pub struct Snapshot {
     pub cache_bytes: u64,
     /// cumulative pool evictions at the last admission
     pub cache_evictions: u64,
-    /// requests that went through the scheduler's CPU kernel pass
+    /// requests scored by the CPU kernel during batch decode
     pub kernel_requests: u64,
     /// per-request kernel time percentiles/mean (µs; 0 with no kernel traffic)
     pub kernel_p50_us: u128,
     pub kernel_p99_us: u128,
     pub kernel_mean_us: f64,
+    /// requests decoded end-to-end by the CPU serving backend
+    pub decode_requests: u64,
+    /// per-request backend decode time percentiles/mean (µs)
+    pub decode_p50_us: u128,
+    pub decode_p99_us: u128,
+    pub decode_mean_us: f64,
 }
 
 impl Metrics {
@@ -102,10 +110,15 @@ impl Metrics {
         g.cache_evictions = evictions;
     }
 
-    /// One request's share of the batch kernel pass: the CPU time the
-    /// blocked XNOR-popcount kernel spent scoring its session pages.
+    /// One request's share of batch decode: the CPU time the blocked
+    /// XNOR-popcount kernel spent scoring its segment.
     pub fn record_kernel(&self, us: u128) {
         self.inner.lock().unwrap().kernel_us.push(us);
+    }
+
+    /// One request's total backend decode time (its suffix's forward).
+    pub fn record_decode(&self, us: u128) {
+        self.inner.lock().unwrap().decode_us.push(us);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -114,6 +127,8 @@ impl Metrics {
         lat.sort_unstable();
         let mut kern = g.kernel_us.clone();
         kern.sort_unstable();
+        let mut dec = g.decode_us.clone();
+        dec.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
             requests: g.requests,
@@ -154,6 +169,14 @@ impl Metrics {
             } else {
                 kern.iter().sum::<u128>() as f64 / kern.len() as f64
             },
+            decode_requests: dec.len() as u64,
+            decode_p50_us: pct(&dec, 0.50),
+            decode_p99_us: pct(&dec, 0.99),
+            decode_mean_us: if dec.is_empty() {
+                0.0
+            } else {
+                dec.iter().sum::<u128>() as f64 / dec.len() as f64
+            },
         }
     }
 }
@@ -190,6 +213,20 @@ impl Snapshot {
                 self.kernel_p50_us as f64 / 1e3,
                 self.kernel_p99_us as f64 / 1e3,
                 self.kernel_mean_us / 1e3,
+            );
+        }
+        if self.decode_requests > 0 {
+            let share = if self.decode_mean_us > 0.0 {
+                100.0 * self.kernel_mean_us / self.decode_mean_us
+            } else {
+                0.0
+            };
+            println!(
+                "{label}: decode: {} reqs served | p50 {:.2} ms p99 {:.2} ms mean {:.2} ms per request | kernel share {share:.1}%",
+                self.decode_requests,
+                self.decode_p50_us as f64 / 1e3,
+                self.decode_p99_us as f64 / 1e3,
+                self.decode_mean_us / 1e3,
             );
         }
     }
@@ -243,6 +280,20 @@ mod tests {
         assert_eq!(s.kernel_p50_us, 30);
         assert_eq!(s.kernel_p99_us, 40);
         assert!((s.kernel_mean_us - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_timings() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().decode_requests, 0);
+        for us in [100u128, 200, 300, 400] {
+            m.record_decode(us);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.decode_requests, 4);
+        assert_eq!(s.decode_p50_us, 300);
+        assert_eq!(s.decode_p99_us, 400);
+        assert!((s.decode_mean_us - 250.0).abs() < 1e-9);
     }
 
     #[test]

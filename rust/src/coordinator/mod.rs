@@ -1,6 +1,8 @@
 //! L3 serving coordinator: the paper's motivating workload (long-context
 //! inference) served through length-bucketed routing, dynamic batching,
-//! and a single-device PJRT engine, with backpressure and metrics.
+//! and the CPU bitpacked serving backend (`serve::HadBackend`; the PJRT
+//! engine remains as a legacy path / optional cross-check), with
+//! backpressure and metrics.
 
 pub mod batcher;
 pub mod metrics;

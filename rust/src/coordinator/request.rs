@@ -42,10 +42,14 @@ pub struct Response {
     pub batch_occupancy: usize,
     /// tokens served from resident KV pages (0 for sessionless requests)
     pub cached_tokens: usize,
-    /// CPU time the scheduler's blocked XNOR-popcount kernel spent
-    /// scoring this request's resident session pages (0 when no kernel
-    /// pass ran, e.g. sessionless requests)
+    /// CPU time the blocked XNOR-popcount kernel spent scoring this
+    /// request's decode segment (0 when the batch executed on the PJRT
+    /// path, where no CPU kernel runs)
     pub kernel_us: u128,
+    /// total CPU time the serving backend spent decoding this request's
+    /// suffix — `kernel_us / decode_us` is the per-request kernel share
+    /// (0 on the PJRT path)
+    pub decode_us: u128,
 }
 
 /// Why a request was rejected.

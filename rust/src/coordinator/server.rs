@@ -1,10 +1,25 @@
-//! The serving engine: router + dynamic batcher + PJRT engine thread.
+//! The serving engine: router + dynamic batcher + execution backend.
 //!
-//! Architecture (single PJRT device, per DESIGN.md):
+//! Architecture (per DESIGN.md, updated for the CPU serving backend):
 //!
 //!   clients --submit()--> shared bucket queues --scheduler thread-->
-//!     assemble padded batch --> EngineHandle (PJRT thread) -->
-//!     logits --> per-request reply channels ; Metrics throughout
+//!     drain batch --> execution backend --> logits -->
+//!     per-request reply channels ; Metrics throughout
+//!
+//! Two execution backends:
+//!
+//! * **CPU** (the serving path): `serve::HadBackend` runs the real HAD
+//!   transformer decode per request over per-layer packed KV pages. A
+//!   batch's sessions are checked out of the byte-budgeted pool, their
+//!   suffixes decoded in parallel across `kernel_workers` threads (only
+//!   the appended tokens are executed — resident per-layer pages are
+//!   reused in place), and checked back in. `Response.logits` ARE the
+//!   backend's logits. The PJRT engine can ride along as an optional
+//!   per-batch cross-check (`start_cpu_cross_checked`) but is no longer
+//!   on the decode path.
+//! * **PJRT** (legacy / artifact environments): padded full-sequence
+//!   re-execution through `runtime::engine`, kept for comparing the CPU
+//!   backend against lowered artifacts.
 //!
 //! Backpressure: bounded per-bucket admission queues; `submit` rejects
 //! with `QueueFull` rather than queueing unboundedly.
@@ -17,21 +32,21 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::binary::HadAttnConfig;
 use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{RejectReason, Request, Response, SessionInfo};
 use crate::coordinator::router::Router;
-use crate::kvcache::{CacheStats, KvCacheConfig, PagePool, SessionKv};
+use crate::kvcache::{CacheStats, KvCacheConfig, LayeredKv, PagePool};
 use crate::log_info;
 use crate::log_warn;
 use crate::model::Checkpoint;
 use crate::runtime::{EngineHandle, HostTensor, Manifest};
+use crate::serve::HadBackend;
 use crate::tensor::ops::argmax;
-use crate::tensor::Mat;
 use crate::util::threadpool::parallel_map_n;
 
-/// Weights + calibration served for one bucket.
+/// Weights + calibration served for one bucket on the PJRT path (and by
+/// the CPU path's optional cross-check).
 #[derive(Clone)]
 pub struct ServingModel {
     pub params: Vec<HostTensor>,
@@ -74,146 +89,160 @@ impl ServingModel {
     }
 }
 
-/// Token vocabulary of the session featurizer (matches `data`'s configs).
-pub const SESSION_VOCAB: usize = 256;
-/// Head geometry of the admission-side packed KV pages.
-pub const SESSION_KEY_DIM: usize = 64;
-pub const SESSION_VAL_DIM: usize = 64;
-/// Query rows the scheduler's kernel pass featurizes per session request
-/// (a decode-style block over the turn's most recent tokens).
-const KERNEL_QUERY_ROWS: usize = 8;
-/// Top-N the scheduler's kernel pass keeps (clamped to the context).
-const KERNEL_TOP_N: usize = 32;
+/// PJRT cross-check attachment for the CPU path.
+struct CrossCheck {
+    engine: EngineHandle,
+    /// one model per router bucket, matching the backend's weights
+    models: Vec<ServingModel>,
+}
 
-/// Session-side admission state: per-session token histories plus the
-/// byte-budgeted page pool holding each session's packed K/V.
+/// Which execution backend the scheduler drives.
+enum Exec {
+    Cpu { backend: Arc<HadBackend>, check: Option<CrossCheck> },
+    Pjrt { engine: EngineHandle, models: Vec<ServingModel> },
+}
+
+/// Per-session token history plus LRU bookkeeping.
+struct History {
+    tokens: Vec<i32>,
+    last_used: u64,
+}
+
+/// Session-side coordinator state: per-session token histories (the
+/// context a turn extends) and the byte-budgeted pool of per-layer
+/// decode states the CPU backend checks out per batch.
 ///
-/// K/V rows come from a fixed embedding-style featurizer (a seeded random
-/// projection per vocabulary entry) — the admission-path stand-in for the
-/// model's per-layer K/V projections until a full CPU-bitpacked serving
-/// backend lands (ROADMAP §KV cache & sessions). The work it models is
-/// real: each turn binarizes/packs exactly the non-resident suffix, and
-/// the resident pages are scoreable with `had_attention_paged`.
+/// There is no featurizer here any more: K/V rows are produced by the
+/// real per-layer projections inside `HadBackend::decode`, and they are
+/// produced at decode time, not admission time — admission only extends
+/// the token history. The pool therefore holds `LayeredKv` entries whose
+/// decoded token ids are verified against the request before any
+/// incremental resume (`serve` module docs).
+///
+/// Boundedness: pool bytes are budget-enforced at check-in; histories
+/// (4 B/token) carry their own LRU token budget, sized as a small
+/// fraction of the KV budget, and a history evicted there drops its pool
+/// entry too — an evicted session's next turn starts a fresh context
+/// (`cached_tokens == 0` tells the client to resend what it needs).
 pub struct SessionStore {
-    pool: PagePool,
-    histories: HashMap<u64, Vec<i32>>,
-    key_emb: Mat,
-    val_emb: Mat,
-}
-
-/// Map tokens to rows of one embedding table (row = token % vocab) — the
-/// key-only half, enough for query featurization.
-fn featurize_one(emb: &Mat, tokens: &[i32]) -> Mat {
-    let mut out = Mat::zeros(tokens.len(), emb.cols);
-    for (i, &t) in tokens.iter().enumerate() {
-        let row = t.rem_euclid(SESSION_VOCAB as i32) as usize;
-        out.row_mut(i).copy_from_slice(emb.row(row));
-    }
-    out
-}
-
-/// Map tokens to K/V rows via the embedding tables (row = token % vocab).
-/// Free function so `admit` can featurize a borrowed history slice.
-fn featurize(key_emb: &Mat, val_emb: &Mat, tokens: &[i32]) -> (Mat, Mat) {
-    (featurize_one(key_emb, tokens), featurize_one(val_emb, tokens))
+    pool: PagePool<LayeredKv>,
+    histories: HashMap<u64, History>,
+    clock: u64,
+    hist_tokens: usize,
+    max_history_tokens: usize,
 }
 
 impl SessionStore {
-    pub fn new(cfg: KvCacheConfig, d: usize, d_v: usize, seed: u64) -> SessionStore {
-        let mut rng = crate::util::rng::Rng::new(seed);
+    pub fn new(kv: KvCacheConfig) -> SessionStore {
+        // token ids cost 4 B vs >= ~100 B/token of per-layer KV state, so
+        // a small slice of the byte budget bounds histories comfortably
+        let max_history_tokens = (kv.byte_budget / 16).max(4096);
         SessionStore {
-            pool: PagePool::new(cfg),
+            pool: PagePool::new(kv),
             histories: HashMap::new(),
-            key_emb: Mat::random(SESSION_VOCAB, d, &mut rng, 1.0),
-            val_emb: Mat::random(SESSION_VOCAB, d_v, &mut rng, 1.0),
+            clock: 0,
+            hist_tokens: 0,
+            max_history_tokens,
         }
     }
 
     /// Tokens the session has accumulated across turns.
     pub fn history_len(&self, session_id: u64) -> usize {
-        self.histories.get(&session_id).map_or(0, Vec::len)
+        self.histories.get(&session_id).map_or(0, |h| h.tokens.len())
     }
 
     pub fn tokens(&self, session_id: u64) -> &[i32] {
         self.histories
             .get(&session_id)
-            .map_or(&[] as &[i32], |v| v.as_slice())
+            .map_or(&[] as &[i32], |h| h.tokens.as_slice())
     }
 
-    /// Admit one turn: extend the history, then binarize-pack exactly the
-    /// non-resident suffix.
-    ///
-    /// Histories live exactly as long as the session's pages: when the
-    /// pool evicts a session its token history is dropped too, so the
-    /// store is bounded by the byte budget rather than by how many
-    /// distinct session ids clients ever used. An evicted session's next
-    /// turn therefore starts a fresh context (`cached_tokens == 0` in
-    /// the response tells the client to resend context if it needs the
-    /// old prefix).
+    /// Admit one turn: extend the session's history. `cached_tokens` is
+    /// the context length already held for the session (whether its KV
+    /// pages are still resident is the decode pass's business — if they
+    /// were evicted, decode re-executes and the turn is merely slower,
+    /// never wrong).
     pub fn admit(&mut self, session_id: u64, append: &[i32]) -> SessionInfo {
-        let cached = self.pool.cached_tokens(session_id);
-        if cached == 0 {
-            // absent or evicted: restart the history with this turn
-            self.histories.remove(&session_id);
-        }
-        let hist = self.histories.entry(session_id).or_default();
-        hist.extend_from_slice(append);
-        let appended_tokens = hist.len() - cached;
-        if appended_tokens > 0 {
-            let (k, v) = featurize(&self.key_emb, &self.val_emb, &hist[cached..]);
-            self.pool.append(session_id, &k, &v);
-        }
-        // drop histories of sessions the pool just evicted (boundedness)
-        let pool = &self.pool;
-        self.histories
-            .retain(|id, _| *id == session_id || pool.peek(*id).is_some());
-        SessionInfo { id: session_id, cached_tokens: cached, appended_tokens }
+        self.clock += 1;
+        let now = self.clock;
+        let hist = self
+            .histories
+            .entry(session_id)
+            .or_insert(History { tokens: Vec::new(), last_used: now });
+        hist.last_used = now;
+        let cached = hist.tokens.len();
+        hist.tokens.extend_from_slice(append);
+        self.hist_tokens += append.len();
+        self.evict_histories(session_id);
+        SessionInfo { id: session_id, cached_tokens: cached, appended_tokens: append.len() }
     }
 
-    /// Borrow the resident pages for paged scoring (refreshes LRU).
-    pub fn kv(&mut self, session_id: u64) -> Option<&SessionKv> {
-        self.pool.get(session_id)
-    }
-
-    /// Featurize the last `n_q` tokens of a session's history as a query
-    /// block for the kernel scoring pass (same embedding space as the
-    /// keys, so Hamming scores are meaningful; the value half is not
-    /// computed — this runs under the sessions lock). None when the
-    /// session has no history.
-    pub fn featurize_queries(&self, session_id: u64, n_q: usize) -> Option<Mat> {
-        let hist = self.histories.get(&session_id)?;
-        if hist.is_empty() {
-            return None;
+    /// Enforce the history token budget by LRU eviction (never the
+    /// session just touched). An evicted history's pool entry goes too:
+    /// per-layer pages for a context nobody can extend are dead budget.
+    fn evict_histories(&mut self, protect: u64) {
+        while self.hist_tokens > self.max_history_tokens {
+            let victim = self
+                .histories
+                .iter()
+                .filter(|(&id, _)| id != protect)
+                .min_by_key(|(_, h)| h.last_used)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            self.drop_session_state(id);
         }
-        let lo = hist.len().saturating_sub(n_q);
-        Some(featurize_one(&self.key_emb, &hist[lo..]))
     }
 
-    pub fn pool(&self) -> &PagePool {
+    fn drop_session_state(&mut self, session_id: u64) {
+        if let Some(h) = self.histories.remove(&session_id) {
+            self.hist_tokens -= h.tokens.len();
+        }
+        self.pool.remove(session_id);
+    }
+
+    /// Check a session's decode state OUT for a batch decode (its bytes
+    /// leave the pool accounting until `checkin`).
+    pub fn checkout(&mut self, session_id: u64) -> Option<LayeredKv> {
+        self.pool.take(session_id)
+    }
+
+    /// Return a decode state to the pool: records the hit/miss outcome
+    /// the decode observed, enforces the byte budget, and drops the
+    /// histories of any sessions evicted to make room.
+    pub fn checkin(&mut self, session_id: u64, kv: LayeredKv, hit: bool) {
+        self.pool.record_lookup(hit);
+        let evicted = self.pool.insert(session_id, kv);
+        for id in evicted {
+            if let Some(h) = self.histories.remove(&id) {
+                self.hist_tokens -= h.tokens.len();
+            }
+        }
+    }
+
+    pub fn pool(&self) -> &PagePool<LayeredKv> {
         &self.pool
     }
 
-    /// Undo one `admit` (queue-full rollback): restore the history and
-    /// pages to the lengths captured before the turn. Evictions of OTHER
-    /// sessions the transient growth triggered are not undone — eviction
-    /// is always semantically safe. When the session was absent or
-    /// evicted before the turn (`cached_before == 0`) it is dropped
-    /// outright.
-    pub fn rollback_turn(&mut self, session_id: u64, hist_before: usize, cached_before: usize) {
-        if cached_before == 0 {
-            self.end_session(session_id);
+    /// Undo one `admit` (queue-full rollback): restore the history to the
+    /// length captured before the turn. The pool is untouched — decode
+    /// never saw the rejected turn. When the session was absent before
+    /// (`hist_before == 0`) it is dropped outright.
+    pub fn rollback_turn(&mut self, session_id: u64, hist_before: usize) {
+        if hist_before == 0 {
+            self.drop_session_state(session_id);
             return;
         }
-        if let Some(hist) = self.histories.get_mut(&session_id) {
-            hist.truncate(hist_before);
+        if let Some(h) = self.histories.get_mut(&session_id) {
+            if h.tokens.len() > hist_before {
+                self.hist_tokens -= h.tokens.len() - hist_before;
+                h.tokens.truncate(hist_before);
+            }
         }
-        self.pool.truncate_session(session_id, cached_before);
     }
 
     /// Conversation over: drop history and pages (not counted as eviction).
     pub fn end_session(&mut self, session_id: u64) {
-        self.histories.remove(&session_id);
-        self.pool.remove(session_id);
+        self.drop_session_state(session_id);
     }
 }
 
@@ -233,31 +262,90 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the scheduler thread. `models[i]` corresponds to
-    /// `router.buckets()[i]`. The KV-cache pool uses default sizing; use
-    /// `start_with_kv` to tune it.
+    /// Start on the CPU serving backend — `submit`/`submit_session`
+    /// return the backend's real logits. Default KV-cache sizing.
+    pub fn start_cpu(backend: HadBackend, router: Router, policy: BatchPolicy) -> Result<Server> {
+        Server::start_cpu_with_kv(backend, router, policy, KvCacheConfig::default())
+    }
+
+    /// CPU backend with explicit KV-cache sizing (byte budget, page
+    /// size, bf16 values).
+    pub fn start_cpu_with_kv(
+        backend: HadBackend,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+    ) -> Result<Server> {
+        Server::start_inner(
+            Exec::Cpu { backend: Arc::new(backend), check: None },
+            router,
+            policy,
+            kv,
+        )
+    }
+
+    /// CPU backend with the PJRT engine as a per-batch cross-check:
+    /// every served batch is also executed through the bucket's lowered
+    /// artifact and the logits difference is logged. The engine is OFF
+    /// the decode path — an exec failure logs a warning and serving
+    /// continues.
+    pub fn start_cpu_cross_checked(
+        backend: HadBackend,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+        engine: EngineHandle,
+        models: Vec<ServingModel>,
+    ) -> Result<Server> {
+        anyhow::ensure!(
+            models.len() == router.buckets().len(),
+            "one cross-check ServingModel per bucket required"
+        );
+        Server::start_inner(
+            Exec::Cpu {
+                backend: Arc::new(backend),
+                check: Some(CrossCheck { engine, models }),
+            },
+            router,
+            policy,
+            kv,
+        )
+    }
+
+    /// Start on the legacy PJRT path: `models[i]` corresponds to
+    /// `router.buckets()[i]` and batches execute as padded full-sequence
+    /// artifact calls. Kept for artifact environments that compare the
+    /// CPU backend against lowered graphs.
     pub fn start(
         engine: EngineHandle,
         router: Router,
         models: Vec<ServingModel>,
         policy: BatchPolicy,
     ) -> Result<Server> {
-        Server::start_with_kv(engine, router, models, policy, KvCacheConfig::default(), 0x5E55)
+        Server::start_with_kv(engine, router, models, policy, KvCacheConfig::default())
     }
 
-    /// Start with an explicit KV-cache configuration and featurizer seed.
+    /// PJRT path with explicit KV-cache sizing.
     pub fn start_with_kv(
         engine: EngineHandle,
         router: Router,
         models: Vec<ServingModel>,
         policy: BatchPolicy,
         kv: KvCacheConfig,
-        kv_seed: u64,
     ) -> Result<Server> {
         anyhow::ensure!(
             models.len() == router.buckets().len(),
             "one ServingModel per bucket required"
         );
+        Server::start_inner(Exec::Pjrt { engine, models }, router, policy, kv)
+    }
+
+    fn start_inner(
+        exec: Exec,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+    ) -> Result<Server> {
         let queues: Vec<BucketQueue> = router
             .buckets()
             .iter()
@@ -269,12 +357,7 @@ impl Server {
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
-        let sessions = Arc::new(Mutex::new(SessionStore::new(
-            kv,
-            SESSION_KEY_DIM,
-            SESSION_VAL_DIM,
-            kv_seed,
-        )));
+        let sessions = Arc::new(Mutex::new(SessionStore::new(kv)));
 
         let sched_shared = Arc::clone(&shared);
         let sched_metrics = Arc::clone(&metrics);
@@ -285,8 +368,7 @@ impl Server {
             .spawn(move || {
                 scheduler_main(
                     sched_shared,
-                    engine,
-                    models,
+                    exec,
                     sched_metrics,
                     sched_sessions,
                     kernel_workers,
@@ -332,12 +414,14 @@ impl Server {
     }
 
     /// Submit one turn of a multi-turn session: `append_tokens` extends
-    /// the session's history and only the non-resident suffix is packed
-    /// into the page pool; the request then executes over the full
+    /// the session's history and the request executes over the full
     /// sequence, routed by total length (`Router::route_session_idx`).
+    /// On the CPU path the batch decode touches only the non-resident
+    /// suffix of the sequence (per-layer pages from earlier turns are
+    /// reused in place).
     ///
-    /// Rejection is side-effect-free: admission (featurize + bit-pack)
-    /// runs under the sessions lock only — the global queue lock is taken
+    /// Rejection is side-effect-free: admission only extends the token
+    /// history under the sessions lock — the global queue lock is taken
     /// just for the push, and a `QueueFull` push rolls the turn back —
     /// so a rejected turn can simply be retried with the same
     /// `append_tokens`.
@@ -350,14 +434,27 @@ impl Server {
             return Err(RejectReason::ShuttingDown);
         }
         let mut store = self.sessions.lock().unwrap();
-        let hist_before = store.history_len(session_id);
-        let cached_before = store.pool().cached_tokens(session_id);
-        // An evicted session restarts its context on admit (see
-        // SessionStore::admit), so the served length is append-only then.
-        let resident_prefix = if cached_before == 0 { 0 } else { hist_before };
-        let bucket_idx = self
+        let mut hist_before = store.history_len(session_id);
+        let bucket_idx = match self
             .router
-            .route_session_idx(resident_prefix, append_tokens.len())?;
+            .route_session_idx(hist_before, append_tokens.len())
+        {
+            Ok(i) => i,
+            Err(RejectReason::TooLong) if hist_before > 0 => {
+                // Context overflow: the accumulated history no longer fits
+                // any bucket. Restart the session's context with this turn
+                // (the same fresh-context semantics as an eviction;
+                // `cached_tokens == 0` tells the client) instead of
+                // wedging the session id in permanent rejection. Routing
+                // by the append alone is checked FIRST so an oversized
+                // append still rejects without side effects.
+                let idx = self.router.route_idx(append_tokens.len())?;
+                store.end_session(session_id);
+                hist_before = 0;
+                idx
+            }
+            Err(e) => return Err(e),
+        };
         let info = store.admit(session_id, &append_tokens);
         let tokens = store.tokens(session_id).to_vec();
 
@@ -380,16 +477,12 @@ impl Server {
             }
         };
         if !pushed {
-            store.rollback_turn(session_id, hist_before, cached_before);
+            store.rollback_turn(session_id, hist_before);
             drop(store);
             self.metrics.record_reject();
             return Err(RejectReason::QueueFull);
         }
-        // publish gauges before releasing the sessions lock so a
-        // concurrent admission cannot overwrite them with older values
         self.metrics.record_session(info.cached_tokens, info.appended_tokens);
-        self.metrics
-            .update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
         drop(store);
         Ok(rx)
     }
@@ -419,7 +512,8 @@ impl Server {
         Arc::clone(&self.sessions)
     }
 
-    /// Snapshot of the page-pool counters.
+    /// Snapshot of the page-pool counters (CPU path; the PJRT path keeps
+    /// no pages, so its stats stay zero).
     pub fn cache_stats(&self) -> CacheStats {
         self.sessions.lock().unwrap().pool().stats()
     }
@@ -435,69 +529,211 @@ impl Drop for Server {
     }
 }
 
-/// Score one drained batch's session requests with the blocked
-/// XNOR-popcount kernel, sessions sharded across `workers` scoped
-/// threads. Returns the per-request kernel time (µs; 0 for sessionless
-/// requests or sessions whose pages were evicted between admission and
-/// execution).
+/// One request's decode product. Timing fields are `None` when no
+/// forward ran for the slot (empty token sequences) so the metrics only
+/// ever aggregate measured samples; `Response` reports unmeasured slots
+/// as 0.
+struct Served {
+    logits: Vec<f32>,
+    kernel_us: Option<u128>,
+    decode_us: Option<u128>,
+}
+
+/// Decode one drained batch on the CPU backend, sessions sharded across
+/// `workers` scoped threads. Returns one `Served` per request slot.
 ///
-/// The sessions lock is taken once per request, only long enough to
-/// snapshot that request's `SessionKv` and featurize its query block —
-/// the snapshot copies the f32 value pages too, which dominates its
-/// cost, so holds are kept per-request rather than one batch-wide hold
-/// (Arc-shared pages are the follow-up that would drop the copy, see
-/// ROADMAP). Scoring itself runs lock-free, so concurrent admissions
-/// stall at most for one snapshot, never for the scoring pass.
-///
-/// This is the CPU-bitpacked scoring pass of batch execution: each
-/// request's decode-style query block (its most recent tokens,
-/// featurized like the keys) attends over the session's resident packed
-/// pages. Until the full CPU serving backend replaces PJRT re-execution
-/// (ROADMAP §attention kernel), its product is the per-request kernel
-/// timing recorded in `Metrics` and echoed on the `Response`.
-fn kernel_pass(
+/// Grouping: all of a session's requests land in ONE job (they are
+/// prefixes of the same history, so one incremental decode serves them
+/// all, capturing logits at each request's length); sessionless requests
+/// decode statelessly, one job each. The sessions lock is held only to
+/// check a session's `LayeredKv` out of the pool and back in — the
+/// decode itself runs lock-free, so concurrent admissions never stall
+/// behind model execution.
+fn decode_pass(
     workers: usize,
     sessions: &Mutex<SessionStore>,
+    backend: &HadBackend,
     reqs: &[Request],
     metrics: &Metrics,
-) -> Vec<u128> {
-    let mut kernel_us = vec![0u128; reqs.len()];
-    if !reqs.iter().any(|r| r.session.is_some()) {
-        return kernel_us;
+) -> Vec<Served> {
+    struct Job {
+        session: Option<u64>,
+        /// request slots, sorted by token length ascending
+        slots: Vec<usize>,
     }
-    let mut jobs: Vec<(usize, Mat, SessionKv)> = Vec::new();
+    let mut by_session: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut jobs: Vec<Job> = Vec::new();
     for (slot, r) in reqs.iter().enumerate() {
-        let Some(s) = r.session else { continue };
-        // one bounded lock hold per request, released before scoring
-        let store = sessions.lock().unwrap();
-        let Some(kv) = store.pool().peek(s.id) else { continue };
-        if kv.is_empty() {
-            continue;
+        match r.session {
+            Some(s) => by_session.entry(s.id).or_default().push(slot),
+            None => jobs.push(Job { session: None, slots: vec![slot] }),
         }
-        let Some(q) = store.featurize_queries(s.id, KERNEL_QUERY_ROWS) else { continue };
-        jobs.push((slot, q, kv.clone()));
     }
-    if jobs.is_empty() {
-        return kernel_us;
+    for (id, mut slots) in by_session {
+        slots.sort_by_key(|&s| reqs[s].tokens.len());
+        jobs.push(Job { session: Some(id), slots });
     }
-    let cfg = HadAttnConfig { n_top: KERNEL_TOP_N, temp: 1.0 };
-    let timed = parallel_map_n(workers, &jobs, |_, (slot, q, kv)| {
-        let t0 = Instant::now();
-        let out = crate::binary::had_attention_paged(q, kv, &cfg);
-        std::hint::black_box(&out);
-        (*slot, t0.elapsed().as_micros())
+
+    let outputs: Vec<Vec<(usize, Served)>> = parallel_map_n(workers, &jobs, |_, job| {
+        let longest = *job.slots.last().expect("non-empty job");
+        let tokens = &reqs[longest].tokens;
+        let empty = || Served {
+            logits: vec![0.0; backend.n_classes()],
+            kernel_us: None,
+            decode_us: None,
+        };
+        // Same-session requests are normally prefixes of one incremental
+        // decode. A request whose tokens are NOT a prefix of the group's
+        // longest sequence (its history was evicted and restarted between
+        // the two admissions) is served by its own stateless decode
+        // instead of someone else's context.
+        let mut stray: Vec<(usize, Served)> = Vec::new();
+        let mut main_slots: Vec<usize> = Vec::new();
+        for &s in &job.slots {
+            let t = &reqs[s].tokens;
+            if tokens[..t.len().min(tokens.len())] == t[..] {
+                main_slots.push(s);
+            } else {
+                let mut scratch_kv = backend.fresh_kv();
+                let (mut caps, stats) = backend.decode(&mut scratch_kv, t, &[t.len()]);
+                stray.push((s, Served {
+                    logits: caps.pop().expect("one capture requested").logits,
+                    kernel_us: Some(stats.attn_us),
+                    decode_us: Some(stats.decode_us),
+                }));
+            }
+        }
+        let mut capture: Vec<usize> = main_slots
+            .iter()
+            .map(|&s| reqs[s].tokens.len())
+            .filter(|&l| l > 0)
+            .collect();
+        capture.dedup(); // slots are length-sorted
+
+        if tokens.is_empty() {
+            // nothing to decode (empty first turn / empty request):
+            // resident state, if any, is left untouched
+            return main_slots.iter().map(|&s| (s, empty())).chain(stray).collect();
+        }
+
+        let mut kv = match job.session {
+            Some(id) => sessions
+                .lock()
+                .unwrap()
+                .checkout(id)
+                .unwrap_or_else(|| backend.fresh_kv()),
+            None => backend.fresh_kv(),
+        };
+        let was_resident = !kv.is_empty();
+        let (caps, stats) = backend.decode(&mut kv, tokens, &capture);
+        if let Some(id) = job.session {
+            let mut store = sessions.lock().unwrap();
+            // a resume is a cache hit; a reset (or cold start) a miss
+            store.checkin(id, kv, was_resident && stats.resumed_at > 0);
+            metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+        }
+
+        main_slots
+            .iter()
+            .map(|&slot| {
+                let len = reqs[slot].tokens.len();
+                if len == 0 {
+                    return (slot, empty());
+                }
+                let cap = caps
+                    .iter()
+                    .find(|c| c.len == len)
+                    .expect("a capture for every requested length");
+                (
+                    slot,
+                    Served {
+                        logits: cap.logits.clone(),
+                        kernel_us: Some(cap.attn_us),
+                        decode_us: Some(cap.decode_us),
+                    },
+                )
+            })
+            .chain(stray)
+            .collect()
     });
-    for (slot, us) in timed {
-        kernel_us[slot] = us;
-        metrics.record_kernel(us);
+
+    let mut served: Vec<Option<Served>> = (0..reqs.len()).map(|_| None).collect();
+    for group in outputs {
+        for (slot, s) in group {
+            // unmeasured slots (empty sequences) stay out of the timing
+            // aggregates — kernel/decode percentiles only ever see
+            // samples a forward actually produced
+            if let Some(us) = s.kernel_us {
+                metrics.record_kernel(us);
+            }
+            if let Some(us) = s.decode_us {
+                metrics.record_decode(us);
+            }
+            served[slot] = Some(s);
+        }
     }
-    kernel_us
+    served
+        .into_iter()
+        .map(|s| s.expect("every request slot decoded"))
+        .collect()
+}
+
+/// Reply to every request of a batch. Records latencies BEFORE replying
+/// (a client that sees its response must also see it in a subsequent
+/// metrics snapshot); `row` supplies each slot's
+/// `(logits, kernel_us, decode_us)`. Shared by the CPU and PJRT arms so
+/// the Response contract cannot drift between them.
+fn reply_batch(
+    reqs: &[Request],
+    bucket: &crate::coordinator::router::Bucket,
+    metrics: &Metrics,
+    served: &mut u64,
+    mut row: impl FnMut(usize) -> (Vec<f32>, u128, u128),
+) {
+    let lats: Vec<u128> = reqs.iter().map(|r| r.arrival.elapsed().as_micros()).collect();
+    metrics.record_batch(&lats, reqs.len());
+    for ((b, req), latency_us) in reqs.iter().enumerate().zip(&lats) {
+        let (logits, kernel_us, decode_us) = row(b);
+        let _ = req.reply.send(Response {
+            id: req.id,
+            pred: argmax(&logits) as i32,
+            logits,
+            bucket: bucket.config.clone(),
+            latency_us: *latency_us,
+            batch_occupancy: reqs.len(),
+            cached_tokens: req.session.map_or(0, |s| s.cached_tokens),
+            kernel_us,
+            decode_us,
+        });
+        *served += 1;
+    }
+}
+
+/// Execute one batch through a bucket's lowered artifact (the PJRT
+/// path's whole decode; the CPU path's optional cross-check). Returns
+/// the flat logits and the row width.
+fn pjrt_exec(
+    engine: &EngineHandle,
+    model: &ServingModel,
+    bucket: &crate::coordinator::router::Bucket,
+    reqs: &[Request],
+) -> Result<(Vec<f32>, usize)> {
+    let (xs, _real) = assemble_padded(reqs, bucket.n_ctx, bucket.batch, crate::data::PAD);
+    let mut inputs: Vec<HostTensor> = model.params.clone();
+    inputs.push(HostTensor::i32(vec![bucket.batch, bucket.n_ctx], xs));
+    inputs.push(HostTensor::vec_f32(model.sigma_q.clone()));
+    inputs.push(HostTensor::vec_f32(model.sigma_k.clone()));
+    inputs.push(HostTensor::scalar_f32(model.n_top));
+    let artifact = format!("{}__{}", bucket.config, model.fwd);
+    let out = engine.exec(&artifact, inputs)?;
+    let logits = out[0].as_f32().context("f32 logits")?.to_vec();
+    let n_classes = logits.len() / bucket.batch.max(1);
+    Ok((logits, n_classes))
 }
 
 fn scheduler_main(
     shared: Arc<Shared>,
-    engine: EngineHandle,
-    models: Vec<ServingModel>,
+    exec: Exec,
     metrics: Arc<Metrics>,
     sessions: Arc<Mutex<SessionStore>>,
     kernel_workers: usize,
@@ -535,49 +771,55 @@ fn scheduler_main(
             }
         };
         let Some((idx, reqs)) = work else { break };
-        let model = &models[idx];
         let bucket = {
             let queues = shared.queues.lock().unwrap();
             queues[idx].bucket.clone()
         };
 
-        // assemble and execute OUTSIDE the queue lock
-        let kernel_us = kernel_pass(kernel_workers, &sessions, &reqs, &metrics);
-        let (xs, real) = assemble_padded(&reqs, bucket.n_ctx, bucket.batch, crate::data::PAD);
-        let mut inputs: Vec<HostTensor> = model.params.clone();
-        inputs.push(HostTensor::i32(vec![bucket.batch, bucket.n_ctx], xs));
-        inputs.push(HostTensor::vec_f32(model.sigma_q.clone()));
-        inputs.push(HostTensor::vec_f32(model.sigma_k.clone()));
-        inputs.push(HostTensor::scalar_f32(model.n_top));
-        let artifact = format!("{}__{}", bucket.config, model.fwd);
-
-        match engine.exec(&artifact, inputs) {
-            Ok(out) => {
-                let logits = out[0].as_f32().unwrap_or(&[]);
-                let n_classes = logits.len() / bucket.batch.max(1);
-                // record metrics BEFORE replying: a client that sees its
-                // response must also see it in a subsequent snapshot
-                let lats: Vec<u128> =
-                    reqs.iter().map(|r| r.arrival.elapsed().as_micros()).collect();
-                metrics.record_batch(&lats, real);
-                for ((b, req), latency_us) in reqs.iter().enumerate().zip(&lats) {
-                    let row = &logits[b * n_classes..(b + 1) * n_classes];
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        pred: argmax(row) as i32,
-                        logits: row.to_vec(),
-                        bucket: bucket.config.clone(),
-                        latency_us: *latency_us,
-                        batch_occupancy: real,
-                        cached_tokens: req.session.map_or(0, |s| s.cached_tokens),
-                        kernel_us: kernel_us[b],
-                    });
-                    served += 1;
+        // execute OUTSIDE the queue lock
+        match &exec {
+            Exec::Cpu { backend, check } => {
+                let outs = decode_pass(kernel_workers, &sessions, backend, &reqs, &metrics);
+                if let Some(cc) = check {
+                    match pjrt_exec(&cc.engine, &cc.models[idx], &bucket, &reqs) {
+                        Ok((logits, n_classes)) => {
+                            let max_diff = reqs
+                                .iter()
+                                .enumerate()
+                                .flat_map(|(b, _)| {
+                                    let row = &logits[b * n_classes..(b + 1) * n_classes];
+                                    row.iter()
+                                        .zip(&outs[b].logits)
+                                        .map(|(x, y)| (x - y).abs())
+                                })
+                                .fold(0.0f32, f32::max);
+                            log_info!(
+                                "cross-check {}: max |pjrt - backend| = {max_diff:.3e}",
+                                bucket.config
+                            );
+                        }
+                        Err(e) => {
+                            log_warn!("cross-check unavailable on {}: {e:#}", bucket.config)
+                        }
+                    }
                 }
+                reply_batch(&reqs, &bucket, &metrics, &mut served, |b| {
+                    let s = &outs[b];
+                    (s.logits.clone(), s.kernel_us.unwrap_or(0), s.decode_us.unwrap_or(0))
+                });
             }
-            Err(e) => {
-                log_warn!("batch execution failed on {artifact}: {e:#}");
-                // drop reply senders: clients observe disconnection
+            Exec::Pjrt { engine, models } => {
+                match pjrt_exec(engine, &models[idx], &bucket, &reqs) {
+                    Ok((logits, n_classes)) => {
+                        reply_batch(&reqs, &bucket, &metrics, &mut served, |b| {
+                            (logits[b * n_classes..(b + 1) * n_classes].to_vec(), 0, 0)
+                        });
+                    }
+                    Err(e) => {
+                        log_warn!("batch execution failed on {}: {e:#}", bucket.config);
+                        // drop reply senders: clients observe disconnection
+                    }
+                }
             }
         }
     }
@@ -587,104 +829,172 @@ fn scheduler_main(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::KvGeom;
+    use crate::runtime::{ConfigEntry, ModelCfg};
+    use crate::serve::{token_config_entry, ServeModel};
 
-    fn tiny_cfg(budget_pages: usize) -> KvCacheConfig {
-        // d=16 -> 8 B/token keys; d_v=8 -> 32 B/token values; 4-token pages
-        KvCacheConfig { page_tokens: 4, byte_budget: budget_pages * 4 * (8 + 32) }
+    fn tiny_model_cfg() -> ConfigEntry {
+        token_config_entry(
+            "serve_srv",
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 32,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 8, block_q: 16,
+            },
+        )
+    }
+
+    fn tiny_backend(kv: &KvCacheConfig) -> HadBackend {
+        HadBackend::new(ServeModel::random(&tiny_model_cfg(), 0xBEEF).unwrap(), kv)
+    }
+
+    fn kv_cfg(byte_budget: usize) -> KvCacheConfig {
+        KvCacheConfig { page_tokens: 4, byte_budget, ..Default::default() }
+    }
+
+    /// bytes of one fully-decoded n-token session for the tiny geometry
+    fn session_bytes(backend: &HadBackend, n_tokens: usize) -> usize {
+        let KvGeom { n_layers, n_heads, d_head } = backend.geom();
+        let pages = n_tokens.div_ceil(4);
+        n_layers * n_heads * pages * 4 * (8 + d_head * 4)
     }
 
     #[test]
     fn session_store_incremental_admission() {
-        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 1);
+        let mut store = SessionStore::new(kv_cfg(1 << 20));
         let a = store.admit(42, &[1, 2, 3, 4]);
         assert_eq!((a.cached_tokens, a.appended_tokens), (0, 4));
         let b = store.admit(42, &[5, 6]);
         assert_eq!((b.cached_tokens, b.appended_tokens), (4, 2));
         assert_eq!(store.history_len(42), 6);
         assert_eq!(store.tokens(42), &[1, 2, 3, 4, 5, 6]);
-        assert_eq!(store.kv(42).unwrap().len(), 6);
-        let stats = store.pool().stats();
-        assert_eq!((stats.hits, stats.misses), (1, 1));
         store.end_session(42);
         assert_eq!(store.history_len(42), 0);
-        assert!(store.kv(42).is_none());
     }
 
     #[test]
-    fn identical_tokens_pack_identically_across_sessions() {
-        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 2);
-        store.admit(1, &[7, 8, 9]);
-        store.admit(2, &[7, 8, 9]);
-        let k1 = store.kv(1).unwrap().key(0).to_vec();
-        let k2 = store.kv(2).unwrap().key(0).to_vec();
-        assert_eq!(k1, k2, "featurizer must be deterministic per token");
+    fn rollback_restores_history() {
+        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        store.admit(1, &[1, 2, 3]);
+        store.admit(1, &[4, 5]);
+        store.rollback_turn(1, 3);
+        assert_eq!(store.tokens(1), &[1, 2, 3]);
+        // rollback of a first turn drops the session outright
+        store.admit(2, &[9]);
+        store.rollback_turn(2, 0);
+        assert_eq!(store.history_len(2), 0);
+        assert_eq!(store.hist_tokens, 3, "token accounting survives rollbacks");
     }
 
     #[test]
-    fn evicted_session_restarts_fresh_and_history_is_bounded() {
-        let mut store = SessionStore::new(tiny_cfg(1), 16, 8, 3);
-        store.admit(1, &[1, 2, 3, 4]);
-        store.admit(2, &[5, 6, 7, 8]); // evicts session 1's page
-        assert!(store.kv(1).is_none());
-        // eviction dropped the history too: the store stays bounded by
-        // the byte budget, not by how many session ids were ever seen
+    fn history_budget_evicts_lru_sessions() {
+        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        store.max_history_tokens = 10;
+        store.admit(1, &[0; 4]);
+        store.admit(2, &[0; 4]);
+        store.admit(3, &[0; 4]); // 12 > 10: session 1 (LRU) evicted
         assert_eq!(store.history_len(1), 0);
-        let again = store.admit(1, &[9, 10]);
-        // the turn starts a fresh context; cached_tokens == 0 signals it
-        assert_eq!((again.cached_tokens, again.appended_tokens), (0, 2));
-        assert_eq!(store.history_len(1), 2);
-        assert_eq!(store.tokens(1), &[9, 10]);
-        assert_eq!(store.kv(1).unwrap().len(), 2);
+        assert_eq!(store.history_len(2), 4);
+        assert_eq!(store.hist_tokens, 8);
+        // the protected (current) session survives even when oversized
+        store.admit(4, &[0; 64]);
+        assert_eq!(store.history_len(4), 64);
+    }
+
+    #[test]
+    fn checkin_evictions_drop_their_histories() {
+        let kv = kv_cfg(1); // tiny budget: any insert evicts the rest
+        let backend = tiny_backend(&kv);
+        let mut store = SessionStore::new(kv);
+        store.admit(1, &[1, 2, 3]);
+        store.admit(2, &[4, 5, 6]);
+        let mut kv1 = backend.fresh_kv();
+        backend.decode(&mut kv1, &[1, 2, 3], &[3]);
+        store.checkin(1, kv1, false);
+        let mut kv2 = backend.fresh_kv();
+        backend.decode(&mut kv2, &[4, 5, 6], &[3]);
+        store.checkin(2, kv2, false);
+        // budget of 1 byte: checking session 2 in evicted session 1,
+        // which must drop session 1's history too (fresh-context restart)
+        assert_eq!(store.history_len(1), 0);
+        assert_eq!(store.history_len(2), 3);
         assert!(store.pool().stats().evictions >= 1);
     }
 
     #[test]
-    fn featurize_queries_matches_key_featurization_of_tail() {
-        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 5);
-        assert!(store.featurize_queries(1, 4).is_none(), "no history yet");
-        store.admit(1, &[1, 2, 3, 4, 5, 6]);
-        let q = store.featurize_queries(1, 4).unwrap();
-        assert_eq!((q.rows, q.cols), (4, 16));
-        // queries share the keys' embedding space: packing the query
-        // block must reproduce the resident packed keys of the last 4
-        // tokens exactly
-        let qp = crate::binary::PackedMat::pack(4, 16, &q.data);
-        let kv = store.kv(1).unwrap();
-        for (i, tok) in (2..6).enumerate() {
-            assert_eq!(qp.row(i), kv.key(tok), "token {tok}");
-        }
-        // n_q larger than the history clamps to the whole history
-        assert_eq!(store.featurize_queries(1, 100).unwrap().rows, 6);
-    }
-
-    #[test]
-    fn kernel_pass_times_session_requests_only() {
-        let sessions = Mutex::new(SessionStore::new(tiny_cfg(100), 16, 8, 6));
-        let info = sessions.lock().unwrap().admit(3, &[1, 2, 3, 4, 5]);
+    fn decode_pass_serves_backend_logits_per_slot() {
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let sessions = Mutex::new(SessionStore::new(kv));
         let metrics = Metrics::default();
-        let mk = |id: u64, session: Option<SessionInfo>| {
+        let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
             let (tx, rx) = channel();
             std::mem::forget(rx); // keep the reply channel alive
-            Request { id, tokens: vec![1; 5], arrival: Instant::now(), reply: tx, session }
+            Request { id, tokens, arrival: Instant::now(), reply: tx, session }
         };
-        let reqs = vec![mk(0, None), mk(1, Some(info))];
-        let us = kernel_pass(2, &sessions, &reqs, &metrics);
-        assert_eq!(us.len(), 2);
-        assert_eq!(us[0], 0, "sessionless requests skip the kernel pass");
-        assert_eq!(metrics.snapshot().kernel_requests, 1, "one session request scored");
-        // a session whose pages are gone is skipped, not an error
-        let ghost = SessionInfo { id: 999, cached_tokens: 0, appended_tokens: 1 };
-        let us2 = kernel_pass(2, &sessions, &[mk(2, Some(ghost))], &metrics);
-        assert_eq!(us2, vec![0]);
-        assert_eq!(metrics.snapshot().kernel_requests, 1);
+        let info = sessions.lock().unwrap().admit(3, &[1, 2, 3, 4, 5]);
+        let session_tokens = sessions.lock().unwrap().tokens(3).to_vec();
+        let plain_tokens = vec![7i32, 8, 9];
+        let reqs = vec![
+            mk(0, plain_tokens.clone(), None),
+            mk(1, session_tokens.clone(), Some(info)),
+        ];
+        let outs = decode_pass(2, &sessions, &backend, &reqs, &metrics);
+        assert_eq!(outs.len(), 2);
+        // both requests get REAL logits: bit-identical to a direct
+        // backend forward of the same tokens
+        assert_eq!(outs[0].logits, backend.forward_logits(&plain_tokens));
+        assert_eq!(outs[1].logits, backend.forward_logits(&session_tokens));
+        assert_eq!(metrics.snapshot().decode_requests, 2);
+        // session state is resident now; a follow-up turn resumes (hit)
+        let info2 = sessions.lock().unwrap().admit(3, &[6, 7]);
+        let session_tokens2 = sessions.lock().unwrap().tokens(3).to_vec();
+        let reqs2 = vec![mk(2, session_tokens2.clone(), Some(info2))];
+        let outs2 = decode_pass(2, &sessions, &backend, &reqs2, &metrics);
+        assert_eq!(outs2[0].logits, backend.forward_logits(&session_tokens2));
+        let stats = sessions.lock().unwrap().pool().stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1), "turn 2 resumed from turn 1's pages");
+        assert_eq!(
+            sessions.lock().unwrap().pool().cached_tokens(3),
+            7,
+            "pool holds the full decoded context"
+        );
+        assert_eq!(
+            sessions.lock().unwrap().pool().bytes(),
+            session_bytes(&backend, 7),
+            "pool accounting matches the per-layer page layout"
+        );
     }
 
     #[test]
-    fn empty_append_is_a_pure_hit() {
-        let mut store = SessionStore::new(tiny_cfg(100), 16, 8, 4);
+    fn decode_pass_groups_same_session_requests() {
+        // two turns of one session drained into the same batch: one
+        // incremental decode serves both, logits captured at each length
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let sessions = Mutex::new(SessionStore::new(kv));
+        let metrics = Metrics::default();
+        let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
+            let (tx, rx) = channel();
+            std::mem::forget(rx);
+            Request { id, tokens, arrival: Instant::now(), reply: tx, session }
+        };
+        let i1 = sessions.lock().unwrap().admit(9, &[1, 2, 3]);
+        let t1 = sessions.lock().unwrap().tokens(9).to_vec();
+        let i2 = sessions.lock().unwrap().admit(9, &[4, 5]);
+        let t2 = sessions.lock().unwrap().tokens(9).to_vec();
+        let reqs = vec![mk(0, t2.clone(), Some(i2)), mk(1, t1.clone(), Some(i1))];
+        let outs = decode_pass(1, &sessions, &backend, &reqs, &metrics);
+        assert_eq!(outs[0].logits, backend.forward_logits(&t2));
+        assert_eq!(outs[1].logits, backend.forward_logits(&t1));
+        assert_eq!(sessions.lock().unwrap().pool().cached_tokens(9), 5);
+    }
+
+    #[test]
+    fn empty_append_is_a_pure_history_hit() {
+        let mut store = SessionStore::new(kv_cfg(1 << 20));
         store.admit(9, &[1, 2]);
         let a = store.admit(9, &[]);
         assert_eq!((a.cached_tokens, a.appended_tokens), (2, 0));
-        assert_eq!(store.kv(9).unwrap().len(), 2);
+        assert_eq!(store.tokens(9), &[1, 2]);
     }
 }

@@ -2,6 +2,28 @@
 
 use crate::binary::bitpack::words_for;
 
+/// Storage precision of the value rows inside KV pages. Keys are always
+/// packed sign bits; values default to f32 and can be halved to bf16
+/// (`util::bf16`, round-to-nearest-even on append) — the paper binarizes
+/// only Q/K, so value residency is the remaining dense cost the ROADMAP
+/// calls out.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ValueDtype {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl ValueDtype {
+    /// Bytes one value element occupies at rest.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            ValueDtype::F32 => 4,
+            ValueDtype::Bf16 => 2,
+        }
+    }
+}
+
 /// Configuration of the paged bit-packed KV cache.
 #[derive(Clone, Copy, Debug)]
 pub struct KvCacheConfig {
@@ -11,6 +33,8 @@ pub struct KvCacheConfig {
     /// Total resident-byte budget of the pool across all sessions; the
     /// pool evicts least-recently-used sessions to stay under it.
     pub byte_budget: usize,
+    /// Precision of stored value rows (keys are always 1-bit packed).
+    pub value_dtype: ValueDtype,
 }
 
 impl Default for KvCacheConfig {
@@ -18,15 +42,17 @@ impl Default for KvCacheConfig {
         KvCacheConfig {
             page_tokens: 64,
             byte_budget: 32 * 1024 * 1024,
+            value_dtype: ValueDtype::F32,
         }
     }
 }
 
 impl KvCacheConfig {
     /// Payload bytes of one full page for the given head geometry:
-    /// packed sign-bit keys (`ceil(d/64)` u64 words/token) + f32 values.
+    /// packed sign-bit keys (`ceil(d/64)` u64 words/token) plus values at
+    /// the configured precision.
     pub fn page_payload_bytes(&self, d: usize, d_v: usize) -> usize {
-        self.page_tokens * (words_for(d) * 8 + d_v * 4)
+        self.page_tokens * (words_for(d) * 8 + d_v * self.value_dtype.bytes_per_elem())
     }
 
     /// How many full pages fit the byte budget for one head geometry
@@ -42,7 +68,7 @@ mod tests {
 
     #[test]
     fn page_payload_math() {
-        let cfg = KvCacheConfig { page_tokens: 64, byte_budget: 1 << 20 };
+        let cfg = KvCacheConfig { page_tokens: 64, byte_budget: 1 << 20, ..Default::default() };
         // d=64: one u64 word per key -> 8 B/token; d_v=64 f32 -> 256 B/token
         assert_eq!(cfg.page_payload_bytes(64, 64), 64 * (8 + 256));
         // ragged d=65 needs two words
@@ -50,8 +76,24 @@ mod tests {
     }
 
     #[test]
+    fn bf16_halves_value_payload() {
+        let f32_cfg = KvCacheConfig { page_tokens: 64, byte_budget: 1 << 20, ..Default::default() };
+        let bf16_cfg = KvCacheConfig { value_dtype: ValueDtype::Bf16, ..f32_cfg };
+        assert_eq!(bf16_cfg.page_payload_bytes(64, 64), 64 * (8 + 128));
+        // key payload is dtype-independent
+        assert_eq!(
+            f32_cfg.page_payload_bytes(64, 64) - bf16_cfg.page_payload_bytes(64, 64),
+            64 * 128
+        );
+    }
+
+    #[test]
     fn budget_capacity() {
-        let cfg = KvCacheConfig { page_tokens: 64, byte_budget: 64 * (8 + 256) * 10 };
+        let cfg = KvCacheConfig {
+            page_tokens: 64,
+            byte_budget: 64 * (8 + 256) * 10,
+            ..Default::default()
+        };
         assert_eq!(cfg.pages_in_budget(64, 64), 10);
     }
 }

@@ -1,0 +1,199 @@
+//! Per-layer KV state for the CPU serving backend: one page chain per
+//! (layer, head) pair, advancing in lock step one token at a time.
+//!
+//! ## Layout
+//!
+//! `SessionKv` is a single page chain — the right shape for one attention
+//! head's geometry. A transformer decode produces K/V for EVERY layer and
+//! head per token, so a served session holds `n_layers * n_heads` chains,
+//! each with key dim = value dim = `d_head`, all at the same token length.
+//! Chains are stored layer-major (`layer * n_heads + head`), and the
+//! decoded token ids are kept alongside so a later request can be checked
+//! against the resident state (prefix identity) before the backend
+//! resumes an incremental decode instead of re-executing the sequence.
+//!
+//! One token of residency costs
+//! `n_layers * n_heads * (ceil(d_head/64) * 8 + d_head * value_bytes)` —
+//! packed sign-bit keys per layer per head plus values at the configured
+//! precision (`ValueDtype::Bf16` halves the value half).
+
+use crate::kvcache::config::ValueDtype;
+use crate::kvcache::session::SessionKv;
+
+/// Head geometry of a layered cache (one chain per (layer, head)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvGeom {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
+impl KvGeom {
+    pub fn chains(&self) -> usize {
+        self.n_layers * self.n_heads
+    }
+}
+
+/// One served session's full per-layer KV state plus the token ids it was
+/// decoded from.
+#[derive(Clone, Debug)]
+pub struct LayeredKv {
+    geom: KvGeom,
+    /// layer-major: chains[layer * n_heads + head]
+    chains: Vec<SessionKv>,
+    /// Ids of the tokens whose K/V are resident, in decode order. The
+    /// chains hold exactly `tokens.len()` entries each once a token's
+    /// forward completes (`note_token` asserts it).
+    tokens: Vec<i32>,
+}
+
+impl LayeredKv {
+    pub fn new(geom: KvGeom, page_tokens: usize, dtype: ValueDtype) -> LayeredKv {
+        assert!(geom.n_layers > 0 && geom.n_heads > 0 && geom.d_head > 0, "empty geometry");
+        let chains = (0..geom.chains())
+            .map(|_| SessionKv::new_with(geom.d_head, geom.d_head, page_tokens, dtype))
+            .collect();
+        LayeredKv { geom, chains, tokens: Vec::new() }
+    }
+
+    #[inline]
+    pub fn geom(&self) -> KvGeom {
+        self.geom
+    }
+
+    /// Decoded tokens resident in every chain.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Ids of the resident tokens (decode-order prefix of the session).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Is the resident state exactly a decode of `tokens[..self.len()]`?
+    /// The backend resumes from `len()` when true and resets otherwise.
+    pub fn is_prefix_of(&self, tokens: &[i32]) -> bool {
+        tokens.len() >= self.tokens.len() && tokens[..self.tokens.len()] == self.tokens[..]
+    }
+
+    #[inline]
+    pub fn chain(&self, layer: usize, head: usize) -> &SessionKv {
+        &self.chains[layer * self.geom.n_heads + head]
+    }
+
+    #[inline]
+    pub fn chain_mut(&mut self, layer: usize, head: usize) -> &mut SessionKv {
+        &mut self.chains[layer * self.geom.n_heads + head]
+    }
+
+    /// Complete one decoded token: every chain must have received exactly
+    /// one appended row since the previous call.
+    pub fn note_token(&mut self, token: i32) {
+        let want = self.tokens.len() + 1;
+        debug_assert!(
+            self.chains.iter().all(|c| c.len() == want),
+            "every (layer, head) chain must advance one row per token"
+        );
+        self.tokens.push(token);
+    }
+
+    /// Roll every chain (and the token record) back to `len` tokens.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.tokens.len(), "truncate beyond length");
+        for c in &mut self.chains {
+            c.truncate(len);
+        }
+        self.tokens.truncate(len);
+    }
+
+    /// Drop all resident state (context restart).
+    pub fn reset(&mut self) {
+        self.truncate(0);
+    }
+
+    /// Resident payload bytes across all chains' pages.
+    pub fn bytes(&self) -> usize {
+        self.chains.iter().map(SessionKv::bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_token(kv: &mut LayeredKv, tok: i32, fill: f32) {
+        let g = kv.geom();
+        for l in 0..g.n_layers {
+            for h in 0..g.n_heads {
+                kv.chain_mut(l, h).append_row(&vec![fill; g.d_head], &vec![fill; g.d_head]);
+            }
+        }
+        kv.note_token(tok);
+    }
+
+    #[test]
+    fn tokens_advance_in_lock_step() {
+        let geom = KvGeom { n_layers: 2, n_heads: 3, d_head: 16 };
+        let mut kv = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert!(kv.is_empty());
+        assert_eq!(kv.geom().chains(), 6);
+        for (i, tok) in [5i32, 7, 9].iter().enumerate() {
+            push_token(&mut kv, *tok, i as f32);
+            assert_eq!(kv.len(), i + 1);
+        }
+        assert_eq!(kv.tokens(), &[5, 7, 9]);
+        for l in 0..2 {
+            for h in 0..3 {
+                assert_eq!(kv.chain(l, h).len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_identity() {
+        let geom = KvGeom { n_layers: 1, n_heads: 2, d_head: 8 };
+        let mut kv = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert!(kv.is_prefix_of(&[1, 2, 3]), "empty state is a prefix of anything");
+        push_token(&mut kv, 1, 0.0);
+        push_token(&mut kv, 2, 1.0);
+        assert!(kv.is_prefix_of(&[1, 2]));
+        assert!(kv.is_prefix_of(&[1, 2, 3]));
+        assert!(!kv.is_prefix_of(&[1, 9, 3]), "mismatched id");
+        assert!(!kv.is_prefix_of(&[1]), "resident state longer than the request");
+    }
+
+    #[test]
+    fn truncate_and_reset_roll_back_every_chain() {
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 8 };
+        let mut kv = LayeredKv::new(geom, 2, ValueDtype::Bf16);
+        for t in 0..5 {
+            push_token(&mut kv, t, t as f32);
+        }
+        let full = kv.bytes();
+        assert!(full > 0);
+        kv.truncate(2);
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.tokens(), &[0, 1]);
+        assert!(kv.bytes() < full, "dropping pages releases bytes");
+        assert!(kv.chains.iter().all(|c| c.len() == 2));
+        kv.reset();
+        assert!(kv.is_empty());
+        assert_eq!(kv.bytes(), 0);
+    }
+
+    #[test]
+    fn bytes_are_the_sum_of_chain_pages() {
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 64 };
+        let mut kv = LayeredKv::new(geom, 4, ValueDtype::F32);
+        push_token(&mut kv, 3, 0.5);
+        // 4 chains x one page x 4 tokens x (8 B key + 64*4 B value)
+        assert_eq!(kv.bytes(), 4 * 4 * (8 + 256));
+    }
+}

@@ -7,13 +7,21 @@
 //! This module turns that claim into a serving subsystem:
 //!
 //! * [`page::Page`] — fixed-size pages holding `page_tokens` tokens of
-//!   packed sign-bit keys (`ceil(d/64)` u64 words per token) plus f32
-//!   values, allocated at full capacity so accounting is exact.
+//!   packed sign-bit keys (`ceil(d/64)` u64 words per token) plus values
+//!   in f32 or, config-gated, bf16 ([`ValueDtype`], halving the dense
+//!   half of residency; keys are 1-bit either way).
 //! * [`session::SessionKv`] — a per-session chain of pages with
 //!   append/seal/truncate handles: turn N packs only its new tokens
 //!   (incremental prefill and decode), resident pages are never copied.
+//! * [`layered::LayeredKv`] — the serving backend's unit of residency:
+//!   one chain per (layer, head) pair advancing in lock step per decoded
+//!   token, plus the decoded token ids so a later turn can verify prefix
+//!   identity and resume instead of re-executing the sequence.
 //! * [`pool::PagePool`] — a global byte-budgeted pool with LRU eviction
-//!   at session granularity and hit/miss/eviction accounting.
+//!   at session granularity and hit/miss/eviction accounting; generic
+//!   over the entry kind (`PagePool<SessionKv>` for flat chains,
+//!   `PagePool<LayeredKv>` for full decode states, which the coordinator
+//!   checks out per batch with `take` and back in with `insert`).
 //! * [`config::KvCacheConfig`] — sizing knobs and capacity math.
 //!
 //! `binary::attention::had_attention_paged` scores XNOR-popcount directly
@@ -25,18 +33,22 @@
 //! For head dim `d = 64` and `page_tokens = 64`, one page's keys cost
 //! `64 tokens x 8 B = 512 B` versus `64 x 64 x 4 B = 16 KiB` for f32 keys
 //! — the 32x reduction (64x vs bf16 would be 2 B/element, 16x). Values
-//! remain dense f32 (`d_v = 64` -> 16 KiB/page): the paper binarizes only
-//! Q and K, so the *scoring* working set shrinks 32x while values are
-//! touched just `n_top` times per query after selection. A 32 MiB default
-//! budget therefore holds ~2000 pages (~128k tokens) of full KV state —
-//! and at 8 B/token of packed keys, ~4M tokens of key-only scoring state.
+//! stay dense (the paper binarizes only Q and K) at f32 by default —
+//! 16 KiB/page at `d_v = 64` — or 8 KiB/page under `ValueDtype::Bf16`,
+//! while the *scoring* working set shrinks 32x and values are touched
+//! just `n_top` times per query after selection. A 32 MiB default budget
+//! therefore holds ~2000 pages (~128k tokens) of full f32 KV state,
+//! ~2x that with bf16 values — and at 8 B/token of packed keys, ~4M
+//! tokens of key-only scoring state.
 
 pub mod config;
+pub mod layered;
 pub mod page;
 pub mod pool;
 pub mod session;
 
-pub use config::KvCacheConfig;
+pub use config::{KvCacheConfig, ValueDtype};
+pub use layered::{KvGeom, LayeredKv};
 pub use page::Page;
-pub use pool::{Admission, CacheStats, PagePool};
+pub use pool::{Admission, CacheStats, PagePool, PooledKv};
 pub use session::SessionKv;

@@ -1,8 +1,21 @@
-//! A fixed-size KV page: packed sign-bit keys + f32 values for up to
-//! `capacity` tokens. Pages are the unit of pool accounting and of the
-//! non-contiguous layout `had_attention_paged` scores over.
+//! A fixed-size KV page: packed sign-bit keys + values (f32 or bf16) for
+//! up to `capacity` tokens. Pages are the unit of pool accounting and of
+//! the non-contiguous layout `had_attention_paged` scores over.
 
 use crate::binary::bitpack::{pack_vector, words_for};
+use crate::kvcache::config::ValueDtype;
+use crate::util::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
+
+/// Value rows at rest. F32 keeps rows borrowable as `&[f32]`; Bf16 halves
+/// residency and decodes on the fly in `accum_value`/`value_into` (there
+/// is deliberately no borrowable f32 view of a bf16 page — decoding into
+/// a hidden buffer would silently double the residency the mode exists
+/// to halve).
+#[derive(Clone, Debug)]
+enum Values {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
 
 /// One page of KV state. Storage is allocated at full capacity on
 /// construction, so `bytes()` is constant over the page's lifetime and
@@ -16,15 +29,23 @@ pub struct Page {
     len: usize,
     /// capacity * words_per_key packed sign words, filled up to len rows.
     keys: Vec<u64>,
-    /// capacity * d_v f32 values, filled up to len rows.
-    values: Vec<f32>,
+    /// capacity * d_v value elements, filled up to len rows.
+    values: Values,
 }
 
 impl Page {
     pub fn new(capacity: usize, d: usize, d_v: usize) -> Page {
+        Page::new_with(capacity, d, d_v, ValueDtype::F32)
+    }
+
+    pub fn new_with(capacity: usize, d: usize, d_v: usize, dtype: ValueDtype) -> Page {
         assert!(capacity > 0, "page capacity must be positive");
         assert!(d > 0, "key dim must be positive");
         let words_per_key = words_for(d);
+        let values = match dtype {
+            ValueDtype::F32 => Values::F32(vec![0.0f32; capacity * d_v]),
+            ValueDtype::Bf16 => Values::Bf16(vec![0u16; capacity * d_v]),
+        };
         Page {
             d,
             words_per_key,
@@ -32,7 +53,7 @@ impl Page {
             capacity,
             len: 0,
             keys: vec![0u64; capacity * words_per_key],
-            values: vec![0.0f32; capacity * d_v],
+            values,
         }
     }
 
@@ -61,14 +82,31 @@ impl Page {
         self.words_per_key
     }
 
-    /// Append one token's key (continuous f32, binarized here) and value.
+    #[inline]
+    pub fn value_dtype(&self) -> ValueDtype {
+        match self.values {
+            Values::F32(_) => ValueDtype::F32,
+            Values::Bf16(_) => ValueDtype::Bf16,
+        }
+    }
+
+    /// Append one token's key (continuous f32, binarized here) and value
+    /// (rounded to the page's value dtype).
     pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
         assert!(!self.is_full(), "page overflow");
         assert_eq!(k_row.len(), self.d, "key dim mismatch");
         assert_eq!(v_row.len(), self.d_v, "value dim mismatch");
         let w = self.words_per_key;
         pack_vector(k_row, &mut self.keys[self.len * w..(self.len + 1) * w]);
-        self.values[self.len * self.d_v..(self.len + 1) * self.d_v].copy_from_slice(v_row);
+        let (lo, hi) = (self.len * self.d_v, (self.len + 1) * self.d_v);
+        match &mut self.values {
+            Values::F32(vs) => vs[lo..hi].copy_from_slice(v_row),
+            Values::Bf16(vs) => {
+                for (slot, &x) in vs[lo..hi].iter_mut().zip(v_row) {
+                    *slot = f32_to_bf16_bits(x);
+                }
+            }
+        }
         self.len += 1;
     }
 
@@ -87,11 +125,52 @@ impl Page {
         &self.keys[..self.len * self.words_per_key]
     }
 
-    /// f32 value row of token `i`.
+    /// f32 value row of token `i`. Only f32 pages have borrowable rows —
+    /// use `accum_value`/`value_into` for dtype-independent access.
     #[inline]
     pub fn value(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
-        &self.values[i * self.d_v..(i + 1) * self.d_v]
+        match &self.values {
+            Values::F32(vs) => &vs[i * self.d_v..(i + 1) * self.d_v],
+            Values::Bf16(_) => panic!("bf16 pages have no borrowable f32 rows"),
+        }
+    }
+
+    /// `orow += w * value_row(i)` — the AV-accumulation primitive every
+    /// attention path uses, decoding bf16 inline. For a given (i, w,
+    /// orow) the f32 path performs exactly the arithmetic the old
+    /// slice-based loop did, so f32 outputs are unchanged.
+    #[inline]
+    pub fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]) {
+        debug_assert!(i < self.len);
+        let (lo, hi) = (i * self.d_v, (i + 1) * self.d_v);
+        match &self.values {
+            Values::F32(vs) => {
+                for (o, &v) in orow.iter_mut().zip(&vs[lo..hi]) {
+                    *o += w * v;
+                }
+            }
+            Values::Bf16(vs) => {
+                for (o, &bits) in orow.iter_mut().zip(&vs[lo..hi]) {
+                    *o += w * bf16_bits_to_f32(bits);
+                }
+            }
+        }
+    }
+
+    /// Decode token `i`'s value row into `out` (tests/oracles).
+    pub fn value_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(i < self.len);
+        assert_eq!(out.len(), self.d_v, "value dim mismatch");
+        let (lo, hi) = (i * self.d_v, (i + 1) * self.d_v);
+        match &self.values {
+            Values::F32(vs) => out.copy_from_slice(&vs[lo..hi]),
+            Values::Bf16(vs) => {
+                for (o, &bits) in out.iter_mut().zip(&vs[lo..hi]) {
+                    *o = bf16_bits_to_f32(bits);
+                }
+            }
+        }
     }
 
     /// Roll back to `len` tokens (decode rollback / bench reset).
@@ -102,7 +181,11 @@ impl Page {
 
     /// Resident payload bytes (full capacity — allocation, not fill).
     pub fn bytes(&self) -> usize {
-        self.keys.len() * 8 + self.values.len() * 4
+        let value_bytes = match &self.values {
+            Values::F32(vs) => vs.len() * 4,
+            Values::Bf16(vs) => vs.len() * 2,
+        };
+        self.keys.len() * 8 + value_bytes
     }
 }
 
@@ -110,6 +193,7 @@ impl Page {
 mod tests {
     use super::*;
     use crate::binary::bitpack::PackedMat;
+    use crate::util::bf16::bf16_round;
     use crate::util::rng::Rng;
 
     #[test]
@@ -160,6 +244,59 @@ mod tests {
         assert_eq!(before, 16 * 8 + 16 * 32 * 4);
         page.push(&[1.0; 64], &[0.5; 32]);
         assert_eq!(page.bytes(), before);
+    }
+
+    #[test]
+    fn bf16_page_halves_value_bytes_and_rounds_rows() {
+        let mut rng = Rng::new(3);
+        let (d, d_v) = (64usize, 16usize);
+        let mut f32_page = Page::new(8, d, d_v);
+        let mut bf_page = Page::new_with(8, d, d_v, ValueDtype::Bf16);
+        assert_eq!(bf_page.value_dtype(), ValueDtype::Bf16);
+        assert_eq!(f32_page.bytes() - bf_page.bytes(), 8 * d_v * 2);
+        let k = rng.normal_vec(d, 1.0);
+        let v = rng.normal_vec(d_v, 1.0);
+        f32_page.push(&k, &v);
+        bf_page.push(&k, &v);
+        // keys are identical; values round-trip through bf16
+        assert_eq!(f32_page.key(0), bf_page.key(0));
+        let mut row = vec![0.0f32; d_v];
+        bf_page.value_into(0, &mut row);
+        for (got, &x) in row.iter().zip(&v) {
+            assert_eq!(*got, bf16_round(x));
+        }
+        // accum_value accumulates the rounded row
+        let mut acc = vec![0.0f32; d_v];
+        bf_page.accum_value(0, 0.5, &mut acc);
+        for (a, &r) in acc.iter().zip(&row) {
+            assert_eq!(*a, 0.5 * r);
+        }
+    }
+
+    #[test]
+    fn f32_accum_value_matches_slice_loop() {
+        let mut rng = Rng::new(4);
+        let (d, d_v) = (32usize, 8usize);
+        let mut page = Page::new(4, d, d_v);
+        let k = rng.normal_vec(d, 1.0);
+        let v = rng.normal_vec(d_v, 1.0);
+        page.push(&k, &v);
+        let w = 0.37f32;
+        let mut via_accum = vec![0.25f32; d_v];
+        page.accum_value(0, w, &mut via_accum);
+        let mut via_slice = vec![0.25f32; d_v];
+        for (o, &x) in via_slice.iter_mut().zip(page.value(0)) {
+            *o += w * x;
+        }
+        assert_eq!(via_accum, via_slice);
+    }
+
+    #[test]
+    #[should_panic(expected = "no borrowable f32 rows")]
+    fn bf16_page_rejects_f32_borrow() {
+        let mut page = Page::new_with(2, 8, 2, ValueDtype::Bf16);
+        page.push(&[1.0; 8], &[0.5; 2]);
+        let _ = page.value(0);
     }
 
     #[test]

@@ -1,12 +1,52 @@
 //! Global byte-budgeted page pool: owns every resident session's pages,
 //! evicts least-recently-used sessions when the budget is exceeded, and
 //! keeps hit/miss/eviction accounting for the serving metrics.
+//!
+//! The pool is generic over what a "session" holds: the default
+//! `PagePool<SessionKv>` is the single-chain pool the admission benches
+//! and flat scoring paths use, and `PagePool<LayeredKv>` is the serving
+//! backend's pool of full per-layer decode states (checked out for a
+//! batch's decode with [`PagePool::take`], checked back in with
+//! [`PagePool::insert`]).
 
 use std::collections::HashMap;
 
 use crate::kvcache::config::KvCacheConfig;
+use crate::kvcache::layered::LayeredKv;
 use crate::kvcache::session::SessionKv;
 use crate::tensor::Mat;
+
+/// What the pool needs from a resident entry: byte accounting, a token
+/// count for `cached_tokens`, and rollback support.
+pub trait PooledKv {
+    fn bytes(&self) -> usize;
+    fn tokens(&self) -> usize;
+    fn truncate(&mut self, len: usize);
+}
+
+impl PooledKv for SessionKv {
+    fn bytes(&self) -> usize {
+        SessionKv::bytes(self)
+    }
+    fn tokens(&self) -> usize {
+        self.len()
+    }
+    fn truncate(&mut self, len: usize) {
+        SessionKv::truncate(self, len)
+    }
+}
+
+impl PooledKv for LayeredKv {
+    fn bytes(&self) -> usize {
+        LayeredKv::bytes(self)
+    }
+    fn tokens(&self) -> usize {
+        self.len()
+    }
+    fn truncate(&mut self, len: usize) {
+        LayeredKv::truncate(self, len)
+    }
+}
 
 /// Cumulative cache counters (monotone; snapshot and diff as needed).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -43,23 +83,23 @@ pub struct Admission {
     pub appended_tokens: usize,
 }
 
-struct Entry {
-    kv: SessionKv,
+struct Entry<T> {
+    kv: T,
     last_used: u64,
 }
 
 /// The pool. Not internally synchronized — the coordinator wraps it in a
 /// Mutex (admission is cheap next to model execution).
-pub struct PagePool {
+pub struct PagePool<T: PooledKv = SessionKv> {
     cfg: KvCacheConfig,
-    sessions: HashMap<u64, Entry>,
+    sessions: HashMap<u64, Entry<T>>,
     clock: u64,
     bytes: usize,
     stats: CacheStats,
 }
 
-impl PagePool {
-    pub fn new(cfg: KvCacheConfig) -> PagePool {
+impl<T: PooledKv> PagePool<T> {
+    pub fn new(cfg: KvCacheConfig) -> PagePool<T> {
         PagePool {
             cfg,
             sessions: HashMap::new(),
@@ -100,50 +140,24 @@ impl PagePool {
         self.clock
     }
 
-    /// Tokens resident for a session (0 when absent). Does not touch LRU.
-    pub fn cached_tokens(&self, session_id: u64) -> usize {
-        self.sessions.get(&session_id).map_or(0, |e| e.kv.len())
-    }
-
-    /// Admit `k`/`v` rows for a session (head geometry is `k.cols` /
-    /// `v.cols`): appends to the resident pages on a hit, starts a cold
-    /// session on a miss, then enforces the byte budget by evicting LRU
-    /// sessions (never the one just admitted).
-    pub fn append(&mut self, session_id: u64, k: &Mat, v: &Mat) -> Admission {
-        let (d, d_v) = (k.cols, v.cols);
-        let now = self.tick();
-        let page_tokens = self.cfg.page_tokens;
-        // A geometry change is a protocol error from the same session id;
-        // treat it as a cold restart rather than corrupting pages.
-        let stale = self
-            .sessions
-            .get(&session_id)
-            .map_or(false, |e| e.kv.d() != d || e.kv.d_v() != d_v);
-        if stale {
-            self.remove(session_id);
-        }
-        let hit = self.sessions.contains_key(&session_id);
-        let entry = self.sessions.entry(session_id).or_insert_with(|| Entry {
-            kv: SessionKv::new(d, d_v, page_tokens),
-            last_used: now,
-        });
-        entry.last_used = now;
-        let before = entry.kv.bytes();
-        let reused_tokens = entry.kv.len();
-        entry.kv.append(k, v);
-        let after = entry.kv.bytes();
-        self.bytes += after - before;
+    /// Count one admission-style lookup whose hit/miss outcome is decided
+    /// by the caller (the layered checkout path: resident-and-reusable is
+    /// a hit, absent or reset is a miss).
+    pub fn record_lookup(&mut self, hit: bool) {
         if hit {
             self.stats.hits += 1;
         } else {
             self.stats.misses += 1;
         }
-        self.enforce_budget(session_id);
-        Admission { hit, reused_tokens, appended_tokens: k.rows }
+    }
+
+    /// Tokens resident for a session (0 when absent). Does not touch LRU.
+    pub fn cached_tokens(&self, session_id: u64) -> usize {
+        self.sessions.get(&session_id).map_or(0, |e| e.kv.tokens())
     }
 
     /// Borrow a resident session for scoring; refreshes its LRU position.
-    pub fn get(&mut self, session_id: u64) -> Option<&SessionKv> {
+    pub fn get(&mut self, session_id: u64) -> Option<&T> {
         let now = self.tick();
         let entry = self.sessions.get_mut(&session_id)?;
         entry.last_used = now;
@@ -151,15 +165,32 @@ impl PagePool {
     }
 
     /// Borrow without touching LRU (introspection/tests).
-    pub fn peek(&self, session_id: u64) -> Option<&SessionKv> {
+    pub fn peek(&self, session_id: u64) -> Option<&T> {
         self.sessions.get(&session_id).map(|e| &e.kv)
     }
 
-    /// Seal a session (no further appends accepted by SessionKv).
-    pub fn seal(&mut self, session_id: u64) {
-        if let Some(e) = self.sessions.get_mut(&session_id) {
-            e.kv.seal();
+    /// Check a session OUT of the pool (its bytes leave the accounting):
+    /// the serving backend takes ownership for a batch's decode so appends
+    /// run without holding the pool lock, then returns it via `insert`.
+    pub fn take(&mut self, session_id: u64) -> Option<T> {
+        let entry = self.sessions.remove(&session_id)?;
+        self.bytes -= entry.kv.bytes();
+        Some(entry.kv)
+    }
+
+    /// Check a session IN (back, or newly created): replaces any resident
+    /// entry, refreshes LRU, then enforces the byte budget — never
+    /// evicting the session just inserted. Returns the ids evicted to
+    /// make room, so the caller can drop any per-session state of its own
+    /// (the coordinator's token histories).
+    pub fn insert(&mut self, session_id: u64, kv: T) -> Vec<u64> {
+        let now = self.tick();
+        if let Some(old) = self.sessions.remove(&session_id) {
+            self.bytes -= old.kv.bytes();
         }
+        self.bytes += kv.bytes();
+        self.sessions.insert(session_id, Entry { kv, last_used: now });
+        self.enforce_budget(session_id)
     }
 
     /// Roll a session back to `len` tokens, releasing now-empty pages
@@ -172,7 +203,7 @@ impl PagePool {
             return;
         }
         if let Some(e) = self.sessions.get_mut(&session_id) {
-            if e.kv.len() > len {
+            if e.kv.tokens() > len {
                 let before = e.kv.bytes();
                 e.kv.truncate(len);
                 self.bytes -= before - e.kv.bytes();
@@ -195,8 +226,9 @@ impl PagePool {
     /// Evict LRU sessions until the budget holds. `protect` (the session
     /// just admitted) is never evicted, so one session larger than the
     /// whole budget stays resident — admission control is the router's
-    /// job, not the pool's.
-    fn enforce_budget(&mut self, protect: u64) {
+    /// job, not the pool's. Returns the evicted ids.
+    fn enforce_budget(&mut self, protect: u64) -> Vec<u64> {
+        let mut evicted = Vec::new();
         while self.bytes > self.cfg.byte_budget {
             let victim = self
                 .sessions
@@ -210,7 +242,56 @@ impl PagePool {
                 self.bytes -= freed;
                 self.stats.evictions += 1;
                 self.stats.evicted_bytes += freed as u64;
+                evicted.push(id);
             }
+        }
+        evicted
+    }
+}
+
+impl PagePool<SessionKv> {
+    /// Admit `k`/`v` rows for a session (head geometry is `k.cols` /
+    /// `v.cols`): appends to the resident pages on a hit, starts a cold
+    /// session on a miss, then enforces the byte budget by evicting LRU
+    /// sessions (never the one just admitted).
+    pub fn append(&mut self, session_id: u64, k: &Mat, v: &Mat) -> Admission {
+        let (d, d_v) = (k.cols, v.cols);
+        let now = self.tick();
+        let page_tokens = self.cfg.page_tokens;
+        let dtype = self.cfg.value_dtype;
+        // A geometry change is a protocol error from the same session id;
+        // treat it as a cold restart rather than corrupting pages.
+        let stale = self
+            .sessions
+            .get(&session_id)
+            .map_or(false, |e| e.kv.d() != d || e.kv.d_v() != d_v);
+        if stale {
+            self.remove(session_id);
+        }
+        let hit = self.sessions.contains_key(&session_id);
+        let entry = self.sessions.entry(session_id).or_insert_with(|| Entry {
+            kv: SessionKv::new_with(d, d_v, page_tokens, dtype),
+            last_used: now,
+        });
+        entry.last_used = now;
+        let before = entry.kv.bytes();
+        let reused_tokens = entry.kv.len();
+        entry.kv.append(k, v);
+        let after = entry.kv.bytes();
+        self.bytes += after - before;
+        if hit {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        self.enforce_budget(session_id);
+        Admission { hit, reused_tokens, appended_tokens: k.rows }
+    }
+
+    /// Seal a session (no further appends accepted by SessionKv).
+    pub fn seal(&mut self, session_id: u64) {
+        if let Some(e) = self.sessions.get_mut(&session_id) {
+            e.kv.seal();
         }
     }
 }
@@ -218,6 +299,8 @@ impl PagePool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::layered::KvGeom;
+    use crate::kvcache::ValueDtype;
     use crate::util::rng::Rng;
 
     const D: usize = 64;
@@ -236,6 +319,7 @@ mod tests {
         PagePool::new(KvCacheConfig {
             page_tokens: 8,
             byte_budget: budget_pages * page_bytes(),
+            ..Default::default()
         })
     }
 
@@ -349,5 +433,71 @@ mod tests {
         let a = p.append(1, &k2, &v2);
         assert!(!a.hit);
         assert_eq!(p.cached_tokens(1), 4);
+    }
+
+    #[test]
+    fn bf16_config_flows_into_new_sessions() {
+        let mut rng = Rng::new(8);
+        let mut p: PagePool = PagePool::new(KvCacheConfig {
+            page_tokens: 8,
+            byte_budget: 1 << 20,
+            value_dtype: ValueDtype::Bf16,
+        });
+        let (k, v) = kvmats(&mut rng, 8);
+        p.append(1, &k, &v);
+        assert_eq!(p.peek(1).unwrap().value_dtype(), ValueDtype::Bf16);
+        assert_eq!(p.bytes(), 8 * (8 + DV * 2));
+    }
+
+    fn layered(tokens: usize) -> LayeredKv {
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 16 };
+        let mut kv = LayeredKv::new(geom, 4, ValueDtype::F32);
+        for t in 0..tokens {
+            for l in 0..2 {
+                for h in 0..2 {
+                    kv.chain_mut(l, h).append_row(&[0.5; 16], &[0.5; 16]);
+                }
+            }
+            kv.note_token(t as i32);
+        }
+        kv
+    }
+
+    #[test]
+    fn layered_take_insert_roundtrip_keeps_accounting() {
+        let mut p: PagePool<LayeredKv> =
+            PagePool::new(KvCacheConfig { page_tokens: 4, byte_budget: 1 << 20, ..Default::default() });
+        assert!(p.take(1).is_none());
+        let kv = layered(6);
+        let kv_bytes = PooledKv::bytes(&kv);
+        assert!(p.insert(1, kv).is_empty());
+        assert_eq!(p.bytes(), kv_bytes);
+        assert_eq!(p.cached_tokens(1), 6);
+        let out = p.take(1).expect("resident");
+        assert_eq!(out.len(), 6);
+        assert_eq!((p.bytes(), p.len()), (0, 0));
+        // re-inserting a replacement does not double count
+        p.insert(1, layered(2));
+        p.insert(1, layered(6));
+        assert_eq!(p.bytes(), kv_bytes);
+    }
+
+    #[test]
+    fn layered_insert_reports_evictions() {
+        let one = PooledKv::bytes(&layered(4)); // exactly one page per chain
+        let mut p: PagePool<LayeredKv> = PagePool::new(KvCacheConfig {
+            page_tokens: 4,
+            byte_budget: 2 * one,
+            ..Default::default()
+        });
+        p.insert(1, layered(4));
+        p.insert(2, layered(4));
+        assert!(p.bytes() <= p.budget());
+        let evicted = p.insert(3, layered(4));
+        assert_eq!(evicted, vec![1], "LRU session evicted and reported");
+        assert_eq!(p.stats().evictions, 1);
+        p.record_lookup(true);
+        p.record_lookup(false);
+        assert_eq!((p.stats().hits, p.stats().misses), (1, 1));
     }
 }

@@ -3,6 +3,7 @@
 //! tokens; the packed keys of turns 0..N stay resident and are re-scored
 //! in place by `binary::attention::had_attention_paged`.
 
+use crate::kvcache::config::ValueDtype;
 use crate::kvcache::page::Page;
 use crate::tensor::Mat;
 
@@ -12,6 +13,7 @@ pub struct SessionKv {
     d: usize,
     d_v: usize,
     page_tokens: usize,
+    value_dtype: ValueDtype,
     pages: Vec<Page>,
     len: usize,
     sealed: bool,
@@ -19,8 +21,22 @@ pub struct SessionKv {
 
 impl SessionKv {
     pub fn new(d: usize, d_v: usize, page_tokens: usize) -> SessionKv {
+        SessionKv::new_with(d, d_v, page_tokens, ValueDtype::F32)
+    }
+
+    /// Like `new` with an explicit value precision (bf16 halves value
+    /// residency; keys are packed sign bits either way).
+    pub fn new_with(d: usize, d_v: usize, page_tokens: usize, dtype: ValueDtype) -> SessionKv {
         assert!(page_tokens > 0, "page_tokens must be positive");
-        SessionKv { d, d_v, page_tokens, pages: Vec::new(), len: 0, sealed: false }
+        SessionKv {
+            d,
+            d_v,
+            page_tokens,
+            value_dtype: dtype,
+            pages: Vec::new(),
+            len: 0,
+            sealed: false,
+        }
     }
 
     #[inline]
@@ -48,8 +64,27 @@ impl SessionKv {
         self.page_tokens
     }
 
+    #[inline]
+    pub fn value_dtype(&self) -> ValueDtype {
+        self.value_dtype
+    }
+
     pub fn pages(&self) -> &[Page] {
         &self.pages
+    }
+
+    /// Incremental decode: binarize-pack and append ONE token's key/value
+    /// rows (the serving backend's per-token unit of work).
+    pub fn append_row(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(!self.sealed, "append to sealed session");
+        assert_eq!(k_row.len(), self.d, "key dim mismatch");
+        assert_eq!(v_row.len(), self.d_v, "value dim mismatch");
+        if self.pages.last().map_or(true, Page::is_full) {
+            self.pages
+                .push(Page::new_with(self.page_tokens, self.d, self.d_v, self.value_dtype));
+        }
+        self.pages.last_mut().unwrap().push(k_row, v_row);
+        self.len += 1;
     }
 
     /// Incremental prefill/decode: binarize-pack and append `k.rows` new
@@ -58,14 +93,8 @@ impl SessionKv {
     pub fn append(&mut self, k: &Mat, v: &Mat) {
         assert!(!self.sealed, "append to sealed session");
         assert_eq!(k.rows, v.rows, "K/V length mismatch");
-        assert_eq!(k.cols, self.d, "key dim mismatch");
-        assert_eq!(v.cols, self.d_v, "value dim mismatch");
         for r in 0..k.rows {
-            if self.pages.last().map_or(true, Page::is_full) {
-                self.pages.push(Page::new(self.page_tokens, self.d, self.d_v));
-            }
-            self.pages.last_mut().unwrap().push(k.row(r), v.row(r));
-            self.len += 1;
+            self.append_row(k.row(r), v.row(r));
         }
     }
 
@@ -103,11 +132,25 @@ impl SessionKv {
         self.pages[i / self.page_tokens].key(i % self.page_tokens)
     }
 
-    /// f32 value row of global token `i`.
+    /// f32 value row of global token `i` (f32-valued sessions only; see
+    /// `accum_value` for the dtype-independent hot path).
     #[inline]
     pub fn value(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
         self.pages[i / self.page_tokens].value(i % self.page_tokens)
+    }
+
+    /// `orow += w * value_row(i)`, page-resolved, decoding bf16 inline.
+    #[inline]
+    pub fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]) {
+        debug_assert!(i < self.len);
+        self.pages[i / self.page_tokens].accum_value(i % self.page_tokens, w, orow);
+    }
+
+    /// Decode token `i`'s value row into `out` (tests/oracles).
+    pub fn value_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(i < self.len);
+        self.pages[i / self.page_tokens].value_into(i % self.page_tokens, out);
     }
 
     /// Resident payload bytes across all pages (page-granular: partially
@@ -121,6 +164,7 @@ impl SessionKv {
 mod tests {
     use super::*;
     use crate::binary::bitpack::PackedMat;
+    use crate::util::bf16::bf16_round;
     use crate::util::rng::Rng;
 
     fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
@@ -147,6 +191,49 @@ mod tests {
         for i in 0..23 {
             assert_eq!(kv.key(i), reference.row(i), "token {i}");
             assert_eq!(kv.value(i), v.row(i), "token {i}");
+        }
+    }
+
+    #[test]
+    fn append_row_equals_append() {
+        let mut rng = Rng::new(12);
+        let (d, d_v) = (33, 4);
+        let k = rand_mat(&mut rng, 9, d);
+        let v = rand_mat(&mut rng, 9, d_v);
+        let mut bulk = SessionKv::new(d, d_v, 4);
+        bulk.append(&k, &v);
+        let mut rowwise = SessionKv::new(d, d_v, 4);
+        for r in 0..9 {
+            rowwise.append_row(k.row(r), v.row(r));
+        }
+        assert_eq!(rowwise.len(), bulk.len());
+        for i in 0..9 {
+            assert_eq!(rowwise.key(i), bulk.key(i));
+            assert_eq!(rowwise.value(i), bulk.value(i));
+        }
+    }
+
+    #[test]
+    fn bf16_session_rounds_values_and_shrinks_bytes() {
+        let mut rng = Rng::new(13);
+        let (d, d_v, page_tokens) = (64, 16, 8);
+        let k = rand_mat(&mut rng, 10, d);
+        let v = rand_mat(&mut rng, 10, d_v);
+        let mut f32_kv = SessionKv::new(d, d_v, page_tokens);
+        let mut bf_kv = SessionKv::new_with(d, d_v, page_tokens, ValueDtype::Bf16);
+        f32_kv.append(&k, &v);
+        bf_kv.append(&k, &v);
+        assert_eq!(bf_kv.value_dtype(), ValueDtype::Bf16);
+        // same page count, half the value bytes
+        assert_eq!(f32_kv.pages().len(), bf_kv.pages().len());
+        assert_eq!(f32_kv.bytes() - bf_kv.bytes(), 2 * page_tokens * d_v * 2);
+        let mut row = vec![0.0f32; d_v];
+        for i in 0..10 {
+            assert_eq!(f32_kv.key(i), bf_kv.key(i), "keys are dtype-independent");
+            bf_kv.value_into(i, &mut row);
+            for (got, &x) in row.iter().zip(v.row(i)) {
+                assert_eq!(*got, bf16_round(x), "token {i}");
+            }
         }
     }
 

@@ -9,9 +9,11 @@
 //! * **L2** (build time): JAX transformer + 4-stage distillation graphs,
 //!   AOT-lowered to HLO text artifacts (`python/compile/`).
 //! * **L3** (this crate): the runtime — PJRT execution, the distillation
-//!   pipeline driver, a long-context serving coordinator, synthetic data
-//!   generators, a bit-packed CPU fast path, the custom-hardware cost
-//!   simulator, and the paper's experiment harnesses.
+//!   pipeline driver, a long-context serving coordinator, a CPU-native
+//!   serving backend (`serve`: real per-layer decode over the paged KV
+//!   cache), synthetic data generators, a bit-packed CPU fast path, the
+//!   custom-hardware cost simulator, and the paper's experiment
+//!   harnesses.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `had` binary is self-contained.
@@ -28,5 +30,6 @@ pub mod hwsim;
 pub mod kvcache;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

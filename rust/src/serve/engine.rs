@@ -1,0 +1,425 @@
+//! The CPU-native HAD decode engine: executes the real transformer
+//! forward token by token over a [`LayeredKv`] — per-layer Q/K/V
+//! projections from the checkpoint weights, sigma-standardized sign
+//! binarization (sign bits packed on append; `sigma_q * sigma_k` folded
+//! into the Hamming softmax temperature), XNOR-popcount attention with
+//! streaming top-N via `binary::kernel`, f32 value accumulation, GELU
+//! MLP, and classification logits out.
+//!
+//! ## Incremental exactness
+//!
+//! Decode is causal: position `p` attends over keys `0..=p`, so a
+//! position's hidden state depends only on its prefix. Appending a
+//! suffix to a resident [`LayeredKv`] therefore reproduces, bit for bit,
+//! the state a from-scratch decode of the full sequence would build —
+//! THE property that lets a session's turn N pay only for its new
+//! tokens (asserted by `chunked_decode_is_bit_exact`). The cache stores
+//! the decoded token ids, and [`HadBackend::decode`] resumes only when
+//! the resident state is a true prefix of the requested sequence,
+//! resetting otherwise.
+
+use std::time::Instant;
+
+use crate::binary::attention::{
+    had_attention_paged_scalar_with, had_attention_paged_with, HadAttnConfig, Scratch,
+};
+use crate::kvcache::{KvCacheConfig, KvGeom, LayeredKv, ValueDtype};
+use crate::serve::model::ServeModel;
+use crate::serve::{add_assign, affine};
+use crate::tensor::{ops, Mat};
+
+/// Which attention implementation scores the decode. `Kernel` is the
+/// production blocked engine; `Scalar` is the retained oracle, exposed
+/// so tests can assert the whole decode is bit-identical across the two
+/// (the score-path exactness contract, end to end).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnPath {
+    Kernel,
+    Scalar,
+}
+
+/// Logits captured at one requested prefix length during a decode pass.
+#[derive(Clone, Debug)]
+pub struct CaptureOut {
+    /// Prefix length (in tokens) these logits correspond to.
+    pub len: usize,
+    pub logits: Vec<f32>,
+    /// Time spent inside the Hamming attention kernel for the segment
+    /// ending at this capture (previous capture, or resume point, up to
+    /// `len`).
+    pub attn_us: u128,
+    /// Wall time of the same segment's full forward work.
+    pub decode_us: u128,
+}
+
+/// Summary of one decode pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    /// Token position decoding resumed from (0 == cold / reset).
+    pub resumed_at: usize,
+    /// Suffix tokens actually decoded by this pass.
+    pub decoded: usize,
+    /// Total Hamming-attention time across the pass.
+    pub attn_us: u128,
+    /// Total forward time across the pass.
+    pub decode_us: u128,
+}
+
+/// The serving backend: one loaded model plus the KV page geometry it
+/// decodes into. Stateless across calls — all sequence state lives in
+/// the caller's `LayeredKv`, so one backend serves any number of
+/// concurrent sessions from worker threads.
+pub struct HadBackend {
+    model: ServeModel,
+    page_tokens: usize,
+    value_dtype: ValueDtype,
+}
+
+impl HadBackend {
+    pub fn new(model: ServeModel, kv: &KvCacheConfig) -> HadBackend {
+        HadBackend { model, page_tokens: kv.page_tokens, value_dtype: kv.value_dtype }
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.model.cfg.n_classes
+    }
+
+    /// Per-layer-per-head page-chain geometry this backend decodes into.
+    pub fn geom(&self) -> KvGeom {
+        KvGeom {
+            n_layers: self.model.cfg.n_layers,
+            n_heads: self.model.cfg.n_heads,
+            d_head: self.model.cfg.d_head(),
+        }
+    }
+
+    /// An empty decode state for a new session (or a stateless request).
+    pub fn fresh_kv(&self) -> LayeredKv {
+        LayeredKv::new(self.geom(), self.page_tokens, self.value_dtype)
+    }
+
+    /// Decode `tokens` into `kv`, returning logits at each requested
+    /// prefix length (`capture_lens`: strictly ascending, each in
+    /// `1..=tokens.len()`).
+    ///
+    /// If `kv` already holds a decode of a strict prefix of `tokens`
+    /// (id-checked) shorter than the first capture, decoding resumes
+    /// there — the session warm path that touches only the appended
+    /// suffix. Any other resident state is reset and re-decoded, so the
+    /// result is independent of what was resident before.
+    pub fn decode(
+        &self,
+        kv: &mut LayeredKv,
+        tokens: &[i32],
+        capture_lens: &[usize],
+    ) -> (Vec<CaptureOut>, DecodeStats) {
+        self.decode_with(kv, tokens, capture_lens, AttnPath::Kernel)
+    }
+
+    /// `decode` with an explicit attention path (tests drive `Scalar` to
+    /// assert kernel/oracle bit-identity of the served logits).
+    pub fn decode_with(
+        &self,
+        kv: &mut LayeredKv,
+        tokens: &[i32],
+        capture_lens: &[usize],
+        path: AttnPath,
+    ) -> (Vec<CaptureOut>, DecodeStats) {
+        assert_eq!(kv.geom(), self.geom(), "decode state geometry mismatch");
+        for w in capture_lens.windows(2) {
+            assert!(w[0] < w[1], "capture lengths must be strictly ascending");
+        }
+        if let (Some(&first), Some(&last)) = (capture_lens.first(), capture_lens.last()) {
+            assert!(first >= 1 && last <= tokens.len(), "capture length out of range");
+        }
+
+        // resume only from a true id-checked prefix that still lets the
+        // first capture be produced on the way
+        let resumable =
+            kv.is_prefix_of(tokens) && capture_lens.first().map_or(true, |&c| kv.len() < c);
+        if !resumable {
+            kv.reset();
+        }
+        let start = kv.len();
+
+        let m = &self.model;
+        let (d, dh, n_heads) = (m.cfg.d_model, m.cfg.d_head(), m.cfg.n_heads);
+        let mut scratch = Scratch::default();
+        let mut captures = Vec::with_capacity(capture_lens.len());
+        let mut next_capture = 0usize;
+        let mut stats = DecodeStats { resumed_at: start, ..Default::default() };
+        let mut seg_start = Instant::now();
+        let mut seg_attn = 0u128;
+
+        for p in start..tokens.len() {
+            // embed: token row + (wrapped) learned position
+            let tok = tokens[p].rem_euclid(m.cfg.vocab as i32) as usize;
+            let mut h = Mat::from_vec(1, d, m.tok_emb.row(tok).to_vec());
+            for (o, &pe) in h.data.iter_mut().zip(m.pos_emb.row(p % m.cfg.n_ctx)) {
+                *o += pe;
+            }
+
+            for (l, lw) in m.layers.iter().enumerate() {
+                // pre-LN attention block
+                let x = ops::layernorm_rows(&h, &lw.ln1_g, &lw.ln1_b, 1e-5);
+                let q = affine(&x, &lw.wq, &lw.bq);
+                let k = affine(&x, &lw.wk, &lw.bk);
+                let v = affine(&x, &lw.wv, &lw.bv);
+                let acfg = HadAttnConfig { n_top: m.n_top, temp: m.temp(l) };
+                let mut ctx = Mat::zeros(1, d);
+                for head in 0..n_heads {
+                    let span = head * dh..(head + 1) * dh;
+                    // this token's K/V join the resident pages FIRST, so
+                    // the query attends over keys 0..=p (causal decode)
+                    kv.chain_mut(l, head).append_row(&k.data[span.clone()], &v.data[span.clone()]);
+                    let qh = Mat::from_vec(1, dh, q.data[span.clone()].to_vec());
+                    let chain = kv.chain(l, head);
+                    let t0 = Instant::now();
+                    let o = match path {
+                        AttnPath::Kernel => {
+                            had_attention_paged_with(&qh, chain, &acfg, &mut scratch)
+                        }
+                        AttnPath::Scalar => {
+                            had_attention_paged_scalar_with(&qh, chain, &acfg, &mut scratch)
+                        }
+                    };
+                    seg_attn += t0.elapsed().as_micros();
+                    ctx.data[span].copy_from_slice(o.row(0));
+                }
+                add_assign(&mut h, &affine(&ctx, &lw.wo, &lw.bo));
+                // MLP block
+                let y = ops::layernorm_rows(&h, &lw.ln2_g, &lw.ln2_b, 1e-5);
+                let mut u = affine(&y, &lw.w1, &lw.b1);
+                for xv in &mut u.data {
+                    *xv = ops::gelu_tanh(*xv);
+                }
+                add_assign(&mut h, &affine(&u, &lw.w2, &lw.b2));
+            }
+            kv.note_token(tokens[p]);
+
+            if next_capture < capture_lens.len() && capture_lens[next_capture] == p + 1 {
+                let hf = ops::layernorm_rows(&h, &m.lnf_g, &m.lnf_b, 1e-5);
+                let logits = affine(&hf, &m.head_w, &m.head_b);
+                let seg_us = seg_start.elapsed().as_micros();
+                captures.push(CaptureOut {
+                    len: p + 1,
+                    logits: logits.data,
+                    attn_us: seg_attn,
+                    decode_us: seg_us,
+                });
+                stats.attn_us += seg_attn;
+                stats.decode_us += seg_us;
+                seg_attn = 0;
+                seg_start = Instant::now();
+                next_capture += 1;
+            }
+        }
+        // trailing work past the last capture still counts toward totals
+        if tokens.len() > start
+            && captures.last().map_or(true, |c| c.len < tokens.len())
+        {
+            stats.attn_us += seg_attn;
+            stats.decode_us += seg_start.elapsed().as_micros();
+        }
+        stats.decoded = tokens.len() - start;
+        (captures, stats)
+    }
+
+    /// Stateless convenience: full forward over `tokens`, logits at the
+    /// last position (what a sessionless request receives).
+    pub fn forward_logits(&self, tokens: &[i32]) -> Vec<f32> {
+        assert!(!tokens.is_empty(), "forward over an empty sequence");
+        let mut kv = self.fresh_kv();
+        let (mut captures, _) = self.decode(&mut kv, tokens, &[tokens.len()]);
+        captures.pop().expect("one capture requested").logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ConfigEntry, ModelCfg};
+    use crate::serve::model::{token_config_entry, ServeModel};
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigEntry {
+        token_config_entry(
+            "serve_tiny",
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 24,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 6, block_q: 16,
+            },
+        )
+    }
+
+    fn backend(kv: KvCacheConfig) -> HadBackend {
+        let cfg = tiny_cfg();
+        let model = ServeModel::random(&cfg, 0xA11CE).unwrap();
+        HadBackend::new(model, &kv)
+    }
+
+    fn toks(rng: &mut Rng, n: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.below(24) as i32).collect()
+    }
+
+    #[test]
+    fn chunked_decode_is_bit_exact() {
+        // a session decoded over three turns must reproduce the one-shot
+        // decode exactly — the "suffix-only decode" acceptance property
+        let kv_cfg = KvCacheConfig { page_tokens: 4, ..Default::default() };
+        let b = backend(kv_cfg);
+        let mut rng = Rng::new(10);
+        let tokens = toks(&mut rng, 19);
+
+        let mut oneshot_kv = b.fresh_kv();
+        let (oneshot, _) = b.decode(&mut oneshot_kv, &tokens, &[7, 12, 19]);
+
+        let mut kv = b.fresh_kv();
+        let mut turnwise = Vec::new();
+        for (turn_len, resume_at) in [(7usize, 0usize), (12, 7), (19, 12)] {
+            let (mut caps, stats) = b.decode(&mut kv, &tokens[..turn_len], &[turn_len]);
+            assert_eq!(stats.resumed_at, resume_at, "warm turns resume at the resident length");
+            turnwise.push(caps.pop().unwrap());
+        }
+        for (a, b_) in oneshot.iter().zip(&turnwise) {
+            assert_eq!(a.len, b_.len);
+            assert_eq!(a.logits, b_.logits, "chunked decode must be bit-exact at len {}", a.len);
+        }
+        assert_eq!(kv.tokens(), oneshot_kv.tokens());
+        // chains hold identical packed keys
+        for l in 0..2 {
+            for h in 0..2 {
+                for i in 0..tokens.len() {
+                    assert_eq!(kv.chain(l, h).key(i), oneshot_kv.chain(l, h).key(i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_turns_decode_only_the_suffix() {
+        let b = backend(KvCacheConfig { page_tokens: 4, ..Default::default() });
+        let mut rng = Rng::new(11);
+        let tokens = toks(&mut rng, 16);
+        let mut kv = b.fresh_kv();
+        let (_, s1) = b.decode(&mut kv, &tokens[..10], &[10]);
+        assert_eq!((s1.resumed_at, s1.decoded), (0, 10));
+        let (_, s2) = b.decode(&mut kv, &tokens, &[16]);
+        assert_eq!((s2.resumed_at, s2.decoded), (10, 6), "only the suffix is re-executed");
+        assert!(s2.attn_us <= s2.decode_us, "attention time is a share of decode time");
+    }
+
+    #[test]
+    fn kernel_and_scalar_paths_serve_identical_logits() {
+        // end-to-end bit-exactness of the binarized score path: the whole
+        // decode through the blocked kernel equals the scalar oracle
+        let b = backend(KvCacheConfig { page_tokens: 3, ..Default::default() });
+        let mut rng = Rng::new(12);
+        let tokens = toks(&mut rng, 14);
+        let mut kv_a = b.fresh_kv();
+        let (kernel, _) = b.decode_with(&mut kv_a, &tokens, &[5, 14], AttnPath::Kernel);
+        let mut kv_b = b.fresh_kv();
+        let (scalar, _) = b.decode_with(&mut kv_b, &tokens, &[5, 14], AttnPath::Scalar);
+        for (x, y) in kernel.iter().zip(&scalar) {
+            assert_eq!(x.logits, y.logits, "kernel vs scalar at len {}", x.len);
+        }
+    }
+
+    #[test]
+    fn mismatched_resident_state_is_reset() {
+        let b = backend(KvCacheConfig::default());
+        let mut rng = Rng::new(13);
+        let tokens_a = toks(&mut rng, 12);
+        let mut tokens_b = toks(&mut rng, 9);
+        tokens_b[0] = (tokens_a[0] + 1) % 24; // guarantee divergence at 0
+        let mut kv = b.fresh_kv();
+        b.decode(&mut kv, &tokens_a, &[12]);
+        let (caps, stats) = b.decode(&mut kv, &tokens_b, &[9]);
+        assert_eq!(stats.resumed_at, 0, "non-prefix state must reset");
+        assert_eq!(kv.tokens(), &tokens_b[..]);
+        assert_eq!(caps[0].logits, b.forward_logits(&tokens_b), "reset decode == fresh");
+    }
+
+    #[test]
+    fn capture_at_resident_length_forces_redecode() {
+        // logits AT the already-decoded length can't be produced from
+        // resident pages alone (no stored hidden state): backend resets
+        let b = backend(KvCacheConfig::default());
+        let mut rng = Rng::new(14);
+        let tokens = toks(&mut rng, 8);
+        let mut kv = b.fresh_kv();
+        b.decode(&mut kv, &tokens, &[8]);
+        let (caps, stats) = b.decode(&mut kv, &tokens, &[8]);
+        assert_eq!(stats.resumed_at, 0);
+        assert_eq!(caps[0].logits, b.forward_logits(&tokens));
+    }
+
+    #[test]
+    fn every_capture_matches_its_prefix_forward() {
+        // causality: logits at length c from one long decode equal a
+        // fresh forward of exactly c tokens
+        let b = backend(KvCacheConfig { page_tokens: 5, ..Default::default() });
+        let mut rng = Rng::new(15);
+        let tokens = toks(&mut rng, 13);
+        let mut kv = b.fresh_kv();
+        let (caps, _) = b.decode(&mut kv, &tokens, &[1, 4, 9, 13]);
+        assert_eq!(caps.len(), 4);
+        for c in &caps {
+            assert_eq!(
+                c.logits,
+                b.forward_logits(&tokens[..c.len]),
+                "capture at {} must equal the prefix forward",
+                c.len
+            );
+            assert_eq!(c.logits.len(), b.n_classes());
+            assert!(c.logits.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn bf16_values_stay_close_to_f32() {
+        let f32_b = backend(KvCacheConfig { page_tokens: 4, ..Default::default() });
+        let bf_b = backend(KvCacheConfig {
+            page_tokens: 4,
+            value_dtype: ValueDtype::Bf16,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(16);
+        let tokens = toks(&mut rng, 12);
+        let a = f32_b.forward_logits(&tokens);
+        let c = bf_b.forward_logits(&tokens);
+        let max_diff = a
+            .iter()
+            .zip(&c)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        // bf16 rounding perturbs each value row by <= 2^-9 relative; the
+        // perturbation passes through layernorms and stays O(1e-2) on
+        // logits of O(1) at this depth
+        assert!(max_diff < 0.05, "bf16 drift too large: {max_diff}");
+        assert!(max_diff > 0.0, "bf16 must actually round something");
+    }
+
+    #[test]
+    fn positions_wrap_beyond_trained_context() {
+        // sequences longer than n_ctx reuse positions modulo n_ctx
+        // (documented wrap) instead of panicking
+        let b = backend(KvCacheConfig::default());
+        let mut rng = Rng::new(17);
+        let tokens = toks(&mut rng, 30); // n_ctx = 24
+        let out = b.forward_logits(&tokens);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn rejects_unsorted_captures() {
+        let b = backend(KvCacheConfig::default());
+        let mut kv = b.fresh_kv();
+        b.decode(&mut kv, &[1, 2, 3], &[3, 2]);
+    }
+}

@@ -1,0 +1,101 @@
+//! CPU-native bitpacked serving backend: the real HAD transformer decode
+//! over the paged KV cache.
+//!
+//! Until this module, the repo was "fast kernel + cache": the coordinator
+//! admitted sessions through an embedding featurizer and the XNOR-popcount
+//! kernel pass produced timing-only output while logits came from PJRT
+//! full-sequence re-execution. `serve` closes the loop — a distilled
+//! [`model::ServeModel`] (checkpoint weights + per-layer calibrated
+//! `sigma_q`/`sigma_k`, paper §3.4) executes end to end on the CPU fast
+//! path, and `coordinator::Server` in CPU mode returns these logits from
+//! `submit`/`submit_session` directly (the PJRT engine demotes to an
+//! optional cross-check).
+//!
+//! ## The layer loop
+//!
+//! [`engine::HadBackend::decode`] advances one token at a time. For
+//! position `p` of a session:
+//!
+//! 1. **embed** — `tok_emb[token] + pos_emb[p % n_ctx]` (positions wrap
+//!    past the trained context).
+//! 2. per layer `l`: **pre-LN** then Q/K/V projections from the layer's
+//!    de-stacked weights; per head, the new K/V rows are **binarized and
+//!    appended** into that (layer, head) page chain FIRST (sign-bit
+//!    packing in `kvcache::Page::push`; values at f32 or bf16), then the
+//!    query row scores over the chain with
+//!    `binary::had_attention_paged` — blocked XNOR-popcount with fused
+//!    streaming top-N, softmax temperature `sigma_q[l] * sigma_k[l]` —
+//!    which makes the attention causal (`keys 0..=p`) by construction.
+//!    Head outputs concatenate, project through `wo`, and join the
+//!    residual stream; the GELU MLP block follows.
+//! 3. after the last layer, positions whose logits a request asked for
+//!    (`capture_lens`) run the final layernorm + classification head.
+//!
+//! ## Per-layer KV page layout
+//!
+//! Session state is a [`kvcache::LayeredKv`]: `n_layers * n_heads` page
+//! chains (layer-major), each chain a `kvcache::SessionKv` of fixed-size
+//! pages with `d_head`-bit packed keys and `d_head` values per token,
+//! advancing in lock step one row per decoded token. The decoded token
+//! ids ride along, so a later turn resumes incrementally only when the
+//! resident state is an id-verified prefix of its sequence — causality
+//! makes that resume bit-exact (see `engine` docs) — and any mismatch
+//! resets to a cold decode instead of serving stale context.
+//!
+//! [`reference::reference_forward`] is the naive unbinarized-f32 oracle
+//! the parity suite holds the backend to.
+
+pub mod engine;
+pub mod model;
+pub mod reference;
+
+pub use engine::{AttnPath, CaptureOut, DecodeStats, HadBackend};
+pub use model::{demo_config, token_config_entry, LayerWeights, ServeModel};
+pub use reference::reference_forward;
+
+use crate::tensor::Mat;
+
+/// `x @ w + b` with the bias broadcast over rows — the projection shape
+/// both the decode engine and the reference forward share (same `Mat`
+/// arithmetic, so per-row results are bit-identical between them).
+pub(crate) fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+    assert_eq!(b.len(), w.cols, "bias/width mismatch");
+    let mut y = x.matmul(w);
+    for r in 0..y.rows {
+        for (o, &bv) in y.row_mut(r).iter_mut().zip(b) {
+            *o += bv;
+        }
+    }
+    y
+}
+
+/// `a += b`, elementwise (residual connections).
+pub(crate) fn add_assign(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "residual shape mismatch");
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_matches_manual() {
+        let x = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, -1.0, 1.0, 0.5]);
+        let w = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = [0.5, -0.5];
+        let y = affine(&x, &w, &b);
+        // row0: [1,0,2]@w = [11,14]; row1: [-1,1,0.5]@w = [4.5,5]; + b
+        assert_eq!(y.data, vec![11.5, 13.5, 5.0, 4.5]);
+    }
+
+    #[test]
+    fn add_assign_is_elementwise() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![0.5, -2.0, 1.0]);
+        add_assign(&mut a, &b);
+        assert_eq!(a.data, vec![1.5, 0.0, 4.0]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Serving-side weight views: a `ServeModel` is a `Checkpoint` (or raw
+//! `ParamSet`) re-sliced for the per-layer decode loop.
+//!
+//! The manifest stores layer parameters stacked on a leading `n_layers`
+//! axis (the `jax.lax.scan` layout — python/compile/model.py's
+//! `param_specs` is THE contract). The decode engine wants one weight
+//! matrix per layer, so construction slices each stacked tensor into
+//! per-layer `Mat`s once; decode then never indexes into stacked storage.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::{Checkpoint, ParamSet};
+use crate::runtime::{ConfigEntry, Init, ModelCfg, ParamSpec};
+use crate::tensor::Mat;
+
+/// One transformer layer's weights, de-stacked.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Mat,
+    pub bq: Vec<f32>,
+    pub wk: Mat,
+    pub bk: Vec<f32>,
+    pub wv: Mat,
+    pub bv: Vec<f32>,
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+}
+
+/// Everything the CPU backend needs to run the distilled HAD model:
+/// weights, architecture, and the per-layer calibrated sigmas whose
+/// product becomes the Hamming softmax temperature (paper §3.4).
+#[derive(Clone, Debug)]
+pub struct ServeModel {
+    pub cfg: ModelCfg,
+    /// (vocab, d_model) token embedding — token-mode models only.
+    pub tok_emb: Mat,
+    /// (n_ctx, d_model) learned positions; decode wraps `p % n_ctx` for
+    /// sessions that outgrow the trained context.
+    pub pos_emb: Mat,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head_w: Mat,
+    pub head_b: Vec<f32>,
+    pub sigma_q: Vec<f32>,
+    pub sigma_k: Vec<f32>,
+    pub n_top: usize,
+}
+
+impl ServeModel {
+    /// Slice a manifest-ordered `ParamSet` into the decode layout.
+    pub fn from_params(
+        cfg: &ConfigEntry,
+        params: &ParamSet,
+        sigma_q: Vec<f32>,
+        sigma_k: Vec<f32>,
+    ) -> Result<ServeModel> {
+        let m = &cfg.model;
+        ensure!(m.vocab > 0, "the serving backend is token-mode only (vocab == 0)");
+        ensure!(m.n_heads > 0 && m.d_model % m.n_heads == 0, "d_model must split into heads");
+        ensure!(
+            sigma_q.len() == m.n_layers && sigma_k.len() == m.n_layers,
+            "need one sigma_q/sigma_k per layer ({} layers, got {}/{})",
+            m.n_layers,
+            sigma_q.len(),
+            sigma_k.len()
+        );
+        let (l_count, d, f) = (m.n_layers, m.d_model, m.d_ff);
+
+        // named fn (not a closure): the returned slice borrows from
+        // `params`, which closure lifetime inference cannot express
+        fn tensor<'a>(params: &'a ParamSet, cfg: &ConfigEntry, name: &str) -> Result<&'a [f32]> {
+            params
+                .by_name(cfg, name)
+                .with_context(|| format!("model parameter {name} missing from config"))?
+                .as_f32()
+        }
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<Mat> {
+            let data = tensor(params, cfg, name)?;
+            ensure!(data.len() == rows * cols, "{name}: {} != {rows}x{cols}", data.len());
+            Ok(Mat::from_vec(rows, cols, data.to_vec()))
+        };
+        // layer `l`'s slab of a stacked (L, ...) tensor
+        let layer_mat = |name: &str, l: usize, rows: usize, cols: usize| -> Result<Mat> {
+            let data = tensor(params, cfg, name)?;
+            ensure!(data.len() == l_count * rows * cols, "{name}: bad stacked shape");
+            let slab = &data[l * rows * cols..(l + 1) * rows * cols];
+            Ok(Mat::from_vec(rows, cols, slab.to_vec()))
+        };
+        let layer_vec = |name: &str, l: usize, len: usize| -> Result<Vec<f32>> {
+            let data = tensor(params, cfg, name)?;
+            ensure!(data.len() == l_count * len, "{name}: bad stacked shape");
+            Ok(data[l * len..(l + 1) * len].to_vec())
+        };
+
+        let mut layers = Vec::with_capacity(l_count);
+        for l in 0..l_count {
+            layers.push(LayerWeights {
+                ln1_g: layer_vec("ln1_g", l, d)?,
+                ln1_b: layer_vec("ln1_b", l, d)?,
+                wq: layer_mat("wq", l, d, d)?,
+                bq: layer_vec("bq", l, d)?,
+                wk: layer_mat("wk", l, d, d)?,
+                bk: layer_vec("bk", l, d)?,
+                wv: layer_mat("wv", l, d, d)?,
+                bv: layer_vec("bv", l, d)?,
+                wo: layer_mat("wo", l, d, d)?,
+                bo: layer_vec("bo", l, d)?,
+                ln2_g: layer_vec("ln2_g", l, d)?,
+                ln2_b: layer_vec("ln2_b", l, d)?,
+                w1: layer_mat("w1", l, d, f)?,
+                b1: layer_vec("b1", l, f)?,
+                w2: layer_mat("w2", l, f, d)?,
+                b2: layer_vec("b2", l, d)?,
+            });
+        }
+
+        Ok(ServeModel {
+            cfg: m.clone(),
+            tok_emb: mat("tok_emb", m.vocab, d)?,
+            pos_emb: mat("pos_emb", m.n_ctx, d)?,
+            layers,
+            lnf_g: tensor(params, cfg, "lnf_g")?.to_vec(),
+            lnf_b: tensor(params, cfg, "lnf_b")?.to_vec(),
+            head_w: mat("head_w", d, m.n_classes)?,
+            head_b: tensor(params, cfg, "head_b")?.to_vec(),
+            sigma_q,
+            sigma_k,
+            n_top: m.n_top,
+        })
+    }
+
+    /// Load a distilled checkpoint (weights + calibrated sigmas).
+    pub fn from_checkpoint(cfg: &ConfigEntry, ckpt: &Checkpoint) -> Result<ServeModel> {
+        ServeModel::from_params(cfg, &ckpt.params, ckpt.sigma_q.clone(), ckpt.sigma_k.clone())
+    }
+
+    /// Randomly initialized model with unit sigmas (latency/throughput
+    /// demos and serving-path tests where accuracy is irrelevant).
+    pub fn random(cfg: &ConfigEntry, seed: u64) -> Result<ServeModel> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let params = ParamSet::init(cfg, &mut rng);
+        let l = cfg.model.n_layers;
+        ServeModel::from_params(cfg, &params, vec![1.0; l], vec![1.0; l])
+    }
+
+    /// Softmax temperature of layer `l`: sigma_q * sigma_k (the
+    /// calibrated standardization folded into the Hamming softmax).
+    #[inline]
+    pub fn temp(&self, l: usize) -> f32 {
+        self.sigma_q[l] * self.sigma_k[l]
+    }
+}
+
+/// Build a token-mode `ConfigEntry` without a compiled manifest — the
+/// parameter list replicates python `param_specs` (name/shape/init order,
+/// layer tensors stacked on a leading `n_layers` axis) so checkpoints and
+/// `ParamSet`s built against it are layout-compatible with lowered
+/// artifacts of the same architecture. Used by serving demos, benches,
+/// and tests that run the CPU backend without PJRT artifacts.
+pub fn token_config_entry(name: &str, model: ModelCfg) -> ConfigEntry {
+    assert!(model.vocab > 0, "token_config_entry is token-mode only");
+    let (l, d, f) = (model.n_layers, model.d_model, model.d_ff);
+    let spec = |name: &str, shape: Vec<usize>, init: Init| ParamSpec {
+        name: name.to_string(),
+        shape,
+        init,
+    };
+    let mut params = vec![
+        spec("tok_emb", vec![model.vocab, d], Init::Normal),
+        spec("pos_emb", vec![model.n_ctx, d], Init::Normal),
+    ];
+    for (pname, shape, init) in [
+        ("ln1_g", vec![l, d], Init::Ones),
+        ("ln1_b", vec![l, d], Init::Zeros),
+        ("wq", vec![l, d, d], Init::Normal),
+        ("bq", vec![l, d], Init::Zeros),
+        ("wk", vec![l, d, d], Init::Normal),
+        ("bk", vec![l, d], Init::Zeros),
+        ("wv", vec![l, d, d], Init::Normal),
+        ("bv", vec![l, d], Init::Zeros),
+        ("wo", vec![l, d, d], Init::Normal),
+        ("bo", vec![l, d], Init::Zeros),
+        ("ln2_g", vec![l, d], Init::Ones),
+        ("ln2_b", vec![l, d], Init::Zeros),
+        ("w1", vec![l, d, f], Init::Normal),
+        ("b1", vec![l, f], Init::Zeros),
+        ("w2", vec![l, f, d], Init::Normal),
+        ("b2", vec![l, d], Init::Zeros),
+    ] {
+        params.push(spec(pname, shape, init));
+    }
+    params.extend([
+        spec("lnf_g", vec![d], Init::Ones),
+        spec("lnf_b", vec![d], Init::Zeros),
+        spec("head_w", vec![d, model.n_classes], Init::Normal),
+        spec("head_b", vec![model.n_classes], Init::Zeros),
+    ]);
+    ConfigEntry {
+        name: name.to_string(),
+        model,
+        train_batch: 1,
+        eval_batch: 1,
+        params,
+    }
+}
+
+/// A small default architecture for serving demos/benches: token mode,
+/// `n_ctx` as given, geometry chosen so attention dominates at long
+/// context but full decodes stay CI-cheap.
+pub fn demo_config(name: &str, n_ctx: usize, n_top: usize) -> ConfigEntry {
+    token_config_entry(
+        name,
+        ModelCfg {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            n_ctx,
+            n_classes: 4,
+            vocab: 256,
+            input_dim: 0,
+            n_top,
+            block_q: 64,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ConfigEntry {
+        token_config_entry(
+            "serve_tiny",
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 16,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 8, block_q: 16,
+            },
+        )
+    }
+
+    #[test]
+    fn from_params_slices_stacked_layers() {
+        let cfg = tiny_cfg();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let params = ParamSet::init(&cfg, &mut rng);
+        let model =
+            ServeModel::from_params(&cfg, &params, vec![0.5, 0.7], vec![0.9, 1.1]).unwrap();
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!((model.tok_emb.rows, model.tok_emb.cols), (24, 32));
+        assert_eq!((model.head_w.rows, model.head_w.cols), (32, 3));
+        assert!((model.temp(0) - 0.45).abs() < 1e-6);
+        // layer 1's wq slab is the second half of the stacked tensor
+        let stacked = params.by_name(&cfg, "wq").unwrap().as_f32().unwrap();
+        assert_eq!(model.layers[1].wq.data.as_slice(), &stacked[32 * 32..]);
+        assert_eq!(model.layers[0].wq.data.as_slice(), &stacked[..32 * 32]);
+        // init kinds flow through: layernorm gains are ones
+        assert!(model.layers[0].ln1_g.iter().all(|&x| x == 1.0));
+        assert!(model.lnf_g.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn sigma_arity_is_enforced() {
+        let cfg = tiny_cfg();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let params = ParamSet::init(&cfg, &mut rng);
+        assert!(ServeModel::from_params(&cfg, &params, vec![1.0], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_into_serve_model() {
+        let cfg = tiny_cfg();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let ckpt = Checkpoint {
+            config: cfg.name.clone(),
+            step: 7.0,
+            sigma_q: vec![0.5, 0.6],
+            sigma_k: vec![0.7, 0.8],
+            params: ParamSet::init(&cfg, &mut rng),
+        };
+        let dir = std::env::temp_dir().join("had_serve_model_test");
+        let path = dir.join("m.ckpt");
+        crate::model::save_checkpoint(&path, &cfg, &ckpt).unwrap();
+        let loaded = crate::model::load_checkpoint(&path, &cfg).unwrap();
+        let model = ServeModel::from_checkpoint(&cfg, &loaded).unwrap();
+        assert_eq!(model.sigma_q, vec![0.5, 0.6]);
+        let direct = ServeModel::from_checkpoint(&cfg, &ckpt).unwrap();
+        assert_eq!(model.layers[0].wq, direct.layers[0].wq);
+        assert_eq!(model.tok_emb, direct.tok_emb);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_dense_input_mode() {
+        let mut cfg = tiny_cfg();
+        cfg.model.vocab = 0;
+        cfg.model.input_dim = 8;
+        // param list no longer matches, but vocab gate fires first
+        let mut rng = crate::util::rng::Rng::new(4);
+        let params = ParamSet::init(&cfg, &mut rng);
+        assert!(ServeModel::from_params(&cfg, &params, vec![1.0; 2], vec![1.0; 2]).is_err());
+    }
+}

@@ -75,6 +75,14 @@ pub fn layernorm_rows(m: &Mat, gamma: &[f32], beta: &[f32], eps: f32) -> Mat {
     out
 }
 
+/// GELU, tanh approximation — the `jax.nn.gelu` default the lowered
+/// graphs use, reproduced here for the CPU serving backend's MLP:
+/// `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
+pub fn gelu_tanh(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
 /// Standard deviation over all elements (population).
 pub fn std_all(m: &Mat) -> f32 {
     let n = m.data.len() as f32;
@@ -146,6 +154,20 @@ mod tests {
         let out = layernorm_rows(&m, &g, &b, 1e-5);
         let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_tanh_known_points() {
+        assert_eq!(gelu_tanh(0.0), 0.0);
+        // gelu(x) -> x for large x, -> 0 for very negative x
+        assert!((gelu_tanh(6.0) - 6.0).abs() < 1e-4);
+        assert!(gelu_tanh(-6.0).abs() < 1e-4);
+        // reference value at x=1 (tanh approximation): ~0.841192
+        assert!((gelu_tanh(1.0) - 0.841192).abs() < 1e-4);
+        // odd-ish asymmetry: gelu(x) + gelu(-x) == x
+        for x in [0.3f32, 1.7, 2.5] {
+            assert!((gelu_tanh(x) + gelu_tanh(-x) - x).abs() < 1e-5);
+        }
     }
 
     #[test]

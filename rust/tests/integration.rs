@@ -195,7 +195,117 @@ fn serving_end_to_end_one_bucket() {
     assert_eq!(snap.session_requests, 2);
     assert_eq!(snap.cache_hit_tokens, 40);
     assert_eq!(snap.cache_miss_tokens, 70);
-    assert!(server.cache_stats().hits >= 1);
+    // (the page pool only fills on the CPU decode path — see the
+    // serving_cpu_backend test — so no pool assertions here)
+
+    // too-long requests are rejected up front (both paths)
+    assert!(server.submit(vec![0; 4096]).is_err());
+    assert!(server.submit_session(8, vec![0; 4096]).is_err());
+}
+
+/// End-to-end serving on the CPU backend: needs NO artifacts, so this
+/// runs everywhere. `Response.logits` must be the backend's real logits
+/// (checked bit-for-bit against a direct forward of the same weights),
+/// and a session's second turn must resume from resident per-layer pages
+/// rather than re-executing the full sequence.
+#[test]
+fn serving_cpu_backend_end_to_end() {
+    use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+    use had::kvcache::KvCacheConfig;
+    use had::runtime::ModelCfg;
+    use had::serve::{token_config_entry, HadBackend, ServeModel};
+
+    let cfg = token_config_entry(
+        "cpu_64",
+        ModelCfg {
+            n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 64,
+            n_classes: 4, vocab: 32, input_dim: 0, n_top: 8, block_q: 16,
+        },
+    );
+    // the served model goes through checkpoint IO: distilled weights +
+    // calibrated sigmas on disk are what production serving loads
+    let ckpt = had::model::Checkpoint {
+        config: "cpu_64".into(),
+        step: 100.0,
+        sigma_q: vec![0.8, 1.1],
+        sigma_k: vec![1.2, 0.9],
+        params: ParamSet::init(&cfg, &mut Rng::new(42)),
+    };
+    let ckpt_path = std::env::temp_dir().join("had_serve_e2e.ckpt");
+    had::model::save_checkpoint(&ckpt_path, &cfg, &ckpt).unwrap();
+    let loaded = had::model::load_checkpoint(&ckpt_path, &cfg).unwrap();
+    std::fs::remove_file(&ckpt_path).ok();
+    let model = ServeModel::from_checkpoint(&cfg, &loaded).unwrap();
+    assert_eq!(model.sigma_q, vec![0.8, 1.1], "calibrated sigmas flow into serving");
+    let kv = KvCacheConfig { page_tokens: 8, ..Default::default() };
+    // an identical probe backend acts as the logits oracle
+    let probe = HadBackend::new(model.clone(), &kv);
+    let backend = HadBackend::new(model, &kv);
+    let router = Router::new(vec![Bucket { config: "cpu_64".into(), n_ctx: 64, batch: 4 }]);
+    let server = Server::start_cpu_with_kv(
+        backend,
+        router,
+        BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..Default::default() },
+        kv,
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(5);
+    let toks = |rng: &mut Rng, n: usize| -> Vec<i32> {
+        (0..n).map(|_| rng.below(32) as i32).collect()
+    };
+
+    // sessionless: served logits == a direct backend forward, bit for bit
+    let plain = toks(&mut rng, 20);
+    let resp = server.infer(plain.clone()).unwrap();
+    assert_eq!(resp.logits, probe.forward_logits(&plain));
+    assert_eq!(resp.pred as usize, {
+        let l = probe.forward_logits(&plain);
+        let mut best = 0;
+        for i in 1..l.len() {
+            if l[i] > l[best] {
+                best = i;
+            }
+        }
+        best
+    });
+    assert_eq!(resp.cached_tokens, 0, "sessionless requests hit no cache");
+    assert!(resp.kernel_us <= resp.decode_us, "kernel time is a share of decode time");
+
+    // session path: turn 2 extends turn 1's context and must (a) serve
+    // logits equal to the full-sequence forward and (b) resume from the
+    // resident pages (pool hit) instead of re-executing turn 1
+    let t1 = toks(&mut rng, 24);
+    let turn1 = server.infer_session(7, t1.clone()).unwrap();
+    assert_eq!(turn1.cached_tokens, 0, "first turn is cold");
+    assert_eq!(turn1.logits, probe.forward_logits(&t1));
+    let t2 = toks(&mut rng, 10);
+    let mut full = t1.clone();
+    full.extend_from_slice(&t2);
+    let turn2 = server.infer_session(7, t2).unwrap();
+    assert_eq!(turn2.cached_tokens, 24, "second turn reuses the prefix");
+    assert_eq!(turn2.logits, probe.forward_logits(&full));
+    let stats = server.cache_stats();
+    assert_eq!(stats.hits, 1, "turn 2 resumed from resident per-layer pages");
+    assert_eq!(stats.misses, 1, "turn 1 started cold");
+
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.session_requests, 2);
+    assert_eq!(snap.cache_hit_tokens, 24);
+    assert_eq!(snap.cache_miss_tokens, 34);
+    assert_eq!(snap.requests, 3);
+    assert_eq!(snap.decode_requests, 3, "every request was backend-decoded");
+    assert!(snap.cache_bytes > 0, "per-layer pages resident after decode");
+
+    // a session whose accumulated context outgrows every bucket restarts
+    // its context with the new turn (fresh-context semantics, like an
+    // eviction) instead of wedging the session id in permanent rejection
+    let t3 = toks(&mut rng, 40); // 34 resident + 40 > 64 = max bucket
+    let turn3 = server.infer_session(7, t3.clone()).unwrap();
+    assert_eq!(turn3.cached_tokens, 0, "overflow restarts the context");
+    assert_eq!(turn3.logits, probe.forward_logits(&t3));
+    let turn4 = server.infer_session(7, vec![1, 2]).unwrap();
+    assert_eq!(turn4.cached_tokens, 40, "the restarted context continues normally");
 
     // too-long requests are rejected up front (both paths)
     assert!(server.submit(vec![0; 4096]).is_err());

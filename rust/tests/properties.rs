@@ -9,7 +9,7 @@ use had::binary::{
     PackedMat, StreamTopN,
 };
 use had::coordinator::{BatchPolicy, BucketQueue, Router};
-use had::kvcache::{KvCacheConfig, PagePool, SessionKv};
+use had::kvcache::{KvCacheConfig, PagePool, SessionKv, ValueDtype};
 use had::tensor::Mat;
 use had::util::quickcheck::{check, pair, usize_in, Config, Gen};
 use had::util::rng::Rng;
@@ -254,6 +254,89 @@ fn prop_streaming_topn_equals_counting_selection() {
 }
 
 #[test]
+fn prop_bf16_values_keep_selection_and_bound_accumulation_error() {
+    // bf16 value storage touches ONLY the AV accumulation: keys (and so
+    // scores, selection, and softmax weights) are bit-identical to the
+    // f32-valued cache, and the output error is bounded by the worst
+    // value-rounding error — |round_bf16(v) - v| <= |v| * 2^-8 — since
+    // attention rows are convex combinations of value rows.
+    let gen = pair(
+        pair(usize_in(1, 20), usize_in(2, 60)), // (page_tokens, n_k)
+        pair(usize_in(1, 100), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(40), &gen, |&((page_tokens, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (n_q, d_v) = (3usize, 8usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let c = HadAttnConfig { n_top: 1 + seed % n_k, temp: 0.9 };
+        let mut f32_kv = SessionKv::new(d, d_v, page_tokens);
+        f32_kv.append(&k, &v);
+        let mut bf_kv = SessionKv::new_with(d, d_v, page_tokens, ValueDtype::Bf16);
+        bf_kv.append(&k, &v);
+        // kernel == scalar bit for bit, on bf16 pages too
+        let bf_out = had_attention_paged(&q, &bf_kv, &c);
+        if bf_out != had_attention_paged_scalar(&q, &bf_kv, &c) {
+            return false;
+        }
+        let f32_out = had_attention_paged(&q, &f32_kv, &c);
+        let max_abs_v = v.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let bound = max_abs_v / 256.0 + 1e-5;
+        f32_out.max_abs_diff(&bf_out) <= bound
+    });
+}
+
+#[test]
+fn prop_serve_chunked_decode_equals_one_shot() {
+    // the serving backend's incremental session decode must be invisible
+    // in the output: any split of a sequence into turns produces the
+    // same final logits, bit for bit, as decoding it in one pass — the
+    // causality property the whole suffix-only serving path rests on.
+    use had::kvcache::KvCacheConfig;
+    use had::runtime::ModelCfg;
+    use had::serve::{token_config_entry, HadBackend, ServeModel};
+    let cfg = token_config_entry(
+        "prop_serve",
+        ModelCfg {
+            n_layers: 2, d_model: 32, n_heads: 2, d_ff: 48, n_ctx: 32,
+            n_classes: 3, vocab: 24, input_dim: 0, n_top: 6, block_q: 16,
+        },
+    );
+    let model = ServeModel::random(&cfg, 0xD1CE).unwrap();
+    let backend = HadBackend::new(
+        model,
+        &KvCacheConfig { page_tokens: 4, ..Default::default() },
+    );
+    let gen = pair(usize_in(2, 24), usize_in(0, 1 << 20));
+    check(&cfg_cases(10), &gen, |&(n, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let tokens: Vec<i32> = (0..n).map(|_| rng.below(24) as i32).collect();
+        let mut kv_once = backend.fresh_kv();
+        let (want, _) = backend.decode(&mut kv_once, &tokens, &[n]);
+        // random turn boundaries
+        let mut kv = backend.fresh_kv();
+        let mut lo = 0usize;
+        let mut got = None;
+        while lo < n {
+            let hi = (lo + 1 + rng.range_usize(0, n)).min(n);
+            let (caps, stats) = backend.decode(&mut kv, &tokens[..hi], &[hi]);
+            if lo > 0 && stats.resumed_at != lo {
+                return false; // warm turns must resume, not re-execute
+            }
+            got = Some(caps.into_iter().next().unwrap());
+            lo = hi;
+        }
+        got.unwrap().logits == want[0].logits
+    });
+}
+
+/// Smaller-case config for the expensive decode property.
+fn cfg_cases(cases: usize) -> Config {
+    Config { cases, seed: 0xC0FFEE, max_shrink_steps: 20 }
+}
+
+#[test]
 fn prop_pool_respects_byte_budget_and_accounting() {
     // After any admission sequence: pool bytes equal the sum of resident
     // session bytes, and the budget holds whenever more than the single
@@ -263,9 +346,10 @@ fn prop_pool_respects_byte_budget_and_accounting() {
         let mut rng = Rng::new(seed as u64);
         let (d, d_v, page_tokens) = (32usize, 8usize, 4usize);
         let page_bytes = page_tokens * (8 + d_v * 4);
-        let mut pool = PagePool::new(KvCacheConfig {
+        let mut pool: PagePool = PagePool::new(KvCacheConfig {
             page_tokens,
             byte_budget: budget_pages * page_bytes,
+            ..Default::default()
         });
         let mut last_id = 0u64;
         for _ in 0..n_ops {

@@ -154,6 +154,43 @@ def kvcache():
         )
 
 
+def serve():
+    recs = rows("serve")
+    if not recs:
+        return
+    dec = [r for r in recs if r.get("kind") == "decode"]
+    by_ctx = defaultdict(dict)
+    for r in dec:
+        by_ctx[int(r["n_ctx"])][r["mode"]] = r  # last write wins
+    if by_ctx:
+        print("\n### Serving backend: cold prefill vs warm suffix decode (measured)\n")
+        print(
+            "| n_ctx | prefill tok/s | prefill kernel share | warm-turn tok/s "
+            "| warm kernel share | turn vs prefill |"
+        )
+        print("|---|---|---|---|---|---|")
+        for n_ctx in sorted(by_ctx):
+            m = by_ctx[n_ctx]
+            if {"prefill", "turn"} <= m.keys():
+                p, t = m["prefill"], m["turn"]
+                ratio = p["mean_us"] / t["mean_us"] if t["mean_us"] else float("nan")
+                print(
+                    f"| {n_ctx} | {p['tokens_per_s']:.3g} | {100 * p['kernel_share']:.1f}% "
+                    f"| {t['tokens_per_s']:.3g} | {100 * t['kernel_share']:.1f}% "
+                    f"| {ratio:.2f}x |"
+                )
+    sess = [r for r in recs if r.get("kind") == "sessions"]
+    if sess:
+        s = sess[-1]
+        print(
+            f"\nSession serving: {int(s['requests'])} requests, "
+            f"hit rate {100 * s['hit_rate']:.1f}%, "
+            f"latency p50 {s['p50_us'] / 1e3:.2f} ms / p99 {s['p99_us'] / 1e3:.2f} ms, "
+            f"decode mean {s['decode_mean_us'] / 1e3:.2f} ms "
+            f"(kernel share {100 * s['kernel_share']:.1f}%)"
+        )
+
+
 if __name__ == "__main__":
     table1()
     table2()
@@ -163,6 +200,7 @@ if __name__ == "__main__":
     fig("fig5", ["n_ctx", "n_top", "baseline", "had"])
     attention()
     kvcache()
+    serve()
     t3 = rows("table3")
     if t3:
         r = t3[-1]
