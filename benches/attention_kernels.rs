@@ -18,7 +18,7 @@ use had::binary::attention::{had_attention_scalar_with, had_attention_with, Scra
 use had::binary::{had_attention_pooled, standard_attention_ref};
 use had::binary::{HadAttnConfig, PackedKv, PackedMat};
 use had::tensor::Mat;
-use had::util::bench::{Bencher, Stats};
+use had::util::bench::{Bencher, Stats, write_jsonl};
 use had::util::json::Json;
 use had::util::rng::Rng;
 use had::util::threadpool::ThreadPool;
@@ -176,21 +176,9 @@ fn main() {
     s.print_throughput(4096.0 * 64.0, "elem");
 
     // persist for scripts/summarize_results.py
-    if let Err(e) = write_records(&records) {
+    if let Err(e) = write_jsonl("results/attention.jsonl", &records) {
         eprintln!("could not write results/attention.jsonl: {e}");
     }
     println!("\nattention_kernels bench OK");
 }
 
-fn write_records(records: &[Json]) -> std::io::Result<()> {
-    use std::io::Write;
-    std::fs::create_dir_all("results")?;
-    let mut f = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open("results/attention.jsonl")?;
-    for r in records {
-        writeln!(f, "{r}")?;
-    }
-    Ok(())
-}

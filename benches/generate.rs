@@ -1,0 +1,144 @@
+//! Bench: the autoregressive generation subsystem — direct engine-loop
+//! token latency (TTFT + per-token step time), then streamed generation
+//! through the continuous-batching coordinator at 1/4/16 concurrent
+//! streams (TTFT and inter-token p50/p99, generated tokens/sec).
+//!
+//! Appends machine-readable records to results/generate.jsonl for
+//! scripts/summarize_results.py.
+
+use std::time::Instant;
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::generate::{generate, GenLimits, GenerateRequest, SamplingParams, StopReason};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::bench::{percentile_us as pct, quick_env, write_jsonl};
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+fn main() {
+    let quick = quick_env();
+    let n_ctx = 1024usize;
+    let prompt_len = if quick { 48 } else { 128 };
+    let n_new = if quick { 12 } else { 48 };
+    let stream_counts: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+
+    let cfg = demo_config("gen_bench", n_ctx, 64);
+    let vocab = cfg.model.vocab as u64;
+    let model = ServeModel::random(&cfg, 0x6E6E).expect("bench model");
+    let kv = KvCacheConfig { page_tokens: 64, ..Default::default() };
+    let backend = HadBackend::new(model.clone(), &kv);
+    let mut rng = Rng::new(11);
+    let mut records: Vec<Json> = Vec::new();
+
+    println!("== direct engine loop: prefill {prompt_len} + {n_new} greedy tokens ==");
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
+    let mut kv_state = backend.fresh_kv();
+    let mut token_at: Vec<Instant> = Vec::with_capacity(n_new);
+    let t0 = Instant::now();
+    let out = generate(
+        &backend,
+        &mut kv_state,
+        &[],
+        &GenerateRequest::greedy(prompt.clone(), n_new),
+        &GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget },
+        |_, _| token_at.push(Instant::now()),
+    );
+    assert_eq!(out.reason, StopReason::MaxTokens);
+    assert_eq!(out.tokens.len(), n_new, "bench stream must run to its token budget");
+    let ttft_us = token_at[0].duration_since(t0).as_micros();
+    let mut inter: Vec<u128> = token_at
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]).as_micros())
+        .collect();
+    inter.sort_unstable();
+    let total_s = token_at.last().unwrap().duration_since(t0).as_secs_f64();
+    let tok_s = n_new as f64 / total_s.max(1e-9);
+    println!(
+        "engine: ttft {:.2} ms | inter-token p50 {:.2} ms p99 {:.2} ms | {:.1} tok/s",
+        ttft_us as f64 / 1e3,
+        pct(&inter, 0.50) as f64 / 1e3,
+        pct(&inter, 0.99) as f64 / 1e3,
+        tok_s,
+    );
+    records.push(Json::obj(vec![
+        ("kind", Json::str("engine")),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("new_tokens", Json::num(n_new as f64)),
+        ("ttft_us", Json::num(ttft_us as f64)),
+        ("inter_p50_us", Json::num(pct(&inter, 0.50) as f64)),
+        ("inter_p99_us", Json::num(pct(&inter, 0.99) as f64)),
+        ("tokens_per_s", Json::num(tok_s)),
+    ]));
+
+    println!("\n== continuous-batching coordinator: concurrent streams ==");
+    for &streams in stream_counts {
+        // fresh server per point so Metrics isolate the configuration
+        let router =
+            Router::new(vec![Bucket { config: "gen_bench".into(), n_ctx, batch: 8 }]);
+        let server = Server::start_cpu_with_kv(
+            HadBackend::new(model.clone(), &kv),
+            router,
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams: 16,
+                ..Default::default()
+            },
+            kv,
+        )
+        .expect("server start");
+        let rxs: Vec<_> = (0..streams)
+            .map(|sid| {
+                let p: Vec<i32> =
+                    (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
+                let req = GenerateRequest {
+                    prompt: p,
+                    max_new_tokens: n_new,
+                    stop_tokens: Vec::new(),
+                    sampling: SamplingParams::greedy(),
+                };
+                server.submit_generate(sid as u64, req).expect("stream admitted")
+            })
+            .collect();
+        for rx in rxs {
+            let mut generated = 0usize;
+            for event in rx.iter() {
+                match event {
+                    had::generate::StreamEvent::Token { .. } => generated += 1,
+                    had::generate::StreamEvent::Done { reason, .. } => {
+                        assert_eq!(reason, StopReason::MaxTokens);
+                        break;
+                    }
+                }
+            }
+            assert_eq!(generated, n_new, "every stream runs to its token budget");
+        }
+        let snap = server.metrics.snapshot();
+        println!(
+            "{streams:>2} streams: ttft p50 {:.2} ms p99 {:.2} ms | inter-token p50 {:.2} ms p99 {:.2} ms | {:.1} tok/s",
+            snap.ttft_p50_us as f64 / 1e3,
+            snap.ttft_p99_us as f64 / 1e3,
+            snap.inter_token_p50_us as f64 / 1e3,
+            snap.inter_token_p99_us as f64 / 1e3,
+            snap.gen_tokens_per_s,
+        );
+        assert_eq!(snap.gen_streams as usize, streams);
+        assert_eq!(snap.gen_tokens as usize, streams * n_new);
+        records.push(Json::obj(vec![
+            ("kind", Json::str("streams")),
+            ("streams", Json::num(streams as f64)),
+            ("new_tokens", Json::num(n_new as f64)),
+            ("ttft_p50_us", Json::num(snap.ttft_p50_us as f64)),
+            ("ttft_p99_us", Json::num(snap.ttft_p99_us as f64)),
+            ("inter_p50_us", Json::num(snap.inter_token_p50_us as f64)),
+            ("inter_p99_us", Json::num(snap.inter_token_p99_us as f64)),
+            ("tokens_per_s", Json::num(snap.gen_tokens_per_s)),
+        ]));
+    }
+
+    if let Err(e) = write_jsonl("results/generate.jsonl", &records) {
+        eprintln!("could not write results/generate.jsonl: {e}");
+    }
+    println!("\ngenerate bench OK");
+}
+

@@ -12,7 +12,7 @@ use had::binary::attention::{had_attention_paged_with, Scratch};
 use had::binary::HadAttnConfig;
 use had::kvcache::{KvCacheConfig, PagePool, SessionKv};
 use had::tensor::Mat;
-use had::util::bench::{Bencher, Stats};
+use had::util::bench::{Bencher, Stats, write_jsonl};
 use had::util::json::Json;
 use had::util::rng::Rng;
 
@@ -133,21 +133,9 @@ fn main() {
     ]));
 
     // persist for scripts/summarize_results.py
-    if let Err(e) = write_records(&records) {
+    if let Err(e) = write_jsonl("results/kvcache.jsonl", &records) {
         eprintln!("could not write results/kvcache.jsonl: {e}");
     }
     println!("\nkvcache bench OK");
 }
 
-fn write_records(records: &[Json]) -> std::io::Result<()> {
-    use std::io::Write;
-    std::fs::create_dir_all("results")?;
-    let mut f = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open("results/kvcache.jsonl")?;
-    for r in records {
-        writeln!(f, "{r}")?;
-    }
-    Ok(())
-}

@@ -9,7 +9,7 @@
 use had::coordinator::{BatchPolicy, Bucket, Router, Server};
 use had::kvcache::KvCacheConfig;
 use had::serve::{demo_config, HadBackend, ServeModel};
-use had::util::bench::{quick_env, Bencher};
+use had::util::bench::{quick_env, Bencher, write_jsonl};
 use had::util::json::Json;
 use had::util::rng::Rng;
 
@@ -136,21 +136,9 @@ fn main() {
         ("kernel_share", Json::num(kernel_share)),
     ]));
 
-    if let Err(e) = write_records(&records) {
+    if let Err(e) = write_jsonl("results/serve.jsonl", &records) {
         eprintln!("could not write results/serve.jsonl: {e}");
     }
     println!("\nserve_backend bench OK");
 }
 
-fn write_records(records: &[Json]) -> std::io::Result<()> {
-    use std::io::Write;
-    std::fs::create_dir_all("results")?;
-    let mut f = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open("results/serve.jsonl")?;
-    for r in records {
-        writeln!(f, "{r}")?;
-    }
-    Ok(())
-}

@@ -5,7 +5,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{GenAdmit, Request};
 use crate::coordinator::router::Bucket;
 
 /// Flush policy knobs.
@@ -22,6 +22,11 @@ pub struct BatchPolicy {
     /// scoped threads for blocked XNOR-popcount scoring (per-request
     /// kernel timing lands in Metrics)
     pub kernel_workers: usize,
+    /// continuous-batching ticket count: how many generation streams may
+    /// be live at once. Each live stream contributes one decode step per
+    /// scheduler tick; admitted streams beyond this wait in the
+    /// `StreamQueue` until a ticket frees up.
+    pub max_streams: usize,
 }
 
 impl Default for BatchPolicy {
@@ -31,6 +36,7 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             queue_cap: 256,
             kernel_workers: 2,
+            max_streams: 8,
         }
     }
 }
@@ -106,6 +112,51 @@ impl BucketQueue {
     }
 }
 
+/// Bounded FIFO admission queue for generation streams:
+/// `Server::submit_generate` pushes, the scheduler pops streams into its
+/// active set as continuous-batching tickets (`BatchPolicy::max_streams`)
+/// free up. Overflow returns the admission for side-effect-free
+/// rejection, mirroring `BucketQueue::push`.
+pub struct StreamQueue {
+    queue: VecDeque<GenAdmit>,
+    cap: usize,
+}
+
+impl StreamQueue {
+    pub fn new(cap: usize) -> StreamQueue {
+        StreamQueue { queue: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// At capacity: the next `push` would be rejected. Admission checks
+    /// this up front so destructive side effects (context-overflow
+    /// restarts) never fire on a turn that is then rejected.
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.cap
+    }
+
+    /// Try to admit; returns the stream back on overflow (backpressure).
+    pub fn push(&mut self, admit: GenAdmit) -> Result<(), GenAdmit> {
+        if self.queue.len() >= self.cap {
+            return Err(admit);
+        }
+        self.queue.push_back(admit);
+        Ok(())
+    }
+
+    /// Next waiting stream, FIFO.
+    pub fn pop(&mut self) -> Option<GenAdmit> {
+        self.queue.pop_front()
+    }
+}
+
 /// Assemble a padded (batch, n_ctx) i32 tensor from requests. Slots beyond
 /// the real requests repeat row 0 (keeps logits well-defined; their
 /// outputs are discarded). Returns (flat tokens, real count).
@@ -147,9 +198,35 @@ mod tests {
     fn default_policy_backs_execution_with_workers() {
         let p = BatchPolicy::default();
         assert!(p.kernel_workers >= 1, "batch execution needs a worker pool");
+        assert!(p.max_streams >= 1, "continuous batching needs at least one ticket");
         // queue knobs unchanged by the kernel pool addition
         assert_eq!(p.max_batch, 8);
         assert_eq!(p.queue_cap, 256);
+    }
+
+    #[test]
+    fn stream_queue_is_fifo_and_bounded() {
+        use crate::generate::{GenState, GenerateRequest};
+        let admit = |id: u64| {
+            let (tx, _rx) = channel();
+            GenAdmit {
+                id,
+                session: id,
+                state: GenState::new(vec![1, 2], &GenerateRequest::greedy(vec![3], 4)),
+                reply: tx,
+                arrival: Instant::now(),
+                admitted_len: 3,
+            }
+        };
+        let mut q = StreamQueue::new(2);
+        assert!(q.is_empty());
+        q.push(admit(0)).map_err(|_| ()).unwrap();
+        q.push(admit(1)).map_err(|_| ()).unwrap();
+        let back = q.push(admit(2));
+        assert_eq!(back.map(|_| ()).unwrap_err().id, 2, "overflow hands the stream back");
+        assert_eq!(q.pop().unwrap().id, 0, "FIFO");
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
     }
 
     #[test]

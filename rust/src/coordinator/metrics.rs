@@ -23,17 +23,21 @@ struct Inner {
     kernel_us: Vec<u128>,
     // per-request total backend decode time (kernel + projections/MLP)
     decode_us: Vec<u128>,
+    // generation streams (continuous batching): admission -> first token
+    ttft_us: Vec<u128>,
+    // gaps between consecutive generated tokens within a stream
+    inter_token_us: Vec<u128>,
+    gen_streams: u64,
+    gen_tokens: u64,
+    gen_budget_stops: u64,
+    // generation-only clock: first and latest token emission, so the
+    // throughput snapshot measures the generating span, not whatever
+    // else happened before the first stream or after the last token
+    gen_started: Option<Instant>,
+    gen_last: Option<Instant>,
 }
 
-/// Percentile of a sorted sample (0 on empty) — shared by the latency and
-/// kernel-timing snapshots.
-fn pct(sorted: &[u128], p: f64) -> u128 {
-    if sorted.is_empty() {
-        0
-    } else {
-        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
-    }
-}
+use crate::util::bench::percentile_us as pct;
 
 /// Thread-safe metrics sink shared by batcher and server threads.
 #[derive(Debug, Default)]
@@ -76,6 +80,22 @@ pub struct Snapshot {
     pub decode_p50_us: u128,
     pub decode_p99_us: u128,
     pub decode_mean_us: f64,
+    /// generation streams retired by the continuous-batching scheduler
+    pub gen_streams: u64,
+    /// tokens generated across all streams
+    pub gen_tokens: u64,
+    /// streams retired by context/KV budget pressure (StopReason::Budget)
+    pub gen_budget_stops: u64,
+    /// time-to-first-token percentiles/mean (µs; admission -> emission)
+    pub ttft_p50_us: u128,
+    pub ttft_p99_us: u128,
+    pub ttft_mean_us: f64,
+    /// inter-token latency percentiles/mean (µs; 0 with no multi-token streams)
+    pub inter_token_p50_us: u128,
+    pub inter_token_p99_us: u128,
+    pub inter_token_mean_us: f64,
+    /// generated tokens per second of serving wall time
+    pub gen_tokens_per_s: f64,
 }
 
 impl Metrics {
@@ -121,6 +141,41 @@ impl Metrics {
         self.inner.lock().unwrap().decode_us.push(us);
     }
 
+    /// A stream's first generated token: `us` since admission (TTFT —
+    /// includes queueing, activation, and the prefill decode).
+    pub fn record_first_token(&self, us: u128) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        if g.gen_started.is_none() {
+            g.gen_started = Some(now);
+        }
+        g.gen_last = Some(now);
+        g.ttft_us.push(us);
+        g.gen_tokens += 1;
+    }
+
+    /// Gap between consecutive generated tokens of one stream.
+    pub fn record_inter_token(&self, us: u128) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        if g.gen_started.is_none() {
+            g.gen_started = Some(now);
+        }
+        g.gen_last = Some(now);
+        g.inter_token_us.push(us);
+        g.gen_tokens += 1;
+    }
+
+    /// A generation stream retired (`budget`: stopped by context or KV
+    /// byte pressure rather than its own stop conditions).
+    pub fn record_stream_retired(&self, budget: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.gen_streams += 1;
+        if budget {
+            g.gen_budget_stops += 1;
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
@@ -129,6 +184,10 @@ impl Metrics {
         kern.sort_unstable();
         let mut dec = g.decode_us.clone();
         dec.sort_unstable();
+        let mut ttft = g.ttft_us.clone();
+        ttft.sort_unstable();
+        let mut inter = g.inter_token_us.clone();
+        inter.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
             requests: g.requests,
@@ -177,6 +236,37 @@ impl Metrics {
             } else {
                 dec.iter().sum::<u128>() as f64 / dec.len() as f64
             },
+            gen_streams: g.gen_streams,
+            gen_tokens: g.gen_tokens,
+            gen_budget_stops: g.gen_budget_stops,
+            ttft_p50_us: pct(&ttft, 0.50),
+            ttft_p99_us: pct(&ttft, 0.99),
+            ttft_mean_us: if ttft.is_empty() {
+                0.0
+            } else {
+                ttft.iter().sum::<u128>() as f64 / ttft.len() as f64
+            },
+            inter_token_p50_us: pct(&inter, 0.50),
+            inter_token_p99_us: pct(&inter, 0.99),
+            inter_token_mean_us: if inter.is_empty() {
+                0.0
+            } else {
+                inter.iter().sum::<u128>() as f64 / inter.len() as f64
+            },
+            gen_tokens_per_s: {
+                // first-to-last token span: excludes pre-stream traffic
+                // and anything after the final token (0 until a second
+                // token makes the span non-degenerate)
+                let span = match (g.gen_started, g.gen_last) {
+                    (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+                    _ => 0.0,
+                };
+                if span > 0.0 {
+                    g.gen_tokens as f64 / span
+                } else {
+                    0.0
+                }
+            },
         }
     }
 }
@@ -213,6 +303,19 @@ impl Snapshot {
                 self.kernel_p50_us as f64 / 1e3,
                 self.kernel_p99_us as f64 / 1e3,
                 self.kernel_mean_us / 1e3,
+            );
+        }
+        if self.gen_streams > 0 || self.gen_tokens > 0 {
+            println!(
+                "{label}: generate: {} streams, {} tokens ({} budget-stopped) | ttft p50 {:.2} ms p99 {:.2} ms | inter-token p50 {:.2} ms p99 {:.2} ms | {:.1} tok/s",
+                self.gen_streams,
+                self.gen_tokens,
+                self.gen_budget_stops,
+                self.ttft_p50_us as f64 / 1e3,
+                self.ttft_p99_us as f64 / 1e3,
+                self.inter_token_p50_us as f64 / 1e3,
+                self.inter_token_p99_us as f64 / 1e3,
+                self.gen_tokens_per_s,
             );
         }
         if self.decode_requests > 0 {
@@ -294,6 +397,45 @@ mod tests {
         assert_eq!(s.decode_p50_us, 300);
         assert_eq!(s.decode_p99_us, 400);
         assert!((s.decode_mean_us - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generation_timings() {
+        let m = Metrics::default();
+        let empty = m.snapshot();
+        assert_eq!((empty.gen_streams, empty.gen_tokens), (0, 0));
+        assert_eq!(empty.ttft_p50_us, 0);
+        assert_eq!(empty.gen_tokens_per_s, 0.0);
+        // two streams: 3 + 2 tokens (a real gap so the first-to-last
+        // token span is non-degenerate)
+        m.record_first_token(500);
+        m.record_inter_token(40);
+        m.record_inter_token(60);
+        m.record_stream_retired(false);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.record_first_token(900);
+        m.record_inter_token(80);
+        m.record_stream_retired(true);
+        let s = m.snapshot();
+        assert_eq!(s.gen_streams, 2);
+        assert_eq!(s.gen_tokens, 5);
+        assert_eq!(s.gen_budget_stops, 1);
+        assert_eq!(s.ttft_p50_us, 900);
+        assert_eq!(s.ttft_p99_us, 900);
+        assert!((s.ttft_mean_us - 700.0).abs() < 1e-9);
+        assert_eq!(s.inter_token_p50_us, 60);
+        assert_eq!(s.inter_token_p99_us, 80);
+        assert!((s.inter_token_mean_us - 60.0).abs() < 1e-9);
+        assert!(s.gen_tokens_per_s > 0.0, "throughput clock started");
+        // throughput measures the first-to-last TOKEN span: idle time
+        // between the last token and the snapshot must not deflate it
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let late = m.snapshot();
+        assert!(
+            late.gen_tokens_per_s > 25.0,
+            "post-generation idle time deflated throughput: {}",
+            late.gen_tokens_per_s
+        );
     }
 
     #[test]

@@ -3,6 +3,18 @@
 //! and the CPU bitpacked serving backend (`serve::HadBackend`; the PJRT
 //! engine remains as a legacy path / optional cross-check), with
 //! backpressure and metrics.
+//!
+//! Since the generation subsystem landed, the scheduler is a
+//! token-granular continuous-batching loop: classification-style batch
+//! turns flush exactly as before, while generation streams admitted via
+//! `Server::submit_generate` hold one of `BatchPolicy::max_streams`
+//! tickets and contribute ONE decode step per scheduler tick — new
+//! admissions prefill in the same pass, tokens stream to clients as
+//! `generate::StreamEvent`s the moment they are sampled, and finished
+//! streams retire with an explicit `generate::StopReason` (stop token,
+//! token budget, context/KV pressure, client disconnect). TTFT and
+//! inter-token latency percentiles land in `Metrics` next to the batch
+//! latency numbers.
 
 pub mod batcher;
 pub mod metrics;
@@ -10,8 +22,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{assemble_padded, BatchPolicy, BucketQueue};
+pub use batcher::{assemble_padded, BatchPolicy, BucketQueue, StreamQueue};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{RejectReason, Request, Response, SessionInfo};
+pub use request::{GenAdmit, RejectReason, Request, Response, SessionInfo};
 pub use router::{Bucket, Router};
 pub use server::{Server, ServingModel, SessionStore};

@@ -3,6 +3,8 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::generate::{GenState, StreamEvent};
+
 /// Session context attached to a multi-turn request admitted through
 /// `Server::submit_session`: identifies the KV-cache session and records
 /// how much of the sequence was already resident at admission.
@@ -52,6 +54,22 @@ pub struct Response {
     pub decode_us: u128,
 }
 
+/// One admitted generation stream, queued until the continuous-batching
+/// scheduler activates it (checks its session's KV out of the pool and
+/// prefils in the next tick). The prompt is already part of the session
+/// history — `admitted_len` records the history length at admission so
+/// retirement can verify the history is still exactly the context this
+/// stream extended before appending the generated tokens to it.
+pub struct GenAdmit {
+    pub id: u64,
+    pub session: u64,
+    pub state: GenState,
+    pub reply: Sender<StreamEvent>,
+    pub arrival: Instant,
+    /// session history length (including this prompt) at admission
+    pub admitted_len: usize,
+}
+
 /// Why a request was rejected.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RejectReason {
@@ -61,6 +79,11 @@ pub enum RejectReason {
     QueueFull,
     /// engine shutting down
     ShuttingDown,
+    /// generation with no context at all (empty history AND empty prompt)
+    EmptyGeneration,
+    /// operation the active execution backend cannot serve (generation
+    /// requires the CPU backend; the legacy PJRT path has no token loop)
+    Unsupported,
 }
 
 impl std::fmt::Display for RejectReason {
@@ -69,6 +92,8 @@ impl std::fmt::Display for RejectReason {
             RejectReason::TooLong => write!(f, "sequence exceeds largest context bucket"),
             RejectReason::QueueFull => write!(f, "admission queue full"),
             RejectReason::ShuttingDown => write!(f, "server shutting down"),
+            RejectReason::EmptyGeneration => write!(f, "generation needs a non-empty context"),
+            RejectReason::Unsupported => write!(f, "unsupported on this execution backend"),
         }
     }
 }

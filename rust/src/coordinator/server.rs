@@ -32,18 +32,21 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue};
+use crate::coordinator::batcher::{assemble_padded, BatchPolicy, BucketQueue, StreamQueue};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{RejectReason, Request, Response, SessionInfo};
+use crate::coordinator::request::{GenAdmit, RejectReason, Request, Response, SessionInfo};
 use crate::coordinator::router::Router;
+use crate::generate::{
+    GenLimits, GenState, GenerateOutput, GenerateRequest, StepOut, StopReason, StreamEvent,
+};
 use crate::kvcache::{CacheStats, KvCacheConfig, LayeredKv, PagePool};
 use crate::log_info;
 use crate::log_warn;
 use crate::model::Checkpoint;
 use crate::runtime::{EngineHandle, HostTensor, Manifest};
-use crate::serve::HadBackend;
+use crate::serve::{AttnPath, HadBackend, ScratchPool};
 use crate::tensor::ops::argmax;
-use crate::util::threadpool::parallel_map_n;
+use crate::util::threadpool::{parallel_for_mut, parallel_map_n};
 
 /// Weights + calibration served for one bucket on the PJRT path (and by
 /// the CPU path's optional cross-check).
@@ -244,10 +247,32 @@ impl SessionStore {
     pub fn end_session(&mut self, session_id: u64) {
         self.drop_session_state(session_id);
     }
+
+    /// Extend a session's history with tokens the GENERATION loop
+    /// produced (they never passed through `submit_*` admission): same
+    /// LRU/budget bookkeeping as `admit`, but no cache counters — from
+    /// the client's perspective nothing was resubmitted. No-op when the
+    /// session's history is gone (evicted mid-stream): the generated
+    /// tokens were still streamed, the session just restarts cold.
+    pub fn append_generated(&mut self, session_id: u64, tokens: &[i32]) {
+        if tokens.is_empty() {
+            return;
+        }
+        self.clock += 1;
+        let now = self.clock;
+        let Some(hist) = self.histories.get_mut(&session_id) else { return };
+        hist.last_used = now;
+        hist.tokens.extend_from_slice(tokens);
+        self.hist_tokens += tokens.len();
+        self.evict_histories(session_id);
+    }
 }
 
 struct Shared {
     queues: Mutex<Vec<BucketQueue>>,
+    /// admitted generation streams waiting for a continuous-batching
+    /// ticket (lock order: queues before streams, never the reverse)
+    streams: Mutex<StreamQueue>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -259,6 +284,8 @@ pub struct Server {
     sessions: Arc<Mutex<SessionStore>>,
     next_id: AtomicU64,
     scheduler: Option<std::thread::JoinHandle<()>>,
+    /// generation needs the CPU backend (the PJRT path has no token loop)
+    cpu: bool,
 }
 
 impl Server {
@@ -353,16 +380,25 @@ impl Server {
             .collect();
         let shared = Arc::new(Shared {
             queues: Mutex::new(queues),
+            streams: Mutex::new(StreamQueue::new(policy.queue_cap)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
         let sessions = Arc::new(Mutex::new(SessionStore::new(kv)));
+        let cpu = matches!(exec, Exec::Cpu { .. });
+        // generation streams grow inside the server-wide bounds: the
+        // largest routed context and the page pool's byte budget
+        let limits = GenLimits {
+            max_total_tokens: router.max_ctx(),
+            kv_budget_bytes: kv.byte_budget,
+        };
 
         let sched_shared = Arc::clone(&shared);
         let sched_metrics = Arc::clone(&metrics);
         let sched_sessions = Arc::clone(&sessions);
         let kernel_workers = policy.kernel_workers.max(1);
+        let max_streams = policy.max_streams.max(1);
         let scheduler = std::thread::Builder::new()
             .name("had-scheduler".into())
             .spawn(move || {
@@ -372,6 +408,8 @@ impl Server {
                     sched_metrics,
                     sched_sessions,
                     kernel_workers,
+                    max_streams,
+                    limits,
                 )
             })
             .context("spawning scheduler")?;
@@ -383,6 +421,7 @@ impl Server {
             sessions,
             next_id: AtomicU64::new(0),
             scheduler: Some(scheduler),
+            cpu,
         })
     }
 
@@ -503,6 +542,118 @@ impl Server {
         rx.recv().context("server dropped the request")
     }
 
+    /// Submit a generation stream on a session: the prompt extends the
+    /// session's history (exactly like a `submit_session` turn), then the
+    /// continuous-batching scheduler generates up to `max_new_tokens`
+    /// tokens, delivering each as a [`StreamEvent::Token`] on the
+    /// returned channel the moment it is produced and closing with
+    /// [`StreamEvent::Done`] and a stop reason. Generated tokens join the
+    /// session's history and per-layer KV pages, so a follow-up turn (or
+    /// stream) resumes warm from everything generated here.
+    ///
+    /// Admission mirrors `submit_session`: routed by total prefill
+    /// length, context-overflow restarts the session's context, a full
+    /// stream queue rejects side-effect-free with `QueueFull`. CPU
+    /// backend only (`Unsupported` on the PJRT path).
+    pub fn submit_generate(
+        &self,
+        session_id: u64,
+        req: GenerateRequest,
+    ) -> Result<Receiver<StreamEvent>, RejectReason> {
+        if !self.cpu {
+            return Err(RejectReason::Unsupported);
+        }
+        if self.shared.shutdown.load(Ordering::Relaxed) {
+            return Err(RejectReason::ShuttingDown);
+        }
+        let mut store = self.sessions.lock().unwrap();
+        // backpressure FIRST: stream pushes are serialized under the
+        // sessions lock and the scheduler only ever pops, so a non-full
+        // queue here guarantees the push below succeeds — which keeps the
+        // destructive overflow-restart from firing on a turn that is
+        // then rejected anyway
+        if self.shared.streams.lock().unwrap().is_full() {
+            self.metrics.record_reject();
+            return Err(RejectReason::QueueFull);
+        }
+        let mut hist_before = store.history_len(session_id);
+        if hist_before + req.prompt.len() == 0 {
+            return Err(RejectReason::EmptyGeneration);
+        }
+        match self
+            .router
+            .route_session_idx(hist_before, req.prompt.len())
+        {
+            Ok(_) => {}
+            Err(RejectReason::TooLong) if hist_before > 0 => {
+                // same context-overflow restart as submit_session: an
+                // oversized (or empty — nothing to restart FROM) prompt
+                // still rejects without side effects
+                if req.prompt.is_empty() {
+                    return Err(RejectReason::EmptyGeneration);
+                }
+                self.router.route_idx(req.prompt.len())?;
+                store.end_session(session_id);
+                hist_before = 0;
+            }
+            Err(e) => return Err(e),
+        }
+        let history = store.tokens(session_id).to_vec();
+        let state = GenState::new(history, &req);
+        let admitted_len = state.context_len();
+        let info = store.admit(session_id, &req.prompt);
+
+        let (tx, rx) = channel();
+        let admit = GenAdmit {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            session: session_id,
+            state,
+            reply: tx,
+            arrival: Instant::now(),
+            admitted_len,
+        };
+        let pushed = self.shared.streams.lock().unwrap().push(admit).is_ok();
+        if !pushed {
+            // unreachable given the capacity check above, but kept so a
+            // future re-entrant push source degrades to a clean reject
+            store.rollback_turn(session_id, hist_before);
+            drop(store);
+            self.metrics.record_reject();
+            return Err(RejectReason::QueueFull);
+        }
+        self.metrics.record_session(info.cached_tokens, info.appended_tokens);
+        drop(store);
+        // notify under the queues mutex (the condvar's mutex): without
+        // it, a notify racing the scheduler's "streams empty" check and
+        // its wait_timeout would be lost and the admission would stall
+        // for the full fallback timeout
+        let _guard = self.shared.queues.lock().unwrap();
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking convenience: run a generation stream to completion and
+    /// collect its tokens.
+    pub fn generate_session(
+        &self,
+        session_id: u64,
+        req: GenerateRequest,
+    ) -> Result<GenerateOutput> {
+        let rx = self
+            .submit_generate(session_id, req)
+            .map_err(|r| anyhow::anyhow!("rejected: {r}"))?;
+        let mut tokens = Vec::new();
+        for event in rx.iter() {
+            match event {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { reason, .. } => {
+                    return Ok(GenerateOutput { tokens, reason })
+                }
+            }
+        }
+        anyhow::bail!("server dropped the stream")
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -548,13 +699,16 @@ struct Served {
 /// decode statelessly, one job each. The sessions lock is held only to
 /// check a session's `LayeredKv` out of the pool and back in — the
 /// decode itself runs lock-free, so concurrent admissions never stall
-/// behind model execution.
+/// behind model execution. Every job borrows its attention scratch from
+/// the scheduler's shared `ScratchPool` (grown buffers are reused across
+/// jobs and ticks instead of allocated per decode).
 fn decode_pass(
     workers: usize,
     sessions: &Mutex<SessionStore>,
     backend: &HadBackend,
     reqs: &[Request],
     metrics: &Metrics,
+    scratch_pool: &ScratchPool,
 ) -> Vec<Served> {
     struct Job {
         session: Option<u64>,
@@ -595,7 +749,9 @@ fn decode_pass(
                 main_slots.push(s);
             } else {
                 let mut scratch_kv = backend.fresh_kv();
-                let (mut caps, stats) = backend.decode(&mut scratch_kv, t, &[t.len()]);
+                let (mut caps, stats) = scratch_pool.with(|sc| {
+                    backend.decode_in(&mut scratch_kv, t, &[t.len()], AttnPath::Kernel, sc)
+                });
                 stray.push((s, Served {
                     logits: caps.pop().expect("one capture requested").logits,
                     kernel_us: Some(stats.attn_us),
@@ -625,7 +781,9 @@ fn decode_pass(
             None => backend.fresh_kv(),
         };
         let was_resident = !kv.is_empty();
-        let (caps, stats) = backend.decode(&mut kv, tokens, &capture);
+        let (caps, stats) = scratch_pool.with(|sc| {
+            backend.decode_in(&mut kv, tokens, &capture, AttnPath::Kernel, sc)
+        });
         if let Some(id) = job.session {
             let mut store = sessions.lock().unwrap();
             // a resume is a cache hit; a reset (or cold start) a miss
@@ -731,31 +889,127 @@ fn pjrt_exec(
     Ok((logits, n_classes))
 }
 
+/// One live generation stream inside the scheduler: its state machine,
+/// its checked-out per-layer KV (held for the stream's whole lifetime —
+/// its bytes leave the pool accounting until retirement checks it back
+/// in), and the stream's timing bookkeeping.
+struct ActiveGen {
+    admit: GenAdmit,
+    kv: LayeredKv,
+    /// the checkout found a usable resident prefix (pool-hit accounting)
+    resumed: bool,
+    /// this tick's step result, parked between the parallel step pass and
+    /// the serial emit/retire pass
+    pending: Option<StepOut>,
+    ttft_us: u128,
+    last_token_at: Option<Instant>,
+}
+
+/// What one scheduler iteration found to do.
+enum Work {
+    /// a bucket queue flushed a batch (classification-style turns)
+    Batch(usize, Vec<Request>),
+    /// no batch, but generation work exists (admissions and/or steps)
+    Tick,
+    /// shutdown with everything drained
+    Exit,
+}
+
+/// Emit one generated token to the stream's client, recording TTFT on
+/// the first and inter-token latency on the rest. Returns false when the
+/// client has dropped its receiver (the stream retires as Disconnected).
+fn emit_token(g: &mut ActiveGen, token: i32, metrics: &Metrics) -> bool {
+    let index = g.admit.state.n_generated() - 1;
+    let now = Instant::now();
+    match g.last_token_at {
+        None => {
+            g.ttft_us = now.duration_since(g.admit.arrival).as_micros();
+            metrics.record_first_token(g.ttft_us);
+        }
+        Some(prev) => metrics.record_inter_token(now.duration_since(prev).as_micros()),
+    }
+    g.last_token_at = Some(now);
+    g.admit.reply.send(StreamEvent::Token { index, token }).is_ok()
+}
+
+/// Retire a finished stream: fold its generated tokens into the session
+/// history and check its KV back into the pool — but only if the history
+/// is still exactly the context this stream extended (an eviction or an
+/// interleaved turn on the same session id invalidates the resume, in
+/// which case the pages are dropped and the session restarts cold on its
+/// next turn). Closes the client channel with the stop reason.
+fn retire_stream(
+    g: ActiveGen,
+    reason: StopReason,
+    sessions: &Mutex<SessionStore>,
+    metrics: &Metrics,
+) {
+    let ActiveGen { admit, kv, resumed, ttft_us, .. } = g;
+    let generated = admit.state.n_generated();
+    {
+        let mut store = sessions.lock().unwrap();
+        if store.tokens(admit.session) == &admit.state.tokens()[..admit.admitted_len] {
+            store.append_generated(admit.session, admit.state.generated());
+            store.checkin(admit.session, kv, resumed);
+            metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+        }
+    }
+    metrics.record_stream_retired(matches!(reason, StopReason::Budget));
+    let _ = admit.reply.send(StreamEvent::Done { reason, generated, ttft_us });
+}
+
 fn scheduler_main(
     shared: Arc<Shared>,
     exec: Exec,
     metrics: Arc<Metrics>,
     sessions: Arc<Mutex<SessionStore>>,
     kernel_workers: usize,
+    max_streams: usize,
+    limits: GenLimits,
 ) {
     let mut served = 0u64;
+    // grown attention buffers shared by every decode job — batch decodes
+    // and generation steps — across all ticks
+    let scratch_pool = ScratchPool::new();
+    // live generation streams (continuous batching: one step per tick)
+    let mut active: Vec<ActiveGen> = Vec::new();
     loop {
-        // collect a ready batch under the lock
-        let work: Option<(usize, Vec<Request>)> = {
+        // collect work under the lock: a flushed batch wins; otherwise a
+        // tick runs if any stream is live or waiting; otherwise sleep
+        let mut admits: Vec<GenAdmit> = Vec::new();
+        let work: Work = {
             let mut queues = shared.queues.lock().unwrap();
             loop {
-                if shared.shutdown.load(Ordering::Relaxed) {
-                    // drain everything remaining before exit
-                    if let Some(i) = (0..queues.len()).find(|&i| !queues[i].is_empty()) {
-                        let reqs = queues[i].drain_batch();
-                        break Some((i, reqs));
-                    }
-                    break None;
-                }
+                let shutting = shared.shutdown.load(Ordering::Relaxed);
                 let now = Instant::now();
-                if let Some(i) = (0..queues.len()).find(|&i| queues[i].ready(now)) {
+                // stream admissions are collected BEFORE the batch check
+                // so sustained batch traffic (a queue ready on every
+                // iteration) cannot starve queued streams: a Work::Batch
+                // iteration still carries its admissions into the tick
+                {
+                    let mut streams = shared.streams.lock().unwrap();
+                    while active.len() + admits.len() < max_streams {
+                        match streams.pop() {
+                            Some(a) => admits.push(a),
+                            None => break,
+                        }
+                    }
+                }
+                // at shutdown, drain any non-empty queue immediately
+                if let Some(i) = (0..queues.len())
+                    .find(|&i| if shutting { !queues[i].is_empty() } else { queues[i].ready(now) })
+                {
                     let reqs = queues[i].drain_batch();
-                    break Some((i, reqs));
+                    break Work::Batch(i, reqs);
+                }
+                if !admits.is_empty() || !active.is_empty() {
+                    break Work::Tick;
+                }
+                if shutting {
+                    // queues drained, no admissions (max_streams >= 1
+                    // guarantees the stream queue emptied above), no live
+                    // streams: done
+                    break Work::Exit;
                 }
                 // sleep until the nearest deadline (or a notify)
                 let timeout = queues
@@ -770,18 +1024,133 @@ fn scheduler_main(
                 queues = q;
             }
         };
-        let Some((idx, reqs)) = work else { break };
-        let bucket = {
-            let queues = shared.queues.lock().unwrap();
-            queues[idx].bucket.clone()
+        let batch: Option<(usize, Vec<Request>)> = match work {
+            Work::Exit => break,
+            Work::Batch(idx, reqs) => Some((idx, reqs)),
+            Work::Tick => None,
         };
 
-        // execute OUTSIDE the queue lock
-        match &exec {
+        // 1. batch execution OUTSIDE the queue lock (unchanged contract)
+        if let Some((idx, reqs)) = batch {
+            let bucket = {
+                let queues = shared.queues.lock().unwrap();
+                queues[idx].bucket.clone()
+            };
+            run_batch(
+                &exec, idx, &bucket, reqs, kernel_workers, &sessions, &metrics,
+                &scratch_pool, &mut served,
+            );
+        }
+
+        // 2. generation tick (CPU backend only; submit_generate rejects
+        // on the PJRT path, so admits/active stay empty there)
+        let Exec::Cpu { backend, .. } = &exec else { continue };
+        // 2a. activate admissions: check each stream's session KV out of
+        // the pool; prefill happens as the stream's first step below
+        for a in admits {
+            let mut kv = {
+                let mut store = sessions.lock().unwrap();
+                store
+                    .checkout(a.session)
+                    .unwrap_or_else(|| backend.fresh_kv())
+            };
+            let toks = a.state.tokens();
+            let resumed = if !kv.is_empty() && kv.is_prefix_of(toks) {
+                if kv.len() >= toks.len() {
+                    // fully resident (continue-generation after a turn
+                    // that decoded the whole context): drop just the last
+                    // row so the first step re-decodes ONE token instead
+                    // of tripping the capture-at-resident-length reset
+                    // and re-prefilling everything
+                    kv.truncate(toks.len() - 1);
+                }
+                true
+            } else {
+                false
+            };
+            active.push(ActiveGen {
+                admit: a,
+                kv,
+                resumed,
+                pending: None,
+                ttft_us: 0,
+                last_token_at: None,
+            });
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // 2b. one decode step per live stream, sharded across workers
+        // (newly admitted streams prefill in this same pass)
+        parallel_for_mut(kernel_workers, &mut active, |_, g| {
+            let mut scratch = scratch_pool.checkout();
+            let out = g.admit.state.step(
+                backend,
+                &mut g.kv,
+                &limits,
+                AttnPath::Kernel,
+                &mut scratch,
+            );
+            scratch_pool.checkin(scratch);
+            g.pending = Some(out);
+        });
+        // 2c. serial emit/retire pass (token order within a stream is
+        // preserved; streams retire the moment their stop fires)
+        let mut i = 0;
+        while i < active.len() {
+            let out = active[i].pending.take().expect("stream stepped this tick");
+            let mut finish: Option<StopReason> = None;
+            match out {
+                StepOut::Token(t) => {
+                    if !emit_token(&mut active[i], t, &metrics) {
+                        finish = Some(StopReason::Disconnected);
+                    }
+                }
+                StepOut::Last(t, reason) => {
+                    emit_token(&mut active[i], t, &metrics);
+                    finish = Some(reason);
+                }
+                StepOut::Done(reason) => finish = Some(reason),
+            }
+            if let Some(reason) = finish {
+                let g = active.swap_remove(i);
+                retire_stream(g, reason, &sessions, &metrics);
+                served += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    log_info!("scheduler exiting after {served} responses");
+}
+
+/// Execute one flushed batch on whichever backend the server runs
+/// (verbatim the pre-generation scheduler body, factored out so the tick
+/// loop stays readable).
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    exec: &Exec,
+    idx: usize,
+    bucket: &crate::coordinator::router::Bucket,
+    reqs: Vec<Request>,
+    kernel_workers: usize,
+    sessions: &Mutex<SessionStore>,
+    metrics: &Metrics,
+    scratch_pool: &ScratchPool,
+    served: &mut u64,
+) {
+    match exec {
             Exec::Cpu { backend, check } => {
-                let outs = decode_pass(kernel_workers, &sessions, backend, &reqs, &metrics);
+                let outs = decode_pass(
+                    kernel_workers,
+                    sessions,
+                    backend,
+                    &reqs,
+                    metrics,
+                    scratch_pool,
+                );
                 if let Some(cc) = check {
-                    match pjrt_exec(&cc.engine, &cc.models[idx], &bucket, &reqs) {
+                    match pjrt_exec(&cc.engine, &cc.models[idx], bucket, &reqs) {
                         Ok((logits, n_classes)) => {
                             let max_diff = reqs
                                 .iter()
@@ -803,15 +1172,15 @@ fn scheduler_main(
                         }
                     }
                 }
-                reply_batch(&reqs, &bucket, &metrics, &mut served, |b| {
+                reply_batch(&reqs, bucket, metrics, served, |b| {
                     let s = &outs[b];
                     (s.logits.clone(), s.kernel_us.unwrap_or(0), s.decode_us.unwrap_or(0))
                 });
             }
             Exec::Pjrt { engine, models } => {
-                match pjrt_exec(engine, &models[idx], &bucket, &reqs) {
+                match pjrt_exec(engine, &models[idx], bucket, &reqs) {
                     Ok((logits, n_classes)) => {
-                        reply_batch(&reqs, &bucket, &metrics, &mut served, |b| {
+                        reply_batch(&reqs, bucket, metrics, served, |b| {
                             (logits[b * n_classes..(b + 1) * n_classes].to_vec(), 0, 0)
                         });
                     }
@@ -820,10 +1189,8 @@ fn scheduler_main(
                         // drop reply senders: clients observe disconnection
                     }
                 }
-            }
         }
     }
-    log_info!("scheduler exiting after {served} responses");
 }
 
 #[cfg(test)]
@@ -938,8 +1305,10 @@ mod tests {
             mk(0, plain_tokens.clone(), None),
             mk(1, session_tokens.clone(), Some(info)),
         ];
-        let outs = decode_pass(2, &sessions, &backend, &reqs, &metrics);
+        let pool = ScratchPool::new();
+        let outs = decode_pass(2, &sessions, &backend, &reqs, &metrics, &pool);
         assert_eq!(outs.len(), 2);
+        assert!(pool.parked() >= 1, "decode jobs return their scratch buffers");
         // both requests get REAL logits: bit-identical to a direct
         // backend forward of the same tokens
         assert_eq!(outs[0].logits, backend.forward_logits(&plain_tokens));
@@ -949,7 +1318,7 @@ mod tests {
         let info2 = sessions.lock().unwrap().admit(3, &[6, 7]);
         let session_tokens2 = sessions.lock().unwrap().tokens(3).to_vec();
         let reqs2 = vec![mk(2, session_tokens2.clone(), Some(info2))];
-        let outs2 = decode_pass(2, &sessions, &backend, &reqs2, &metrics);
+        let outs2 = decode_pass(2, &sessions, &backend, &reqs2, &metrics, &pool);
         assert_eq!(outs2[0].logits, backend.forward_logits(&session_tokens2));
         let stats = sessions.lock().unwrap().pool().stats();
         assert_eq!((stats.hits, stats.misses), (1, 1), "turn 2 resumed from turn 1's pages");
@@ -983,7 +1352,7 @@ mod tests {
         let i2 = sessions.lock().unwrap().admit(9, &[4, 5]);
         let t2 = sessions.lock().unwrap().tokens(9).to_vec();
         let reqs = vec![mk(0, t2.clone(), Some(i2)), mk(1, t1.clone(), Some(i1))];
-        let outs = decode_pass(1, &sessions, &backend, &reqs, &metrics);
+        let outs = decode_pass(1, &sessions, &backend, &reqs, &metrics, &ScratchPool::new());
         assert_eq!(outs[0].logits, backend.forward_logits(&t2));
         assert_eq!(outs[1].logits, backend.forward_logits(&t1));
         assert_eq!(sessions.lock().unwrap().pool().cached_tokens(9), 5);
@@ -996,5 +1365,236 @@ mod tests {
         let a = store.admit(9, &[]);
         assert_eq!((a.cached_tokens, a.appended_tokens), (2, 0));
         assert_eq!(store.tokens(9), &[1, 2]);
+    }
+
+    #[test]
+    fn append_generated_extends_history_without_cache_counters() {
+        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        store.admit(5, &[1, 2, 3]);
+        store.append_generated(5, &[7, 8]);
+        assert_eq!(store.tokens(5), &[1, 2, 3, 7, 8]);
+        assert_eq!(store.hist_tokens, 5, "generated tokens count toward the budget");
+        // absent session: no-op (evicted mid-stream)
+        store.append_generated(99, &[1]);
+        assert_eq!(store.history_len(99), 0);
+        assert_eq!(store.hist_tokens, 5);
+    }
+
+    fn gen_server(kv: KvCacheConfig, max_streams: usize) -> Server {
+        let router = Router::new(vec![Bucket {
+            config: "serve_srv".into(),
+            n_ctx: 32,
+            batch: 4,
+        }]);
+        Server::start_cpu_with_kv(
+            tiny_backend(&kv),
+            router,
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams,
+                ..Default::default()
+            },
+            kv,
+        )
+        .expect("server start")
+    }
+
+    use crate::coordinator::router::Bucket;
+    use crate::generate::{GenerateRequest, StopReason};
+
+    #[test]
+    fn generate_streams_tokens_and_extends_the_session() {
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let server = gen_server(kv, 4);
+        let prompt = vec![1i32, 2, 3, 4, 5, 6];
+        let rx = server
+            .submit_generate(7, GenerateRequest::greedy(prompt.clone(), 5))
+            .expect("admitted");
+        let mut tokens = Vec::new();
+        let mut done = None;
+        for event in rx.iter() {
+            match event {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, tokens.len(), "tokens stream in order");
+                    tokens.push(token);
+                }
+                StreamEvent::Done { reason, generated, .. } => {
+                    assert_eq!(generated, tokens.len());
+                    done = Some(reason);
+                    break;
+                }
+            }
+        }
+        assert_eq!(done, Some(StopReason::MaxTokens));
+        assert_eq!(tokens.len(), 5);
+        // token-for-token identical to the direct single-stream loop
+        let mut okv = backend.fresh_kv();
+        let oracle = crate::generate::generate(
+            &backend,
+            &mut okv,
+            &[],
+            &GenerateRequest::greedy(prompt.clone(), 5),
+            &crate::generate::GenLimits {
+                max_total_tokens: 32,
+                kv_budget_bytes: 1 << 20,
+            },
+            |_, _| {},
+        );
+        assert_eq!(tokens, oracle.tokens);
+        // the generated tokens joined the session: a follow-up turn's
+        // logits equal a fresh forward over prompt + generated + append
+        let append = vec![9i32, 10];
+        let resp = server.infer_session(7, append.clone()).expect("turn served");
+        let mut full = prompt;
+        full.extend_from_slice(&tokens);
+        full.extend_from_slice(&append);
+        assert_eq!(resp.logits, backend.forward_logits(&full));
+        assert_eq!(resp.cached_tokens, 6 + 5, "history includes the generated tokens");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.gen_streams, 1);
+        assert_eq!(snap.gen_tokens, 5);
+        assert!(snap.ttft_p99_us > 0);
+    }
+
+    #[test]
+    fn generate_rejects_bad_admissions() {
+        let kv = kv_cfg(1 << 20);
+        let server = gen_server(kv, 2);
+        assert!(matches!(
+            server.submit_generate(1, GenerateRequest::greedy(Vec::new(), 4)),
+            Err(RejectReason::EmptyGeneration)
+        ));
+        assert!(
+            matches!(
+                server.submit_generate(1, GenerateRequest::greedy(vec![0; 33], 4)),
+                Err(RejectReason::TooLong)
+            ),
+            "prompt longer than every bucket"
+        );
+        assert_eq!(server.sessions().lock().unwrap().history_len(1), 0, "no side effects");
+    }
+
+    #[test]
+    fn mid_stream_budget_pressure_stops_without_resetting_the_session() {
+        // regression: context overflow mid-generation must retire the
+        // stream with StopReason::Budget, keeping the session history +
+        // generated prefix, instead of the old silent restart
+        let kv = kv_cfg(1 << 20);
+        let server = gen_server(kv, 2); // bucket n_ctx = 32 caps streams
+        let prompt: Vec<i32> = (0..28).collect();
+        let out = server
+            .generate_session(3, GenerateRequest::greedy(prompt, 100))
+            .expect("stream served");
+        assert_eq!(out.reason, StopReason::Budget);
+        // decodes allowed while len < 32: tokens sampled at len 28..=31,
+        // leaving the history exactly AT the context cap
+        assert_eq!(out.tokens.len(), 4);
+        let store = server.sessions();
+        let hist = store.lock().unwrap().history_len(3);
+        assert_eq!(hist, 32, "history keeps prompt AND generated prefix, within the cap");
+        assert_eq!(server.metrics.snapshot().gen_budget_stops, 1);
+    }
+
+    #[test]
+    fn kv_byte_budget_stops_generation_mid_stream() {
+        // 2 layers x 2 heads x d_head 16, page_tokens 4 -> 288 B per
+        // chain-page; budget of 2 pages/chain = 2304 B total
+        let kv = kv_cfg(2 * 4 * 288);
+        let backend = tiny_backend(&kv);
+        assert_eq!(backend.fresh_kv().bytes_at(8), 2 * 4 * 288);
+        let server = gen_server(kv, 2);
+        let out = server
+            .generate_session(4, GenerateRequest::greedy(vec![1, 2, 3, 4], 100))
+            .expect("stream served");
+        assert_eq!(out.reason, StopReason::Budget);
+        assert_eq!(out.tokens.len(), 5, "decodes allowed while bytes_at(len) fits 2 pages");
+        // the stream's pages were checked in intact (no silent reset)
+        assert_eq!(server.sessions().lock().unwrap().history_len(4), 9);
+        assert_eq!(server.cache_stats().misses, 1, "one cold stream, never restarted");
+    }
+
+    #[test]
+    fn empty_prompt_continue_resumes_without_reprefill() {
+        // a generation that merely CONTINUES a fully-decoded session
+        // (empty prompt after a classification turn) must count as a
+        // pool hit and produce the same tokens as a cold stream over the
+        // same context
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let server = gen_server(kv, 2);
+        let context = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        server.infer_session(6, context.clone()).expect("turn served");
+        let out = server
+            .generate_session(6, GenerateRequest::greedy(Vec::new(), 4))
+            .expect("continue stream served");
+        assert_eq!(out.reason, StopReason::MaxTokens);
+        let mut okv = backend.fresh_kv();
+        let oracle = crate::generate::generate(
+            &backend,
+            &mut okv,
+            &context,
+            &GenerateRequest::greedy(Vec::new(), 4),
+            &crate::generate::GenLimits { max_total_tokens: 32, kv_budget_bytes: 1 << 20 },
+            |_, _| {},
+        );
+        assert_eq!(out.tokens, oracle.tokens);
+        let stats = server.cache_stats();
+        assert_eq!(
+            (stats.hits, stats.misses),
+            (1, 1),
+            "the continue stream is a HIT on the turn's resident pages"
+        );
+    }
+
+    #[test]
+    fn concurrent_streams_interleave_and_stay_deterministic() {
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let server = gen_server(kv, 4);
+        let mk_req = |seed: u64| GenerateRequest {
+            prompt: vec![seed as i32 % 8, 3, 1 + seed as i32 % 5, 4],
+            max_new_tokens: 6,
+            stop_tokens: Vec::new(),
+            sampling: crate::generate::SamplingParams {
+                temperature: 0.7,
+                top_k: 2,
+                top_p: 1.0,
+                seed,
+            },
+        };
+        // submit all before draining: all streams live simultaneously
+        let rxs: Vec<_> = (0..3u64)
+            .map(|sid| (sid, server.submit_generate(sid, mk_req(sid)).expect("admitted")))
+            .collect();
+        for (sid, rx) in rxs {
+            let mut tokens = Vec::new();
+            for event in rx.iter() {
+                match event {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Done { reason, .. } => {
+                        assert_eq!(reason, StopReason::MaxTokens);
+                        break;
+                    }
+                }
+            }
+            let mut okv = backend.fresh_kv();
+            let oracle = crate::generate::generate(
+                &backend,
+                &mut okv,
+                &[],
+                &mk_req(sid),
+                &crate::generate::GenLimits {
+                    max_total_tokens: 32,
+                    kv_budget_bytes: 1 << 20,
+                },
+                |_, _| {},
+            );
+            assert_eq!(
+                tokens, oracle.tokens,
+                "stream {sid} must match the direct engine under interleaving"
+            );
+        }
+        assert_eq!(server.metrics.snapshot().gen_streams, 3);
     }
 }

@@ -1,0 +1,450 @@
+//! The autoregressive generation loop over `serve::HadBackend::decode`.
+//!
+//! [`GenState`] is the unit both execution modes share: it owns the full
+//! token sequence (admitted context + generated suffix), the stream's
+//! [`Sampler`], and the stop conditions, and advances by exactly one
+//! decode-and-sample step per [`GenState::step`] call. The direct
+//! single-stream loop ([`generate`]) just calls `step` until the stream
+//! retires; the coordinator's continuous-batching scheduler interleaves
+//! `step` calls of many live streams, one step per stream per tick —
+//! because each step is a pure function of (backend weights, stream
+//! state, stream KV), the two modes are token-for-token identical, and
+//! the property suite asserts exactly that.
+//!
+//! ## One step
+//!
+//! With `tokens[..n]` the sequence so far and `kv` holding a decoded
+//! prefix of it, a step decodes the non-resident suffix (one token in
+//! steady state; the whole context on the first step — the prefill),
+//! captures logits at `n`, samples token `n+1` from them, and appends it
+//! to the sequence. The sampled token's own K/V enter `kv` on the NEXT
+//! step's decode, so the cache always holds exactly the positions whose
+//! logits have been produced.
+//!
+//! ## Budgets
+//!
+//! [`GenLimits`] bounds a stream in both axes the serving stack
+//! enforces: total sequence length (the router's largest context) and
+//! resident KV bytes (the page pool's budget, computed EXACTLY via
+//! [`LayeredKv::bytes_at`] before any page is allocated). A stream that
+//! would cross either limit retires with [`StopReason::Budget`] — the
+//! generated prefix stays valid and the session is never reset
+//! mid-stream.
+//!
+//! Note on the token space: the distilled HAD model ends in a
+//! classification head, so generation feeds class ids (`< n_classes`)
+//! back as input tokens — the head doubles as a (small) next-token head.
+//! An LM checkpoint with `head_w` tied to `tok_emb` drops in without any
+//! change here.
+
+use crate::binary::attention::Scratch;
+use crate::generate::sampler::{Sampler, SamplingParams};
+use crate::kvcache::LayeredKv;
+use crate::serve::{AttnPath, HadBackend};
+
+/// One generation request: the prompt extends the session context, then
+/// up to `max_new_tokens` tokens are generated until a stop token (which
+/// is emitted, then ends the stream) or a budget limit.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Tokens that end the stream when generated (EOS set; may be empty).
+    pub stop_tokens: Vec<i32>,
+    pub sampling: SamplingParams,
+}
+
+impl GenerateRequest {
+    /// Greedy request with no stop tokens (bench/demo shorthand).
+    pub fn greedy(prompt: Vec<i32>, max_new_tokens: usize) -> GenerateRequest {
+        GenerateRequest {
+            prompt,
+            max_new_tokens,
+            stop_tokens: Vec::new(),
+            sampling: SamplingParams::greedy(),
+        }
+    }
+}
+
+/// Why a stream retired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// A stop token was generated (it is included in the stream).
+    StopToken,
+    /// `max_new_tokens` were generated.
+    MaxTokens,
+    /// Context length or KV byte budget exhausted — the stream keeps
+    /// everything generated so far instead of resetting the session.
+    Budget,
+    /// The client dropped its receiver mid-stream (coordinator only).
+    Disconnected,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StopReason::StopToken => write!(f, "stop-token"),
+            StopReason::MaxTokens => write!(f, "max-tokens"),
+            StopReason::Budget => write!(f, "budget"),
+            StopReason::Disconnected => write!(f, "disconnected"),
+        }
+    }
+}
+
+/// Serving-side bounds a stream must stay inside while it grows.
+#[derive(Clone, Copy, Debug)]
+pub struct GenLimits {
+    /// Longest total sequence (context + generated) a stream may reach —
+    /// the coordinator uses its router's largest bucket, so a
+    /// Budget-stopped stream's history stays routable for its next turn.
+    pub max_total_tokens: usize,
+    /// Resident-byte cap of the stream's `LayeredKv` — the coordinator
+    /// uses the page pool's byte budget, so a stream never checks an
+    /// over-budget state back in.
+    ///
+    /// This is a PER-STREAM bound: with `max_streams` concurrent
+    /// generations the aggregate checked-out residency can transiently
+    /// reach `max_streams * kv_budget_bytes` before retirements enforce
+    /// the pool budget. The cap must be a constant per stream — deriving
+    /// it from other live streams' sizes would make a stream's Budget
+    /// stop depend on scheduling interleaving, breaking the
+    /// coordinator-equals-direct-engine determinism contract. Aggregate
+    /// checked-out accounting (shrinking tickets, not limits) is a
+    /// ROADMAP follow-on.
+    pub kv_budget_bytes: usize,
+}
+
+impl GenLimits {
+    /// No serving bounds (direct engine runs, tests).
+    pub fn unbounded() -> GenLimits {
+        GenLimits { max_total_tokens: usize::MAX, kv_budget_bytes: usize::MAX }
+    }
+}
+
+/// One token event of a generation stream, as delivered to clients of
+/// `coordinator::Server::submit_generate` (and mirrored by the direct
+/// loop's callback).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// The `index`-th generated token (0-based) of the stream.
+    Token { index: usize, token: i32 },
+    /// The stream retired; `generated` tokens were emitted in total.
+    Done { reason: StopReason, generated: usize, ttft_us: u128 },
+}
+
+/// Outcome of one [`GenState::step`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOut {
+    /// A token was produced; the stream continues.
+    Token(i32),
+    /// A token was produced and it finished the stream.
+    Last(i32, StopReason),
+    /// No token was produced; the stream retires.
+    Done(StopReason),
+}
+
+/// A live generation stream: the full token sequence, its sampler, and
+/// the stop conditions. Pure state — the backend and KV are passed into
+/// each step, so the coordinator can hold many of these and shard steps
+/// across workers.
+#[derive(Clone, Debug)]
+pub struct GenState {
+    /// Admitted context followed by the generated suffix.
+    tokens: Vec<i32>,
+    context_len: usize,
+    sampler: Sampler,
+    max_new_tokens: usize,
+    stop_tokens: Vec<i32>,
+}
+
+impl GenState {
+    /// Build a stream over `history` (the session's prior context; empty
+    /// for a fresh stream) extended by the request's prompt.
+    pub fn new(history: Vec<i32>, req: &GenerateRequest) -> GenState {
+        let mut tokens = history;
+        tokens.extend_from_slice(&req.prompt);
+        assert!(!tokens.is_empty(), "generation needs a non-empty context");
+        let context_len = tokens.len();
+        GenState {
+            tokens,
+            context_len,
+            sampler: Sampler::new(req.sampling),
+            max_new_tokens: req.max_new_tokens,
+            stop_tokens: req.stop_tokens.clone(),
+        }
+    }
+
+    /// Full sequence: context followed by everything generated so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Length of the admitted context (history + prompt).
+    pub fn context_len(&self) -> usize {
+        self.context_len
+    }
+
+    /// The generated suffix.
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.context_len..]
+    }
+
+    pub fn n_generated(&self) -> usize {
+        self.tokens.len() - self.context_len
+    }
+
+    /// Advance the stream by one decode-and-sample step (see module
+    /// docs). Budget checks run BEFORE the decode so a retiring stream
+    /// never grows `kv` past the limits it is checked against.
+    pub fn step(
+        &mut self,
+        backend: &HadBackend,
+        kv: &mut LayeredKv,
+        limits: &GenLimits,
+        path: AttnPath,
+        scratch: &mut Scratch,
+    ) -> StepOut {
+        if self.n_generated() >= self.max_new_tokens {
+            // only reachable with max_new_tokens == 0 (or a step after
+            // Last, which callers do not issue)
+            return StepOut::Done(StopReason::MaxTokens);
+        }
+        let len = self.tokens.len();
+        // `>=`, not `>`: the step would decode `len` positions and push a
+        // token, leaving `len + 1` total — stopping at `len == max` keeps
+        // a Budget-stopped stream's history within the cap (routable by
+        // the bucket that admitted it) instead of one past it
+        if len >= limits.max_total_tokens || kv.bytes_at(len) > limits.kv_budget_bytes {
+            return StepOut::Done(StopReason::Budget);
+        }
+        let (mut caps, _stats) = backend.decode_in(kv, &self.tokens, &[len], path, scratch);
+        let logits = caps.pop().expect("one capture requested").logits;
+        let next = self.sampler.sample(&logits) as i32;
+        self.tokens.push(next);
+        if self.stop_tokens.contains(&next) {
+            StepOut::Last(next, StopReason::StopToken)
+        } else if self.n_generated() >= self.max_new_tokens {
+            StepOut::Last(next, StopReason::MaxTokens)
+        } else {
+            StepOut::Token(next)
+        }
+    }
+}
+
+/// A finished stream's output.
+#[derive(Clone, Debug)]
+pub struct GenerateOutput {
+    /// Generated tokens only (the context is the caller's).
+    pub tokens: Vec<i32>,
+    pub reason: StopReason,
+}
+
+/// The direct single-stream engine loop: run `req` to completion over
+/// `kv`, invoking `on_token(index, token)` as each token is produced
+/// (the streaming callback). `history` is the context the prompt
+/// extends; pass `&[]` for a fresh stream. A `kv` already holding a
+/// decoded prefix of `history + prompt` resumes warm, exactly like a
+/// session turn.
+pub fn generate(
+    backend: &HadBackend,
+    kv: &mut LayeredKv,
+    history: &[i32],
+    req: &GenerateRequest,
+    limits: &GenLimits,
+    mut on_token: impl FnMut(usize, i32),
+) -> GenerateOutput {
+    let mut state = GenState::new(history.to_vec(), req);
+    let mut scratch = Scratch::default();
+    loop {
+        let index = state.n_generated();
+        match state.step(backend, kv, limits, AttnPath::Kernel, &mut scratch) {
+            StepOut::Token(t) => on_token(index, t),
+            StepOut::Last(t, reason) => {
+                on_token(index, t);
+                return GenerateOutput { tokens: state.generated().to_vec(), reason };
+            }
+            StepOut::Done(reason) => {
+                return GenerateOutput { tokens: state.generated().to_vec(), reason };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvCacheConfig;
+    use crate::runtime::{ConfigEntry, ModelCfg};
+    use crate::serve::{token_config_entry, ServeModel};
+    use crate::tensor::ops::argmax;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigEntry {
+        token_config_entry(
+            "gen_tiny",
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 48,
+                n_classes: 4, vocab: 24, input_dim: 0, n_top: 6, block_q: 16,
+            },
+        )
+    }
+
+    fn backend() -> HadBackend {
+        let cfg = tiny_cfg();
+        let model = ServeModel::random(&cfg, 0x9E4E).unwrap();
+        HadBackend::new(model, &KvCacheConfig { page_tokens: 4, ..Default::default() })
+    }
+
+    fn toks(seed: u64, n: usize) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(24) as i32).collect()
+    }
+
+    #[test]
+    fn greedy_equals_repeated_argmax_over_decode() {
+        let b = backend();
+        let prompt = toks(1, 9);
+        let req = GenerateRequest::greedy(prompt.clone(), 7);
+        let mut kv = b.fresh_kv();
+        let out = generate(&b, &mut kv, &[], &req, &GenLimits::unbounded(), |_, _| {});
+        assert_eq!(out.reason, StopReason::MaxTokens);
+        assert_eq!(out.tokens.len(), 7);
+        // oracle: the raw decode + argmax feedback loop
+        let mut seq = prompt;
+        let mut okv = b.fresh_kv();
+        for &got in &out.tokens {
+            let (caps, _) = b.decode(&mut okv, &seq, &[seq.len()]);
+            let want = argmax(&caps.last().unwrap().logits) as i32;
+            assert_eq!(got, want, "greedy generation must equal repeated argmax");
+            seq.push(want);
+        }
+    }
+
+    #[test]
+    fn each_step_decodes_one_suffix_token() {
+        let b = backend();
+        let req = GenerateRequest::greedy(toks(2, 6), 5);
+        let mut state = GenState::new(Vec::new(), &req);
+        let mut kv = b.fresh_kv();
+        let mut scratch = Scratch::default();
+        // prefill step decodes the whole prompt
+        state.step(&b, &mut kv, &GenLimits::unbounded(), AttnPath::Kernel, &mut scratch);
+        assert_eq!(kv.len(), 6);
+        // every later step decodes exactly the one appended token
+        for expect in 7..=9 {
+            state.step(&b, &mut kv, &GenLimits::unbounded(), AttnPath::Kernel, &mut scratch);
+            assert_eq!(kv.len(), expect, "suffix-only decode per step");
+        }
+        assert_eq!(state.n_generated(), 4);
+    }
+
+    #[test]
+    fn stop_token_ends_the_stream_and_is_emitted() {
+        let b = backend();
+        let prompt = toks(3, 8);
+        // find what greedy generates first, then make THAT the stop token
+        let first = {
+            let req = GenerateRequest::greedy(prompt.clone(), 1);
+            let mut kv = b.fresh_kv();
+            generate(&b, &mut kv, &[], &req, &GenLimits::unbounded(), |_, _| {}).tokens[0]
+        };
+        let req = GenerateRequest {
+            prompt: prompt.clone(),
+            max_new_tokens: 10,
+            stop_tokens: vec![first],
+            sampling: SamplingParams::greedy(),
+        };
+        let mut kv = b.fresh_kv();
+        let mut streamed = Vec::new();
+        let out = generate(&b, &mut kv, &[], &req, &GenLimits::unbounded(), |i, t| {
+            streamed.push((i, t));
+        });
+        assert_eq!(out.reason, StopReason::StopToken);
+        assert_eq!(out.tokens, vec![first], "stop token is included, then the stream ends");
+        assert_eq!(streamed, vec![(0, first)], "callback saw exactly the emitted stream");
+    }
+
+    #[test]
+    fn byte_budget_retires_with_budget_before_exceeding() {
+        let b = backend();
+        let prompt = toks(4, 4);
+        // geometry: 2 layers x 2 heads, d_head 16, page_tokens 4
+        // -> one page costs 4 * (8 + 64) = 288 B per chain, 4 chains
+        let kv0 = b.fresh_kv();
+        let two_pages = kv0.bytes_at(8);
+        assert_eq!(two_pages, 2 * 4 * 288);
+        let limits = GenLimits { max_total_tokens: usize::MAX, kv_budget_bytes: two_pages };
+        let mut kv = b.fresh_kv();
+        let req = GenerateRequest::greedy(prompt, 100);
+        let out = generate(&b, &mut kv, &[], &req, &limits, |_, _| {});
+        assert_eq!(out.reason, StopReason::Budget);
+        // steps may decode while len <= 8; the step at len 9 retires, so
+        // exactly tokens 5..=9 were sampled (5 generated), kv holds 8
+        assert_eq!(out.tokens.len(), 5);
+        assert_eq!(kv.len(), 8);
+        assert!(kv.bytes() <= two_pages, "the stream never grew past its budget");
+    }
+
+    #[test]
+    fn context_cap_retires_with_budget() {
+        let b = backend();
+        let limits = GenLimits { max_total_tokens: 10, kv_budget_bytes: usize::MAX };
+        let mut kv = b.fresh_kv();
+        let mut state = GenState::new(Vec::new(), &GenerateRequest::greedy(toks(5, 6), 100));
+        let mut out_tokens = Vec::new();
+        let mut scratch = Scratch::default();
+        let reason = loop {
+            match state.step(&b, &mut kv, &limits, AttnPath::Kernel, &mut scratch) {
+                StepOut::Token(t) => out_tokens.push(t),
+                StepOut::Last(t, r) => {
+                    out_tokens.push(t);
+                    break r;
+                }
+                StepOut::Done(r) => break r,
+            }
+        };
+        assert_eq!(reason, StopReason::Budget);
+        // decodes allowed while len < 10 (len 6..=9) -> 4 tokens, and the
+        // final sequence sits exactly AT the cap, still routable
+        assert_eq!(out_tokens.len(), 4);
+        assert_eq!(state.tokens().len(), 10);
+    }
+
+    #[test]
+    fn zero_budget_generates_nothing() {
+        let b = backend();
+        let req = GenerateRequest::greedy(toks(6, 5), 0);
+        let mut kv = b.fresh_kv();
+        let out = generate(&b, &mut kv, &[], &req, &GenLimits::unbounded(), |_, _| {
+            panic!("no token may be emitted")
+        });
+        assert_eq!(out.reason, StopReason::MaxTokens);
+        assert!(out.tokens.is_empty());
+        assert!(kv.is_empty(), "no decode ran");
+    }
+
+    #[test]
+    fn warm_history_resume_matches_cold() {
+        // generating after a prior turn (history resident in kv) must
+        // equal generating over the concatenated context from scratch
+        let b = backend();
+        let history = toks(7, 10);
+        let prompt = toks(8, 4);
+        let req = GenerateRequest::greedy(prompt.clone(), 4);
+
+        let mut warm_kv = b.fresh_kv();
+        b.decode(&mut warm_kv, &history, &[history.len()]); // prior turn
+        let warm = generate(&b, &mut warm_kv, &history, &req, &GenLimits::unbounded(), |_, _| {});
+
+        let mut cold_kv = b.fresh_kv();
+        let cold = generate(&b, &mut cold_kv, &history, &req, &GenLimits::unbounded(), |_, _| {});
+        assert_eq!(warm.tokens, cold.tokens, "warm resume must not change the stream");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty context")]
+    fn rejects_empty_context() {
+        let req = GenerateRequest::greedy(Vec::new(), 3);
+        GenState::new(Vec::new(), &req);
+    }
+}

@@ -1,0 +1,40 @@
+//! Autoregressive generation subsystem: token-feedback decoding with
+//! deterministic sampling and streaming output.
+//!
+//! Until this module the stack only answered classification-style turns
+//! — one logit vector per submitted prefix. `generate` closes the token
+//! feedback loop over the CPU serving backend: a [`GenerateRequest`]
+//! (prompt, `max_new_tokens`, stop-token set, [`SamplingParams`]) drives
+//! repeated one-token decode steps through `serve::HadBackend::decode`,
+//! each step appending the sampled token's K/V into the session's
+//! `kvcache::LayeredKv` page chains so the next step decodes exactly one
+//! suffix token — and follow-up turns resume warm from everything the
+//! stream generated.
+//!
+//! Two execution modes share [`GenState`], the one-step state machine:
+//!
+//! * [`engine::generate`] — the direct single-stream loop with a
+//!   per-token callback (benches, oracles, embedded use).
+//! * `coordinator::Server::submit_generate` — continuous batching: the
+//!   scheduler holds many live streams, steps each one once per tick,
+//!   admits new streams (prefill) in the same pass, and delivers
+//!   [`StreamEvent`]s over a channel as tokens are produced.
+//!
+//! Sampling ([`sampler::Sampler`]) is greedy argmax, temperature,
+//! top-k, or top-p, all driven per-stream by the deterministic
+//! `util::rng` generator: the same seed and params always reproduce the
+//! same token stream, and greedy generation is bit-identical to repeated
+//! argmax over the decode logits. Streams retire with an explicit
+//! [`StopReason`] — stop token, token budget, or serving pressure
+//! ([`StopReason::Budget`] when the KV chain would outgrow the page
+//! pool's byte budget or the router's context cap; the generated prefix
+//! survives, the session is never reset mid-stream).
+
+pub mod engine;
+pub mod sampler;
+
+pub use engine::{
+    generate, GenLimits, GenState, GenerateOutput, GenerateRequest, StepOut, StopReason,
+    StreamEvent,
+};
+pub use sampler::{Sampler, SamplingParams};

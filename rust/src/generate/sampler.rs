@@ -1,0 +1,238 @@
+//! Token sampling over decode logits: greedy argmax, temperature
+//! softmax, top-k truncation, and top-p (nucleus) truncation — all
+//! driven by the deterministic `util::rng` generator so a (seed, params,
+//! logit-stream) triple always reproduces the same token stream.
+//!
+//! Determinism is a serving contract here, not a convenience: the
+//! continuous-batching coordinator and the direct single-stream engine
+//! loop are property-tested to produce identical streams, and that only
+//! holds if sampling is a pure function of the per-stream RNG state.
+//! Ties in the logits are broken by ascending index everywhere (the
+//! same rule `tensor::ops::argmax` uses), so greedy sampling is
+//! bit-identical to repeated argmax over the decode logits.
+
+use crate::tensor::ops::argmax;
+use crate::util::rng::Rng;
+
+/// Sampling knobs of one generation stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `0.0` means greedy argmax (no RNG draw, so a
+    /// greedy stream consumes no randomness at all).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before sampling (`0` = off).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest logit-descending prefix whose
+    /// probability mass reaches `top_p` (`1.0` = off).
+    pub top_p: f32,
+    /// Seed of the per-stream RNG (streams are independent: concurrent
+    /// generations never share randomness).
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Deterministic argmax decoding.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+/// One stream's sampler: params plus its private RNG stream.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        assert!(
+            params.temperature.is_finite() && params.temperature >= 0.0,
+            "temperature must be finite and >= 0"
+        );
+        assert!(
+            params.top_p > 0.0 && params.top_p <= 1.0,
+            "top_p must be in (0, 1]"
+        );
+        Sampler { params, rng: Rng::new(params.seed) }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Draw the next token id from one row of logits. Greedy params take
+    /// the argmax (first max wins, matching `ops::argmax`); otherwise the
+    /// logits are temperature-softmaxed, truncated by top-k then top-p,
+    /// and sampled from the renormalized distribution.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        assert!(!logits.is_empty(), "sampling over empty logits");
+        if self.params.is_greedy() {
+            return argmax(logits);
+        }
+        let t = self.params.temperature as f64;
+        if self.params.top_k == 0 && self.params.top_p >= 1.0 {
+            // no truncation active: a plain softmax draw needs no
+            // ordering at all — one O(V) pass in index order
+            let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let weights: Vec<f64> =
+                logits.iter().map(|&l| ((l as f64 - m) / t).exp()).collect();
+            let total: f64 = weights.iter().sum();
+            let mut x = self.rng.next_f64() * total;
+            for (i, w) in weights.iter().enumerate() {
+                x -= w;
+                if x <= 0.0 {
+                    return i;
+                }
+            }
+            return weights.len() - 1;
+        }
+        // truncating path: candidates ordered by logit descending, index
+        // ascending on ties — a TOTAL order, so the top-k partition is
+        // deterministic. With top_k set, the O(V) partition keeps the
+        // per-token cost vocabulary-independent (only the kept k are
+        // sorted); the k-free top-p path still sorts all V.
+        let by_desc =
+            |a: &usize, b: &usize| logits[*b].total_cmp(&logits[*a]).then(a.cmp(b));
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        let keep = if self.params.top_k > 0 {
+            self.params.top_k.min(idx.len())
+        } else {
+            idx.len()
+        };
+        if keep < idx.len() {
+            idx.select_nth_unstable_by(keep - 1, by_desc);
+            idx.truncate(keep);
+        }
+        idx.sort_unstable_by(by_desc);
+        // stable softmax over the kept candidates (f64 accumulation so
+        // tiny tails don't vanish before the nucleus cut)
+        let m = logits[idx[0]] as f64;
+        let weights: Vec<f64> = idx[..keep]
+            .iter()
+            .map(|&i| ((logits[i] as f64 - m) / t).exp())
+            .collect();
+        let sum: f64 = weights.iter().sum();
+        // nucleus: smallest descending prefix reaching top_p of the mass
+        let mut cut = keep;
+        if self.params.top_p < 1.0 {
+            let mut acc = 0.0;
+            for (j, w) in weights.iter().enumerate() {
+                acc += w / sum;
+                if acc >= self.params.top_p as f64 {
+                    cut = j + 1;
+                    break;
+                }
+            }
+        }
+        let total: f64 = weights[..cut].iter().sum();
+        let mut x = self.rng.next_f64() * total;
+        for (j, w) in weights[..cut].iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return idx[j];
+            }
+        }
+        idx[cut - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(params: SamplingParams, rows: &[Vec<f32>]) -> Vec<usize> {
+        let mut s = Sampler::new(params);
+        rows.iter().map(|r| s.sample(r)).collect()
+    }
+
+    fn random_rows(seed: u64, n: usize, width: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..width).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn greedy_is_argmax_bit_for_bit() {
+        let rows = random_rows(1, 64, 7);
+        let got = stream(SamplingParams::greedy(), &rows);
+        let want: Vec<usize> = rows.iter().map(|r| argmax(r)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn greedy_breaks_ties_like_argmax() {
+        let mut s = Sampler::new(SamplingParams::greedy());
+        assert_eq!(s.sample(&[1.0, 3.0, 3.0, 0.0]), 1, "first max wins");
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let params = SamplingParams { temperature: 0.8, top_k: 4, top_p: 0.9, seed: 42 };
+        let rows = random_rows(2, 128, 9);
+        assert_eq!(stream(params, &rows), stream(params, &rows));
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let params = SamplingParams { temperature: 1.0, top_k: 2, top_p: 1.0, seed: 3 };
+        let mut s = Sampler::new(params);
+        let logits = vec![0.0, 5.0, -1.0, 4.0, 0.5];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 1 || t == 3, "sampled {t} outside the top-2 set");
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_collapses_to_greedy() {
+        // a nucleus smaller than the top token's mass keeps only it
+        let params = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1e-6, seed: 4 };
+        let mut s = Sampler::new(params);
+        let logits = vec![0.0, 3.0, 1.0];
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_reaches_the_tail() {
+        let params = SamplingParams { temperature: 10.0, top_k: 0, top_p: 1.0, seed: 5 };
+        let mut s = Sampler::new(params);
+        let logits = vec![0.0, 1.0, 0.5];
+        let mut seen = [false; 3];
+        for _ in 0..500 {
+            seen[s.sample(&logits)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "hot sampling must cover the support");
+    }
+
+    #[test]
+    fn greedy_consumes_no_randomness() {
+        // interleaving greedy draws must not perturb a sampled stream's
+        // RNG — greedy never touches it
+        let mut s = Sampler::new(SamplingParams::greedy());
+        let before = s.rng.clone();
+        s.sample(&[1.0, 2.0]);
+        let mut a = before;
+        let mut b = s.rng;
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    #[should_panic(expected = "top_p")]
+    fn rejects_zero_top_p() {
+        Sampler::new(SamplingParams { temperature: 1.0, top_k: 0, top_p: 0.0, seed: 0 });
+    }
+}

@@ -17,6 +17,7 @@
 //! packed sign-bit keys per layer per head plus values at the configured
 //! precision (`ValueDtype::Bf16` halves the value half).
 
+use crate::binary::bitpack::words_for;
 use crate::kvcache::config::ValueDtype;
 use crate::kvcache::session::SessionKv;
 
@@ -122,6 +123,23 @@ impl LayeredKv {
     pub fn bytes(&self) -> usize {
         self.chains.iter().map(SessionKv::bytes).sum()
     }
+
+    /// Exact resident bytes a decode of `n_tokens` tokens will occupy in
+    /// this geometry (pages allocate at full capacity, so residency is
+    /// page-granular and independent of current fill). The generation
+    /// loop budget-checks `bytes_at(len)` BEFORE decoding, so a stream
+    /// retires with a `Budget` stop instead of ever allocating past the
+    /// pool's byte budget.
+    pub fn bytes_at(&self, n_tokens: usize) -> usize {
+        self.chains
+            .iter()
+            .map(|c| {
+                let per_token =
+                    words_for(c.d()) * 8 + c.d_v() * c.value_dtype().bytes_per_elem();
+                n_tokens.div_ceil(c.page_tokens()) * c.page_tokens() * per_token
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +213,24 @@ mod tests {
         push_token(&mut kv, 3, 0.5);
         // 4 chains x one page x 4 tokens x (8 B key + 64*4 B value)
         assert_eq!(kv.bytes(), 4 * 4 * (8 + 256));
+    }
+
+    #[test]
+    fn bytes_at_predicts_actual_residency() {
+        let geom = KvGeom { n_layers: 2, n_heads: 3, d_head: 16 };
+        let mut kv = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert_eq!(kv.bytes_at(0), 0);
+        for t in 0..9 {
+            push_token(&mut kv, t, 0.25);
+            assert_eq!(
+                kv.bytes(),
+                kv.bytes_at(kv.len()),
+                "projection must equal residency at {} tokens",
+                kv.len()
+            );
+        }
+        // page-granular: 5..=8 tokens all cost two pages
+        assert_eq!(kv.bytes_at(5), kv.bytes_at(8));
+        assert!(kv.bytes_at(9) > kv.bytes_at(8));
     }
 }

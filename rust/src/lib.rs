@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod data;
 pub mod distill;
 pub mod exp;
+pub mod generate;
 pub mod hwsim;
 pub mod kvcache;
 pub mod model;

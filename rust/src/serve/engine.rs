@@ -129,6 +129,23 @@ impl HadBackend {
         capture_lens: &[usize],
         path: AttnPath,
     ) -> (Vec<CaptureOut>, DecodeStats) {
+        let mut scratch = Scratch::default();
+        self.decode_in(kv, tokens, capture_lens, path, &mut scratch)
+    }
+
+    /// `decode_with` against caller-owned scratch buffers: the batch
+    /// scheduler hands every decode job a buffer from its [`ScratchPool`]
+    /// so concurrent jobs within a tick reuse grown allocations instead
+    /// of paying `Scratch::default()` each. Scratch contents never affect
+    /// results (buffers are fully rewritten per attention call).
+    pub fn decode_in(
+        &self,
+        kv: &mut LayeredKv,
+        tokens: &[i32],
+        capture_lens: &[usize],
+        path: AttnPath,
+        scratch: &mut Scratch,
+    ) -> (Vec<CaptureOut>, DecodeStats) {
         assert_eq!(kv.geom(), self.geom(), "decode state geometry mismatch");
         for w in capture_lens.windows(2) {
             assert!(w[0] < w[1], "capture lengths must be strictly ascending");
@@ -148,7 +165,11 @@ impl HadBackend {
 
         let m = &self.model;
         let (d, dh, n_heads) = (m.cfg.d_model, m.cfg.d_head(), m.cfg.n_heads);
-        let mut scratch = Scratch::default();
+        // per-layer attention configs hoisted out of the token loop (one
+        // temp lookup per decode pass, not per token per layer)
+        let acfgs: Vec<HadAttnConfig> = (0..m.layers.len())
+            .map(|l| HadAttnConfig { n_top: m.n_top, temp: m.temp(l) })
+            .collect();
         let mut captures = Vec::with_capacity(capture_lens.len());
         let mut next_capture = 0usize;
         let mut stats = DecodeStats { resumed_at: start, ..Default::default() };
@@ -169,7 +190,7 @@ impl HadBackend {
                 let q = affine(&x, &lw.wq, &lw.bq);
                 let k = affine(&x, &lw.wk, &lw.bk);
                 let v = affine(&x, &lw.wv, &lw.bv);
-                let acfg = HadAttnConfig { n_top: m.n_top, temp: m.temp(l) };
+                let acfg = acfgs[l];
                 let mut ctx = Mat::zeros(1, d);
                 for head in 0..n_heads {
                     let span = head * dh..(head + 1) * dh;
@@ -181,10 +202,10 @@ impl HadBackend {
                     let t0 = Instant::now();
                     let o = match path {
                         AttnPath::Kernel => {
-                            had_attention_paged_with(&qh, chain, &acfg, &mut scratch)
+                            had_attention_paged_with(&qh, chain, &acfg, scratch)
                         }
                         AttnPath::Scalar => {
-                            had_attention_paged_scalar_with(&qh, chain, &acfg, &mut scratch)
+                            had_attention_paged_scalar_with(&qh, chain, &acfg, scratch)
                         }
                     };
                     seg_attn += t0.elapsed().as_micros();
@@ -236,6 +257,46 @@ impl HadBackend {
         let mut kv = self.fresh_kv();
         let (mut captures, _) = self.decode(&mut kv, tokens, &[tokens.len()]);
         captures.pop().expect("one capture requested").logits
+    }
+}
+
+/// A checkout pool of attention [`Scratch`] buffers, shared by every
+/// decode job the scheduler runs — batch decodes and generation steps
+/// alike — instead of each job allocating its own. Buffers keep their
+/// grown capacity across checkins, so steady-state serving reaches a
+/// fixed point with no scratch allocation at all; under concurrency the
+/// pool simply hands out as many buffers as there are simultaneous jobs.
+#[derive(Default)]
+pub struct ScratchPool {
+    free: std::sync::Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Take a buffer (a previously-grown one when available).
+    pub fn checkout(&self) -> Scratch {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer for the next job to reuse.
+    pub fn checkin(&self, scratch: Scratch) {
+        self.free.lock().unwrap().push(scratch);
+    }
+
+    /// Run `f` with a pooled buffer (checkout/checkin around it).
+    pub fn with<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        let mut scratch = self.checkout();
+        let out = f(&mut scratch);
+        self.checkin(scratch);
+        out
+    }
+
+    /// Buffers currently parked in the pool (introspection/tests).
+    pub fn parked(&self) -> usize {
+        self.free.lock().unwrap().len()
     }
 }
 
@@ -421,5 +482,28 @@ mod tests {
         let b = backend(KvCacheConfig::default());
         let mut kv = b.fresh_kv();
         b.decode(&mut kv, &[1, 2, 3], &[3, 2]);
+    }
+
+    #[test]
+    fn pooled_scratch_decode_is_bit_exact() {
+        // reusing a buffer another decode grew must not change results
+        let b = backend(KvCacheConfig { page_tokens: 4, ..Default::default() });
+        let mut rng = Rng::new(18);
+        let long = toks(&mut rng, 17);
+        let short = toks(&mut rng, 6);
+        let pool = ScratchPool::new();
+        assert_eq!(pool.parked(), 0);
+        let warm = pool.with(|s| {
+            let mut kv = b.fresh_kv();
+            b.decode_in(&mut kv, &long, &[17], AttnPath::Kernel, s)
+        });
+        assert_eq!(pool.parked(), 1, "buffer returned to the pool");
+        let reused = pool.with(|s| {
+            let mut kv = b.fresh_kv();
+            b.decode_in(&mut kv, &short, &[6], AttnPath::Kernel, s)
+        });
+        assert_eq!(pool.parked(), 1, "grown buffer reused, not duplicated");
+        assert_eq!(warm.0[0].logits, b.forward_logits(&long));
+        assert_eq!(reused.0[0].logits, b.forward_logits(&short));
     }
 }

@@ -49,7 +49,7 @@ pub mod engine;
 pub mod model;
 pub mod reference;
 
-pub use engine::{AttnPath, CaptureOut, DecodeStats, HadBackend};
+pub use engine::{AttnPath, CaptureOut, DecodeStats, HadBackend, ScratchPool};
 pub use model::{demo_config, token_config_entry, LayerWeights, ServeModel};
 pub use reference::reference_forward;
 

@@ -51,6 +51,38 @@ impl Stats {
     }
 }
 
+/// Percentile of an ascending-sorted µs sample (0 on empty): index
+/// `floor(len * p)`, clamped — the one convention the coordinator's
+/// `Metrics` snapshots and the bench mains share, so their printed
+/// percentiles can never diverge.
+pub fn percentile_us(sorted: &[u128], p: f64) -> u128 {
+    if sorted.is_empty() {
+        0
+    } else {
+        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+    }
+}
+
+/// Append JSONL records to `path` (creating parent dirs) — the
+/// results-file convention every bench main shares and
+/// scripts/summarize_results.py reads.
+pub fn write_jsonl(path: &str, records: &[crate::util::json::Json]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    for r in records {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {

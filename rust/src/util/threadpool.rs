@@ -141,6 +141,33 @@ where
         .collect()
 }
 
+/// Scoped parallel mutation over a slice: applies `f(index, &mut item)`
+/// with at most `n_workers` scoped threads, each owning one contiguous
+/// chunk (static partition — right for work items of similar cost, like
+/// the scheduler's one-decode-step-per-stream generation tick, where
+/// work stealing would buy nothing but synchronization).
+pub fn parallel_for_mut<T, F>(n_workers: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    if items.is_empty() {
+        return;
+    }
+    let n_workers = n_workers.max(1).min(items.len());
+    let chunk = items.len().div_ceil(n_workers);
+    std::thread::scope(|scope| {
+        for (ci, chunk_items) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in chunk_items.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
 /// Split `n_items` into at most `n_shards` contiguous `(lo, hi)` ranges
 /// whose starts are aligned to `align` (the kernel's query-block size, so
 /// a shard never splits a tile). Ranges cover `0..n_items` exactly, in
@@ -220,6 +247,22 @@ mod tests {
                 assert_eq!(*v, 2 * i, "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_for_mut_touches_every_item_once() {
+        for workers in [1usize, 2, 3, 64] {
+            let mut items: Vec<usize> = (0..23).collect();
+            parallel_for_mut(workers, &mut items, |i, x| {
+                assert_eq!(*x, i, "index matches slot");
+                *x += 100;
+            });
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, i + 100, "workers={workers}");
+            }
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_for_mut(4, &mut empty, |_, _| panic!("no items"));
     }
 
     #[test]

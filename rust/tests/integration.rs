@@ -311,3 +311,123 @@ fn serving_cpu_backend_end_to_end() {
     assert!(server.submit(vec![0; 4096]).is_err());
     assert!(server.submit_session(8, vec![0; 4096]).is_err());
 }
+
+/// Streamed generation end to end through the continuous-batching
+/// coordinator: tokens arrive as StreamEvents, greedy output matches the
+/// direct engine loop, stop tokens retire the stream, generated context
+/// is reusable by classification turns, and batch traffic keeps flowing
+/// while streams are live.
+#[test]
+fn serving_generation_end_to_end() {
+    use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+    use had::generate::{
+        generate, GenLimits, GenerateRequest, SamplingParams, StopReason, StreamEvent,
+    };
+    use had::kvcache::KvCacheConfig;
+    use had::runtime::ModelCfg;
+    use had::serve::{token_config_entry, HadBackend, ServeModel};
+
+    let cfg = token_config_entry(
+        "gen_64",
+        ModelCfg {
+            n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 64,
+            n_classes: 4, vocab: 32, input_dim: 0, n_top: 8, block_q: 16,
+        },
+    );
+    let model = ServeModel::random(&cfg, 0xF00D).unwrap();
+    let kv = KvCacheConfig { page_tokens: 8, ..Default::default() };
+    let probe = HadBackend::new(model.clone(), &kv);
+    let backend = HadBackend::new(model, &kv);
+    let router = Router::new(vec![Bucket { config: "gen_64".into(), n_ctx: 64, batch: 4 }]);
+    let server = Server::start_cpu_with_kv(
+        backend,
+        router,
+        BatchPolicy {
+            max_wait: std::time::Duration::from_millis(1),
+            max_streams: 4,
+            ..Default::default()
+        },
+        kv,
+    )
+    .unwrap();
+    let limits = GenLimits { max_total_tokens: 64, kv_budget_bytes: kv.byte_budget };
+
+    let mut rng = Rng::new(9);
+    let toks = |rng: &mut Rng, n: usize| -> Vec<i32> {
+        (0..n).map(|_| rng.below(32) as i32).collect()
+    };
+
+    // two live streams + a classification request in the same window
+    let p1 = toks(&mut rng, 12);
+    let p2 = toks(&mut rng, 7);
+    let rx1 = server
+        .submit_generate(1, GenerateRequest::greedy(p1.clone(), 6))
+        .unwrap();
+    let rx2 = server
+        .submit_generate(
+            2,
+            GenerateRequest {
+                prompt: p2.clone(),
+                max_new_tokens: 10,
+                stop_tokens: vec![0, 1, 2, 3], // any class id stops after one token
+                sampling: SamplingParams { temperature: 0.6, top_k: 0, top_p: 0.95, seed: 77 },
+            },
+        )
+        .unwrap();
+    let plain = toks(&mut rng, 15);
+    let plain_resp = server.infer(plain.clone()).unwrap();
+    assert_eq!(plain_resp.logits, probe.forward_logits(&plain), "batch traffic coexists");
+
+    let drain = |rx: std::sync::mpsc::Receiver<StreamEvent>| {
+        let mut tokens = Vec::new();
+        for event in rx.iter() {
+            match event {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, tokens.len(), "in-order streaming");
+                    tokens.push(token);
+                }
+                StreamEvent::Done { reason, generated, ttft_us } => {
+                    assert_eq!(generated, tokens.len());
+                    return (tokens, reason, ttft_us);
+                }
+            }
+        }
+        panic!("stream ended without Done");
+    };
+    let (t1, r1, ttft1) = drain(rx1);
+    let (t2, r2, _) = drain(rx2);
+    assert_eq!(r1, StopReason::MaxTokens);
+    assert_eq!(t1.len(), 6);
+    assert!(ttft1 > 0, "TTFT measured");
+    assert_eq!(r2, StopReason::StopToken, "every class id is a stop token");
+    assert_eq!(t2.len(), 1, "the stop token is emitted, then the stream ends");
+
+    // greedy stream == direct engine loop on identical weights
+    let mut okv = probe.fresh_kv();
+    let want = generate(
+        &probe,
+        &mut okv,
+        &[],
+        &GenerateRequest::greedy(p1.clone(), 6),
+        &limits,
+        |_, _| {},
+    );
+    assert_eq!(t1, want.tokens);
+
+    // generated tokens are real session context for later turns
+    let append = toks(&mut rng, 5);
+    let mut full = p1;
+    full.extend_from_slice(&t1);
+    full.extend_from_slice(&append);
+    let turn = server.infer_session(1, append).unwrap();
+    assert_eq!(turn.cached_tokens, 18, "prompt + generated tokens were cached");
+    assert_eq!(turn.logits, probe.forward_logits(&full));
+
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.gen_streams, 2);
+    assert_eq!(snap.gen_tokens, 7);
+    assert!(snap.ttft_p99_us > 0);
+    assert!(snap.gen_tokens_per_s > 0.0);
+    // the 6-token stream produced 5 inter-token gaps
+    assert!(snap.inter_token_p99_us > 0);
+}

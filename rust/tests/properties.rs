@@ -336,6 +336,162 @@ fn cfg_cases(cases: usize) -> Config {
     Config { cases, seed: 0xC0FFEE, max_shrink_steps: 20 }
 }
 
+/// Shared tiny backend for the generation properties.
+fn gen_backend() -> had::serve::HadBackend {
+    use had::kvcache::KvCacheConfig;
+    use had::runtime::ModelCfg;
+    use had::serve::{token_config_entry, HadBackend, ServeModel};
+    let cfg = token_config_entry(
+        "prop_gen",
+        ModelCfg {
+            n_layers: 2, d_model: 32, n_heads: 2, d_ff: 48, n_ctx: 48,
+            n_classes: 4, vocab: 24, input_dim: 0, n_top: 6, block_q: 16,
+        },
+    );
+    let model = ServeModel::random(&cfg, 0x6E4).unwrap();
+    HadBackend::new(model, &KvCacheConfig { page_tokens: 4, ..Default::default() })
+}
+
+#[test]
+fn prop_greedy_generation_is_repeated_argmax_over_decode() {
+    // acceptance property (a): greedy generation == the raw decode +
+    // argmax token feedback loop, bit for bit, for any prompt
+    use had::generate::{generate, GenLimits, GenerateRequest};
+    use had::tensor::ops::argmax;
+    let backend = gen_backend();
+    let gen = pair(usize_in(1, 20), usize_in(0, 1 << 20));
+    check(&cfg_cases(8), &gen, |&(n, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let prompt: Vec<i32> = (0..n).map(|_| rng.below(24) as i32).collect();
+        let n_new = 1 + rng.range_usize(0, 6);
+        let mut kv = backend.fresh_kv();
+        let out = generate(
+            &backend,
+            &mut kv,
+            &[],
+            &GenerateRequest::greedy(prompt.clone(), n_new),
+            &GenLimits::unbounded(),
+            |_, _| {},
+        );
+        if out.tokens.len() != n_new {
+            return false;
+        }
+        // oracle: argmax over raw decode logits, token by token
+        let mut seq = prompt;
+        let mut okv = backend.fresh_kv();
+        for &got in &out.tokens {
+            let (caps, _) = backend.decode(&mut okv, &seq, &[seq.len()]);
+            let want = argmax(&caps.last().unwrap().logits) as i32;
+            if got != want {
+                return false;
+            }
+            seq.push(want);
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_same_seed_and_params_reproduce_the_stream() {
+    // acceptance property (b): a (seed, sampling params, prompt) triple
+    // fully determines the token stream
+    use had::generate::{generate, GenLimits, GenerateRequest, SamplingParams};
+    let backend = gen_backend();
+    let gen = pair(usize_in(1, 16), usize_in(0, 1 << 20));
+    check(&cfg_cases(8), &gen, |&(n, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let prompt: Vec<i32> = (0..n).map(|_| rng.below(24) as i32).collect();
+        let req = GenerateRequest {
+            prompt,
+            max_new_tokens: 1 + rng.range_usize(0, 6),
+            stop_tokens: vec![rng.below(4) as i32],
+            sampling: SamplingParams {
+                temperature: 0.25 + rng.next_f32() * 1.5,
+                top_k: rng.range_usize(0, 4),
+                top_p: 0.5 + 0.5 * rng.next_f32(),
+                seed: seed as u64,
+            },
+        };
+        let run = || {
+            let mut kv = backend.fresh_kv();
+            generate(&backend, &mut kv, &[], &req, &GenLimits::unbounded(), |_, _| {})
+        };
+        let (a, b) = (run(), run());
+        a.tokens == b.tokens && a.reason == b.reason
+    });
+}
+
+#[test]
+fn prop_coordinator_stream_equals_direct_engine_loop() {
+    // acceptance property (c): a stream generated through the
+    // continuous-batching coordinator equals the direct single-stream
+    // engine loop token for token — including when several sessions'
+    // streams are live and interleaved tick by tick.
+    use had::coordinator::{Bucket, Server};
+    use had::generate::{generate, GenLimits, GenerateRequest, SamplingParams, StreamEvent};
+    use had::kvcache::KvCacheConfig;
+    let backend = gen_backend();
+    let kv_cfg = KvCacheConfig { page_tokens: 4, ..Default::default() };
+    let gen = usize_in(0, 1 << 20);
+    check(&cfg_cases(4), &gen, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let n_streams = 2 + rng.range_usize(0, 2);
+        let reqs: Vec<GenerateRequest> = (0..n_streams)
+            .map(|_| {
+                let n = 1 + rng.range_usize(0, 10);
+                GenerateRequest {
+                    prompt: (0..n).map(|_| rng.below(24) as i32).collect(),
+                    max_new_tokens: 1 + rng.range_usize(0, 5),
+                    stop_tokens: vec![rng.below(4) as i32],
+                    sampling: SamplingParams {
+                        temperature: if rng.chance(0.5) { 0.0 } else { 0.9 },
+                        top_k: 0,
+                        top_p: 1.0,
+                        seed: rng.next_u64(),
+                    },
+                }
+            })
+            .collect();
+        let server = Server::start_cpu_with_kv(
+            gen_backend(),
+            Router::new(vec![Bucket { config: "prop_gen".into(), n_ctx: 48, batch: 4 }]),
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams: 4,
+                ..Default::default()
+            },
+            kv_cfg,
+        )
+        .expect("server start");
+        // submit every stream before draining any: they interleave
+        let rxs: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(sid, req)| server.submit_generate(sid as u64, req.clone()).expect("admitted"))
+            .collect();
+        let limits = GenLimits { max_total_tokens: 48, kv_budget_bytes: kv_cfg.byte_budget };
+        for (sid, rx) in rxs.into_iter().enumerate() {
+            let mut tokens = Vec::new();
+            let mut reason = None;
+            for event in rx.iter() {
+                match event {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Done { reason: r, .. } => {
+                        reason = Some(r);
+                        break;
+                    }
+                }
+            }
+            let mut okv = backend.fresh_kv();
+            let want = generate(&backend, &mut okv, &[], &reqs[sid], &limits, |_, _| {});
+            if tokens != want.tokens || reason != Some(want.reason) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
 #[test]
 fn prop_pool_respects_byte_budget_and_accounting() {
     // After any admission sequence: pool bytes equal the sum of resident

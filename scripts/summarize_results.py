@@ -191,6 +191,41 @@ def serve():
         )
 
 
+def generate():
+    recs = rows("generate")
+    if not recs:
+        return
+    eng = [r for r in recs if r.get("kind") == "engine"]
+    if eng:
+        e = eng[-1]
+        print("\n### Generation: direct engine loop (measured)\n")
+        print(
+            f"prompt {int(e['prompt_len'])} + {int(e['new_tokens'])} greedy tokens: "
+            f"ttft {e['ttft_us'] / 1e3:.2f} ms, "
+            f"inter-token p50 {e['inter_p50_us'] / 1e3:.2f} ms / "
+            f"p99 {e['inter_p99_us'] / 1e3:.2f} ms, "
+            f"{e['tokens_per_s']:.1f} tok/s"
+        )
+    streams = [r for r in recs if r.get("kind") == "streams"]
+    by_n = {}
+    for r in streams:
+        by_n[int(r["streams"])] = r  # last write wins
+    if by_n:
+        print("\n### Generation: continuous batching vs concurrency (measured)\n")
+        print(
+            "| streams | ttft p50 (ms) | ttft p99 (ms) | inter-token p50 (ms) "
+            "| inter-token p99 (ms) | tok/s |"
+        )
+        print("|---|---|---|---|---|---|")
+        for n in sorted(by_n):
+            r = by_n[n]
+            print(
+                f"| {n} | {r['ttft_p50_us'] / 1e3:.2f} | {r['ttft_p99_us'] / 1e3:.2f} "
+                f"| {r['inter_p50_us'] / 1e3:.2f} | {r['inter_p99_us'] / 1e3:.2f} "
+                f"| {r['tokens_per_s']:.1f} |"
+            )
+
+
 if __name__ == "__main__":
     table1()
     table2()
@@ -201,6 +236,7 @@ if __name__ == "__main__":
     attention()
     kvcache()
     serve()
+    generate()
     t3 = rows("table3")
     if t3:
         r = t3[-1]
