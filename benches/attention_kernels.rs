@@ -15,8 +15,8 @@
 //! HAD_BENCH_QUICK=1 shrinks budgets for the CI smoke step.
 
 use had::binary::attention::{had_attention_scalar_with, had_attention_with, Scratch};
-use had::binary::{had_attention_pooled, standard_attention_ref};
-use had::binary::{HadAttnConfig, PackedKv, PackedMat};
+use had::binary::{had_attention_backend, had_attention_pooled, standard_attention_ref};
+use had::binary::{simd, HadAttnConfig, KernelBackend, PackedKv, PackedMat};
 use had::tensor::Mat;
 use had::util::bench::{Bencher, Stats, write_jsonl};
 use had::util::json::Json;
@@ -31,7 +31,13 @@ fn kernel_record(n_k: usize, n_q: usize, n_top: usize, variant: &str, s: &Stats,
         ("n_q", Json::num(n_q as f64)),
         ("n_top", Json::num(n_top as f64)),
         ("variant", Json::str(variant)),
+        ("backend", Json::str(KernelBackend::active().name())),
+        ("cpu_features", Json::str(simd::cpu_features())),
         ("mean_us", Json::num(mean_us)),
+        // best-observed time: the noise-robust statistic the summarizer's
+        // --check regression gate compares (means wobble under the CI
+        // smoke step's tiny quick-mode budgets; minima do not)
+        ("min_us", Json::num(s.min.as_nanos() as f64 / 1e3)),
         ("keys_per_s", Json::num((n_q * n_k) as f64 / (s.mean_ns() / 1e9))),
         ("speedup_vs_standard", Json::num(std.mean_ns() / s.mean_ns())),
     ])
@@ -143,6 +149,62 @@ fn main() {
             threaded.mean_ns() / 1e3,
             scalar.mean_ns() / 1e3,
         );
+    }
+
+    // -- popcount backend sweep: every backend the host can run, across
+    //    context lengths AND head dims (d=64 → W=1 tiles where vector
+    //    setup overhead bites hardest, d=256 → the widest monomorphized
+    //    W=4 tiles, d=320 → the dyn wide-head path), bit-identity
+    //    asserted against the scalar oracle before timing. Each JSONL
+    //    record carries the backend name and the detected CPU features.
+    let features = simd::cpu_features();
+    let backends = KernelBackend::available();
+    println!(
+        "\n== popcount backend sweep ({features}; active: {}) ==",
+        KernelBackend::active().name()
+    );
+    for (bd, n_k) in [(64usize, 1024usize), (64, 4096), (64, 16384), (256, 4096), (320, 4096)] {
+        let n_top = (30 * n_k / 256).max(1);
+        let q = Mat::random(n_q, bd, &mut rng, 1.0);
+        let k = Mat::random(n_k, bd, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        let cfg = HadAttnConfig { n_top, temp: 1.0 };
+        let mut scratch = Scratch::default();
+        let want = had_attention_scalar_with(&q, &kv, &cfg, &mut scratch);
+        let mut scalar_mean_ns = 0.0f64;
+        for &be in &backends {
+            assert_eq!(
+                want,
+                had_attention_backend(&q, &kv, &cfg, be),
+                "backend {} != scalar oracle at d={bd} n_k={n_k}",
+                be.name()
+            );
+            let s = b.run(&format!("attn/be={:<6} d={bd:<3} n_k={n_k}", be.name()), || {
+                had_attention_backend(&q, &kv, &cfg, be)
+            });
+            if be == KernelBackend::Scalar {
+                scalar_mean_ns = s.mean_ns();
+            }
+            let speedup =
+                if scalar_mean_ns > 0.0 { scalar_mean_ns / s.mean_ns() } else { f64::NAN };
+            s.print();
+            println!("  -> {} vs scalar backend: {:.2}x", be.name(), speedup);
+            records.push(Json::obj(vec![
+                ("kind", Json::str("backend")),
+                ("n_k", Json::num(n_k as f64)),
+                ("n_q", Json::num(n_q as f64)),
+                ("d", Json::num(bd as f64)),
+                ("n_top", Json::num(n_top as f64)),
+                ("backend", Json::str(be.name())),
+                ("active", Json::Bool(be == KernelBackend::active())),
+                ("cpu_features", Json::str(features.clone())),
+                ("mean_us", Json::num(s.mean_ns() / 1e3)),
+                ("min_us", Json::num(s.min.as_nanos() as f64 / 1e3)),
+                ("keys_per_s", Json::num((n_q * n_k) as f64 / (s.mean_ns() / 1e9))),
+                ("speedup_vs_scalar", Json::num(speedup)),
+            ]));
+        }
     }
 
     println!("\n== top-N selection strategies (n=4096 integer scores) ==");

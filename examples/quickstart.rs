@@ -8,7 +8,7 @@
 //! Run: cargo run --release --example quickstart
 
 use anyhow::Result;
-use had::binary::{had_attention, had_attention_ref, HadAttnConfig, PackedKv};
+use had::binary::{had_attention, had_attention_ref, simd, HadAttnConfig, KernelBackend, PackedKv};
 use had::runtime::{default_artifact_dir, Runtime};
 use had::tensor::Mat;
 use had::util::bench::Bencher;
@@ -59,6 +59,24 @@ fn main() -> Result<()> {
     println!(
         "binary-score speedup on CPU: {:.1}x\n",
         s_float.mean_ns() / s_binary.mean_ns()
+    );
+
+    // --- kernel backend dispatch --------------------------------------------
+    // The blocked engine's popcount inner loop is a runtime-selected
+    // backend: scalar (`count_ones`, the oracle), portable SWAR, AVX2
+    // (nibble-LUT popcount), AVX-512 VPOPCNTQ, or NEON CNT — whichever
+    // the host's CPU offers. Every backend is property-tested
+    // bit-identical to the scalar oracle, so the choice only moves
+    // throughput, never a single output bit. Override the automatic
+    // pick per process with the HAD_KERNEL env var, e.g.:
+    //   HAD_KERNEL=scalar cargo run --release --example quickstart
+    //   HAD_KERNEL=avx2   cargo bench --bench attention_kernels
+    // (unknown or host-unavailable names fail loudly at first dispatch)
+    println!(
+        "kernel backend: {} | host {} | available: {}\n  (override with HAD_KERNEL=scalar|swar|avx2|avx512|neon|auto)\n",
+        KernelBackend::active().name(),
+        simd::cpu_features(),
+        simd::available_names(),
     );
 
     // --- 3: the AOT Pallas kernel through PJRT ------------------------------

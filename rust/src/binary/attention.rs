@@ -4,7 +4,9 @@
 //!
 //! Since the kernel rewrite, `had_attention{,_paged}` run on the tiled
 //! `binary::kernel` engine (4-query register blocking, page-major key
-//! streaming, fused streaming top-N — see that module's docs). The
+//! streaming, fused streaming top-N — see that module's docs), whose
+//! popcount inner step dispatches through the runtime-selected
+//! `binary::simd::KernelBackend` (`HAD_KERNEL` override). The
 //! original one-pair-at-a-time implementations are kept here as
 //! `had_attention_scalar{,_paged_scalar}`: they are the bit-exactness
 //! oracle the kernel is property-tested against, and the baseline the

@@ -5,6 +5,12 @@
 //! where ham counts differing sign bits. On packed u64 words this is
 //! XOR + POPCNT — the hot loop the paper's CAM hardware replaces with an
 //! analog match, and our TPU kernel replaces with a ±1 MXU matmul.
+//!
+//! Everything in this module is deliberately the *scalar* realization
+//! (`u64::count_ones`): it is the bit-exactness oracle the
+//! runtime-dispatched SIMD backends in `binary::simd` are verified
+//! against, and [`hamming_w`] is the inner chain the simd module's
+//! scalar backend runs verbatim.
 
 use super::bitpack::PackedMat;
 

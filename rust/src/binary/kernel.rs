@@ -53,13 +53,23 @@
 //! axis on top: sessions within a drained batch are sharded across its
 //! `kernel_workers` budget (`coordinator::server`).
 //!
+//! **Backend dispatch.** The popcount inner step is a runtime-selected
+//! [`KernelBackend`] (`binary::simd`): scalar oracle, portable SWAR, or
+//! AVX2 / AVX-512 VPOPCNTQ / NEON vectorized tile scorers — all behind
+//! the same 4-query tile shapes, selected once per process
+//! (`HAD_KERNEL` env override) and threaded through every engine entry
+//! here, so the contiguous, paged, pooled, serve-decode, and generation
+//! paths all dispatch through it. Explicit-backend entry points
+//! ([`had_attention_backend`] etc.) serve the bench sweep and the
+//! backend-matrix property tests.
+//!
 //! Everything downstream of selection — sparse softmax (Eq. 7) and
 //! sparse AV accumulation (Eq. 8) — deliberately reproduces the scalar
 //! oracle's operation order so outputs stay bit-identical end to end.
 
 use crate::binary::attention::{HadAttnConfig, PackedKv, Scratch, EMPTY_KV_MSG};
 use crate::binary::bitpack::PackedMat;
-use crate::binary::hamming::hamming_w;
+use crate::binary::simd::{self, KernelBackend};
 use crate::binary::topn::sort_entries;
 use crate::kvcache::SessionKv;
 use crate::tensor::Mat;
@@ -274,30 +284,15 @@ impl KeyBlocks for PagedSrc<'_> {
     }
 }
 
-/// Score one key block against a resident query block, feeding each
-/// score straight into its query's streaming top-N (the fusion point:
-/// selection happens here, not in a second pass).
-fn score_block_w<const W: usize>(
-    d: i32,
-    qw: &[[u64; W]],
-    n_rows: usize,
-    keys: &[u64],
-    base: usize,
-    tops: &mut [StreamTopN],
-) {
-    debug_assert_eq!(keys.len(), n_rows * W);
-    debug_assert_eq!(qw.len(), tops.len());
-    for j in 0..n_rows {
-        let kj = &keys[j * W..j * W + W];
-        for (qi, top) in qw.iter().zip(tops.iter_mut()) {
-            top.push(d - 2 * hamming_w::<W>(qi, kj) as i32, base + j);
-        }
-    }
-}
-
 /// Monomorphized query-block scorer: hoist the block's packed query
-/// words into registers, then stream every key block once.
+/// words into registers — row-major for the scalar chains, transposed
+/// once per tile for the lane-parallel backends — then stream every
+/// key block once through the selected backend's tile scorer (the
+/// fusion point: each score goes straight into its query's streaming
+/// top-N, not a second pass).
+#[allow(clippy::too_many_arguments)]
 fn stream_scores_w<const W: usize>(
+    be: KernelBackend,
     d: i32,
     qp: &PackedMat,
     q0: usize,
@@ -310,51 +305,59 @@ fn stream_scores_w<const W: usize>(
     for (t, qwt) in qw.iter_mut().take(qb).enumerate() {
         qwt.copy_from_slice(&qp.row(q0 + t)[..W]);
     }
+    let qt = simd::transpose::<W>(&qw[..qb]);
     src.for_each_block(&mut |base, n_rows, keys| {
-        score_block_w::<W>(d, &qw[..qb], n_rows, keys, base, &mut *tops);
+        simd::score_block_w::<W>(be, d, &qw[..qb], &qt, n_rows, keys, base, &mut *tops);
     });
 }
 
 /// Fallback for wide heads (d > 256): dynamic word count, same blocking.
+/// The query block is transposed once per tile (`qt[w][t]` = word w of
+/// query t) into the caller's scratch buffer — no allocation in the
+/// steady state — so lane-parallel backends run without per-block setup.
+#[allow(clippy::too_many_arguments)]
 fn stream_scores_dyn(
+    be: KernelBackend,
     d: i32,
     qp: &PackedMat,
     q0: usize,
     qb: usize,
     src: &dyn KeyBlocks,
     tops: &mut [StreamTopN],
+    qt: &mut Vec<[u64; QUERY_BLOCK]>,
 ) {
     let w = qp.words_per_row;
-    src.for_each_block(&mut |base, n_rows, keys| {
-        for j in 0..n_rows {
-            let kj = &keys[j * w..(j + 1) * w];
-            for t in 0..qb {
-                let qi = qp.row(q0 + t);
-                let mut ham = 0u32;
-                for (x, y) in qi.iter().zip(kj) {
-                    ham += (x ^ y).count_ones();
-                }
-                tops[t].push(d - 2 * ham as i32, base + j);
-            }
+    qt.clear();
+    qt.resize(w, [0u64; QUERY_BLOCK]);
+    for t in 0..qb {
+        for (qs, &x) in qt.iter_mut().zip(qp.row(q0 + t)) {
+            qs[t] = x;
         }
+    }
+    let qt: &[[u64; QUERY_BLOCK]] = qt;
+    src.for_each_block(&mut |base, n_rows, keys| {
+        simd::score_block_dyn(be, d, qt, qb, n_rows, keys, base, &mut *tops);
     });
 }
 
+#[allow(clippy::too_many_arguments)]
 fn stream_scores(
+    be: KernelBackend,
     d_bits: usize,
     qp: &PackedMat,
     q0: usize,
     qb: usize,
     src: &dyn KeyBlocks,
     tops: &mut [StreamTopN],
+    qt_scratch: &mut Vec<[u64; QUERY_BLOCK]>,
 ) {
     let d = d_bits as i32;
     match qp.words_per_row {
-        1 => stream_scores_w::<1>(d, qp, q0, qb, src, tops),
-        2 => stream_scores_w::<2>(d, qp, q0, qb, src, tops),
-        3 => stream_scores_w::<3>(d, qp, q0, qb, src, tops),
-        4 => stream_scores_w::<4>(d, qp, q0, qb, src, tops),
-        _ => stream_scores_dyn(d, qp, q0, qb, src, tops),
+        1 => stream_scores_w::<1>(be, d, qp, q0, qb, src, tops),
+        2 => stream_scores_w::<2>(be, d, qp, q0, qb, src, tops),
+        3 => stream_scores_w::<3>(be, d, qp, q0, qb, src, tops),
+        4 => stream_scores_w::<4>(be, d, qp, q0, qb, src, tops),
+        _ => stream_scores_dyn(be, d, qp, q0, qb, src, tops, qt_scratch),
     }
 }
 
@@ -388,6 +391,7 @@ fn finalize_row(
 /// pooled == serial bit-identity invariant.
 #[allow(clippy::too_many_arguments)]
 fn score_rows(
+    be: KernelBackend,
     qp: &PackedMat,
     src: &dyn KeyBlocks,
     lo: usize,
@@ -400,13 +404,16 @@ fn score_rows(
     out_rows: &mut [f32],
 ) {
     let d_v = src.d_v();
+    // dyn-path transpose scratch, reused across this shard's tiles
+    // (empty and untouched for d <= 256)
+    let mut qt_scratch: Vec<[u64; QUERY_BLOCK]> = Vec::new();
     let mut q0 = lo;
     while q0 < hi {
         let qb = QUERY_BLOCK.min(hi - q0);
         for top in tops.iter_mut().take(qb) {
             top.reset(n_top, d);
         }
-        stream_scores(d, qp, q0, qb, src, &mut tops[..qb]);
+        stream_scores(be, d, qp, q0, qb, src, &mut tops[..qb], &mut qt_scratch);
         for t in 0..qb {
             let kept = tops[t].finish();
             let r0 = (q0 - lo + t) * d_v;
@@ -417,12 +424,25 @@ fn score_rows(
 }
 
 /// Serial blocked engine: the body behind `had_attention_with` and
-/// `had_attention_paged_with`.
+/// `had_attention_paged_with`, dispatching through the process-wide
+/// active backend.
 pub(crate) fn run_serial(
     q: &Mat,
     src: &dyn KeyBlocks,
     cfg: &HadAttnConfig,
     scratch: &mut Scratch,
+) -> Mat {
+    run_serial_backend(q, src, cfg, scratch, KernelBackend::active())
+}
+
+/// Serial blocked engine with an explicit backend (bench sweep and the
+/// backend-matrix property tests).
+pub(crate) fn run_serial_backend(
+    q: &Mat,
+    src: &dyn KeyBlocks,
+    cfg: &HadAttnConfig,
+    scratch: &mut Scratch,
+    be: KernelBackend,
 ) -> Mat {
     let d = q.cols;
     assert_eq!(d, src.d(), "query/key dim mismatch");
@@ -440,7 +460,7 @@ pub(crate) fn run_serial(
     }
 
     let mut out = Mat::zeros(q.rows, d_v);
-    score_rows(qp, src, 0, q.rows, d, n_top, scale, tops, probs, &mut out.data);
+    score_rows(be, qp, src, 0, q.rows, d, n_top, scale, tops, probs, &mut out.data);
     out
 }
 
@@ -453,6 +473,16 @@ pub(crate) fn run_pooled(
     src: &dyn KeyBlocks,
     cfg: &HadAttnConfig,
     pool: &ThreadPool,
+) -> Mat {
+    run_pooled_backend(q, src, cfg, pool, KernelBackend::active())
+}
+
+pub(crate) fn run_pooled_backend(
+    q: &Mat,
+    src: &dyn KeyBlocks,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+    be: KernelBackend,
 ) -> Mat {
     let d = q.cols;
     assert_eq!(d, src.d(), "query/key dim mismatch");
@@ -469,7 +499,7 @@ pub(crate) fn run_pooled(
         tops.resize_with(QUERY_BLOCK, StreamTopN::default);
         let mut probs = vec![0.0f32; n_top];
         let mut rows = vec![0.0f32; (hi - lo) * d_v];
-        score_rows(&qp, src, lo, hi, d, n_top, scale, &mut tops, &mut probs, &mut rows);
+        score_rows(be, &qp, src, lo, hi, d, n_top, scale, &mut tops, &mut probs, &mut rows);
         rows
     });
 
@@ -500,6 +530,52 @@ pub fn had_attention_paged_pooled(
     pool: &ThreadPool,
 ) -> Mat {
     run_pooled(q, &PagedSrc::new(kv), cfg, pool)
+}
+
+/// HAD attention over a contiguous `PackedKv` on an explicit popcount
+/// backend; bit-identical to `had_attention` (and the scalar oracle)
+/// for every available backend.
+pub fn had_attention_backend(
+    q: &Mat,
+    kv: &PackedKv,
+    cfg: &HadAttnConfig,
+    be: KernelBackend,
+) -> Mat {
+    let mut scratch = Scratch::default();
+    run_serial_backend(q, &ContiguousSrc::new(kv), cfg, &mut scratch, be)
+}
+
+/// Paged HAD attention on an explicit popcount backend.
+pub fn had_attention_paged_backend(
+    q: &Mat,
+    kv: &SessionKv,
+    cfg: &HadAttnConfig,
+    be: KernelBackend,
+) -> Mat {
+    let mut scratch = Scratch::default();
+    run_serial_backend(q, &PagedSrc::new(kv), cfg, &mut scratch, be)
+}
+
+/// Threaded contiguous HAD attention on an explicit popcount backend.
+pub fn had_attention_pooled_backend(
+    q: &Mat,
+    kv: &PackedKv,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+    be: KernelBackend,
+) -> Mat {
+    run_pooled_backend(q, &ContiguousSrc::new(kv), cfg, pool, be)
+}
+
+/// Threaded paged HAD attention on an explicit popcount backend.
+pub fn had_attention_paged_pooled_backend(
+    q: &Mat,
+    kv: &SessionKv,
+    cfg: &HadAttnConfig,
+    pool: &ThreadPool,
+    be: KernelBackend,
+) -> Mat {
+    run_pooled_backend(q, &PagedSrc::new(kv), cfg, pool, be)
 }
 
 #[cfg(test)]
@@ -639,6 +715,70 @@ mod tests {
                 want,
                 had_attention_paged_pooled(&q, &paged, &cfg, &pool),
                 "paged w={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn backend_matrix_matches_scalar_contiguous_and_paged() {
+        // every host-available backend, through both monomorphized tile
+        // widths (W = 1..4, incl. the d = 256 boundary) and the dyn
+        // wide-head path (d = 320), contiguous and paged
+        let mut rng = Rng::new(12);
+        for (n_q, n_k, d, n_top) in
+            [(5usize, 33usize, 64usize, 9usize), (4, 64, 256, 7), (3, 50, 320, 5), (1, 7, 16, 3)]
+        {
+            let q = rand_mat(&mut rng, n_q, d);
+            let k = rand_mat(&mut rng, n_k, d);
+            let v = rand_mat(&mut rng, n_k, 8);
+            let kv = PackedKv::new(&k, &v);
+            let mut paged = SessionKv::new(d, 8, 7);
+            paged.append(&k, &v);
+            let cfg = HadAttnConfig { n_top, temp: 0.9 };
+            let want = had_attention_scalar(&q, &kv, &cfg);
+            let want_paged = had_attention_paged_scalar(&q, &paged, &cfg);
+            for be in KernelBackend::available() {
+                assert_eq!(
+                    want,
+                    had_attention_backend(&q, &kv, &cfg, be),
+                    "backend={} d={d}",
+                    be.name()
+                );
+                assert_eq!(
+                    want_paged,
+                    had_attention_paged_backend(&q, &paged, &cfg, be),
+                    "paged backend={} d={d}",
+                    be.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backend_pooled_matches_serial_scalar() {
+        let mut rng = Rng::new(13);
+        let (n_q, n_k, d, d_v) = (11usize, 60usize, 80usize, 8usize);
+        let q = rand_mat(&mut rng, n_q, d);
+        let k = rand_mat(&mut rng, n_k, d);
+        let v = rand_mat(&mut rng, n_k, d_v);
+        let kv = PackedKv::new(&k, &v);
+        let mut paged = SessionKv::new(d, d_v, 13);
+        paged.append(&k, &v);
+        let cfg = HadAttnConfig { n_top: 10, temp: 1.0 };
+        let want = had_attention_scalar(&q, &kv, &cfg);
+        let pool = ThreadPool::new(3);
+        for be in KernelBackend::available() {
+            assert_eq!(
+                want,
+                had_attention_pooled_backend(&q, &kv, &cfg, &pool, be),
+                "pooled backend={}",
+                be.name()
+            );
+            assert_eq!(
+                want,
+                had_attention_paged_pooled_backend(&q, &paged, &cfg, &pool, be),
+                "paged pooled backend={}",
+                be.name()
             );
         }
     }

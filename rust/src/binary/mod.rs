@@ -2,8 +2,10 @@
 //!
 //! `bitpack` packs sign bits (32x smaller K at rest), `hamming` computes
 //! the XNOR-popcount score matrix, `topn` does deterministic top-N
-//! selection over the tiny integer score domain, `kernel` is the tiled
-//! multi-threaded scoring engine with fused streaming top-N, and
+//! selection over the tiny integer score domain, `simd` owns the
+//! runtime-dispatched popcount backends (scalar oracle / SWAR / AVX2 /
+//! AVX-512 VPOPCNTQ / NEON, `HAD_KERNEL` override), `kernel` is the
+//! tiled multi-threaded scoring engine with fused streaming top-N, and
 //! `attention` exposes the whole pipeline (Eqs. 4-8) — kernel-backed
 //! fast paths plus the retained scalar oracles.
 
@@ -11,6 +13,7 @@ pub mod attention;
 pub mod bitpack;
 pub mod hamming;
 pub mod kernel;
+pub mod simd;
 pub mod topn;
 
 pub use attention::{
@@ -18,4 +21,9 @@ pub use attention::{
     had_attention_scalar, standard_attention_ref, HadAttnConfig, PackedKv,
 };
 pub use bitpack::PackedMat;
-pub use kernel::{had_attention_paged_pooled, had_attention_pooled, StreamTopN, QUERY_BLOCK};
+pub use kernel::{
+    had_attention_backend, had_attention_paged_backend, had_attention_paged_pooled,
+    had_attention_paged_pooled_backend, had_attention_pooled, had_attention_pooled_backend,
+    StreamTopN, QUERY_BLOCK,
+};
+pub use simd::KernelBackend;

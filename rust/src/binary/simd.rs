@@ -1,0 +1,727 @@
+//! Runtime-dispatched popcount backends for the Hamming inner loop.
+//!
+//! The blocked kernel's entire arithmetic is `popcount(q ^ k)` over u64
+//! words; everything else (tiling, page-major traversal, streaming
+//! top-N) is backend-independent. This module owns that inner seam as a
+//! [`KernelBackend`]: the block scorer every engine path calls is
+//! dispatched once per key block to one of
+//!
+//! - **scalar** — the original `u64::count_ones` loop (`hamming_w`),
+//!   retained as the bit-exactness oracle every other backend is
+//!   property-tested against,
+//! - **swar**   — a portable branch-free SWAR popcount (the classic
+//!   bit-sliced reduction + multiply-gather), identical codegen on every
+//!   architecture regardless of `-C target-cpu`,
+//! - **avx2**   — 4 query lanes per 256-bit vector (one lane per query
+//!   of the 4-query tile): broadcast each key word, XOR against the
+//!   transposed query block, popcount via the `vpshufb` nibble-LUT +
+//!   `vpsadbw` reduction,
+//! - **avx512** — the same 4-lane shape with the LUT replaced by native
+//!   `VPOPCNTQ` (`_mm256_popcnt_epi64`, AVX-512VL + VPOPCNTDQ),
+//! - **neon**   — two 128-bit vectors cover the tile (2 query lanes
+//!   each); `CNT` counts bits per byte and a pairwise-widening chain
+//!   (`vpaddlq_u8/u16/u32`) folds bytes into per-lane u64 sums.
+//!
+//! All backends compute *exact* Hamming distances, so scores — and
+//! therefore selection, softmax, and outputs — are bit-identical across
+//! backends by construction; `rust/tests/properties.rs` asserts it.
+//!
+//! Selection is runtime CPU-feature detection ([`KernelBackend::auto`])
+//! with an env override: `HAD_KERNEL=scalar|swar|avx2|avx512|neon|auto`
+//! (read once, cached). Every attention path — `had_attention{,_paged}`,
+//! the pooled variants, `serve::HadBackend::decode`, and the generation
+//! tick loop — dispatches through [`KernelBackend::active`], and the
+//! chosen backend + detected features surface in coordinator `Metrics`
+//! snapshots and the bench JSONL records.
+
+use crate::binary::kernel::{StreamTopN, QUERY_BLOCK};
+use std::sync::OnceLock;
+
+/// One implementation of the Hamming block scorer. Variants exist on
+/// every architecture (so names parse uniformly); availability is a
+/// runtime property of the host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// `u64::count_ones` loop — the oracle.
+    Scalar,
+    /// Portable branch-free SWAR popcount.
+    Swar,
+    /// x86-64 AVX2: nibble-LUT popcount, 4 query lanes per vector.
+    Avx2,
+    /// x86-64 AVX-512VL + VPOPCNTDQ: native 64-bit lane popcount.
+    Avx512,
+    /// aarch64 NEON: per-byte CNT + pairwise widening.
+    Neon,
+}
+
+impl KernelBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Swar => "swar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Avx512 => "avx512",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a backend name (`auto` is not a backend — see [`select`]).
+    pub fn parse(name: &str) -> Option<KernelBackend> {
+        match name {
+            "scalar" => Some(KernelBackend::Scalar),
+            "swar" => Some(KernelBackend::Swar),
+            "avx2" => Some(KernelBackend::Avx2),
+            "avx512" => Some(KernelBackend::Avx512),
+            "neon" => Some(KernelBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this backend run on the current host (arch + CPU features)?
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelBackend::Scalar | KernelBackend::Swar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => is_x86_feature_detected!("avx2"),
+            // the avx512 scorers' target_feature contract is
+            // avx2+avx512vl+avx512vpopcntdq — detect all three (a
+            // masked-feature VM could report VL without AVX2)
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx512 => {
+                is_x86_feature_detected!("avx2")
+                    && is_x86_feature_detected!("avx512vl")
+                    && is_x86_feature_detected!("avx512vpopcntdq")
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every backend the host can run, oracle first (stable order: the
+    /// bench sweep and property matrix iterate this).
+    pub fn available() -> Vec<KernelBackend> {
+        [
+            KernelBackend::Scalar,
+            KernelBackend::Swar,
+            KernelBackend::Avx2,
+            KernelBackend::Avx512,
+            KernelBackend::Neon,
+        ]
+        .into_iter()
+        .filter(|b| b.is_available())
+        .collect()
+    }
+
+    /// Best available backend by static preference: widest exact
+    /// popcount first (avx512 > avx2 > neon > swar). `HAD_KERNEL`
+    /// overrides when a measurement disagrees with the static order.
+    pub fn auto() -> KernelBackend {
+        [KernelBackend::Avx512, KernelBackend::Avx2, KernelBackend::Neon, KernelBackend::Swar]
+            .into_iter()
+            .find(|b| b.is_available())
+            .unwrap_or(KernelBackend::Scalar)
+    }
+
+    /// The backend every default attention path dispatches through:
+    /// `HAD_KERNEL` if set (panicking loudly on unknown or unavailable
+    /// names — a misconfigured fleet should fail at startup, not
+    /// silently run scalar), else [`KernelBackend::auto`]. Read once.
+    pub fn active() -> KernelBackend {
+        static ACTIVE: OnceLock<KernelBackend> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let spec = std::env::var("HAD_KERNEL").unwrap_or_else(|_| "auto".to_string());
+            match select(&spec) {
+                Ok(be) => be,
+                Err(e) => panic!("HAD_KERNEL: {e}"),
+            }
+        })
+    }
+}
+
+/// Resolve a `HAD_KERNEL` value: `auto`/empty picks the best available
+/// backend; a concrete name must be known *and* available on this host.
+pub fn select(spec: &str) -> Result<KernelBackend, String> {
+    let spec = spec.trim().to_ascii_lowercase();
+    if spec.is_empty() || spec == "auto" {
+        return Ok(KernelBackend::auto());
+    }
+    let be = KernelBackend::parse(&spec).ok_or_else(|| {
+        format!("unknown kernel backend {spec:?} (expected scalar|swar|avx2|avx512|neon|auto)")
+    })?;
+    if !be.is_available() {
+        return Err(format!(
+            "backend {:?} is not available on this host (available: {})",
+            be.name(),
+            available_names()
+        ));
+    }
+    Ok(be)
+}
+
+/// Space-joined names of every host-available backend.
+pub fn available_names() -> String {
+    KernelBackend::available()
+        .iter()
+        .map(|b| b.name())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Detected CPU features relevant to the kernel, e.g.
+/// `"x86_64: popcnt avx2"` — recorded in bench JSONL and `Metrics`.
+pub fn cpu_features() -> String {
+    #[allow(unused_mut)]
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("popcnt") {
+            feats.push("popcnt");
+        }
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+        if is_x86_feature_detected!("avx512vl") {
+            feats.push("avx512vl");
+        }
+        if is_x86_feature_detected!("avx512vpopcntdq") {
+            feats.push("avx512vpopcntdq");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    let list = if feats.is_empty() { "baseline".to_string() } else { feats.join(" ") };
+    format!("{}: {}", std::env::consts::ARCH, list)
+}
+
+/// Portable branch-free 64-bit popcount (SWAR reduction + multiply
+/// gather). Exact for every input; no per-field borrow/carry, so the
+/// debug-build arithmetic never overflows.
+#[inline(always)]
+pub fn popcount_swar(x: u64) -> u32 {
+    let x = x - ((x >> 1) & 0x5555_5555_5555_5555);
+    let x = (x & 0x3333_3333_3333_3333) + ((x >> 2) & 0x3333_3333_3333_3333);
+    let x = (x + (x >> 4)) & 0x0f0f_0f0f_0f0f_0f0f;
+    (x.wrapping_mul(0x0101_0101_0101_0101) >> 56) as u32
+}
+
+/// Transpose a resident query block for lane-parallel backends:
+/// `out[w][t]` = word `w` of query `t`. Lanes past the block's real
+/// query count stay 0 — their (garbage) scores are never pushed.
+/// Computed once per query tile (kernel::stream_scores_w), NOT per key
+/// block, so paged traversal pays no per-page setup.
+#[inline(always)]
+pub(crate) fn transpose<const W: usize>(qw: &[[u64; W]]) -> [[u64; QUERY_BLOCK]; W] {
+    let mut qt = [[0u64; QUERY_BLOCK]; W];
+    for (t, q) in qw.iter().enumerate() {
+        for (w, &x) in q.iter().enumerate() {
+            qt[w][t] = x;
+        }
+    }
+    qt
+}
+
+// ---------------------------------------------------------------------------
+// Block scorers: one key block against a resident <=4-query tile, each
+// score fed straight into its query's streaming top-N. The monomorphized
+// `_w` seam serves d <= 256 (W in 1..=4, fully unrolled); `_dyn` serves
+// wide heads with runtime word counts and pre-transposed queries.
+// ---------------------------------------------------------------------------
+
+/// Monomorphized dispatch: `keys` holds `n_rows * W` words, `qw`/`tops`
+/// are the tile's resident queries and their selection state, `qt` the
+/// tile's pre-transposed words (built once per tile by the caller, so
+/// lane-parallel backends do no per-key-block setup).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_block_w<const W: usize>(
+    be: KernelBackend,
+    d: i32,
+    qw: &[[u64; W]],
+    qt: &[[u64; QUERY_BLOCK]; W],
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    debug_assert!(keys.len() >= n_rows * W);
+    debug_assert_eq!(qw.len(), tops.len());
+    debug_assert!(qw.len() <= QUERY_BLOCK);
+    match be {
+        KernelBackend::Scalar => score_block_scalar_w::<W>(d, qw, n_rows, keys, base, tops),
+        KernelBackend::Swar => score_block_swar_w::<W>(d, qw, n_rows, keys, base, tops),
+        // SAFETY (all arms): `active()`/`available()` admit a SIMD
+        // backend only after runtime feature detection on this host.
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe {
+            x86::score_block_avx2_w::<W>(d, qt, qw.len(), n_rows, keys, base, tops)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => unsafe {
+            x86::score_block_avx512_w::<W>(d, qt, qw.len(), n_rows, keys, base, tops)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe {
+            arm::score_block_neon_w::<W>(d, qt, qw.len(), n_rows, keys, base, tops)
+        },
+        other => unreachable!(
+            "backend {} is not compiled for {}",
+            other.name(),
+            std::env::consts::ARCH
+        ),
+    }
+}
+
+/// Dynamic-width dispatch (wide heads, d > 256): `qt` is the transposed
+/// query block (`qt[w][t]` = word `w` of query `t`, one entry per word),
+/// `qb` the real query count of the tile.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_block_dyn(
+    be: KernelBackend,
+    d: i32,
+    qt: &[[u64; QUERY_BLOCK]],
+    qb: usize,
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    debug_assert!(keys.len() >= n_rows * qt.len());
+    debug_assert!(qb <= QUERY_BLOCK && qb <= tops.len());
+    match be {
+        KernelBackend::Scalar => score_block_scalar_dyn(d, qt, qb, n_rows, keys, base, tops),
+        KernelBackend::Swar => score_block_swar_dyn(d, qt, qb, n_rows, keys, base, tops),
+        // SAFETY (all arms): backend admitted only after feature
+        // detection — see `score_block_w`.
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe {
+            x86::score_block_avx2_dyn(d, qt, qb, n_rows, keys, base, tops)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => unsafe {
+            x86::score_block_avx512_dyn(d, qt, qb, n_rows, keys, base, tops)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe {
+            arm::score_block_neon_dyn(d, qt, qb, n_rows, keys, base, tops)
+        },
+        other => unreachable!(
+            "backend {} is not compiled for {}",
+            other.name(),
+            std::env::consts::ARCH
+        ),
+    }
+}
+
+/// The original inner loop (moved here from `kernel::score_block_w`):
+/// every key row loaded once, scored against all resident queries via
+/// the fully-unrolled `hamming_w` XOR/POPCNT chain.
+fn score_block_scalar_w<const W: usize>(
+    d: i32,
+    qw: &[[u64; W]],
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    use crate::binary::hamming::hamming_w;
+    for j in 0..n_rows {
+        let kj = &keys[j * W..j * W + W];
+        for (qi, top) in qw.iter().zip(tops.iter_mut()) {
+            top.push(d - 2 * hamming_w::<W>(qi, kj) as i32, base + j);
+        }
+    }
+}
+
+/// Same tile walk with the portable SWAR popcount in the chain.
+fn score_block_swar_w<const W: usize>(
+    d: i32,
+    qw: &[[u64; W]],
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    for j in 0..n_rows {
+        let kj = &keys[j * W..j * W + W];
+        for (qi, top) in qw.iter().zip(tops.iter_mut()) {
+            let mut ham = 0u32;
+            for t in 0..W {
+                ham += popcount_swar(qi[t] ^ kj[t]);
+            }
+            top.push(d - 2 * ham as i32, base + j);
+        }
+    }
+}
+
+fn score_block_scalar_dyn(
+    d: i32,
+    qt: &[[u64; QUERY_BLOCK]],
+    qb: usize,
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    let w = qt.len();
+    for j in 0..n_rows {
+        let kj = &keys[j * w..(j + 1) * w];
+        for (t, top) in tops.iter_mut().enumerate().take(qb) {
+            let mut ham = 0u32;
+            for (x, qs) in kj.iter().zip(qt) {
+                ham += (x ^ qs[t]).count_ones();
+            }
+            top.push(d - 2 * ham as i32, base + j);
+        }
+    }
+}
+
+fn score_block_swar_dyn(
+    d: i32,
+    qt: &[[u64; QUERY_BLOCK]],
+    qb: usize,
+    n_rows: usize,
+    keys: &[u64],
+    base: usize,
+    tops: &mut [StreamTopN],
+) {
+    let w = qt.len();
+    for j in 0..n_rows {
+        let kj = &keys[j * w..(j + 1) * w];
+        for (t, top) in tops.iter_mut().enumerate().take(qb) {
+            let mut ham = 0u32;
+            for (x, qs) in kj.iter().zip(qt) {
+                ham += popcount_swar(x ^ qs[t]);
+            }
+            top.push(d - 2 * ham as i32, base + j);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{StreamTopN, QUERY_BLOCK};
+    use core::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount without VPOPCNTQ: nibble lookup via
+    /// `vpshufb`, then `vpsadbw` folds the 8 byte-counts of each lane
+    /// into its low 16 bits.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64_lut(x: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // low 128
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // high 128
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(x, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// Push one key row's 4 lane-Hamming sums into the tile's top-Ns.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn push_lanes(d: i32, acc: __m256i, qb: usize, idx: usize, tops: &mut [StreamTopN]) {
+        let mut lanes = [0u64; QUERY_BLOCK];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        for (t, top) in tops.iter_mut().enumerate().take(qb) {
+            top.push(d - 2 * (lanes[t] as i32), idx);
+        }
+    }
+
+    /// One tile-scorer pair (monomorphized + dyn) per popcount op: the
+    /// AVX2 and AVX-512 backends share every line of the tile walk —
+    /// only the per-lane popcount differs — so both bodies expand from
+    /// this macro and cannot drift apart.
+    macro_rules! avx_tile_scorers {
+        ($w_name:ident, $dyn_name:ident, $feat:literal, $popcnt:path) => {
+            /// Tile scorer: one lane per query of the 4-query tile;
+            /// each key word is broadcast once and XORed against the
+            /// pre-transposed query block held in registers.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $w_name<const W: usize>(
+                d: i32,
+                qt: &[[u64; QUERY_BLOCK]; W],
+                qb: usize,
+                n_rows: usize,
+                keys: &[u64],
+                base: usize,
+                tops: &mut [StreamTopN],
+            ) {
+                let mut qv = [_mm256_setzero_si256(); W];
+                for (v, q) in qv.iter_mut().zip(qt) {
+                    *v = _mm256_loadu_si256(q.as_ptr() as *const __m256i);
+                }
+                for j in 0..n_rows {
+                    let row = &keys[j * W..j * W + W];
+                    let mut acc = _mm256_setzero_si256();
+                    for (&kw, &qvw) in row.iter().zip(&qv) {
+                        let x = _mm256_xor_si256(_mm256_set1_epi64x(kw as i64), qvw);
+                        acc = _mm256_add_epi64(acc, $popcnt(x));
+                    }
+                    push_lanes(d, acc, qb, base + j, tops);
+                }
+            }
+
+            /// Dynamic-width variant: query vectors re-loaded per word
+            /// from the caller's transposed block.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $dyn_name(
+                d: i32,
+                qt: &[[u64; QUERY_BLOCK]],
+                qb: usize,
+                n_rows: usize,
+                keys: &[u64],
+                base: usize,
+                tops: &mut [StreamTopN],
+            ) {
+                let w = qt.len();
+                for j in 0..n_rows {
+                    let row = &keys[j * w..(j + 1) * w];
+                    let mut acc = _mm256_setzero_si256();
+                    for (&kw, qs) in row.iter().zip(qt) {
+                        let qv = _mm256_loadu_si256(qs.as_ptr() as *const __m256i);
+                        let x = _mm256_xor_si256(_mm256_set1_epi64x(kw as i64), qv);
+                        acc = _mm256_add_epi64(acc, $popcnt(x));
+                    }
+                    push_lanes(d, acc, qb, base + j, tops);
+                }
+            }
+        };
+    }
+
+    avx_tile_scorers!(score_block_avx2_w, score_block_avx2_dyn, "avx2", popcnt_epi64_lut);
+    // AVX-512 variant: native VPOPCNTQ per lane (256-bit form — the
+    // 4-query tile fills exactly 4 lanes, so the VL encoding is the
+    // right width, not a downgrade).
+    avx_tile_scorers!(
+        score_block_avx512_w,
+        score_block_avx512_dyn,
+        "avx2,avx512vl,avx512vpopcntdq",
+        _mm256_popcnt_epi64
+    );
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{StreamTopN, QUERY_BLOCK};
+    use core::arch::aarch64::*;
+
+    /// Fold a per-byte count accumulator into per-u64-lane sums.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn widen(acc: uint8x16_t) -> uint64x2_t {
+        vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(acc)))
+    }
+
+    /// NEON tile scorer: lanes (q0,q1) and (q2,q3) in two 128-bit
+    /// vectors over the pre-transposed query block; `CNT` counts bits
+    /// per byte, accumulated in u8 (W <= 31 keeps every byte <= 248)
+    /// and widened once per key row.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn score_block_neon_w<const W: usize>(
+        d: i32,
+        qt: &[[u64; QUERY_BLOCK]; W],
+        qb: usize,
+        n_rows: usize,
+        keys: &[u64],
+        base: usize,
+        tops: &mut [StreamTopN],
+    ) {
+        debug_assert!(W <= 31, "u8 byte-count accumulator would overflow");
+        for j in 0..n_rows {
+            let row = &keys[j * W..j * W + W];
+            let mut a01 = vdupq_n_u8(0);
+            let mut a23 = vdupq_n_u8(0);
+            for (qs, &kw) in qt.iter().zip(row) {
+                let kx = vdupq_n_u64(kw);
+                let q01 = vld1q_u64(qs.as_ptr());
+                let q23 = vld1q_u64(qs.as_ptr().add(2));
+                a01 = vaddq_u8(a01, vcntq_u8(vreinterpretq_u8_u64(veorq_u64(kx, q01))));
+                a23 = vaddq_u8(a23, vcntq_u8(vreinterpretq_u8_u64(veorq_u64(kx, q23))));
+            }
+            let h01 = widen(a01);
+            let h23 = widen(a23);
+            let hams = [
+                vgetq_lane_u64::<0>(h01),
+                vgetq_lane_u64::<1>(h01),
+                vgetq_lane_u64::<0>(h23),
+                vgetq_lane_u64::<1>(h23),
+            ];
+            for (t, top) in tops.iter_mut().enumerate().take(qb) {
+                top.push(d - 2 * (hams[t] as i32), base + j);
+            }
+        }
+    }
+
+    /// Dynamic width: byte accumulators flushed into u64 lanes every
+    /// 31 words so arbitrarily wide heads cannot overflow u8.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn score_block_neon_dyn(
+        d: i32,
+        qt: &[[u64; QUERY_BLOCK]],
+        qb: usize,
+        n_rows: usize,
+        keys: &[u64],
+        base: usize,
+        tops: &mut [StreamTopN],
+    ) {
+        let w = qt.len();
+        for j in 0..n_rows {
+            let row = &keys[j * w..(j + 1) * w];
+            let mut h01 = vdupq_n_u64(0);
+            let mut h23 = vdupq_n_u64(0);
+            let mut w0 = 0usize;
+            while w0 < w {
+                let chunk = (w - w0).min(31);
+                let mut a01 = vdupq_n_u8(0);
+                let mut a23 = vdupq_n_u8(0);
+                for (qs, &kw) in qt[w0..w0 + chunk].iter().zip(&row[w0..w0 + chunk]) {
+                    let kx = vdupq_n_u64(kw);
+                    let q01 = vld1q_u64(qs.as_ptr());
+                    let q23 = vld1q_u64(qs.as_ptr().add(2));
+                    a01 = vaddq_u8(a01, vcntq_u8(vreinterpretq_u8_u64(veorq_u64(kx, q01))));
+                    a23 = vaddq_u8(a23, vcntq_u8(vreinterpretq_u8_u64(veorq_u64(kx, q23))));
+                }
+                h01 = vaddq_u64(h01, widen(a01));
+                h23 = vaddq_u64(h23, widen(a23));
+                w0 += chunk;
+            }
+            let hams = [
+                vgetq_lane_u64::<0>(h01),
+                vgetq_lane_u64::<1>(h01),
+                vgetq_lane_u64::<0>(h23),
+                vgetq_lane_u64::<1>(h23),
+            ];
+            for (t, top) in tops.iter_mut().enumerate().take(qb) {
+                top.push(d - 2 * (hams[t] as i32), base + j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binary::bitpack::{words_for, PackedMat};
+    use crate::binary::hamming::hamming;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn swar_popcount_matches_count_ones() {
+        for x in [0u64, 1, !0, 0x8000_0000_0000_0000, 0x5555_5555_5555_5555, 0xdead_beef_cafe_f00d]
+        {
+            assert_eq!(popcount_swar(x), x.count_ones(), "x={x:#x}");
+        }
+        let mut rng = Rng::new(77);
+        for _ in 0..2000 {
+            let x = rng.next_u64();
+            assert_eq!(popcount_swar(x), x.count_ones(), "x={x:#x}");
+        }
+    }
+
+    #[test]
+    fn parse_and_select() {
+        assert_eq!(KernelBackend::parse("scalar"), Some(KernelBackend::Scalar));
+        assert_eq!(KernelBackend::parse("avx512"), Some(KernelBackend::Avx512));
+        assert_eq!(KernelBackend::parse("auto"), None, "auto resolves via select");
+        assert_eq!(select("auto").unwrap(), KernelBackend::auto());
+        assert_eq!(select("  SWAR ").unwrap(), KernelBackend::Swar);
+        assert!(select("popcnt9000").unwrap_err().contains("unknown kernel backend"));
+    }
+
+    #[test]
+    fn portable_backends_always_available_and_auto_resolves() {
+        let avail = KernelBackend::available();
+        assert!(avail.contains(&KernelBackend::Scalar));
+        assert!(avail.contains(&KernelBackend::Swar));
+        assert!(avail.contains(&KernelBackend::auto()));
+        assert!(avail.contains(&KernelBackend::active()));
+        assert!(!available_names().is_empty());
+        assert!(cpu_features().contains(std::env::consts::ARCH));
+    }
+
+    /// Drive one backend's dyn block scorer over a full score stream and
+    /// return each query's kept set.
+    fn run_dyn(
+        be: KernelBackend,
+        d: usize,
+        qp: &PackedMat,
+        kp: &PackedMat,
+        qb: usize,
+        n_top: usize,
+    ) -> Vec<Vec<(i32, usize)>> {
+        let w = qp.words_per_row;
+        let mut qt = vec![[0u64; QUERY_BLOCK]; w];
+        for t in 0..qb {
+            for (ww, &x) in qp.row(t).iter().enumerate() {
+                qt[ww][t] = x;
+            }
+        }
+        let mut tops: Vec<StreamTopN> = Vec::new();
+        tops.resize_with(QUERY_BLOCK, StreamTopN::default);
+        for top in tops.iter_mut().take(qb) {
+            top.reset(n_top, d);
+        }
+        score_block_dyn(be, d as i32, &qt, qb, kp.rows, &kp.data, 0, &mut tops);
+        tops.iter_mut().take(qb).map(|t| t.finish().to_vec()).collect()
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_on_the_dyn_seam() {
+        // ragged dims crossing word boundaries, partial tiles, and wide
+        // heads (w in 1..=6); scalar is the oracle
+        let mut rng = Rng::new(3);
+        for d in [1usize, 63, 64, 65, 128, 200, 257, 384] {
+            for qb in 1..=QUERY_BLOCK {
+                let n_k = 1 + rng.range_usize(0, 40);
+                let n_top = 1 + rng.range_usize(0, n_k);
+                let q = rng.normal_vec(qb * d, 1.0);
+                let k = rng.normal_vec(n_k * d, 1.0);
+                let qp = PackedMat::pack(qb, d, &q);
+                let kp = PackedMat::pack(n_k, d, &k);
+                assert_eq!(qp.words_per_row, words_for(d));
+                let want = run_dyn(KernelBackend::Scalar, d, &qp, &kp, qb, n_top);
+                for be in KernelBackend::available() {
+                    assert_eq!(
+                        run_dyn(be, d, &qp, &kp, qb, n_top),
+                        want,
+                        "backend={} d={d} qb={qb} n_k={n_k} N={n_top}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dyn_seam_scores_equal_raw_hamming_identity() {
+        // with n_top == n_k every score survives; check each against the
+        // packed-row hamming oracle directly
+        let mut rng = Rng::new(9);
+        let (d, qb, n_k) = (96usize, 3usize, 17usize);
+        let q = rng.normal_vec(qb * d, 1.0);
+        let k = rng.normal_vec(n_k * d, 1.0);
+        let qp = PackedMat::pack(qb, d, &q);
+        let kp = PackedMat::pack(n_k, d, &k);
+        for be in KernelBackend::available() {
+            let kept = run_dyn(be, d, &qp, &kp, qb, n_k);
+            for (t, row) in kept.iter().enumerate() {
+                assert_eq!(row.len(), n_k);
+                for &(s, j) in row {
+                    let want = d as i32 - 2 * hamming(qp.row(t), kp.row(j)) as i32;
+                    assert_eq!(s, want, "backend={} t={t} j={j}", be.name());
+                }
+            }
+        }
+    }
+}

@@ -68,6 +68,11 @@ pub struct Snapshot {
     pub cache_bytes: u64,
     /// cumulative pool evictions at the last admission
     pub cache_evictions: u64,
+    /// popcount backend every kernel request dispatched through
+    /// (`binary::simd::KernelBackend::active`, `HAD_KERNEL` override)
+    pub kernel_backend: &'static str,
+    /// CPU features detected on this host (e.g. "x86_64: popcnt avx2")
+    pub cpu_features: String,
     /// requests scored by the CPU kernel during batch decode
     pub kernel_requests: u64,
     /// per-request kernel time percentiles/mean (µs; 0 with no kernel traffic)
@@ -220,6 +225,8 @@ impl Metrics {
             },
             cache_bytes: g.cache_bytes,
             cache_evictions: g.cache_evictions,
+            kernel_backend: crate::binary::KernelBackend::active().name(),
+            cpu_features: crate::binary::simd::cpu_features(),
             kernel_requests: kern.len() as u64,
             kernel_p50_us: pct(&kern, 0.50),
             kernel_p99_us: pct(&kern, 0.99),
@@ -298,11 +305,13 @@ impl Snapshot {
         }
         if self.kernel_requests > 0 {
             println!(
-                "{label}: kernel: {} reqs scored | p50 {:.2} ms p99 {:.2} ms mean {:.2} ms per request",
+                "{label}: kernel: {} reqs scored | p50 {:.2} ms p99 {:.2} ms mean {:.2} ms per request | backend {} ({})",
                 self.kernel_requests,
                 self.kernel_p50_us as f64 / 1e3,
                 self.kernel_p99_us as f64 / 1e3,
                 self.kernel_mean_us / 1e3,
+                self.kernel_backend,
+                self.cpu_features,
             );
         }
         if self.gen_streams > 0 || self.gen_tokens > 0 {
@@ -383,6 +392,18 @@ mod tests {
         assert_eq!(s.kernel_p50_us, 30);
         assert_eq!(s.kernel_p99_us, 40);
         assert!((s.kernel_mean_us - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_reports_kernel_backend_and_features() {
+        use crate::binary::KernelBackend;
+        let s = Metrics::default().snapshot();
+        assert!(
+            KernelBackend::available().iter().any(|b| b.name() == s.kernel_backend),
+            "snapshot backend {:?} not in the available set",
+            s.kernel_backend
+        );
+        assert!(s.cpu_features.contains(std::env::consts::ARCH));
     }
 
     #[test]

@@ -29,9 +29,13 @@ use crate::serve::{add_assign, affine};
 use crate::tensor::{ops, Mat};
 
 /// Which attention implementation scores the decode. `Kernel` is the
-/// production blocked engine; `Scalar` is the retained oracle, exposed
-/// so tests can assert the whole decode is bit-identical across the two
-/// (the score-path exactness contract, end to end).
+/// production blocked engine — its popcount inner step dispatches
+/// through the runtime-selected `binary::simd::KernelBackend`
+/// (`HAD_KERNEL` override), so serve decode and the generation tick
+/// loop ride whatever SIMD backend the host offers. `Scalar` is the
+/// retained oracle, exposed so tests can assert the whole decode is
+/// bit-identical across the two (the score-path exactness contract,
+/// end to end).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AttnPath {
     Kernel,

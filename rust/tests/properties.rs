@@ -4,9 +4,10 @@
 
 use had::binary::topn::{select_topn_counting, select_topn_heap};
 use had::binary::{
-    had_attention, had_attention_paged, had_attention_paged_pooled, had_attention_paged_scalar,
-    had_attention_pooled, had_attention_ref, had_attention_scalar, HadAttnConfig, PackedKv,
-    PackedMat, StreamTopN,
+    had_attention, had_attention_backend, had_attention_paged, had_attention_paged_backend,
+    had_attention_paged_pooled, had_attention_paged_pooled_backend, had_attention_paged_scalar,
+    had_attention_pooled, had_attention_pooled_backend, had_attention_ref, had_attention_scalar,
+    HadAttnConfig, KernelBackend, PackedKv, PackedMat, StreamTopN,
 };
 use had::coordinator::{BatchPolicy, BucketQueue, Router};
 use had::kvcache::{KvCacheConfig, PagePool, SessionKv, ValueDtype};
@@ -199,6 +200,81 @@ fn prop_paged_kernel_equals_scalar_over_straddling_pages() {
             let fast = had_attention_paged(&q, &paged, &c);
             fast == had_attention_paged_scalar(&q, &paged, &c)
                 && fast == had_attention(&q, &PackedKv::new(&k, &v), &c)
+        })
+    });
+}
+
+#[test]
+fn prop_every_available_backend_equals_scalar_oracle_bit_for_bit() {
+    // the backend matrix contract: every popcount backend the host can
+    // run (scalar, swar, and whichever of avx2/avx512/neon detection
+    // admits) must reproduce the scalar oracle exactly — ragged head
+    // dims crossing u64 word boundaries, partial final pages from
+    // random-chunk appends, and n_top at both extremes {1, n_k} plus a
+    // random interior value, contiguous and paged alike.
+    let backends = KernelBackend::available();
+    assert!(backends.contains(&KernelBackend::Scalar));
+    assert!(backends.contains(&KernelBackend::active()));
+    let gen = pair(
+        pair(usize_in(1, 24), usize_in(2, 90)), // (page_tokens, n_k)
+        pair(usize_in(1, 130), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(25), &gen, |&((page_tokens, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let (n_q, d_v) = (5usize, 8usize);
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        // partial final page via random-sized appends
+        let mut paged = SessionKv::new(d, d_v, page_tokens);
+        let mut lo = 0usize;
+        while lo < n_k {
+            let hi = (lo + 1 + rng.range_usize(0, n_k)).min(n_k);
+            let kc = Mat::from_vec(hi - lo, d, k.data[lo * d..hi * d].to_vec());
+            let vc = Mat::from_vec(hi - lo, d_v, v.data[lo * d_v..hi * d_v].to_vec());
+            paged.append(&kc, &vc);
+            lo = hi;
+        }
+        [1usize, 1 + seed % n_k, n_k].into_iter().all(|n_top| {
+            let c = HadAttnConfig { n_top, temp: 0.9 };
+            let want = had_attention_scalar(&q, &kv, &c);
+            let want_paged = had_attention_paged_scalar(&q, &paged, &c);
+            backends.iter().all(|&be| {
+                had_attention_backend(&q, &kv, &c, be) == want
+                    && had_attention_paged_backend(&q, &paged, &c, be) == want_paged
+            })
+        })
+    });
+}
+
+#[test]
+fn prop_backend_matrix_survives_threading() {
+    // backend dispatch composes with query-block sharding: pooled
+    // output equals the scalar-oracle output for every backend and
+    // worker count
+    let backends = KernelBackend::available();
+    let pools: Vec<ThreadPool> = (1..=3).map(ThreadPool::new).collect();
+    let gen = pair(
+        pair(usize_in(1, 13), usize_in(1, 70)), // (n_q, n_k)
+        pair(usize_in(1, 100), usize_in(0, 1 << 20)), // (d, seed)
+    );
+    check(&cfg(10), &gen, |&((n_q, n_k), (d, seed))| {
+        let mut rng = Rng::new(seed as u64);
+        let d_v = 6usize;
+        let q = Mat::random(n_q, d, &mut rng, 1.0);
+        let k = Mat::random(n_k, d, &mut rng, 1.0);
+        let v = Mat::random(n_k, d_v, &mut rng, 1.0);
+        let kv = PackedKv::new(&k, &v);
+        let mut paged = SessionKv::new(d, d_v, 1 + seed % 16);
+        paged.append(&k, &v);
+        let c = HadAttnConfig { n_top: 1 + seed % n_k, temp: 0.8 };
+        let want = had_attention_scalar(&q, &kv, &c);
+        backends.iter().all(|&be| {
+            pools.iter().all(|pool| {
+                had_attention_pooled_backend(&q, &kv, &c, pool, be) == want
+                    && had_attention_paged_pooled_backend(&q, &paged, &c, pool, be) == want
+            })
         })
     });
 }

@@ -1,7 +1,12 @@
 #!/usr/bin/env python3
 """Render results/*.jsonl into the markdown tables EXPERIMENTS.md embeds.
 
-Usage: python3 scripts/summarize_results.py [results_dir]
+Usage: python3 scripts/summarize_results.py [results_dir] [--check]
+
+--check turns the run into a bench-regression gate: after printing, it
+asserts the blocked kernel still beats the scalar path in keys/sec at
+>=4k context (from attention.jsonl's "kernel" records) and exits
+non-zero otherwise — CI's bench-smoke step runs it on every push.
 """
 
 import json
@@ -9,7 +14,9 @@ import sys
 from collections import defaultdict
 from pathlib import Path
 
-RES = Path(sys.argv[1] if len(sys.argv) > 1 else "results")
+ARGS = [a for a in sys.argv[1:] if a != "--check"]
+CHECK = "--check" in sys.argv[1:]
+RES = Path(ARGS[0] if ARGS else "results")
 
 METHODS = ["Baseline", "HAD (ours)", "BiT", "w/ SAB", "w/o AD", "w/o Tanh"]
 
@@ -120,6 +127,88 @@ def attention():
                 f"{by_workers[n_ctx].get(w, float('nan')):.2f}x" for w in workers
             ]
             print(f"| {n_ctx} | " + " | ".join(cells) + " |")
+    backends(recs)
+
+
+def backends(recs):
+    """Per-backend speedup table from the bench's popcount backend sweep,
+    keyed by (head dim, context length) — the sweep covers W=1 tiles,
+    the widest monomorphized tiles, and the dyn wide-head path."""
+    be = [r for r in recs if r.get("kind") == "backend"]
+    if not be:
+        return
+    by_shape = defaultdict(dict)
+    names = []
+    for r in be:
+        if r["backend"] not in names:
+            names.append(r["backend"])
+        by_shape[(int(r.get("d", 64)), int(r["n_k"]))][r["backend"]] = r  # last write wins
+    print("\n### Popcount backends: speedup vs the scalar oracle (measured)\n")
+    print("| d | n_k | " + " | ".join(names) + " |")
+    print("|" + "---|" * (len(names) + 2))
+    for (dim, n_ctx) in sorted(by_shape):
+        cells = []
+        for name in names:
+            r = by_shape[(dim, n_ctx)].get(name)
+            if r is None:
+                cells.append("—")
+            else:
+                cells.append(f"{r['mean_us']:.1f} µs ({r['speedup_vs_scalar']:.2f}x)")
+        print(f"| {dim} | {n_ctx} | " + " | ".join(cells) + " |")
+    last = be[-1]
+    active = [r["backend"] for r in be if r.get("active")]
+    print(
+        f"\nhost: {last.get('cpu_features', '?')}"
+        + (f" | active backend: {active[-1]}" if active else "")
+    )
+
+
+def best_keys_per_s(r):
+    """Best-observed throughput: min-time based when the record carries
+    min_us (noise-robust under the CI smoke step's tiny quick-mode
+    budgets — a single scheduling stall inflates a mean but not a
+    minimum), mean-based keys_per_s otherwise (older records)."""
+    if r.get("min_us"):
+        return (r["n_q"] * r["n_k"]) / (r["min_us"] / 1e6)
+    return r["keys_per_s"]
+
+
+def check_attention_gate():
+    """--check: the blocked kernel must beat scalar keys/sec at >=4k context.
+
+    Reads attention.jsonl "kernel" records (last write per (n_k, variant)
+    wins), comparing best-observed throughput per variant. Failing — or
+    having nothing to check — exits non-zero, so a silent bench
+    regression or a bench that stopped emitting records both trip CI.
+    """
+    recs = rows("attention")
+    pairs = defaultdict(dict)
+    for r in recs:
+        if r.get("kind") == "kernel" and int(r["n_k"]) >= 4096:
+            pairs[int(r["n_k"])][r["variant"]] = r
+    checked, failures = 0, []
+    for n_k in sorted(pairs):
+        m = pairs[n_k]
+        if {"scalar", "blocked"} <= m.keys():
+            checked += 1
+            sc = best_keys_per_s(m["scalar"])
+            bl = best_keys_per_s(m["blocked"])
+            if bl <= sc:
+                failures.append(
+                    f"n_k={n_k}: blocked {bl:.3g} keys/s <= scalar {sc:.3g} keys/s (best-observed)"
+                )
+    if checked == 0:
+        print("[check] FAIL: no >=4k-context kernel records in attention.jsonl")
+        sys.exit(1)
+    if failures:
+        print("[check] FAIL: blocked kernel regressed below the scalar path:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print(
+        f"[check] OK: blocked kernel beats scalar keys/sec at >=4k context "
+        f"({checked} bucket(s) checked)"
+    )
 
 
 def kvcache():
@@ -247,3 +336,5 @@ if __name__ == "__main__":
             f"reductions {100*(1-r['had_area_mm2']/r['sa_area_mm2']):.1f}% area, "
             f"{100*(1-r['had_power_w']/r['sa_power_w']):.1f}% power"
         )
+    if CHECK:
+        check_attention_gate()
