@@ -14,7 +14,14 @@ use had::util::rng::Rng;
 fn mk_request(id: u64, len: usize) -> Request {
     let (tx, rx) = channel();
     std::mem::forget(rx); // keep the channel alive for the bench
-    Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx, session: None }
+    Request {
+        id,
+        tokens: vec![1; len],
+        arrival: Instant::now(),
+        reply: tx,
+        session: None,
+        trace: had::obs::SpanId::NONE,
+    }
 }
 
 fn main() {

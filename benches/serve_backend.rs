@@ -104,6 +104,15 @@ fn main() {
             server.infer_session(sid, append).expect("turn served");
         }
     }
+    // a short generation pass so streaming decode-step/sampling stages
+    // show up in metrics and (under HAD_TRACE) the exported trace
+    for sid in 0..n_sessions.min(2) {
+        let prompt: Vec<i32> = (0..4).map(|_| rng.below(vocab) as i32).collect();
+        let out = server
+            .generate_session(sid, had::generate::GenerateRequest::greedy(prompt, 6))
+            .expect("stream served");
+        assert!(!out.tokens.is_empty(), "generation produced tokens");
+    }
     let snap = server.metrics.snapshot();
     let stats = server.cache_stats();
     let kernel_share = if snap.decode_mean_us > 0.0 {
@@ -138,6 +147,16 @@ fn main() {
 
     if let Err(e) = write_jsonl("results/serve.jsonl", &records) {
         eprintln!("could not write results/serve.jsonl: {e}");
+    }
+    // graceful shutdown BEFORE the trace flush so scheduler-side spans
+    // (ticks, stream umbrellas) are all recorded by export time
+    let metrics = server.metrics.clone();
+    drop(server);
+    if let Some(path) = had::obs::flush_trace() {
+        println!("trace written to {}", path.display());
+    }
+    if let Some(path) = had::obs::write_metrics_snapshot(metrics.registry()) {
+        println!("metrics snapshot appended to {}", path.display());
     }
     println!("\nserve_backend bench OK");
 }

@@ -1,0 +1,91 @@
+"""Chrome-trace JSON validity: scripts/validate_trace.py against a
+synthetic exporter-shaped trace (the Rust exporter's exact layout), its
+failure modes, and — when a bench run under HAD_TRACE has left one —
+the real results/trace/trace.json."""
+
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from validate_trace import validate  # noqa: E402
+
+
+def exporter_shaped_trace():
+    """The shape rust/src/obs/export.rs writes, in miniature."""
+    return {
+        "displayTimeUnit": "ms",
+        "traceEvents": [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "had (scalar)"}},
+            {"name": "trace_meta", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"dropped_spans": 0}},
+            {"name": "request", "cat": "had", "ph": "X", "pid": 1, "tid": 1,
+             "ts": 10, "dur": 900, "args": {"id": 1, "parent": 0, "payload": 96}},
+            {"name": "queue_wait", "cat": "had", "ph": "X", "pid": 1, "tid": 1,
+             "ts": 10, "dur": 40, "args": {"id": 2, "parent": 1, "payload": 0}},
+            {"name": "attention", "cat": "had", "ph": "X", "pid": 1, "tid": 2,
+             "ts": 60, "dur": 300, "args": {"id": 3, "parent": 1, "payload": 0}},
+            {"name": "sample", "cat": "had", "ph": "X", "pid": 1, "tid": 2,
+             "ts": 400, "dur": 5, "args": {"id": 4, "parent": 1, "payload": 0}},
+        ],
+    }
+
+
+def write(tmp_path, trace):
+    path = tmp_path / "trace.json"
+    path.write_text(trace if isinstance(trace, str) else json.dumps(trace))
+    return str(path)
+
+
+def test_exporter_shaped_trace_is_valid(tmp_path):
+    assert validate(write(tmp_path, exporter_shaped_trace())) == []
+
+
+def test_not_json_fails(tmp_path):
+    problems = validate(write(tmp_path, "{not json"))
+    assert problems and "not valid JSON" in problems[0]
+
+
+def test_missing_trace_events_fails(tmp_path):
+    problems = validate(write(tmp_path, {"displayTimeUnit": "ms"}))
+    assert problems and "traceEvents" in problems[0]
+
+
+def test_span_missing_duration_fails(tmp_path):
+    trace = exporter_shaped_trace()
+    del trace["traceEvents"][2]["dur"]
+    problems = validate(write(tmp_path, trace))
+    assert any("dur" in p for p in problems)
+
+
+def test_unresolved_parent_fails(tmp_path):
+    trace = exporter_shaped_trace()
+    trace["traceEvents"][3]["args"]["parent"] = 999
+    problems = validate(write(tmp_path, trace))
+    assert any("parent 999" in p for p in problems)
+
+
+def test_unresolved_parent_tolerated_after_ring_drops(tmp_path):
+    trace = exporter_shaped_trace()
+    trace["traceEvents"][1]["args"]["dropped_spans"] = 3
+    trace["traceEvents"][3]["args"]["parent"] = 999
+    assert validate(write(tmp_path, trace)) == []
+
+
+def test_empty_span_list_fails(tmp_path):
+    trace = exporter_shaped_trace()
+    trace["traceEvents"] = trace["traceEvents"][:2]  # metadata only
+    problems = validate(write(tmp_path, trace))
+    assert any("no span" in p for p in problems)
+
+
+def test_real_trace_if_present():
+    path = os.path.join(REPO, "results", "trace", "trace.json")
+    if not os.path.exists(path):
+        pytest.skip("no results/trace/trace.json (run a bench with HAD_TRACE first)")
+    assert validate(path) == []

@@ -444,10 +444,13 @@ pub(crate) fn run_serial_backend(
     scratch: &mut Scratch,
     be: KernelBackend,
 ) -> Mat {
+    // inert unless this call runs inside a traced (sampled) scope
+    let mut kspan = crate::obs::span("kernel");
     let d = q.cols;
     assert_eq!(d, src.d(), "query/key dim mismatch");
     let n_k = src.n_k();
     assert!(n_k > 0, "{}", EMPTY_KV_MSG);
+    kspan.set_payload(n_k as u64);
     let d_v = src.d_v();
     let n_top = cfg.n_top.clamp(1, n_k);
     let scale = cfg.temp / (d as f32).sqrt();
@@ -484,10 +487,13 @@ pub(crate) fn run_pooled_backend(
     pool: &ThreadPool,
     be: KernelBackend,
 ) -> Mat {
+    // inert unless this call runs inside a traced (sampled) scope
+    let mut kspan = crate::obs::span("kernel");
     let d = q.cols;
     assert_eq!(d, src.d(), "query/key dim mismatch");
     let n_k = src.n_k();
     assert!(n_k > 0, "{}", EMPTY_KV_MSG);
+    kspan.set_payload(n_k as u64);
     let d_v = src.d_v();
     let n_top = cfg.n_top.clamp(1, n_k);
     let scale = cfg.temp / (d as f32).sqrt();

@@ -187,7 +187,14 @@ mod tests {
 
     fn req(id: u64, len: usize) -> Request {
         let (tx, _rx) = channel();
-        Request { id, tokens: vec![1; len], arrival: Instant::now(), reply: tx, session: None }
+        Request {
+            id,
+            tokens: vec![1; len],
+            arrival: Instant::now(),
+            reply: tx,
+            session: None,
+            trace: crate::obs::SpanId::NONE,
+        }
     }
 
     fn bucket() -> Bucket {
@@ -216,6 +223,7 @@ mod tests {
                 reply: tx,
                 arrival: Instant::now(),
                 admitted_len: 3,
+                trace: crate::obs::SpanId::NONE,
             }
         };
         let mut q = StreamQueue::new(2);

@@ -1,48 +1,96 @@
 //! Serving metrics: latency percentiles, throughput, batch occupancy.
+//!
+//! Backed by the `obs::registry` instruments: every timing series is a
+//! bounded log-bucketed histogram (O(1) memory under sustained load —
+//! the old `Vec<u128>` sample buffers grew per-request forever), counters
+//! and gauges are lock-free atomics. The `Snapshot` surface is unchanged;
+//! percentiles follow the same `util::bench::percentile_us` convention
+//! and are exact for sub-millisecond values (the histogram's linear
+//! range), within one bucket (≤6.25%) above.
 
-use std::sync::Mutex;
+use std::fmt;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::{Counter, Gauge, Histogram, Registry};
+
+/// Wall-clock anchors that can't be counters: serving start (for req/s)
+/// and the first/latest generated-token instants (for tok/s over the
+/// generating span only).
 #[derive(Debug, Default)]
-struct Inner {
-    latencies_us: Vec<u128>,
-    batches: u64,
-    requests: u64,
-    rejected: u64,
-    occupancy_sum: u64,
+struct Clocks {
     started: Option<Instant>,
-    // KV-cache session counters (token granularity)
-    cache_hit_tokens: u64,
-    cache_miss_tokens: u64,
-    session_requests: u64,
-    // absolute pool gauges, refreshed at each session admission
-    cache_bytes: u64,
-    cache_evictions: u64,
-    // per-request CPU kernel timings from the backend's blocked
-    // XNOR-popcount scoring inside batch decode
-    kernel_us: Vec<u128>,
-    // per-request total backend decode time (kernel + projections/MLP)
-    decode_us: Vec<u128>,
-    // generation streams (continuous batching): admission -> first token
-    ttft_us: Vec<u128>,
-    // gaps between consecutive generated tokens within a stream
-    inter_token_us: Vec<u128>,
-    gen_streams: u64,
-    gen_tokens: u64,
-    gen_budget_stops: u64,
-    // generation-only clock: first and latest token emission, so the
-    // throughput snapshot measures the generating span, not whatever
-    // else happened before the first stream or after the last token
     gen_started: Option<Instant>,
     gen_last: Option<Instant>,
 }
 
-use crate::util::bench::percentile_us as pct;
-
 /// Thread-safe metrics sink shared by batcher and server threads.
-#[derive(Debug, Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    registry: Registry,
+    // timing histograms
+    latency: Arc<Histogram>,
+    kernel: Arc<Histogram>,
+    decode: Arc<Histogram>,
+    ttft: Arc<Histogram>,
+    inter_token: Arc<Histogram>,
+    tick: Arc<Histogram>,
+    // counters
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+    rejected: Arc<Counter>,
+    occupancy_sum: Arc<Counter>,
+    session_requests: Arc<Counter>,
+    cache_hit_tokens: Arc<Counter>,
+    cache_miss_tokens: Arc<Counter>,
+    gen_streams: Arc<Counter>,
+    gen_tokens: Arc<Counter>,
+    gen_budget_stops: Arc<Counter>,
+    // gauges (absolute values, last write wins)
+    cache_bytes: Arc<Gauge>,
+    cache_evictions: Arc<Gauge>,
+    queue_depth: Arc<Gauge>,
+    active_streams: Arc<Gauge>,
+    clocks: Mutex<Clocks>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        let registry = Registry::new();
+        Metrics {
+            latency: registry.histogram("latency_us"),
+            kernel: registry.histogram("kernel_us"),
+            decode: registry.histogram("decode_us"),
+            ttft: registry.histogram("ttft_us"),
+            inter_token: registry.histogram("inter_token_us"),
+            tick: registry.histogram("tick_us"),
+            requests: registry.counter("requests"),
+            batches: registry.counter("batches"),
+            rejected: registry.counter("rejected"),
+            occupancy_sum: registry.counter("occupancy_sum"),
+            session_requests: registry.counter("session_requests"),
+            cache_hit_tokens: registry.counter("cache_hit_tokens"),
+            cache_miss_tokens: registry.counter("cache_miss_tokens"),
+            gen_streams: registry.counter("gen_streams"),
+            gen_tokens: registry.counter("gen_tokens"),
+            gen_budget_stops: registry.counter("gen_budget_stops"),
+            cache_bytes: registry.gauge("cache_bytes"),
+            cache_evictions: registry.gauge("cache_evictions"),
+            queue_depth: registry.gauge("queue_depth"),
+            active_streams: registry.gauge("active_streams"),
+            clocks: Mutex::new(Clocks::default()),
+            registry,
+        }
+    }
+}
+
+impl fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Metrics")
+            .field("requests", &self.requests.get())
+            .field("batches", &self.batches.get())
+            .field("gen_tokens", &self.gen_tokens.get())
+            .finish_non_exhaustive()
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -103,173 +151,171 @@ pub struct Snapshot {
     pub gen_tokens_per_s: f64,
 }
 
+fn as_u64(us: u128) -> u64 {
+    us.min(u64::MAX as u128) as u64
+}
+
 impl Metrics {
+    /// The instrument registry backing this sink — the exporter snapshots
+    /// it to `metrics.jsonl` while tracing, and new instruments
+    /// registered here show up there without touching `Snapshot`.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
     pub fn record_batch(&self, latencies_us: &[u128], occupancy: usize) {
-        let mut g = self.inner.lock().unwrap();
-        if g.started.is_none() {
-            g.started = Some(Instant::now());
+        {
+            let mut c = self.clocks.lock().unwrap();
+            if c.started.is_none() {
+                c.started = Some(Instant::now());
+            }
         }
-        g.latencies_us.extend_from_slice(latencies_us);
-        g.requests += latencies_us.len() as u64;
-        g.batches += 1;
-        g.occupancy_sum += occupancy as u64;
+        for &us in latencies_us {
+            self.latency.record(as_u64(us));
+        }
+        self.requests.add(latencies_us.len() as u64);
+        self.batches.inc();
+        self.occupancy_sum.add(occupancy as u64);
     }
 
     pub fn record_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.rejected.inc();
     }
 
     /// One session admission: `hit_tokens` were already resident,
     /// `miss_tokens` were packed cold this turn.
     pub fn record_session(&self, hit_tokens: usize, miss_tokens: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.session_requests += 1;
-        g.cache_hit_tokens += hit_tokens as u64;
-        g.cache_miss_tokens += miss_tokens as u64;
+        self.session_requests.inc();
+        self.cache_hit_tokens.add(hit_tokens as u64);
+        self.cache_miss_tokens.add(miss_tokens as u64);
     }
 
     /// Refresh the pool gauges (absolute values, taken after admission).
     pub fn update_cache_pool(&self, bytes: usize, evictions: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.cache_bytes = bytes as u64;
-        g.cache_evictions = evictions;
+        self.cache_bytes.set(bytes as u64);
+        self.cache_evictions.set(evictions);
+    }
+
+    /// One scheduler tick: duration plus the loop's load gauges (admission
+    /// queue depth and live continuous-batching streams). Lands in the
+    /// registry (and the exporter's JSONL snapshots), not in `Snapshot`.
+    pub fn record_tick(&self, us: u128, queue_depth: usize, active_streams: usize) {
+        self.tick.record(as_u64(us));
+        self.queue_depth.set(queue_depth as u64);
+        self.active_streams.set(active_streams as u64);
     }
 
     /// One request's share of batch decode: the CPU time the blocked
     /// XNOR-popcount kernel spent scoring its segment.
     pub fn record_kernel(&self, us: u128) {
-        self.inner.lock().unwrap().kernel_us.push(us);
+        self.kernel.record(as_u64(us));
     }
 
     /// One request's total backend decode time (its suffix's forward).
     pub fn record_decode(&self, us: u128) {
-        self.inner.lock().unwrap().decode_us.push(us);
+        self.decode.record(as_u64(us));
     }
 
     /// A stream's first generated token: `us` since admission (TTFT —
     /// includes queueing, activation, and the prefill decode).
     pub fn record_first_token(&self, us: u128) {
-        let mut g = self.inner.lock().unwrap();
-        let now = Instant::now();
-        if g.gen_started.is_none() {
-            g.gen_started = Some(now);
-        }
-        g.gen_last = Some(now);
-        g.ttft_us.push(us);
-        g.gen_tokens += 1;
+        self.touch_gen_clock();
+        self.ttft.record(as_u64(us));
+        self.gen_tokens.inc();
     }
 
     /// Gap between consecutive generated tokens of one stream.
     pub fn record_inter_token(&self, us: u128) {
-        let mut g = self.inner.lock().unwrap();
+        self.touch_gen_clock();
+        self.inter_token.record(as_u64(us));
+        self.gen_tokens.inc();
+    }
+
+    fn touch_gen_clock(&self) {
+        let mut c = self.clocks.lock().unwrap();
         let now = Instant::now();
-        if g.gen_started.is_none() {
-            g.gen_started = Some(now);
+        if c.gen_started.is_none() {
+            c.gen_started = Some(now);
         }
-        g.gen_last = Some(now);
-        g.inter_token_us.push(us);
-        g.gen_tokens += 1;
+        c.gen_last = Some(now);
     }
 
     /// A generation stream retired (`budget`: stopped by context or KV
     /// byte pressure rather than its own stop conditions).
     pub fn record_stream_retired(&self, budget: bool) {
-        let mut g = self.inner.lock().unwrap();
-        g.gen_streams += 1;
+        self.gen_streams.inc();
         if budget {
-            g.gen_budget_stops += 1;
+            self.gen_budget_stops.inc();
         }
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let mut kern = g.kernel_us.clone();
-        kern.sort_unstable();
-        let mut dec = g.decode_us.clone();
-        dec.sort_unstable();
-        let mut ttft = g.ttft_us.clone();
-        ttft.sort_unstable();
-        let mut inter = g.inter_token_us.clone();
-        inter.sort_unstable();
-        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let (started, gen_span) = {
+            let c = self.clocks.lock().unwrap();
+            let span = match (c.gen_started, c.gen_last) {
+                (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+                _ => 0.0,
+            };
+            (c.started, span)
+        };
+        let elapsed = started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let requests = self.requests.get();
+        let batches = self.batches.get();
+        let gen_tokens = self.gen_tokens.get();
+        let hit = self.cache_hit_tokens.get();
+        let miss = self.cache_miss_tokens.get();
         Snapshot {
-            requests: g.requests,
-            batches: g.batches,
-            rejected: g.rejected,
-            p50_us: pct(&lat, 0.50),
-            p90_us: pct(&lat, 0.90),
-            p99_us: pct(&lat, 0.99),
-            mean_us: if lat.is_empty() {
+            requests,
+            batches,
+            rejected: self.rejected.get(),
+            p50_us: self.latency.percentile(0.50) as u128,
+            p90_us: self.latency.percentile(0.90) as u128,
+            p99_us: self.latency.percentile(0.99) as u128,
+            mean_us: self.latency.mean(),
+            mean_occupancy: if batches == 0 {
                 0.0
             } else {
-                lat.iter().sum::<u128>() as f64 / lat.len() as f64
+                self.occupancy_sum.get() as f64 / batches as f64
             },
-            mean_occupancy: if g.batches == 0 {
-                0.0
-            } else {
-                g.occupancy_sum as f64 / g.batches as f64
-            },
-            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
-            session_requests: g.session_requests,
-            cache_hit_tokens: g.cache_hit_tokens,
-            cache_miss_tokens: g.cache_miss_tokens,
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            session_requests: self.session_requests.get(),
+            cache_hit_tokens: hit,
+            cache_miss_tokens: miss,
             cache_hit_rate: {
-                let total = g.cache_hit_tokens + g.cache_miss_tokens;
+                let total = hit + miss;
                 if total == 0 {
                     0.0
                 } else {
-                    g.cache_hit_tokens as f64 / total as f64
+                    hit as f64 / total as f64
                 }
             },
-            cache_bytes: g.cache_bytes,
-            cache_evictions: g.cache_evictions,
+            cache_bytes: self.cache_bytes.get(),
+            cache_evictions: self.cache_evictions.get(),
             kernel_backend: crate::binary::KernelBackend::active().name(),
             cpu_features: crate::binary::simd::cpu_features(),
-            kernel_requests: kern.len() as u64,
-            kernel_p50_us: pct(&kern, 0.50),
-            kernel_p99_us: pct(&kern, 0.99),
-            kernel_mean_us: if kern.is_empty() {
-                0.0
-            } else {
-                kern.iter().sum::<u128>() as f64 / kern.len() as f64
-            },
-            decode_requests: dec.len() as u64,
-            decode_p50_us: pct(&dec, 0.50),
-            decode_p99_us: pct(&dec, 0.99),
-            decode_mean_us: if dec.is_empty() {
-                0.0
-            } else {
-                dec.iter().sum::<u128>() as f64 / dec.len() as f64
-            },
-            gen_streams: g.gen_streams,
-            gen_tokens: g.gen_tokens,
-            gen_budget_stops: g.gen_budget_stops,
-            ttft_p50_us: pct(&ttft, 0.50),
-            ttft_p99_us: pct(&ttft, 0.99),
-            ttft_mean_us: if ttft.is_empty() {
-                0.0
-            } else {
-                ttft.iter().sum::<u128>() as f64 / ttft.len() as f64
-            },
-            inter_token_p50_us: pct(&inter, 0.50),
-            inter_token_p99_us: pct(&inter, 0.99),
-            inter_token_mean_us: if inter.is_empty() {
-                0.0
-            } else {
-                inter.iter().sum::<u128>() as f64 / inter.len() as f64
-            },
+            kernel_requests: self.kernel.count(),
+            kernel_p50_us: self.kernel.percentile(0.50) as u128,
+            kernel_p99_us: self.kernel.percentile(0.99) as u128,
+            kernel_mean_us: self.kernel.mean(),
+            decode_requests: self.decode.count(),
+            decode_p50_us: self.decode.percentile(0.50) as u128,
+            decode_p99_us: self.decode.percentile(0.99) as u128,
+            decode_mean_us: self.decode.mean(),
+            gen_streams: self.gen_streams.get(),
+            gen_tokens,
+            gen_budget_stops: self.gen_budget_stops.get(),
+            ttft_p50_us: self.ttft.percentile(0.50) as u128,
+            ttft_p99_us: self.ttft.percentile(0.99) as u128,
+            ttft_mean_us: self.ttft.mean(),
+            inter_token_p50_us: self.inter_token.percentile(0.50) as u128,
+            inter_token_p99_us: self.inter_token.percentile(0.99) as u128,
+            inter_token_mean_us: self.inter_token.mean(),
             gen_tokens_per_s: {
                 // first-to-last token span: excludes pre-stream traffic
                 // and anything after the final token (0 until a second
                 // token makes the span non-degenerate)
-                let span = match (g.gen_started, g.gen_last) {
-                    (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
-                    _ => 0.0,
-                };
-                if span > 0.0 {
-                    g.gen_tokens as f64 / span
+                if gen_span > 0.0 {
+                    gen_tokens as f64 / gen_span
                 } else {
                     0.0
                 }
@@ -473,5 +519,55 @@ mod tests {
         let want = 272.0 / (272.0 + 160.0);
         assert!((s.cache_hit_rate - want).abs() < 1e-12);
         assert_eq!((s.cache_bytes, s.cache_evictions), (4096, 1));
+    }
+
+    #[test]
+    fn tick_metrics_land_in_registry() {
+        let m = Metrics::default();
+        m.record_tick(120, 3, 2);
+        m.record_tick(80, 1, 4);
+        let snap = format!("{}", m.registry().snapshot_json());
+        assert!(snap.contains("\"tick_us\""));
+        assert!(snap.contains("\"queue_depth\":1"), "gauge holds last write");
+        assert!(snap.contains("\"active_streams\":4"));
+    }
+
+    #[test]
+    fn property_snapshot_percentiles_track_exact_vectors() {
+        // Satellite: the histogram-backed snapshot must stay within one
+        // bucket's relative error of the exact sorted-Vec percentiles the
+        // old unbounded implementation computed — across magnitudes, not
+        // just the sub-millisecond linear range.
+        use crate::util::bench::percentile_us;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..20 {
+            let m = Metrics::default();
+            let n = 1 + (rng.next_u64() % 300) as usize;
+            let mut vals: Vec<u128> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let e = rng.next_u64() % 32; // spans ns..hours in µs
+                let v = (1u64 << e) + rng.next_u64() % (1u64 << e).max(1);
+                vals.push(v as u128);
+                m.record_decode(v as u128);
+            }
+            vals.sort_unstable();
+            let s = m.snapshot();
+            for (p, got) in [(0.50, s.decode_p50_us), (0.99, s.decode_p99_us)] {
+                let exact = percentile_us(&vals, p);
+                let tol = Histogram::error_bound(exact as u64) as u128;
+                let diff = got.abs_diff(exact);
+                assert!(
+                    diff <= tol,
+                    "case {case} p={p}: snapshot {got} vs exact {exact} (tol {tol})"
+                );
+            }
+            let exact_mean = vals.iter().sum::<u128>() as f64 / vals.len() as f64;
+            assert!(
+                (s.decode_mean_us - exact_mean).abs() < 1e-6 * exact_mean.max(1.0),
+                "mean is tracked exactly (sum/count)"
+            );
+            assert_eq!(s.decode_requests, n as u64);
+        }
     }
 }

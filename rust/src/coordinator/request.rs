@@ -27,6 +27,10 @@ pub struct Request {
     pub reply: Sender<Response>,
     /// Present when admitted via the session path.
     pub session: Option<SessionInfo>,
+    /// Trace identity from the admission-boundary sampling decision
+    /// (`obs::sample_request`). `SpanId::NONE` when the request was not
+    /// sampled — every stage span keyed off it is then a no-op.
+    pub trace: crate::obs::SpanId,
 }
 
 #[derive(Clone, Debug)]
@@ -68,6 +72,9 @@ pub struct GenAdmit {
     pub arrival: Instant,
     /// session history length (including this prompt) at admission
     pub admitted_len: usize,
+    /// Trace identity for the stream (see [`Request::trace`]); parent of
+    /// every prefill / decode-step / sampling span the stream produces.
+    pub trace: crate::obs::SpanId,
 }
 
 /// Why a request was rejected.

@@ -430,19 +430,31 @@ impl Server {
         if self.shared.shutdown.load(Ordering::Relaxed) {
             return Err(RejectReason::ShuttingDown);
         }
+        let admit_start = Instant::now();
+        let trace = crate::obs::sample_request();
         let bucket_idx = self.router.route_idx(tokens.len())?;
         let (tx, rx) = channel();
+        let n_tokens = tokens.len();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
-            arrival: Instant::now(),
+            arrival: admit_start,
             reply: tx,
             session: None,
+            trace,
         };
         let mut queues = self.shared.queues.lock().unwrap();
         match queues[bucket_idx].push(req) {
             Ok(()) => {
                 self.shared.cv.notify_one();
+                drop(queues);
+                crate::obs::record(
+                    trace,
+                    "admission",
+                    admit_start,
+                    admit_start.elapsed().as_micros() as u64,
+                    n_tokens as u64,
+                );
                 Ok(rx)
             }
             Err(_req) => {
@@ -472,6 +484,8 @@ impl Server {
         if self.shared.shutdown.load(Ordering::Relaxed) {
             return Err(RejectReason::ShuttingDown);
         }
+        let admit_start = Instant::now();
+        let trace = crate::obs::sample_request();
         let mut store = self.sessions.lock().unwrap();
         let mut hist_before = store.history_len(session_id);
         let bucket_idx = match self
@@ -498,12 +512,14 @@ impl Server {
         let tokens = store.tokens(session_id).to_vec();
 
         let (tx, rx) = channel();
+        let n_tokens = tokens.len();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
-            arrival: Instant::now(),
+            arrival: admit_start,
             reply: tx,
             session: Some(info),
+            trace,
         };
         let pushed = {
             let mut queues = self.shared.queues.lock().unwrap();
@@ -523,6 +539,13 @@ impl Server {
         }
         self.metrics.record_session(info.cached_tokens, info.appended_tokens);
         drop(store);
+        crate::obs::record(
+            trace,
+            "admission",
+            admit_start,
+            admit_start.elapsed().as_micros() as u64,
+            n_tokens as u64,
+        );
         Ok(rx)
     }
 
@@ -566,6 +589,8 @@ impl Server {
         if self.shared.shutdown.load(Ordering::Relaxed) {
             return Err(RejectReason::ShuttingDown);
         }
+        let admit_start = Instant::now();
+        let trace = crate::obs::sample_request();
         let mut store = self.sessions.lock().unwrap();
         // backpressure FIRST: stream pushes are serialized under the
         // sessions lock and the scheduler only ever pops, so a non-full
@@ -609,8 +634,9 @@ impl Server {
             session: session_id,
             state,
             reply: tx,
-            arrival: Instant::now(),
+            arrival: admit_start,
             admitted_len,
+            trace,
         };
         let pushed = self.shared.streams.lock().unwrap().push(admit).is_ok();
         if !pushed {
@@ -623,6 +649,13 @@ impl Server {
         }
         self.metrics.record_session(info.cached_tokens, info.appended_tokens);
         drop(store);
+        crate::obs::record(
+            trace,
+            "admission",
+            admit_start,
+            admit_start.elapsed().as_micros() as u64,
+            admitted_len as u64,
+        );
         // notify under the queues mutex (the condvar's mutex): without
         // it, a notify racing the scheduler's "streams empty" check and
         // its wait_timeout would be lost and the admission would stall
@@ -731,6 +764,16 @@ fn decode_pass(
     let outputs: Vec<Vec<(usize, Served)>> = parallel_map_n(workers, &jobs, |_, job| {
         let longest = *job.slots.last().expect("non-empty job");
         let tokens = &reqs[longest].tokens;
+        // a job serves several slots of one session; attribute its spans
+        // to the first sampled request in the group (explicit SpanId
+        // handoff — the worker thread is freshly spawned per pass)
+        let job_trace = job
+            .slots
+            .iter()
+            .map(|&s| reqs[s].trace)
+            .find(|t| !t.is_none())
+            .unwrap_or(crate::obs::SpanId::NONE);
+        let _trace_scope = crate::obs::enter(job_trace);
         let empty = || Served {
             logits: vec![0.0; backend.n_classes()],
             kernel_us: None,
@@ -772,19 +815,26 @@ fn decode_pass(
             return main_slots.iter().map(|&s| (s, empty())).chain(stray).collect();
         }
 
-        let mut kv = match job.session {
-            Some(id) => sessions
-                .lock()
-                .unwrap()
-                .checkout(id)
-                .unwrap_or_else(|| backend.fresh_kv()),
-            None => backend.fresh_kv(),
+        let mut kv = {
+            let mut co = crate::obs::span("kv_checkout");
+            let kv = match job.session {
+                Some(id) => sessions
+                    .lock()
+                    .unwrap()
+                    .checkout(id)
+                    .unwrap_or_else(|| backend.fresh_kv()),
+                None => backend.fresh_kv(),
+            };
+            co.set_payload(kv.len() as u64);
+            kv
         };
         let was_resident = !kv.is_empty();
         let (caps, stats) = scratch_pool.with(|sc| {
             backend.decode_in(&mut kv, tokens, &capture, AttnPath::Kernel, sc)
         });
         if let Some(id) = job.session {
+            let mut ci = crate::obs::span("kv_checkin");
+            ci.set_payload(kv.len() as u64);
             let mut store = sessions.lock().unwrap();
             // a resume is a cache hit; a reset (or cold start) a miss
             store.checkin(id, kv, was_resident && stats.resumed_at > 0);
@@ -851,6 +901,17 @@ fn reply_batch(
     let lats: Vec<u128> = reqs.iter().map(|r| r.arrival.elapsed().as_micros()).collect();
     metrics.record_batch(&lats, reqs.len());
     for ((b, req), latency_us) in reqs.iter().enumerate().zip(&lats) {
+        // the request umbrella span: recorded under the id handed out by
+        // sample_request at admission, so every stage span already points
+        // at it
+        crate::obs::record_as(
+            req.trace,
+            crate::obs::SpanId::NONE,
+            "request",
+            req.arrival,
+            *latency_us as u64,
+            req.tokens.len() as u64,
+        );
         let (logits, kernel_us, decode_us) = row(b);
         let _ = req.reply.send(Response {
             id: req.id,
@@ -955,6 +1016,16 @@ fn retire_stream(
         }
     }
     metrics.record_stream_retired(matches!(reason, StopReason::Budget));
+    // the stream umbrella span, under the id sample_request allocated at
+    // admission (mirrors reply_batch's "request" span)
+    crate::obs::record_as(
+        admit.trace,
+        crate::obs::SpanId::NONE,
+        "stream",
+        admit.arrival,
+        admit.arrival.elapsed().as_micros() as u64,
+        generated as u64,
+    );
     let _ = admit.reply.send(StreamEvent::Done { reason, generated, ttft_us });
 }
 
@@ -973,6 +1044,10 @@ fn scheduler_main(
     let scratch_pool = ScratchPool::new();
     // live generation streams (continuous batching: one step per tick)
     let mut active: Vec<ActiveGen> = Vec::new();
+    // periodic registry snapshots ride the scheduler loop when tracing
+    let mut last_snap = Instant::now();
+    // admission-queue depth observed at the moment work was selected
+    let mut queue_depth_now = 0usize;
     loop {
         // collect work under the lock: a flushed batch wins; otherwise a
         // tick runs if any stream is live or waiting; otherwise sleep
@@ -982,6 +1057,7 @@ fn scheduler_main(
             loop {
                 let shutting = shared.shutdown.load(Ordering::Relaxed);
                 let now = Instant::now();
+                queue_depth_now = queues.iter().map(|q| q.len()).sum();
                 // stream admissions are collected BEFORE the batch check
                 // so sustained batch traffic (a queue ready on every
                 // iteration) cannot starve queued streams: a Work::Batch
@@ -1042,17 +1118,35 @@ fn scheduler_main(
             );
         }
 
+        // periodic registry snapshots for the exporter (tracing only —
+        // one cheap Instant check otherwise)
+        if crate::obs::tracing() && last_snap.elapsed().as_millis() >= 500 {
+            crate::obs::write_metrics_snapshot(metrics.registry());
+            last_snap = Instant::now();
+        }
+
         // 2. generation tick (CPU backend only; submit_generate rejects
         // on the PJRT path, so admits/active stay empty there)
         let Exec::Cpu { backend, .. } = &exec else { continue };
         // 2a. activate admissions: check each stream's session KV out of
         // the pool; prefill happens as the stream's first step below
         for a in admits {
+            crate::obs::record(
+                a.trace,
+                "queue_wait",
+                a.arrival,
+                a.arrival.elapsed().as_micros() as u64,
+                0,
+            );
             let mut kv = {
+                let _scope = crate::obs::enter(a.trace);
+                let mut co = crate::obs::span("kv_checkout");
                 let mut store = sessions.lock().unwrap();
-                store
+                let kv = store
                     .checkout(a.session)
-                    .unwrap_or_else(|| backend.fresh_kv())
+                    .unwrap_or_else(|| backend.fresh_kv());
+                co.set_payload(kv.len() as u64);
+                kv
             };
             let toks = a.state.tokens();
             let resumed = if !kv.is_empty() && kv.is_prefix_of(toks) {
@@ -1080,9 +1174,13 @@ fn scheduler_main(
         if active.is_empty() {
             continue;
         }
+        let tick_start = Instant::now();
+        let mut tick_span = crate::obs::root_span("tick");
+        tick_span.set_payload(active.len() as u64);
         // 2b. one decode step per live stream, sharded across workers
         // (newly admitted streams prefill in this same pass)
         parallel_for_mut(kernel_workers, &mut active, |_, g| {
+            let _scope = crate::obs::enter(g.admit.trace);
             let mut scratch = scratch_pool.checkout();
             let out = g.admit.state.step(
                 backend,
@@ -1120,6 +1218,12 @@ fn scheduler_main(
                 i += 1;
             }
         }
+        drop(tick_span);
+        metrics.record_tick(
+            tick_start.elapsed().as_micros(),
+            queue_depth_now,
+            active.len(),
+        );
     }
     log_info!("scheduler exiting after {served} responses");
 }
@@ -1139,6 +1243,17 @@ fn run_batch(
     scratch_pool: &ScratchPool,
     served: &mut u64,
 ) {
+    // queue wait ends the moment the batch starts executing; sampled
+    // requests get it as a retrospective span under their umbrella id
+    for r in &reqs {
+        crate::obs::record(
+            r.trace,
+            "queue_wait",
+            r.arrival,
+            r.arrival.elapsed().as_micros() as u64,
+            0,
+        );
+    }
     match exec {
             Exec::Cpu { backend, check } => {
                 let outs = decode_pass(
@@ -1296,7 +1411,14 @@ mod tests {
         let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
             let (tx, rx) = channel();
             std::mem::forget(rx); // keep the reply channel alive
-            Request { id, tokens, arrival: Instant::now(), reply: tx, session }
+            Request {
+                id,
+                tokens,
+                arrival: Instant::now(),
+                reply: tx,
+                session,
+                trace: crate::obs::SpanId::NONE,
+            }
         };
         let info = sessions.lock().unwrap().admit(3, &[1, 2, 3, 4, 5]);
         let session_tokens = sessions.lock().unwrap().tokens(3).to_vec();
@@ -1345,7 +1467,14 @@ mod tests {
         let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
             let (tx, rx) = channel();
             std::mem::forget(rx);
-            Request { id, tokens, arrival: Instant::now(), reply: tx, session }
+            Request {
+                id,
+                tokens,
+                arrival: Instant::now(),
+                reply: tx,
+                session,
+                trace: crate::obs::SpanId::NONE,
+            }
         };
         let i1 = sessions.lock().unwrap().admit(9, &[1, 2, 3]);
         let t1 = sessions.lock().unwrap().tokens(9).to_vec();

@@ -217,9 +217,20 @@ impl GenState {
         if len >= limits.max_total_tokens || kv.bytes_at(len) > limits.kv_budget_bytes {
             return StepOut::Done(StopReason::Budget);
         }
-        let (mut caps, _stats) = backend.decode_in(kv, &self.tokens, &[len], path, scratch);
-        let logits = caps.pop().expect("one capture requested").logits;
-        let next = self.sampler.sample(&logits) as i32;
+        // the first step of a cold/partially-resident stream prefils the
+        // whole context; every later step decodes exactly one position
+        let prefill = len.saturating_sub(kv.len()) > 1;
+        let logits = {
+            let mut s =
+                crate::obs::span(if prefill { "prefill" } else { "decode_step" });
+            s.set_payload(len.saturating_sub(kv.len()) as u64);
+            let (mut caps, _stats) = backend.decode_in(kv, &self.tokens, &[len], path, scratch);
+            caps.pop().expect("one capture requested").logits
+        };
+        let next = {
+            let _s = crate::obs::span("sample");
+            self.sampler.sample(&logits) as i32
+        };
         self.tokens.push(next);
         if self.stop_tokens.contains(&next) {
             StepOut::Last(next, StopReason::StopToken)

@@ -1,0 +1,231 @@
+//! Trace + metrics export.
+//!
+//! * [`flush_trace`] — serializes every recorded span as a Chrome
+//!   trace-event "complete" (`ph:"X"`) event into
+//!   `$HAD_TRACE_DIR/trace.json`, loadable in Perfetto
+//!   (<https://ui.perfetto.dev>) or `chrome://tracing`. Span ids, parent
+//!   ids, and payloads travel in `args` so scripts (and humans) can
+//!   rebuild the request tree; timestamps/durations are microseconds, the
+//!   trace-event native unit.
+//! * [`write_metrics_snapshot`] — appends one JSONL line per call to
+//!   `$HAD_TRACE_DIR/metrics.jsonl` from a [`Registry`] snapshot; the
+//!   scheduler calls it periodically while tracing so long runs leave a
+//!   metrics timeline next to the spans.
+//!
+//! Both are no-ops (returning `None`) when `HAD_TRACE` is unset.
+
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::obs::registry::Registry;
+use crate::obs::span::{self, Span};
+use crate::util::json::Json;
+
+/// Write the full span buffer as Chrome-trace-event JSON under the
+/// `HAD_TRACE` directory. Idempotent: each call rewrites the file with
+/// everything recorded so far. Returns the path written, `None` when
+/// tracing is disabled.
+pub fn flush_trace() -> Option<PathBuf> {
+    let dir = span::trace_dir()?;
+    let path = PathBuf::from(&dir).join("trace.json");
+    let (spans, dropped) = span::collect();
+    match write_chrome_trace(&path, &spans, dropped) {
+        Ok(()) => {
+            crate::log_info!(
+                "trace: wrote {} spans ({} dropped to ring wrap) to {}",
+                spans.len(),
+                dropped,
+                path.display()
+            );
+            Some(path)
+        }
+        Err(e) => {
+            crate::log_warn!("trace: failed to write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn write_chrome_trace(path: &std::path::Path, spans: &[Span], dropped: u64) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    // Metadata: process name + kernel backend, so a bare trace is
+    // self-describing in the Perfetto UI.
+    write!(
+        w,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{{\"name\":\"had ({})\"}}}}",
+        crate::binary::KernelBackend::active().name()
+    )?;
+    write!(
+        w,
+        ",{{\"name\":\"trace_meta\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{{\"dropped_spans\":{dropped}}}}}"
+    )?;
+    for s in spans {
+        // Stage names are static identifiers (no escaping needed).
+        write!(
+            w,
+            ",{{\"name\":\"{}\",\"cat\":\"had\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{},\"dur\":{},\"args\":{{\"id\":{},\"parent\":{},\"payload\":{}}}}}",
+            s.name, s.tid, s.start_us, s.dur_us, s.id, s.parent, s.payload
+        )?;
+    }
+    write!(w, "]}}")?;
+    w.flush()
+}
+
+/// Append one metrics-snapshot JSONL line (wall-clock stamped) to
+/// `$HAD_TRACE_DIR/metrics.jsonl`. Returns the path, `None` when tracing
+/// is disabled or the write fails.
+pub fn write_metrics_snapshot(registry: &Registry) -> Option<PathBuf> {
+    let dir = span::trace_dir()?;
+    let path = PathBuf::from(&dir).join("metrics.jsonl");
+    let ts_ms = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis()).unwrap_or(0);
+    let mut line = match registry.snapshot_json() {
+        Json::Obj(m) => m,
+        other => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("snapshot".to_string(), other);
+            m
+        }
+    };
+    line.insert("ts_ms".to_string(), Json::num(ts_ms as f64));
+    match crate::util::bench::write_jsonl(path.to_str()?, &[Json::Obj(line)]) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            crate::log_warn!("trace: failed to append {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn chrome_trace_file_parses_and_contains_spans() {
+        let dir = std::env::temp_dir().join(format!("had_obs_export_{}", std::process::id()));
+        let path = dir.join("trace.json");
+        let spans = vec![
+            Span {
+                id: 1,
+                parent: 0,
+                name: "request",
+                start_us: 10,
+                dur_us: 500,
+                payload: 3,
+                tid: 1,
+            },
+            Span {
+                id: 2,
+                parent: 1,
+                name: "attention",
+                start_us: 20,
+                dur_us: 80,
+                payload: 4096,
+                tid: 2,
+            },
+        ];
+        write_chrome_trace(&path, &spans, 7).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).expect("trace JSON parses");
+        let events = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        // 2 metadata + 2 span events
+        assert_eq!(events.len(), 4);
+        let attn = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("attention"))
+            .expect("attention event present");
+        assert_eq!(attn.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(attn.get("ts").and_then(|t| t.as_f64()), Some(20.0));
+        assert_eq!(attn.get("dur").and_then(|t| t.as_f64()), Some(80.0));
+        assert_eq!(attn.at(&["args", "parent"]).and_then(|p| p.as_f64()), Some(1.0));
+        assert_eq!(attn.at(&["args", "payload"]).and_then(|p| p.as_f64()), Some(4096.0));
+        let meta = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("trace_meta"))
+            .expect("meta event present");
+        assert_eq!(meta.at(&["args", "dropped_spans"]).and_then(|d| d.as_f64()), Some(7.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_tracing_exports_nothing() {
+        let _g = crate::obs::span::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::span::set_enabled_for_tests(false, 1);
+        assert!(flush_trace().is_none());
+        assert!(write_metrics_snapshot(&Registry::new()).is_none());
+    }
+
+    #[test]
+    fn metrics_snapshot_line_appends_and_parses() {
+        let _g = crate::obs::span::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join(format!("had_obs_snap_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // Point tracing at a temp dir via the test hook, then overwrite
+        // the parsed config's dir by setting the env-independent path:
+        // set_enabled_for_tests uses an empty dir, so exercise the write
+        // through write_jsonl directly against the same line shape.
+        let reg = Registry::new();
+        reg.counter("ticks").add(3);
+        reg.histogram("tick_us").record(120);
+        let line = match reg.snapshot_json() {
+            Json::Obj(mut m) => {
+                m.insert("ts_ms".to_string(), Json::num(1.0));
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        let path = dir.join("metrics.jsonl");
+        crate::util::bench::write_jsonl(path.to_str().unwrap(), &[line]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.lines().next().unwrap()).expect("snapshot line parses");
+        assert_eq!(parsed.at(&["counters", "ticks"]).and_then(|v| v.as_f64()), Some(3.0));
+        assert!(parsed.at(&["histograms", "tick_us", "p50"]).is_some());
+        crate::obs::span::set_enabled_for_tests(false, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn end_to_end_flush_via_test_dir() {
+        let _g = crate::obs::span::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join(format!("had_obs_flush_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        crate::obs::span::set_enabled_for_tests_with_dir(dir.to_str().unwrap(), 1);
+        let root = crate::obs::span::sample_request();
+        crate::obs::span::record_as(
+            root,
+            crate::obs::SpanId::NONE,
+            "obs_test_flush_root",
+            Instant::now(),
+            42,
+            0,
+        );
+        let path = flush_trace().expect("tracing enabled → path");
+        let reg = Registry::new();
+        reg.gauge("depth").set(2);
+        let snap = write_metrics_snapshot(&reg).expect("snapshot written");
+        crate::obs::span::set_enabled_for_tests(false, 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).expect("flushed trace parses");
+        let events = j.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("obs_test_flush_root")),
+            "flushed trace contains the recorded span"
+        );
+        let snap_text = std::fs::read_to_string(&snap).unwrap();
+        assert!(Json::parse(snap_text.lines().next().unwrap()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability substrate: structured tracing + typed metrics.
+//!
+//! Three pieces (DESIGN.md §Substrates — replaces tracing/metrics crates,
+//! which the offline registry cannot provide):
+//!
+//! * [`span`] — a thread-local ring-buffer **span recorder**. Each span
+//!   carries an id, parent id, static stage label, start/duration in
+//!   microseconds since the process trace epoch, and one `u64` payload
+//!   (n_keys, page count, token count — stage-dependent). Recording costs
+//!   one relaxed atomic load when tracing is disabled; when enabled via
+//!   `HAD_TRACE=dir[,sample=N]` requests are sampled at the admission
+//!   boundary (1 in N) and every stage under a sampled request records.
+//!   Parent links are explicit (`SpanId` values travel with the request),
+//!   so they survive the scoped-thread sharding in
+//!   `util::threadpool::parallel_map_n` / `parallel_for_mut`, which spawn
+//!   fresh threads per call and inherit no thread-local state.
+//!
+//! * [`registry`] — typed counters, gauges, and **log-bucketed bounded
+//!   histograms**. Histograms are exact for values `<= 1024` (one bucket
+//!   per microsecond) and log₂-bucketed with 16 sub-buckets per octave
+//!   above, so percentile estimates carry at most one bucket (≈6.25%)
+//!   relative error while memory stays O(1) in the number of samples.
+//!   `coordinator::Metrics` is built on these instead of unbounded
+//!   `Vec<u128>` sample buffers.
+//!
+//! * [`export`] — writes Chrome-trace-event JSON (loadable in Perfetto or
+//!   `chrome://tracing`) from the span rings, plus append-only JSONL
+//!   metric snapshots, both under the `HAD_TRACE` directory.
+
+pub mod export;
+pub mod registry;
+pub mod span;
+
+pub use export::{flush_trace, write_metrics_snapshot};
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use span::{
+    current, enter, record, record_as, root_span, sample_request, span, span_under, trace_dir,
+    tracing, EnterGuard, Span, SpanId, SpanTimer,
+};

@@ -1,0 +1,402 @@
+//! Typed metric instruments: counters, gauges, and log-bucketed bounded
+//! histograms, plus a named registry the exporter can snapshot.
+//!
+//! The histogram replaces the unbounded `Vec<u128>` sample buffers the
+//! coordinator's `Metrics` used to keep: memory is a fixed ~15 KiB per
+//! histogram regardless of how many samples are recorded. Bucketing is
+//! exact for values `0..=1024` (one bucket per microsecond — this keeps
+//! the serving stack's sub-millisecond unit-test fixtures bit-exact) and
+//! logarithmic above with 16 linear sub-buckets per power of two, so any
+//! percentile estimate is off by at most one bucket width, i.e. at most
+//! `1/16` (6.25%) of the true value.
+//!
+//! Percentile convention matches `util::bench::percentile_us`:
+//! `sorted[min(floor(n*p), n-1)]`, 0 on empty.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (queue depth, pool bytes, ticket occupancy...).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Values `0..=LINEAR_MAX` get one exact bucket each.
+const LINEAR_MAX: u64 = 1024;
+/// log2(sub-buckets per octave) above the linear range.
+const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+/// First log octave: values in `(LINEAR_MAX, 2^(E0+1))` land in octave E0.
+const E0: u32 = 10; // 2^10 = LINEAR_MAX
+const N_BUCKETS: usize = (LINEAR_MAX as usize + 1) + (64 - E0 as usize) * SUBS;
+
+/// Bounded log-bucketed histogram over `u64` samples (microseconds in
+/// every current use). Lock-free recording, O(1) memory.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> = (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v <= LINEAR_MAX {
+            return v as usize;
+        }
+        let e = 63 - v.leading_zeros(); // >= E0
+        let sub = ((v >> (e - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        (LINEAR_MAX as usize + 1) + (e - E0) as usize * SUBS + sub
+    }
+
+    /// `[lo, hi)` value range of bucket `idx` (hi saturates at u64::MAX).
+    fn bounds(idx: usize) -> (u64, u64) {
+        if idx <= LINEAR_MAX as usize {
+            return (idx as u64, idx as u64 + 1);
+        }
+        let k = idx - (LINEAR_MAX as usize + 1);
+        let e = E0 + (k / SUBS) as u32;
+        let sub = (k % SUBS) as u64;
+        let width = 1u64 << (e - SUB_BITS);
+        let lo = (1u64 << e) + sub * width;
+        let hi = (lo as u128 + width as u128).min(u64::MAX as u128) as u64;
+        (lo, hi)
+    }
+
+    /// Representative value reported for samples in bucket `idx`: the
+    /// exact value in the linear range, the bucket midpoint above it.
+    fn representative(idx: usize) -> u64 {
+        let (lo, hi) = Self::bounds(idx);
+        if idx <= LINEAR_MAX as usize {
+            lo
+        } else {
+            (((lo as u128) + (hi as u128)) / 2) as u64
+        }
+    }
+
+    /// Width of the bucket containing `v` — the error bound for any
+    /// percentile estimate whose exact value is `v`.
+    pub fn error_bound(v: u64) -> u64 {
+        let (lo, hi) = Self::bounds(Self::index(v));
+        hi - lo
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum() as f64 / n as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX && self.count() == 0 {
+            0
+        } else {
+            m
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate, `sorted[min(floor(n*p), n-1)]` convention.
+    /// Exact for samples `<= 1024`; within one bucket width above.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n as f64 * p) as u64).min(n - 1);
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum > rank {
+                return Self::representative(idx).min(self.max()).max(self.min());
+            }
+        }
+        self.max()
+    }
+
+    fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum", Json::num(self.sum() as f64)),
+            ("min", Json::num(self.min() as f64)),
+            ("max", Json::num(self.max() as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(0.50) as f64)),
+            ("p90", Json::num(self.percentile(0.90) as f64)),
+            ("p99", Json::num(self.percentile(0.99) as f64)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<&'static str, Arc<Counter>>,
+    gauges: BTreeMap<&'static str, Arc<Gauge>>,
+    histograms: BTreeMap<&'static str, Arc<Histogram>>,
+}
+
+/// Named instrument registry. `counter`/`gauge`/`histogram` get-or-create
+/// by name and hand back an `Arc` handle, so hot paths record lock-free
+/// and only registration/snapshot take the map lock.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        Arc::clone(
+            self.inner.lock().unwrap().counters.entry(name).or_insert_with(Arc::default),
+        )
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        Arc::clone(self.inner.lock().unwrap().gauges.entry(name).or_insert_with(Arc::default))
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        Arc::clone(
+            self.inner.lock().unwrap().histograms.entry(name).or_insert_with(Arc::default),
+        )
+    }
+
+    /// One JSON object per instrument kind — the exporter appends this
+    /// (plus a timestamp) as a JSONL metrics snapshot line.
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters: Vec<(&str, Json)> =
+            g.counters.iter().map(|(k, c)| (*k, Json::num(c.get() as f64))).collect();
+        let gauges: Vec<(&str, Json)> =
+            g.gauges.iter().map(|(k, c)| (*k, Json::num(c.get() as f64))).collect();
+        let hists: Vec<(&str, Json)> =
+            g.histograms.iter().map(|(k, h)| (*k, h.snapshot_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::percentile_us;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn bucket_edges_are_lossless_or_bounded() {
+        // 0, powers of two, u64::MAX: index→bounds must contain the value
+        // and representative must stay within the bucket.
+        let mut edges: Vec<u64> = vec![0, 1, 2, LINEAR_MAX, LINEAR_MAX + 1, u64::MAX];
+        for e in 0..64u32 {
+            let p = 1u64 << e;
+            edges.extend([p.saturating_sub(1), p, p.saturating_add(1)]);
+        }
+        for &v in &edges {
+            let idx = Histogram::index(v);
+            assert!(idx < N_BUCKETS, "index in range for {v}");
+            let (lo, hi) = Histogram::bounds(idx);
+            assert!(lo <= v, "lo {lo} <= v {v}");
+            assert!(v < hi || hi == u64::MAX, "v {v} < hi {hi}");
+            let rep = Histogram::representative(idx);
+            assert!(lo <= rep && (rep < hi || hi == u64::MAX), "rep inside bucket for {v}");
+            if v <= LINEAR_MAX {
+                assert_eq!(rep, v, "linear range is exact");
+            } else {
+                let width = hi - lo;
+                assert!(width <= lo / 8, "relative width {width}/{lo} bounded for {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_extreme_samples_round_trip() {
+        for v in [0u64, 1, LINEAR_MAX, u64::MAX] {
+            let h = Histogram::new();
+            h.record(v);
+            assert_eq!(h.count(), 1);
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+            // min/max clamping means a lone sample reports exactly.
+            assert_eq!(h.percentile(0.5), v, "single-sample percentile exact for {v}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.mean().abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_values_match_exact_percentiles() {
+        let h = Histogram::new();
+        let samples: Vec<u128> = (1..=100).collect();
+        for &s in &samples {
+            h.record(s as u64);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for p in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                h.percentile(p),
+                percentile_us(&sorted, p) as u64,
+                "exact below LINEAR_MAX at p={p}"
+            );
+        }
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_percentiles_within_one_bucket_of_exact() {
+        // Satellite: random workloads spanning the log range — histogram
+        // percentile must sit within one bucket width of the exact
+        // sorted-Vec percentile (the pre-migration Metrics behavior).
+        let mut rng = Rng::new(0x0b5_0b5);
+        for case in 0..50 {
+            let n = 1 + (rng.next_u64() % 400) as usize;
+            let h = Histogram::new();
+            let mut vals: Vec<u128> = Vec::with_capacity(n);
+            for _ in 0..n {
+                // log-uniform-ish: pick an exponent, then jitter within it
+                let e = rng.next_u64() % 40;
+                let v = (1u64 << e) + rng.next_u64() % (1u64 << e).max(1);
+                vals.push(v as u128);
+                h.record(v);
+            }
+            vals.sort_unstable();
+            for p in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let exact = percentile_us(&vals, p) as u64;
+                let est = h.percentile(p);
+                let tol = Histogram::error_bound(exact);
+                let diff = est.abs_diff(exact);
+                assert!(
+                    diff <= tol,
+                    "case {case} p={p}: est {est} vs exact {exact}, |diff| {diff} > bucket {tol}"
+                );
+            }
+            assert_eq!(h.count(), n as u64);
+        }
+    }
+
+    #[test]
+    fn registry_reuses_instruments_by_name() {
+        let r = Registry::new();
+        let a = r.counter("reqs");
+        let b = r.counter("reqs");
+        a.inc();
+        b.inc();
+        assert_eq!(r.counter("reqs").get(), 2, "same name = same instrument");
+        r.gauge("depth").set(7);
+        r.histogram("lat").record(30);
+        let snap = format!("{}", r.snapshot_json());
+        assert!(snap.contains("\"reqs\":2"));
+        assert!(snap.contains("\"depth\":7"));
+        assert!(snap.contains("\"lat\""));
+        assert!(snap.contains("\"p50\":30"));
+    }
+}

@@ -1,0 +1,584 @@
+//! Thread-local ring-buffer span recorder.
+//!
+//! Activation: `HAD_TRACE=dir[,sample=N]`. `dir` is where the exporter
+//! writes `trace.json` / `metrics.jsonl`; `sample=N` records one request
+//! in N (default 1 = every request). When the variable is unset every
+//! entry point reduces to a single relaxed atomic load and no
+//! thread-local storage is ever touched.
+//!
+//! Each recording thread owns a fixed-capacity ring (oldest spans are
+//! overwritten once full, `dropped` counts the overflow), registered in a
+//! global list so the exporter can collect across threads. The serving
+//! stack shards work over *scoped* threads that live for one call
+//! (`parallel_map_n`), so on thread exit the local ring drains into a
+//! bounded global "retired" ring instead of leaking one Arc per short-
+//! lived worker. Parent links never rely on thread identity: a `SpanId`
+//! is plain data that travels with the request across shard boundaries.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans a single thread buffers before wrapping (64 B each).
+const RING_CAP: usize = 16 * 1024;
+/// Bound on spans preserved from already-exited threads.
+const RETIRED_CAP: usize = 128 * 1024;
+
+/// One recorded span. `start_us` is relative to the process trace epoch
+/// (first tracing-related call), `payload` is stage-dependent (n_keys for
+/// kernel spans, token counts for decode segments, stream counts for
+/// scheduler ticks, ...).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub payload: u64,
+    pub tid: u64,
+}
+
+/// Identifier linking child spans to their parent. `SpanId::NONE` (0)
+/// means "not traced" — children of an untraced parent are no-ops, which
+/// is how request-level sampling propagates through the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    pub const NONE: SpanId = SpanId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+struct TraceConfig {
+    dir: String,
+    sample: u64,
+}
+
+// 0 = uninitialized, 1 = disabled, 2 = enabled.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static CONFIG: Mutex<Option<TraceConfig>> = Mutex::new(None);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static SAMPLE_CTR: AtomicU64 = AtomicU64::new(0);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn since_epoch_us(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+fn init() -> bool {
+    // Racy double-init is harmless: both racers parse the same env var.
+    let _ = epoch();
+    let parsed = std::env::var("HAD_TRACE").ok().and_then(|v| parse_spec(&v));
+    let on = parsed.is_some();
+    *CONFIG.lock().unwrap() = parsed;
+    STATE.store(if on { 2 } else { 1 }, Ordering::Release);
+    on
+}
+
+fn parse_spec(spec: &str) -> Option<TraceConfig> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "0" {
+        return None;
+    }
+    let mut parts = spec.split(',');
+    let dir = parts.next().unwrap_or("").trim().to_string();
+    if dir.is_empty() {
+        return None;
+    }
+    let mut sample = 1u64;
+    for p in parts {
+        let p = p.trim();
+        if let Some(n) = p.strip_prefix("sample=") {
+            sample = n.trim().parse::<u64>().unwrap_or(1).max(1);
+        } else if !p.is_empty() {
+            crate::log_warn!("HAD_TRACE: ignoring unrecognized option '{p}'");
+        }
+    }
+    Some(TraceConfig { dir, sample })
+}
+
+/// Is span recording active? One relaxed atomic load on the hot path.
+#[inline]
+pub fn tracing() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        0 => init(),
+        1 => false,
+        _ => true,
+    }
+}
+
+/// Output directory from `HAD_TRACE`, when tracing is enabled. `None`
+/// also when the configured dir is empty (the in-process test hook), so
+/// recording can be exercised without the exporter touching the cwd.
+pub fn trace_dir() -> Option<String> {
+    if !tracing() {
+        return None;
+    }
+    CONFIG.lock().unwrap().as_ref().map(|c| c.dir.clone()).filter(|d| !d.is_empty())
+}
+
+fn sample_n() -> u64 {
+    CONFIG.lock().unwrap().as_ref().map_or(1, |c| c.sample)
+}
+
+/// Test hook: force tracing on/off in-process (bypasses `HAD_TRACE`).
+/// Tests that flip this must serialize on their own lock and filter
+/// collected spans by their own names/ids.
+#[doc(hidden)]
+pub fn set_enabled_for_tests(on: bool, sample: u64) {
+    let _ = epoch();
+    *CONFIG.lock().unwrap() = if on {
+        Some(TraceConfig { dir: String::new(), sample: sample.max(1) })
+    } else {
+        None
+    };
+    STATE.store(if on { 2 } else { 1 }, Ordering::Release);
+}
+
+/// Test hook: enable tracing with an export directory (exercises the
+/// exporter end to end without the env var).
+#[doc(hidden)]
+pub fn set_enabled_for_tests_with_dir(dir: &str, sample: u64) {
+    let _ = epoch();
+    *CONFIG.lock().unwrap() =
+        Some(TraceConfig { dir: dir.to_string(), sample: sample.max(1) });
+    STATE.store(2, Ordering::Release);
+}
+
+fn alloc_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Admission-boundary sampling decision: allocates a trace id for 1 in N
+/// requests (N from `HAD_TRACE=dir,sample=N`), `SpanId::NONE` otherwise.
+/// The id is the parent for every stage span of that request; record the
+/// request's own umbrella span at completion with [`record_as`].
+pub fn sample_request() -> SpanId {
+    if !tracing() {
+        return SpanId::NONE;
+    }
+    let n = sample_n();
+    let tick = SAMPLE_CTR.fetch_add(1, Ordering::Relaxed);
+    if tick % n != 0 {
+        return SpanId::NONE;
+    }
+    SpanId(alloc_id())
+}
+
+// ---------------------------------------------------------------------------
+// Ring storage
+// ---------------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<Span>,
+    head: usize,
+    dropped: u64,
+    tid: u64,
+}
+
+impl Ring {
+    fn new(cap: usize, tid: u64) -> Ring {
+        Ring { buf: Vec::with_capacity(cap), head: 0, dropped: 0, tid }
+    }
+
+    fn push(&mut self, mut s: Span) {
+        s.tid = self.tid;
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(s);
+        } else {
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % self.buf.len();
+            self.dropped += 1;
+        }
+    }
+}
+
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static RETIRED: Mutex<Option<Ring>> = Mutex::new(None);
+
+/// Drains a thread's ring into the bounded retired ring when the thread
+/// exits, so short-lived scoped workers don't leak one ring each.
+struct LocalRing(Arc<Mutex<Ring>>);
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        let mut rings = match RINGS.lock() {
+            Ok(g) => g,
+            Err(_) => return,
+        };
+        rings.retain(|r| !Arc::ptr_eq(r, &self.0));
+        drop(rings);
+        let mine = match self.0.lock() {
+            Ok(g) => std::mem::replace(&mut *g, Ring::new(0, 0)),
+            Err(_) => return,
+        };
+        if let Ok(mut retired) = RETIRED.lock() {
+            let dst = retired.get_or_insert_with(|| Ring::new(RETIRED_CAP, 0));
+            for s in mine.buf {
+                dst.push(s);
+            }
+            dst.dropped += mine.dropped;
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<LocalRing> = const { std::cell::OnceCell::new() };
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+fn push_span(s: Span) {
+    LOCAL.with(|cell| {
+        let local = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let arc = Arc::new(Mutex::new(Ring::new(RING_CAP, tid)));
+            RINGS.lock().unwrap().push(Arc::clone(&arc));
+            LocalRing(arc)
+        });
+        local.0.lock().unwrap().push(s);
+    });
+}
+
+/// Snapshot of all recorded spans (live rings + retired) and the total
+/// number dropped to ring wraparound. Does not clear the rings.
+pub fn collect() -> (Vec<Span>, u64) {
+    let mut out = Vec::new();
+    let mut dropped = 0u64;
+    if let Ok(retired) = RETIRED.lock() {
+        if let Some(r) = retired.as_ref() {
+            out.extend_from_slice(&r.buf);
+            dropped += r.dropped;
+        }
+    }
+    let rings: Vec<Arc<Mutex<Ring>>> = RINGS.lock().unwrap().clone();
+    for ring in rings {
+        let g = ring.lock().unwrap();
+        out.extend_from_slice(&g.buf);
+        dropped += g.dropped;
+    }
+    (out, dropped)
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------------
+
+/// Record a completed span with explicit timing (for retrospective spans
+/// like queue wait, where start/duration are known from request
+/// timestamps). Returns the new span's id, or `NONE` when not recorded.
+/// A `NONE` parent means the owning request was not sampled, so the
+/// child is dropped too — use [`root_span`] for genuinely parentless
+/// activity.
+pub fn record(
+    parent: SpanId,
+    name: &'static str,
+    start: Instant,
+    dur_us: u64,
+    payload: u64,
+) -> SpanId {
+    if parent.is_none() || !tracing() {
+        return SpanId::NONE;
+    }
+    let id = SpanId(alloc_id());
+    record_as(id, parent, name, start, dur_us, payload);
+    id
+}
+
+/// Record a completed span under a pre-allocated id (e.g. the request
+/// umbrella span whose id was handed out by [`sample_request`] at
+/// admission and recorded at reply time). No-op when `id` is `NONE`.
+pub fn record_as(
+    id: SpanId,
+    parent: SpanId,
+    name: &'static str,
+    start: Instant,
+    dur_us: u64,
+    payload: u64,
+) {
+    if id.is_none() || !tracing() {
+        return;
+    }
+    push_span(Span {
+        id: id.0,
+        parent: parent.0,
+        name,
+        start_us: since_epoch_us(start),
+        dur_us,
+        payload,
+        tid: 0,
+    });
+}
+
+/// The current thread's ambient parent span (set by [`enter`] or an
+/// active [`SpanTimer`]). `NONE` outside any traced scope.
+pub fn current() -> SpanId {
+    SpanId(CURRENT.with(|c| c.get()))
+}
+
+/// Makes `parent` the ambient span for this thread until the guard drops.
+/// This is how a request's trace id crosses `parallel_map_n` shard
+/// boundaries: the worker closure calls `enter(req.trace)` and every
+/// child span inside attaches correctly even though the worker thread was
+/// just spawned.
+pub fn enter(parent: SpanId) -> EnterGuard {
+    let prev = CURRENT.with(|c| c.replace(parent.0));
+    EnterGuard { prev }
+}
+
+pub struct EnterGuard {
+    prev: u64,
+}
+
+impl Drop for EnterGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// RAII timed span: starts at construction, records at drop. While alive
+/// it is the thread's ambient parent, so nested `span()` calls chain.
+pub struct SpanTimer {
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start: Option<Instant>,
+    payload: u64,
+    prev: u64,
+}
+
+impl SpanTimer {
+    fn new(active: bool, parent: u64, name: &'static str) -> SpanTimer {
+        if !active {
+            return SpanTimer { id: 0, parent: 0, name, start: None, payload: 0, prev: 0 };
+        }
+        let id = alloc_id();
+        let prev = CURRENT.with(|c| c.replace(id));
+        SpanTimer { id, parent, name, start: Some(Instant::now()), payload: 0, prev }
+    }
+
+    pub fn id(&self) -> SpanId {
+        SpanId(self.id)
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.start.is_some()
+    }
+
+    /// Attach the stage payload (n_keys, page count, token count, ...).
+    pub fn set_payload(&mut self, payload: u64) {
+        self.payload = payload;
+    }
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        CURRENT.with(|c| c.set(self.prev));
+        let dur_us = start.elapsed().as_micros() as u64;
+        push_span(Span {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            start_us: since_epoch_us(start),
+            dur_us,
+            payload: self.payload,
+            tid: 0,
+        });
+    }
+}
+
+/// Timed child span of the ambient parent. Inert (zero further cost)
+/// when tracing is disabled or the thread is outside any traced scope —
+/// the latter is what makes unsampled requests free.
+pub fn span(name: &'static str) -> SpanTimer {
+    let parent = CURRENT.with(|c| c.get());
+    SpanTimer::new(parent != 0 && tracing(), parent, name)
+}
+
+/// Timed child span of an explicit parent (cross-thread handoff).
+pub fn span_under(parent: SpanId, name: &'static str) -> SpanTimer {
+    SpanTimer::new(!parent.is_none() && tracing(), parent.0, name)
+}
+
+/// Timed root span (no parent) — scheduler ticks and other per-process
+/// activity that is not attributable to one request.
+pub fn root_span(name: &'static str) -> SpanTimer {
+    SpanTimer::new(tracing(), 0, name)
+}
+
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::parallel_map_n;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn named(name: &str) -> Vec<Span> {
+        collect().0.into_iter().filter(|s| s.name == name).collect()
+    }
+
+    #[test]
+    fn disabled_path_records_nothing() {
+        let _g = lock();
+        set_enabled_for_tests(false, 1);
+        assert!(!tracing());
+        assert!(sample_request().is_none());
+        assert!(record(SpanId(7), "obs_test_disabled", Instant::now(), 5, 0).is_none());
+        {
+            let mut t = span_under(SpanId(7), "obs_test_disabled");
+            t.set_payload(9);
+            assert!(!t.is_active());
+        }
+        {
+            let t = root_span("obs_test_disabled");
+            assert!(!t.is_active());
+        }
+        assert!(named("obs_test_disabled").is_empty(), "disabled recorder must be a no-op");
+    }
+
+    #[test]
+    fn child_of_untraced_parent_is_noop() {
+        let _g = lock();
+        set_enabled_for_tests(true, 1);
+        {
+            let t = span_under(SpanId::NONE, "obs_test_unsampled");
+            assert!(!t.is_active(), "NONE parent = unsampled request = free");
+        }
+        assert!(current().is_none());
+        {
+            let t = span("obs_test_unsampled");
+            assert!(!t.is_active(), "no ambient scope, no span");
+        }
+        assert!(
+            record(SpanId::NONE, "obs_test_unsampled", Instant::now(), 3, 0).is_none(),
+            "retrospective child of an unsampled request is dropped"
+        );
+        set_enabled_for_tests(false, 1);
+        assert!(named("obs_test_unsampled").is_empty());
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n() {
+        let _g = lock();
+        set_enabled_for_tests(true, 4);
+        // The tick counter is process-global, so concurrently running
+        // server tests may interleave their own admissions while tracing
+        // is force-enabled here; assert the 1-in-4 density with slack
+        // rather than an exact phase-dependent count.
+        let hits = (0..64).filter(|_| !sample_request().is_none()).count();
+        set_enabled_for_tests(false, 1);
+        assert!((8..=32).contains(&hits), "sample=4 keeps ~1 in 4, got {hits}/64");
+    }
+
+    #[test]
+    fn timer_nesting_links_parent() {
+        let _g = lock();
+        set_enabled_for_tests(true, 1);
+        let root_id;
+        let child_id;
+        {
+            let root = root_span("obs_test_nest_root");
+            root_id = root.id();
+            assert_eq!(current(), root_id);
+            let mut child = span("obs_test_nest_child");
+            child.set_payload(42);
+            child_id = child.id();
+        }
+        set_enabled_for_tests(false, 1);
+        let roots = named("obs_test_nest_root");
+        let children = named("obs_test_nest_child");
+        let r = roots.iter().find(|s| s.id == root_id.0).expect("root recorded");
+        let c = children.iter().find(|s| s.id == child_id.0).expect("child recorded");
+        assert_eq!(r.parent, 0);
+        assert_eq!(c.parent, r.id, "nested timer links to enclosing span");
+        assert_eq!(c.payload, 42);
+        assert!(c.start_us >= r.start_us);
+    }
+
+    #[test]
+    fn parent_links_survive_parallel_map_sharding() {
+        let _g = lock();
+        set_enabled_for_tests(true, 1);
+        let root = sample_request();
+        assert!(!root.is_none());
+        let items: Vec<u64> = (0..24).collect();
+        // Fresh scoped threads per call: no thread-local inheritance. The
+        // explicit SpanId is the only thing carrying the link.
+        let ids = parallel_map_n(4, &items, |_, &x| {
+            let _scope = enter(root);
+            let mut t = span("obs_test_shard_child");
+            t.set_payload(x);
+            t.id().0
+        });
+        record_as(root, SpanId::NONE, "obs_test_shard_root", Instant::now(), 1, 0);
+        set_enabled_for_tests(false, 1);
+        let children = named("obs_test_shard_child");
+        for (i, id) in ids.iter().enumerate() {
+            let c = children
+                .iter()
+                .find(|s| s.id == *id)
+                .unwrap_or_else(|| panic!("child {i} recorded (retired-ring drain)"));
+            assert_eq!(c.parent, root.0, "shard child {i} keeps the request parent");
+        }
+        let payloads: std::collections::BTreeSet<u64> =
+            children.iter().filter(|s| s.parent == root.0).map(|s| s.payload).collect();
+        assert!(payloads.is_superset(&items.iter().copied().collect()), "all shards recorded");
+        assert!(
+            named("obs_test_shard_root").iter().any(|s| s.id == root.0),
+            "umbrella span recorded under the pre-allocated id"
+        );
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = Ring::new(4, 9);
+        for i in 0..10u64 {
+            r.push(Span {
+                id: i,
+                parent: 0,
+                name: "w",
+                start_us: i,
+                dur_us: 0,
+                payload: 0,
+                tid: 0,
+            });
+        }
+        assert_eq!(r.buf.len(), 4, "bounded");
+        assert_eq!(r.dropped, 6);
+        assert!(r.buf.iter().all(|s| s.tid == 9));
+        let ids: Vec<u64> = r.buf.iter().map(|s| s.id).collect();
+        assert!(ids.contains(&9), "newest survives wraparound");
+        assert!(!ids.contains(&0), "oldest overwritten");
+    }
+
+    #[test]
+    fn parse_spec_variants() {
+        let _g = lock();
+        let c = parse_spec("results/trace").unwrap();
+        assert_eq!(c.dir, "results/trace");
+        assert_eq!(c.sample, 1);
+        let c = parse_spec("out, sample=8 ").unwrap();
+        assert_eq!(c.dir, "out");
+        assert_eq!(c.sample, 8);
+        let c = parse_spec("out,sample=0").unwrap();
+        assert_eq!(c.sample, 1, "sample clamped to >= 1");
+        assert!(parse_spec("").is_none());
+        assert!(parse_spec("0").is_none());
+        assert!(parse_spec(" ,sample=2").is_none(), "empty dir disables");
+    }
+}

@@ -56,6 +56,57 @@ pub struct CaptureOut {
     pub decode_us: u128,
 }
 
+/// Per-segment stage accumulators behind the tracing gate: promoted into
+/// one "decode" trace span per capture segment, with children for embed,
+/// Q/K/V projection, per-layer attention (payload = layer index), MLP,
+/// and the logit head.
+struct StageAcc {
+    embed_us: u64,
+    qkv_us: u64,
+    /// one slot per layer (empty when not tracing)
+    attn_us: Vec<u64>,
+    mlp_us: u64,
+    head_us: u64,
+}
+
+impl StageAcc {
+    fn new(n_layers: usize) -> StageAcc {
+        StageAcc { embed_us: 0, qkv_us: 0, attn_us: vec![0; n_layers], mlp_us: 0, head_us: 0 }
+    }
+
+    /// Record the segment's span tree and reset for the next segment.
+    /// Child durations are exact per-stage sums over the segment's
+    /// tokens; their start offsets are synthetic (laid out sequentially
+    /// from the segment start — the real execution interleaves stages
+    /// token by token).
+    fn emit(&mut self, seg_start: Instant, seg_us: u64, seg_tokens: u64) {
+        use crate::obs;
+        let parent = obs::record(obs::current(), "decode", seg_start, seg_us, seg_tokens);
+        if !parent.is_none() {
+            let mut off = std::time::Duration::ZERO;
+            let mut child = |name: &'static str, dur: u64, payload: u64,
+                             off: &mut std::time::Duration| {
+                obs::record(parent, name, seg_start + *off, dur, payload);
+                *off += std::time::Duration::from_micros(dur);
+            };
+            child("embed", self.embed_us, 0, &mut off);
+            child("qkv", self.qkv_us, 0, &mut off);
+            for (l, &a) in self.attn_us.iter().enumerate() {
+                child("attention", a, l as u64, &mut off);
+            }
+            child("mlp", self.mlp_us, 0, &mut off);
+            child("head", self.head_us, 0, &mut off);
+        }
+        self.embed_us = 0;
+        self.qkv_us = 0;
+        self.mlp_us = 0;
+        self.head_us = 0;
+        for a in &mut self.attn_us {
+            *a = 0;
+        }
+    }
+}
+
 /// Summary of one decode pass.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DecodeStats {
@@ -179,21 +230,37 @@ impl HadBackend {
         let mut stats = DecodeStats { resumed_at: start, ..Default::default() };
         let mut seg_start = Instant::now();
         let mut seg_attn = 0u128;
+        // Per-stage attribution, promoted into trace spans at each
+        // segment boundary. Only accumulated when this decode runs inside
+        // a traced scope (a sampled request) — otherwise the extra
+        // Instant reads per token/layer are skipped entirely and the
+        // pre-existing seg_start/seg_attn timers are all that run.
+        let fine = crate::obs::tracing() && !crate::obs::current().is_none();
+        let mut seg = StageAcc::new(if fine { m.layers.len() } else { 0 });
+        let mut seg_tokens = 0u64;
 
         for p in start..tokens.len() {
             // embed: token row + (wrapped) learned position
+            let t_stage = fine.then(Instant::now);
             let tok = tokens[p].rem_euclid(m.cfg.vocab as i32) as usize;
             let mut h = Mat::from_vec(1, d, m.tok_emb.row(tok).to_vec());
             for (o, &pe) in h.data.iter_mut().zip(m.pos_emb.row(p % m.cfg.n_ctx)) {
                 *o += pe;
             }
+            if let Some(t) = t_stage {
+                seg.embed_us += t.elapsed().as_micros() as u64;
+            }
 
             for (l, lw) in m.layers.iter().enumerate() {
                 // pre-LN attention block
+                let t_stage = fine.then(Instant::now);
                 let x = ops::layernorm_rows(&h, &lw.ln1_g, &lw.ln1_b, 1e-5);
                 let q = affine(&x, &lw.wq, &lw.bq);
                 let k = affine(&x, &lw.wk, &lw.bk);
                 let v = affine(&x, &lw.wv, &lw.bv);
+                if let Some(t) = t_stage {
+                    seg.qkv_us += t.elapsed().as_micros() as u64;
+                }
                 let acfg = acfgs[l];
                 let mut ctx = Mat::zeros(1, d);
                 for head in 0..n_heads {
@@ -212,9 +279,14 @@ impl HadBackend {
                             had_attention_paged_scalar_with(&qh, chain, &acfg, scratch)
                         }
                     };
-                    seg_attn += t0.elapsed().as_micros();
+                    let head_attn = t0.elapsed().as_micros();
+                    seg_attn += head_attn;
+                    if fine {
+                        seg.attn_us[l] += head_attn as u64;
+                    }
                     ctx.data[span].copy_from_slice(o.row(0));
                 }
+                let t_stage = fine.then(Instant::now);
                 add_assign(&mut h, &affine(&ctx, &lw.wo, &lw.bo));
                 // MLP block
                 let y = ops::layernorm_rows(&h, &lw.ln2_g, &lw.ln2_b, 1e-5);
@@ -223,12 +295,20 @@ impl HadBackend {
                     *xv = ops::gelu_tanh(*xv);
                 }
                 add_assign(&mut h, &affine(&u, &lw.w2, &lw.b2));
+                if let Some(t) = t_stage {
+                    seg.mlp_us += t.elapsed().as_micros() as u64;
+                }
             }
             kv.note_token(tokens[p]);
+            seg_tokens += 1;
 
             if next_capture < capture_lens.len() && capture_lens[next_capture] == p + 1 {
+                let t_stage = fine.then(Instant::now);
                 let hf = ops::layernorm_rows(&h, &m.lnf_g, &m.lnf_b, 1e-5);
                 let logits = affine(&hf, &m.head_w, &m.head_b);
+                if let Some(t) = t_stage {
+                    seg.head_us += t.elapsed().as_micros() as u64;
+                }
                 let seg_us = seg_start.elapsed().as_micros();
                 captures.push(CaptureOut {
                     len: p + 1,
@@ -238,8 +318,12 @@ impl HadBackend {
                 });
                 stats.attn_us += seg_attn;
                 stats.decode_us += seg_us;
+                if fine {
+                    seg.emit(seg_start, seg_us as u64, seg_tokens);
+                }
                 seg_attn = 0;
                 seg_start = Instant::now();
+                seg_tokens = 0;
                 next_capture += 1;
             }
         }
@@ -248,7 +332,11 @@ impl HadBackend {
             && captures.last().map_or(true, |c| c.len < tokens.len())
         {
             stats.attn_us += seg_attn;
-            stats.decode_us += seg_start.elapsed().as_micros();
+            let seg_us = seg_start.elapsed().as_micros();
+            stats.decode_us += seg_us;
+            if fine {
+                seg.emit(seg_start, seg_us as u64, seg_tokens);
+            }
         }
         stats.decoded = tokens.len() - start;
         (captures, stats)

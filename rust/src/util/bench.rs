@@ -63,9 +63,67 @@ pub fn percentile_us(sorted: &[u128], p: f64) -> u128 {
     }
 }
 
+/// Schema version stamped into every results record; bump when record
+/// shapes change so scripts/summarize_results.py can tell generations
+/// apart instead of guessing from missing keys.
+pub const RESULTS_SCHEMA_VERSION: u64 = 2;
+
+/// Process-stable run id: one bench invocation = one id, so the
+/// summarizer can group records instead of silently mixing appended runs.
+pub fn run_id() -> &'static str {
+    static ID: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    ID.get_or_init(|| {
+        let ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        format!("run-{ms:x}-{}", std::process::id())
+    })
+}
+
+/// Commit identity for provenance: `GITHUB_SHA` in CI, `git rev-parse`
+/// locally, "unknown" outside a work tree.
+pub fn git_sha() -> &'static str {
+    static SHA: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    SHA.get_or_init(|| {
+        if let Ok(sha) = std::env::var("GITHUB_SHA") {
+            if !sha.is_empty() {
+                return sha.chars().take(12).collect();
+            }
+        }
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short=12", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+}
+
+/// Stamp provenance (run id, git sha, schema version) into a record,
+/// leaving any keys the caller already set alone.
+fn stamp_provenance(r: &crate::util::json::Json) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    match r {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.entry("run".to_string()).or_insert_with(|| Json::str(run_id()));
+            m.entry("git_sha".to_string()).or_insert_with(|| Json::str(git_sha()));
+            m.entry("schema".to_string())
+                .or_insert_with(|| Json::num(RESULTS_SCHEMA_VERSION as f64));
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
 /// Append JSONL records to `path` (creating parent dirs) — the
 /// results-file convention every bench main shares and
-/// scripts/summarize_results.py reads.
+/// scripts/summarize_results.py reads. Every object record is stamped
+/// with run id + git sha + schema version.
 pub fn write_jsonl(path: &str, records: &[crate::util::json::Json]) -> std::io::Result<()> {
     use std::io::Write;
     if let Some(dir) = std::path::Path::new(path).parent() {
@@ -78,7 +136,7 @@ pub fn write_jsonl(path: &str, records: &[crate::util::json::Json]) -> std::io::
         .append(true)
         .open(path)?;
     for r in records {
-        writeln!(f, "{r}")?;
+        writeln!(f, "{}", stamp_provenance(r))?;
     }
     Ok(())
 }
@@ -200,6 +258,29 @@ mod tests {
         });
         assert!(s.iters >= 3);
         assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99);
+    }
+
+    #[test]
+    fn jsonl_records_carry_provenance() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("had_bench_prov_{}", std::process::id()));
+        let path = dir.join("r.jsonl");
+        let rec = Json::obj(vec![("kind", Json::str("kernel")), ("keys_per_s", Json::num(1.0))]);
+        // A record with its own run id must not be overwritten.
+        let pinned = Json::obj(vec![("kind", Json::str("kernel")), ("run", Json::str("mine"))]);
+        write_jsonl(path.to_str().unwrap(), &[rec, pinned]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let first = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(first.get("run").and_then(|v| v.as_str()), Some(run_id()));
+        assert!(first.get("git_sha").and_then(|v| v.as_str()).is_some());
+        assert_eq!(
+            first.get("schema").and_then(|v| v.as_f64()),
+            Some(RESULTS_SCHEMA_VERSION as f64)
+        );
+        let second = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(second.get("run").and_then(|v| v.as_str()), Some("mine"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

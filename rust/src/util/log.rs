@@ -28,12 +28,27 @@ fn now_ms() -> u64 {
 }
 
 pub fn init_from_env() -> Level {
-    let lvl = match std::env::var("HAD_LOG").as_deref() {
+    let var = std::env::var("HAD_LOG");
+    let lvl = match var.as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(other) => {
+            // Warn exactly once instead of silently defaulting, so a typo
+            // like HAD_LOG=verbose doesn't masquerade as info forever.
+            static WARNED: std::sync::atomic::AtomicBool =
+                std::sync::atomic::AtomicBool::new(false);
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[had] HAD_LOG={other:?} is not a level \
+                     (error|warn|info|debug|trace); defaulting to info"
+                );
+            }
+            Level::Info
+        }
+        Err(_) => Level::Info,
     };
     LEVEL.store(lvl as u8, Ordering::Relaxed);
     START_MS.compare_exchange(0, now_ms(), Ordering::Relaxed, Ordering::Relaxed).ok();
@@ -87,17 +102,34 @@ macro_rules! log_warn { ($($t:tt)*) => { $crate::util::log::emit($crate::util::l
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), format_args!($($t)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, module_path!(), format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // LEVEL is process-global; serialize the tests that flip it.
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn levels_ordered() {
+        let _g = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         assert!(Level::Error < Level::Trace);
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn trace_macro_compiles_and_gates() {
+        let _g = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Level::Info);
+        crate::log_trace!("suppressed at info: {}", 1);
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
         set_level(Level::Info);
     }
 }

@@ -646,6 +646,7 @@ fn prop_batcher_never_exceeds_capacity_or_loses_requests() {
                 arrival: Instant::now(),
                 reply: tx,
                 session: None,
+                trace: had::obs::SpanId::NONE,
             };
             if q.len() >= cap {
                 // must reject at capacity

@@ -22,10 +22,31 @@ METHODS = ["Baseline", "HAD (ours)", "BiT", "w/ SAB", "w/o AD", "w/o Tanh"]
 
 
 def rows(name):
+    """Records from results/<name>.jsonl, restricted to the latest run.
+
+    Bench mains append, so a results file accumulates records across
+    invocations. Every record since schema v2 carries a process-stable
+    "run" id; only the run of the LAST record (the newest append) is
+    summarized, and a note labels it. Pre-v2 records have no run id and
+    are treated as one legacy run.
+    """
     path = RES / f"{name}.jsonl"
     if not path.exists():
         return []
-    return [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
+    recs = [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
+    if not recs:
+        return recs
+    run = recs[-1].get("run")
+    kept = [r for r in recs if r.get("run") == run]
+    ignored = len(recs) - len(kept)
+    older = {r.get("run") for r in recs} - {run}
+    label = run if run is not None else "(pre-schema-v2 records, no run id)"
+    sha = kept[-1].get("git_sha")
+    note = f"[run] {name}.jsonl: summarizing {label}" + (f" @ {sha}" if sha else "")
+    if ignored:
+        note += f"; ignoring {ignored} record(s) from {len(older)} older run(s)"
+    print(note, file=sys.stderr)
+    return kept
 
 
 def table1():
@@ -315,6 +336,42 @@ def generate():
             )
 
 
+def trace_attribution():
+    """Per-stage time-attribution table from results/trace/trace.json
+    (written by a bench run under HAD_TRACE=results/trace)."""
+    path = RES / "trace" / "trace.json"
+    if not path.exists():
+        return
+    try:
+        trace = json.loads(path.read_text())
+        events = trace["traceEvents"]
+    except (json.JSONDecodeError, KeyError) as e:
+        print(f"\n(trace present but unreadable: {e})")
+        return
+    spans = [e for e in events if e.get("ph") == "X"]
+    if not spans:
+        return
+    wall_us = max(e["ts"] + e["dur"] for e in spans) - min(e["ts"] for e in spans)
+    by_stage = defaultdict(lambda: [0, 0.0])  # name -> [count, total µs]
+    for e in spans:
+        agg = by_stage[e.get("name", "?")]
+        agg[0] += 1
+        agg[1] += e["dur"]
+    print("\n### Trace: per-stage time attribution (measured)\n")
+    print(f"{len(spans)} spans over {wall_us / 1e3:.1f} ms of traced wall time")
+    print("(umbrella spans — request/stream/tick/decode — overlap their children)\n")
+    print("| stage | spans | total (ms) | share of wall |")
+    print("|---|---|---|---|")
+    for name, (count, total) in sorted(by_stage.items(), key=lambda kv: -kv[1][1]):
+        share = 100.0 * total / wall_us if wall_us else float("nan")
+        print(f"| {name} | {count} | {total / 1e3:.2f} | {share:.1f}% |")
+    meta = next((e for e in events if e.get("name") == "trace_meta"), None)
+    if meta:
+        dropped = meta.get("args", {}).get("dropped_spans", 0)
+        if dropped:
+            print(f"\n({dropped} span(s) dropped to ring wraparound — attribution is partial)")
+
+
 if __name__ == "__main__":
     table1()
     table2()
@@ -326,6 +383,7 @@ if __name__ == "__main__":
     kvcache()
     serve()
     generate()
+    trace_attribution()
     t3 = rows("table3")
     if t3:
         r = t3[-1]

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace-event JSON file (the `HAD_TRACE` exporter's
+trace.json): parses as JSON, has the trace-event envelope, and every
+event carries the keys Perfetto / chrome://tracing need to render it.
+
+Usage: python3 scripts/validate_trace.py results/trace/trace.json
+
+Exits non-zero (listing the problems) on an invalid trace — CI's
+bench-smoke step runs it against the trace its HAD_TRACE leg emitted.
+Importable: `validate(path)` returns the list of problems (empty = ok).
+"""
+
+import json
+import sys
+
+# keys every complete ("X") span event must carry, with their types
+SPAN_KEYS = {"name": str, "ph": str, "pid": int, "tid": int, "ts": int, "dur": int}
+
+
+def validate(path):
+    problems = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    except json.JSONDecodeError as e:
+        return [f"{path} is not valid JSON: {e}"]
+    if not isinstance(trace, dict):
+        return [f"{path}: top level must be an object, got {type(trace).__name__}"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: missing traceEvents array"]
+    n_spans = 0
+    ids = set()
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph == "M":  # metadata events only need name/ph
+            if not isinstance(e.get("name"), str):
+                problems.append(f"event {i}: metadata event without a name")
+            continue
+        if ph != "X":
+            problems.append(f"event {i}: unexpected phase {ph!r} (exporter emits X and M)")
+            continue
+        n_spans += 1
+        for key, typ in SPAN_KEYS.items():
+            if not isinstance(e.get(key), typ):
+                problems.append(f"event {i} ({e.get('name')!r}): bad/missing {key}")
+        if e.get("dur", 0) < 0 or e.get("ts", 0) < 0:
+            problems.append(f"event {i} ({e.get('name')!r}): negative ts/dur")
+        args = e.get("args", {})
+        if not isinstance(args, dict) or "id" not in args or "parent" not in args:
+            problems.append(f"event {i} ({e.get('name')!r}): args must carry id and parent")
+        else:
+            ids.add(args["id"])
+    # parent links must resolve (0 = root) — unless the recorder dropped
+    # spans to ring wraparound, in which case missing parents are expected
+    meta = next(
+        (e for e in events if isinstance(e, dict) and e.get("name") == "trace_meta"), None
+    )
+    dropped = (meta or {}).get("args", {}).get("dropped_spans", 0)
+    if not dropped:
+        for i, e in enumerate(events):
+            if isinstance(e, dict) and e.get("ph") == "X":
+                parent = e.get("args", {}).get("parent")
+                if parent not in (None, 0) and parent not in ids:
+                    problems.append(
+                        f"event {i} ({e.get('name')!r}): parent {parent} not in the trace"
+                    )
+    if n_spans == 0:
+        problems.append(f"{path}: no span (ph=X) events")
+    return problems
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    problems = validate(argv[1])
+    if problems:
+        print(f"[trace] FAIL: {argv[1]}")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    with open(argv[1]) as f:
+        n = sum(1 for e in json.load(f)["traceEvents"] if e.get("ph") == "X")
+    print(f"[trace] OK: {argv[1]} ({n} spans)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
