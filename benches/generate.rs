@@ -41,7 +41,7 @@ fn main() {
         &mut kv_state,
         &[],
         &GenerateRequest::greedy(prompt.clone(), n_new),
-        &GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget },
+        &GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget, ..GenLimits::unbounded() },
         |_, _| token_at.push(Instant::now()),
     );
     assert_eq!(out.reason, StopReason::MaxTokens);

@@ -1,0 +1,386 @@
+//! Adversarial stress harness for the continuous-batching coordinator:
+//! scenario generators (bursty arrivals, long-tail prompt lengths, slow
+//! readers, disconnect storms, seeded fault sweeps) that drive a live
+//! `Server` and assert the robustness invariants on every scenario —
+//!
+//!   * every admitted stream retires with an explicit `StopReason`
+//!     (measured as `Snapshot::gen_streams == admitted`, which counts
+//!     only `record_stream_retired` calls);
+//!   * the page pool returns to its baseline (0 bytes) once every
+//!     session ends — no leaked pages, whatever faults fired mid-flight;
+//!   * the scheduler never deadlocks: a watchdog thread hard-exits the
+//!     process (code 3) if a scenario overruns its budget.
+//!
+//! Runs under an ambient `HAD_FAULT` plan unchanged (the CI chaos leg
+//! does exactly that), so invariant checks are fault-agnostic; the
+//! fault-sweep scenario additionally pins its own seeded plan through
+//! `Server::start_cpu_chaos` for reproducibility. Appends
+//! machine-readable records to results/stress.jsonl (provenance-stamped
+//! schema v2) for scripts/validate_stress.py.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::generate::{GenerateRequest, StreamEvent};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::bench::{quick_env, write_jsonl};
+use had::util::fault::FaultPlan;
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+const N_CTX: usize = 128;
+
+fn kv_cfg() -> KvCacheConfig {
+    KvCacheConfig { page_tokens: 16, ..Default::default() }
+}
+
+fn stress_server(model: &ServeModel, policy: BatchPolicy) -> Server {
+    let kv = kv_cfg();
+    let router =
+        Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
+    Server::start_cpu_with_kv(HadBackend::new(model.clone(), &kv), router, policy, kv)
+        .expect("server start")
+}
+
+fn chaos_server(model: &ServeModel, policy: BatchPolicy, plan: FaultPlan) -> Server {
+    let kv = kv_cfg();
+    let router =
+        Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
+    Server::start_cpu_chaos(HadBackend::new(model.clone(), &kv), router, policy, kv, plan)
+        .expect("server start")
+}
+
+/// Arm a deadlock watchdog: unless the returned flag is set within
+/// `timeout`, the process exits 3 (distinct from assertion failures) so
+/// CI reports a hang instead of idling until the job limit.
+fn arm_watchdog(name: &'static str, timeout: Duration) -> Arc<AtomicBool> {
+    let done = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&done);
+    std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        eprintln!("[stress] WATCHDOG: scenario '{name}' still live after {timeout:?} — deadlock suspected");
+        std::process::exit(3);
+    });
+    done
+}
+
+/// Poll the server until every admitted stream has retired (explicit
+/// `StopReason` — the only path that increments `gen_streams`).
+fn wait_retired(server: &Server, admitted: u64) {
+    while server.metrics.snapshot().gen_streams < admitted {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// End every session and return the bytes still resident in the pool
+/// (the leak count: must be 0 once nothing references the pool).
+fn leaked_bytes(server: &Server, sids: &[u64]) -> usize {
+    let store = server.sessions();
+    let mut store = store.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for &sid in sids {
+        store.end_session(sid);
+    }
+    store.pool().bytes()
+}
+
+struct Outcome {
+    admitted: u64,
+    done_events: u64,
+    leaked: usize,
+}
+
+impl Outcome {
+    fn record(&self, name: &str, server: &Server) -> Json {
+        let snap = server.metrics.snapshot();
+        assert_eq!(
+            snap.gen_streams, self.admitted,
+            "{name}: every admitted stream must retire with an explicit StopReason"
+        );
+        assert_eq!(self.leaked, 0, "{name}: page pool must return to baseline");
+        Json::obj(vec![
+            ("kind", Json::str("stress")),
+            ("name", Json::str(name)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("retired", Json::num(snap.gen_streams as f64)),
+            ("done_events", Json::num(self.done_events as f64)),
+            ("leaked_bytes", Json::num(self.leaked as f64)),
+            ("watchdog_ok", Json::Bool(true)),
+            ("ttft_p99_us", Json::num(snap.ttft_p99_us as f64)),
+            ("faults_injected", Json::num(snap.faults_injected as f64)),
+            ("deadline_exceeded", Json::num(snap.deadline_exceeded as f64)),
+            ("slow_reader_disconnects", Json::num(snap.slow_reader_disconnects as f64)),
+            ("stream_errors", Json::num(snap.stream_errors as f64)),
+        ])
+    }
+}
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.below(256) as i32).collect()
+}
+
+/// Drain receivers on reader threads; returns how many saw a Done event.
+fn drain_all(rxs: Vec<std::sync::mpsc::Receiver<StreamEvent>>, read_delay: Duration) -> u64 {
+    let handles: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| {
+            std::thread::spawn(move || {
+                let mut saw_done = 0u64;
+                for event in rx.iter() {
+                    if !read_delay.is_zero() {
+                        std::thread::sleep(read_delay);
+                    }
+                    if let StreamEvent::Done { .. } = event {
+                        saw_done = 1;
+                        break;
+                    }
+                }
+                saw_done
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("reader thread")).sum()
+}
+
+/// Bursty arrivals: waves of concurrent streams separated by idle gaps.
+fn scenario_burst(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("burst", Duration::from_secs(120));
+    let (waves, per_wave, n_new) = if quick { (2, 4, 6) } else { (4, 8, 12) };
+    let server = stress_server(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 8,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(0xB0057);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut sids = Vec::new();
+    for wave in 0..waves {
+        let mut rxs = Vec::new();
+        for i in 0..per_wave {
+            let sid = (wave * per_wave + i) as u64;
+            let p = prompt(&mut rng, 8 + rng.below(24) as usize);
+            if let Ok(rx) = server.submit_generate(sid, GenerateRequest::greedy(p, n_new)) {
+                admitted += 1;
+                sids.push(sid);
+                rxs.push(rx);
+            }
+        }
+        done_events += drain_all(rxs, Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked };
+    let rec = out.record("burst", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Long-tail lengths: mixed short prompts and near-cap prompts racing
+/// through the same pool (chunked prefill keeps ticks bounded).
+fn scenario_longtail(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("longtail", Duration::from_secs(120));
+    let n = if quick { 6 } else { 12 };
+    let server = stress_server(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 4,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(0x7A17);
+    let mut admitted = 0u64;
+    let mut sids = Vec::new();
+    let mut rxs = Vec::new();
+    for sid in 0..n as u64 {
+        // 1/3 near-cap prompts, the rest short — long prefills must not
+        // starve the short streams or wedge admission
+        let len = if sid % 3 == 0 { N_CTX - 16 } else { 4 + rng.below(12) as usize };
+        let n_new = if sid % 3 == 0 { 4 } else { 8 };
+        if let Ok(rx) = server.submit_generate(sid, GenerateRequest::greedy(prompt(&mut rng, len), n_new)) {
+            admitted += 1;
+            sids.push(sid);
+            rxs.push(rx);
+        }
+    }
+    let done_events = drain_all(rxs, Duration::ZERO);
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked };
+    let rec = out.record("longtail", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Slow readers: tiny bounded event channels and readers that sleep
+/// between events — the scheduler must disconnect them, never block.
+fn scenario_slow_reader(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("slow_reader", Duration::from_secs(120));
+    let n = if quick { 4 } else { 8 };
+    let server = stress_server(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 8,
+            stream_event_cap: 2,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(0x510);
+    let mut admitted = 0u64;
+    let mut sids = Vec::new();
+    let mut rxs = Vec::new();
+    for sid in 0..n as u64 {
+        if let Ok(rx) = server.submit_generate(sid, GenerateRequest::greedy(prompt(&mut rng, 12), 24)) {
+            admitted += 1;
+            sids.push(sid);
+            rxs.push(rx);
+        }
+    }
+    // readers sleep far longer than a decode step: channels fill
+    let done_events = drain_all(rxs, Duration::from_millis(25));
+    wait_retired(&server, admitted);
+    if std::env::var("HAD_FAULT").is_err() {
+        // without ambient faults racing retirement, at least one stream
+        // must have hit the slow-reader disconnect path
+        assert!(
+            server.metrics.snapshot().slow_reader_disconnects >= 1,
+            "slow_reader: bounded channels never filled"
+        );
+    }
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked };
+    let rec = out.record("slow_reader", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Disconnect storm: half the clients drop their receivers immediately
+/// after admission; the other half read normally.
+fn scenario_disconnect_storm(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("disconnect_storm", Duration::from_secs(120));
+    let n = if quick { 6 } else { 12 };
+    let server = stress_server(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 6,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(0xD15C);
+    let mut admitted = 0u64;
+    let mut sids = Vec::new();
+    let mut rxs = Vec::new();
+    for sid in 0..n as u64 {
+        match server.submit_generate(sid, GenerateRequest::greedy(prompt(&mut rng, 10), 12)) {
+            Ok(rx) => {
+                admitted += 1;
+                sids.push(sid);
+                if sid % 2 == 0 {
+                    drop(rx); // storm: client vanishes right away
+                } else {
+                    rxs.push(rx);
+                }
+            }
+            Err(_) => {}
+        }
+    }
+    let done_events = drain_all(rxs, Duration::ZERO);
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked };
+    let rec = out.record("disconnect_storm", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Seeded fault sweep: every injection site live at once, pinned to an
+/// instance-scoped plan so the sweep replays identically per seed.
+fn scenario_fault_sweep(model: &ServeModel, quick: bool, seed: u64) -> Json {
+    let done = arm_watchdog("fault_sweep", Duration::from_secs(180));
+    let n = if quick { 6 } else { 12 };
+    let spec = format!(
+        "decode_step:0.3:2,worker_panic:0.15,client_disconnect:0.1,pool_pressure:0.2,queue_stall:0.1:2,seed={seed}"
+    );
+    let plan = FaultPlan::parse(&spec).expect("fault spec");
+    let server = chaos_server(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 4,
+            stream_deadline_ms: 30_000,
+            ..Default::default()
+        },
+        plan,
+    );
+    let mut rng = Rng::new(seed ^ 0xFA175);
+    let mut admitted = 0u64;
+    let mut sids = Vec::new();
+    let mut rxs = Vec::new();
+    for sid in 0..n as u64 {
+        if let Ok(rx) = server.submit_generate(sid, GenerateRequest::greedy(prompt(&mut rng, 16), 10)) {
+            admitted += 1;
+            sids.push(sid);
+            rxs.push(rx);
+        }
+    }
+    let done_events = drain_all(rxs, Duration::ZERO);
+    wait_retired(&server, admitted);
+    assert!(
+        server.metrics.snapshot().faults_injected > 0,
+        "fault_sweep: the seeded plan never fired"
+    );
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked };
+    let rec = out.record("fault_sweep", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+fn main() {
+    let quick = quick_env();
+    let model = ServeModel::random(&demo_config("stress", N_CTX, 32), 0x57E5).expect("model");
+    let mut records: Vec<Json> = Vec::new();
+
+    let seeds: &[u64] = if quick { &[7] } else { &[7, 11, 13] };
+    let scenarios: Vec<(&str, Json)> = {
+        let mut v = Vec::new();
+        v.push(("burst", scenario_burst(&model, quick)));
+        v.push(("longtail", scenario_longtail(&model, quick)));
+        v.push(("slow_reader", scenario_slow_reader(&model, quick)));
+        v.push(("disconnect_storm", scenario_disconnect_storm(&model, quick)));
+        for &s in seeds {
+            v.push(("fault_sweep", scenario_fault_sweep(&model, quick, s)));
+        }
+        v
+    };
+    for (name, rec) in scenarios {
+        println!(
+            "stress/{name}: admitted {} retired {} leaked {} B | ttft p99 {:.2} ms | faults {}",
+            rec.get("admitted").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("retired").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("leaked_bytes").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("ttft_p99_us").and_then(Json::as_f64).unwrap_or(0.0) / 1e3,
+            rec.get("faults_injected").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+        records.push(rec);
+    }
+
+    write_jsonl("results/stress.jsonl", &records).expect("write results/stress.jsonl");
+    println!("\nall stress scenarios passed; {} records -> results/stress.jsonl", records.len());
+}

@@ -44,7 +44,7 @@ fn main() {
         kv,
     )
     .expect("server start");
-    let limits = GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget };
+    let limits = GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget, ..GenLimits::unbounded() };
 
     let mut rng = Rng::new(0xABCD);
     let prompts: Vec<Vec<i32>> = (0..n_sessions)

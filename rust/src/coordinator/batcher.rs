@@ -27,6 +27,26 @@ pub struct BatchPolicy {
     /// scheduler tick; admitted streams beyond this wait in the
     /// `StreamQueue` until a ticket frees up.
     pub max_streams: usize,
+    /// longest not-yet-resident context suffix a stream may decode in a
+    /// single scheduler tick: longer prefills are split into chunks of
+    /// this many tokens so one long admission cannot stall every active
+    /// stream for a whole context's worth of decode (fair ticks)
+    pub prefill_chunk: usize,
+    /// per-stream event channel bound: a client that falls this many
+    /// undelivered `StreamEvent`s behind is treated as disconnected
+    /// (slow-reader policy) instead of buffering without bound
+    pub stream_event_cap: usize,
+    /// how long an admitted stream may wait un-activated in the
+    /// `StreamQueue` before it is retired with
+    /// `StopReason::DeadlineExceeded`; once the queue HEAD is older than
+    /// this, new submissions are rejected with `RejectReason::Timeout`
+    pub queue_ttl: Duration,
+    /// wall-clock deadline per stream (submission -> retirement), carried
+    /// into `GenLimits::deadline_ms`; `u64::MAX` disables it
+    pub stream_deadline_ms: u64,
+    /// on shutdown, how long in-flight streams may keep stepping before
+    /// the scheduler force-retires them with `StopReason::Shutdown`
+    pub drain_grace: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -37,6 +57,11 @@ impl Default for BatchPolicy {
             queue_cap: 256,
             kernel_workers: 2,
             max_streams: 8,
+            prefill_chunk: 64,
+            stream_event_cap: 256,
+            queue_ttl: Duration::from_secs(30),
+            stream_deadline_ms: u64::MAX,
+            drain_grace: Duration::from_secs(5),
         }
     }
 }
@@ -155,6 +180,18 @@ impl StreamQueue {
     pub fn pop(&mut self) -> Option<GenAdmit> {
         self.queue.pop_front()
     }
+
+    /// The queue head (next stream to activate), if any. Admission uses
+    /// its age to detect a stalled scheduler (`RejectReason::Timeout`).
+    pub fn front(&self) -> Option<&GenAdmit> {
+        self.queue.front()
+    }
+
+    /// Take every queued stream (drain shutdown: each is retired with an
+    /// explicit reason instead of being silently dropped).
+    pub fn drain_all(&mut self) -> Vec<GenAdmit> {
+        self.queue.drain(..).collect()
+    }
 }
 
 /// Assemble a padded (batch, n_ctx) i32 tensor from requests. Slots beyond
@@ -209,13 +246,20 @@ mod tests {
         // queue knobs unchanged by the kernel pool addition
         assert_eq!(p.max_batch, 8);
         assert_eq!(p.queue_cap, 256);
+        // robustness knobs: bounded prefill work, bounded event buffers,
+        // finite queue TTL, no per-stream deadline unless asked for
+        assert!(p.prefill_chunk >= 1);
+        assert!(p.stream_event_cap >= 1);
+        assert!(p.queue_ttl > Duration::ZERO);
+        assert_eq!(p.stream_deadline_ms, u64::MAX);
+        assert!(p.drain_grace > Duration::ZERO);
     }
 
     #[test]
     fn stream_queue_is_fifo_and_bounded() {
         use crate::generate::{GenState, GenerateRequest};
         let admit = |id: u64| {
-            let (tx, _rx) = channel();
+            let (tx, _rx) = std::sync::mpsc::sync_channel(8);
             GenAdmit {
                 id,
                 session: id,
@@ -235,6 +279,16 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 0, "FIFO");
         assert_eq!(q.pop().unwrap().id, 1);
         assert!(q.pop().is_none());
+
+        // front() peeks without consuming; drain_all() empties the queue
+        let mut q = StreamQueue::new(4);
+        q.push(admit(7)).map_err(|_| ()).unwrap();
+        q.push(admit(8)).map_err(|_| ()).unwrap();
+        assert_eq!(q.front().unwrap().id, 7);
+        assert_eq!(q.len(), 2, "front() does not consume");
+        let drained = q.drain_all();
+        assert_eq!(drained.iter().map(|a| a.id).collect::<Vec<_>>(), vec![7, 8]);
+        assert!(q.is_empty());
     }
 
     #[test]

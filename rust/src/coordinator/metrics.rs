@@ -12,6 +12,7 @@ use std::fmt;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::generate::StopReason;
 use crate::obs::{Counter, Gauge, Histogram, Registry};
 
 /// Wall-clock anchors that can't be counters: serving start (for req/s)
@@ -45,6 +46,14 @@ pub struct Metrics {
     gen_streams: Arc<Counter>,
     gen_tokens: Arc<Counter>,
     gen_budget_stops: Arc<Counter>,
+    // robustness counters
+    deadline_exceeded: Arc<Counter>,
+    drain_shutdowns: Arc<Counter>,
+    stream_errors: Arc<Counter>,
+    slow_reader_disconnects: Arc<Counter>,
+    faults_injected: Arc<Counter>,
+    decode_errors: Arc<Counter>,
+    admission_deferrals: Arc<Counter>,
     // gauges (absolute values, last write wins)
     cache_bytes: Arc<Gauge>,
     cache_evictions: Arc<Gauge>,
@@ -73,6 +82,13 @@ impl Default for Metrics {
             gen_streams: registry.counter("gen_streams"),
             gen_tokens: registry.counter("gen_tokens"),
             gen_budget_stops: registry.counter("gen_budget_stops"),
+            deadline_exceeded: registry.counter("deadline_exceeded"),
+            drain_shutdowns: registry.counter("drain_shutdowns"),
+            stream_errors: registry.counter("stream_errors"),
+            slow_reader_disconnects: registry.counter("slow_reader_disconnects"),
+            faults_injected: registry.counter("faults_injected"),
+            decode_errors: registry.counter("decode_errors"),
+            admission_deferrals: registry.counter("admission_deferrals"),
             cache_bytes: registry.gauge("cache_bytes"),
             cache_evictions: registry.gauge("cache_evictions"),
             queue_depth: registry.gauge("queue_depth"),
@@ -139,6 +155,27 @@ pub struct Snapshot {
     pub gen_tokens: u64,
     /// streams retired by context/KV budget pressure (StopReason::Budget)
     pub gen_budget_stops: u64,
+    /// streams retired because their wall-clock deadline or queue TTL
+    /// elapsed (StopReason::DeadlineExceeded)
+    pub deadline_exceeded: u64,
+    /// in-flight or queued streams force-retired by a drain shutdown
+    /// (StopReason::Shutdown)
+    pub drain_shutdowns: u64,
+    /// streams retired because their decode step panicked
+    /// (StopReason::Error; the panic was isolated)
+    pub stream_errors: u64,
+    /// streams disconnected because the client stopped draining its
+    /// bounded event channel (slow-reader policy)
+    pub slow_reader_disconnects: u64,
+    /// faults fired by `util::fault` injection sites (0 unless a chaos
+    /// plan is active)
+    pub faults_injected: u64,
+    /// classification batch shards whose decode panicked (requests in
+    /// the shard got no response; the batch survived)
+    pub decode_errors: u64,
+    /// admission rounds in which a queued stream was deferred because
+    /// activating it would overcommit the pool's aggregate byte budget
+    pub admission_deferrals: u64,
     /// time-to-first-token percentiles/mean (µs; admission -> emission)
     pub ttft_p50_us: u128,
     pub ttft_p99_us: u128,
@@ -240,13 +277,40 @@ impl Metrics {
         c.gen_last = Some(now);
     }
 
-    /// A generation stream retired (`budget`: stopped by context or KV
-    /// byte pressure rather than its own stop conditions).
-    pub fn record_stream_retired(&self, budget: bool) {
+    /// A generation stream retired, classified by its stop reason:
+    /// budget stops, deadline misses, drain shutdowns, and isolated
+    /// panics get their own counters on top of the stream total.
+    pub fn record_stream_retired(&self, reason: StopReason) {
         self.gen_streams.inc();
-        if budget {
-            self.gen_budget_stops.inc();
+        match reason {
+            StopReason::Budget => self.gen_budget_stops.inc(),
+            StopReason::DeadlineExceeded => self.deadline_exceeded.inc(),
+            StopReason::Shutdown => self.drain_shutdowns.inc(),
+            StopReason::Error => self.stream_errors.inc(),
+            StopReason::StopToken | StopReason::MaxTokens | StopReason::Disconnected => {}
         }
+    }
+
+    /// A client fell `stream_event_cap` events behind and was
+    /// disconnected (always paired with a Disconnected retirement).
+    pub fn record_slow_reader(&self) {
+        self.slow_reader_disconnects.inc();
+    }
+
+    /// One injected fault fired at an injection site.
+    pub fn record_fault(&self) {
+        self.faults_injected.inc();
+    }
+
+    /// A classification batch shard panicked mid-decode (isolated).
+    pub fn record_decode_error(&self) {
+        self.decode_errors.inc();
+    }
+
+    /// A queued stream was held back this round because activating it
+    /// would push aggregate checked-out bytes past the pool budget.
+    pub fn record_admission_deferral(&self) {
+        self.admission_deferrals.inc();
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -304,6 +368,13 @@ impl Metrics {
             gen_streams: self.gen_streams.get(),
             gen_tokens,
             gen_budget_stops: self.gen_budget_stops.get(),
+            deadline_exceeded: self.deadline_exceeded.get(),
+            drain_shutdowns: self.drain_shutdowns.get(),
+            stream_errors: self.stream_errors.get(),
+            slow_reader_disconnects: self.slow_reader_disconnects.get(),
+            faults_injected: self.faults_injected.get(),
+            decode_errors: self.decode_errors.get(),
+            admission_deferrals: self.admission_deferrals.get(),
             ttft_p50_us: self.ttft.percentile(0.50) as u128,
             ttft_p99_us: self.ttft.percentile(0.99) as u128,
             ttft_mean_us: self.ttft.mean(),
@@ -371,6 +442,25 @@ impl Snapshot {
                 self.inter_token_p50_us as f64 / 1e3,
                 self.inter_token_p99_us as f64 / 1e3,
                 self.gen_tokens_per_s,
+            );
+        }
+        let robustness = self.deadline_exceeded
+            + self.drain_shutdowns
+            + self.stream_errors
+            + self.slow_reader_disconnects
+            + self.faults_injected
+            + self.decode_errors
+            + self.admission_deferrals;
+        if robustness > 0 {
+            println!(
+                "{label}: robustness: {} deadline-exceeded, {} drain-shutdown, {} stream-error, {} slow-reader, {} decode-error, {} admission-deferral | {} faults injected",
+                self.deadline_exceeded,
+                self.drain_shutdowns,
+                self.stream_errors,
+                self.slow_reader_disconnects,
+                self.decode_errors,
+                self.admission_deferrals,
+                self.faults_injected,
             );
         }
         if self.decode_requests > 0 {
@@ -478,11 +568,11 @@ mod tests {
         m.record_first_token(500);
         m.record_inter_token(40);
         m.record_inter_token(60);
-        m.record_stream_retired(false);
+        m.record_stream_retired(StopReason::StopToken);
         std::thread::sleep(std::time::Duration::from_millis(2));
         m.record_first_token(900);
         m.record_inter_token(80);
-        m.record_stream_retired(true);
+        m.record_stream_retired(StopReason::Budget);
         let s = m.snapshot();
         assert_eq!(s.gen_streams, 2);
         assert_eq!(s.gen_tokens, 5);
@@ -503,6 +593,40 @@ mod tests {
             "post-generation idle time deflated throughput: {}",
             late.gen_tokens_per_s
         );
+    }
+
+    #[test]
+    fn robustness_counters_classify_retirements() {
+        let m = Metrics::default();
+        let empty = m.snapshot();
+        assert_eq!(empty.deadline_exceeded, 0);
+        assert_eq!(empty.faults_injected, 0);
+        m.record_stream_retired(StopReason::DeadlineExceeded);
+        m.record_stream_retired(StopReason::DeadlineExceeded);
+        m.record_stream_retired(StopReason::Shutdown);
+        m.record_stream_retired(StopReason::Error);
+        m.record_stream_retired(StopReason::Disconnected);
+        m.record_stream_retired(StopReason::MaxTokens);
+        m.record_slow_reader();
+        m.record_fault();
+        m.record_fault();
+        m.record_fault();
+        m.record_decode_error();
+        m.record_admission_deferral();
+        let s = m.snapshot();
+        assert_eq!(s.gen_streams, 6, "every retirement counts a stream");
+        assert_eq!(s.deadline_exceeded, 2);
+        assert_eq!(s.drain_shutdowns, 1);
+        assert_eq!(s.stream_errors, 1);
+        assert_eq!(s.gen_budget_stops, 0);
+        assert_eq!(s.slow_reader_disconnects, 1);
+        assert_eq!(s.faults_injected, 3);
+        assert_eq!(s.decode_errors, 1);
+        assert_eq!(s.admission_deferrals, 1);
+        // and they land in the registry for the trace exporter
+        let snap = format!("{}", m.registry().snapshot_json());
+        assert!(snap.contains("\"deadline_exceeded\":2"));
+        assert!(snap.contains("\"faults_injected\":3"));
     }
 
     #[test]

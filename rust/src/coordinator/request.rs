@@ -1,6 +1,6 @@
 //! Request/response types for the long-context serving engine.
 
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Sender, SyncSender};
 use std::time::Instant;
 
 use crate::generate::{GenState, StreamEvent};
@@ -68,7 +68,10 @@ pub struct GenAdmit {
     pub id: u64,
     pub session: u64,
     pub state: GenState,
-    pub reply: Sender<StreamEvent>,
+    /// Bounded event channel (`BatchPolicy::stream_event_cap`): a reader
+    /// that falls `cap` events behind is disconnected rather than
+    /// buffering without bound (`StopReason::Disconnected`).
+    pub reply: SyncSender<StreamEvent>,
     pub arrival: Instant,
     /// session history length (including this prompt) at admission
     pub admitted_len: usize,
@@ -91,6 +94,10 @@ pub enum RejectReason {
     /// operation the active execution backend cannot serve (generation
     /// requires the CPU backend; the legacy PJRT path has no token loop)
     Unsupported,
+    /// the admission queue's head has already waited past the queue TTL
+    /// (`BatchPolicy::queue_ttl`) — the scheduler is stalled or
+    /// saturated, so queueing more work would only time out too
+    Timeout,
 }
 
 impl std::fmt::Display for RejectReason {
@@ -101,6 +108,7 @@ impl std::fmt::Display for RejectReason {
             RejectReason::ShuttingDown => write!(f, "server shutting down"),
             RejectReason::EmptyGeneration => write!(f, "generation needs a non-empty context"),
             RejectReason::Unsupported => write!(f, "unsupported on this execution backend"),
+            RejectReason::Timeout => write!(f, "admission queue stalled past its TTL"),
         }
     }
 }

@@ -76,8 +76,19 @@ pub enum StopReason {
     /// Context length or KV byte budget exhausted — the stream keeps
     /// everything generated so far instead of resetting the session.
     Budget,
-    /// The client dropped its receiver mid-stream (coordinator only).
+    /// The client dropped its receiver mid-stream, or fell so far behind
+    /// that its bounded event channel filled (coordinator only).
     Disconnected,
+    /// The stream's wall-clock deadline (`GenLimits::deadline_ms`) or
+    /// the admission queue's TTL elapsed before the stream finished.
+    DeadlineExceeded,
+    /// The stream's decode step panicked; the stream retires with the
+    /// tokens generated so far and its KV is discarded (coordinator
+    /// only — the panic is isolated, the server keeps running).
+    Error,
+    /// The server shut down and drained the stream before it finished
+    /// (coordinator only).
+    Shutdown,
 }
 
 impl std::fmt::Display for StopReason {
@@ -87,6 +98,9 @@ impl std::fmt::Display for StopReason {
             StopReason::MaxTokens => write!(f, "max-tokens"),
             StopReason::Budget => write!(f, "budget"),
             StopReason::Disconnected => write!(f, "disconnected"),
+            StopReason::DeadlineExceeded => write!(f, "deadline-exceeded"),
+            StopReason::Error => write!(f, "error"),
+            StopReason::Shutdown => write!(f, "shutdown"),
         }
     }
 }
@@ -102,22 +116,31 @@ pub struct GenLimits {
     /// uses the page pool's byte budget, so a stream never checks an
     /// over-budget state back in.
     ///
-    /// This is a PER-STREAM bound: with `max_streams` concurrent
-    /// generations the aggregate checked-out residency can transiently
-    /// reach `max_streams * kv_budget_bytes` before retirements enforce
-    /// the pool budget. The cap must be a constant per stream — deriving
-    /// it from other live streams' sizes would make a stream's Budget
-    /// stop depend on scheduling interleaving, breaking the
-    /// coordinator-equals-direct-engine determinism contract. Aggregate
-    /// checked-out accounting (shrinking tickets, not limits) is a
-    /// ROADMAP follow-on.
+    /// This is a PER-STREAM bound and must stay a constant per stream —
+    /// deriving it from other live streams' sizes would make a stream's
+    /// Budget stop depend on scheduling interleaving, breaking the
+    /// coordinator-equals-direct-engine determinism contract. The
+    /// aggregate pool budget is enforced separately at ADMISSION: the
+    /// scheduler reserves each stream's worst-case residency
+    /// (`bytes_at(context + max_new_tokens)`, capped at this limit)
+    /// before activating it, so the sum of checked-out bytes never
+    /// exceeds the pool budget without touching per-stream limits.
     pub kv_budget_bytes: usize,
+    /// Wall-clock deadline per stream, measured from submission: a
+    /// stream still running after this many milliseconds retires with
+    /// [`StopReason::DeadlineExceeded`]. `u64::MAX` disables it.
+    /// Checked between steps, so one in-flight decode can overshoot.
+    pub deadline_ms: u64,
 }
 
 impl GenLimits {
     /// No serving bounds (direct engine runs, tests).
     pub fn unbounded() -> GenLimits {
-        GenLimits { max_total_tokens: usize::MAX, kv_budget_bytes: usize::MAX }
+        GenLimits {
+            max_total_tokens: usize::MAX,
+            kv_budget_bytes: usize::MAX,
+            deadline_ms: u64::MAX,
+        }
     }
 }
 
@@ -193,6 +216,46 @@ impl GenState {
         self.tokens.len() - self.context_len
     }
 
+    /// The request's generation cap (used by the coordinator to reserve
+    /// the stream's worst-case KV residency at admission).
+    pub fn max_new_tokens(&self) -> usize {
+        self.max_new_tokens
+    }
+
+    /// Decode up to `chunk` not-yet-resident context tokens into `kv`
+    /// WITHOUT sampling — a resumable slice of the prefill, so a long
+    /// admission contributes bounded work per scheduler tick instead of
+    /// stalling every active stream. Returns `Some(reason)` if the
+    /// stream should retire (same budget checks as [`GenState::step`],
+    /// run before any page is allocated), `None` after decoding a chunk.
+    /// Callers switch to `step` once `kv.len() + 1 >= tokens.len()`;
+    /// causal decode is chunk-split invariant, so the resulting stream
+    /// is bit-identical to an unchunked prefill.
+    pub fn prefill_partial(
+        &self,
+        backend: &HadBackend,
+        kv: &mut LayeredKv,
+        limits: &GenLimits,
+        chunk: usize,
+        path: AttnPath,
+        scratch: &mut Scratch,
+    ) -> Option<StopReason> {
+        if self.n_generated() >= self.max_new_tokens {
+            return Some(StopReason::MaxTokens);
+        }
+        let len = self.tokens.len();
+        if len >= limits.max_total_tokens || kv.bytes_at(len) > limits.kv_budget_bytes {
+            return Some(StopReason::Budget);
+        }
+        let end = (kv.len() + chunk.max(1)).min(len - 1);
+        debug_assert!(end > kv.len(), "prefill_partial on a warm stream");
+        let mut s = crate::obs::span("prefill_chunk");
+        s.set_payload((end - kv.len()) as u64);
+        // empty capture list: pure KV production, no logits
+        backend.decode_in(kv, &self.tokens[..end], &[], path, scratch);
+        None
+    }
+
     /// Advance the stream by one decode-and-sample step (see module
     /// docs). Budget checks run BEFORE the decode so a retiring stream
     /// never grows `kv` past the limits it is checked against.
@@ -266,7 +329,16 @@ pub fn generate(
 ) -> GenerateOutput {
     let mut state = GenState::new(history.to_vec(), req);
     let mut scratch = Scratch::default();
+    let started = std::time::Instant::now();
     loop {
+        if limits.deadline_ms != u64::MAX
+            && started.elapsed().as_millis() as u64 >= limits.deadline_ms
+        {
+            return GenerateOutput {
+                tokens: state.generated().to_vec(),
+                reason: StopReason::DeadlineExceeded,
+            };
+        }
         let index = state.n_generated();
         match state.step(backend, kv, limits, AttnPath::Kernel, &mut scratch) {
             StepOut::Token(t) => on_token(index, t),
@@ -384,7 +456,7 @@ mod tests {
         let kv0 = b.fresh_kv();
         let two_pages = kv0.bytes_at(8);
         assert_eq!(two_pages, 2 * 4 * 288);
-        let limits = GenLimits { max_total_tokens: usize::MAX, kv_budget_bytes: two_pages };
+        let limits = GenLimits { kv_budget_bytes: two_pages, ..GenLimits::unbounded() };
         let mut kv = b.fresh_kv();
         let req = GenerateRequest::greedy(prompt, 100);
         let out = generate(&b, &mut kv, &[], &req, &limits, |_, _| {});
@@ -399,7 +471,7 @@ mod tests {
     #[test]
     fn context_cap_retires_with_budget() {
         let b = backend();
-        let limits = GenLimits { max_total_tokens: 10, kv_budget_bytes: usize::MAX };
+        let limits = GenLimits { max_total_tokens: 10, ..GenLimits::unbounded() };
         let mut kv = b.fresh_kv();
         let mut state = GenState::new(Vec::new(), &GenerateRequest::greedy(toks(5, 6), 100));
         let mut out_tokens = Vec::new();

@@ -368,14 +368,16 @@ impl ScratchPool {
         ScratchPool::default()
     }
 
-    /// Take a buffer (a previously-grown one when available).
+    /// Take a buffer (a previously-grown one when available). Recovers
+    /// from a poisoned pool lock: the buffers are plain grow-on-demand
+    /// scratch space, always valid regardless of where a panic landed.
     pub fn checkout(&self) -> Scratch {
-        self.free.lock().unwrap().pop().unwrap_or_default()
+        crate::util::lock_or_recover(&self.free).pop().unwrap_or_default()
     }
 
     /// Return a buffer for the next job to reuse.
     pub fn checkin(&self, scratch: Scratch) {
-        self.free.lock().unwrap().push(scratch);
+        crate::util::lock_or_recover(&self.free).push(scratch);
     }
 
     /// Run `f` with a pooled buffer (checkout/checkin around it).
@@ -388,7 +390,7 @@ impl ScratchPool {
 
     /// Buffers currently parked in the pool (introspection/tests).
     pub fn parked(&self) -> usize {
-        self.free.lock().unwrap().len()
+        crate::util::lock_or_recover(&self.free).len()
     }
 }
 

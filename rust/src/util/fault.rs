@@ -1,0 +1,251 @@
+//! Deterministic fault injection for chaos testing the serving stack.
+//!
+//! Activation: `HAD_FAULT=site[:prob[:delay_ms]][,site...][,seed=N]`.
+//! Each clause names an injection site (see the `SITE_*` constants) with
+//! an optional firing probability (default 1.0) and, for delay-kind
+//! sites, an injected latency in milliseconds (default 1). A `seed=N`
+//! clause fixes the PRNG so a fault schedule replays bit-identically;
+//! without it the seed defaults to 0.
+//!
+//! Example: `HAD_FAULT=decode_step:0.2:2,worker_panic:0.05,seed=42`
+//! delays 20% of decode steps by 2 ms and panics 5% of worker-shard
+//! step calls, with a reproducible draw sequence.
+//!
+//! The enable path mirrors `obs::span`: a single relaxed atomic load
+//! when disabled, lazy env parsing on first use. Components hold an
+//! `Option<Arc<FaultPlan>>` (resolved once at construction from either
+//! an explicit plan or the environment) so tests can inject faults into
+//! one server instance without a process-global toggle leaking into
+//! concurrently running tests.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Delay a decode/prefill step inside the scheduler tick.
+pub const SITE_DECODE_STEP: &str = "decode_step";
+/// Panic inside a worker shard's step closure (exercises `catch_unwind`
+/// isolation and lock-poison recovery).
+pub const SITE_WORKER_PANIC: &str = "worker_panic";
+/// Report zero pool headroom to the admission gate for one round
+/// (exercises deferral under pressure).
+pub const SITE_POOL_PRESSURE: &str = "pool_pressure";
+/// Treat the client as gone when emitting a token (exercises the
+/// disconnect retirement path).
+pub const SITE_CLIENT_DISCONNECT: &str = "client_disconnect";
+/// Stall the scheduler's work-selection loop briefly (exercises
+/// deadline and TTL enforcement under a slow scheduler).
+pub const SITE_QUEUE_STALL: &str = "queue_stall";
+
+const SITES: [&str; 5] = [
+    SITE_DECODE_STEP,
+    SITE_WORKER_PANIC,
+    SITE_POOL_PRESSURE,
+    SITE_CLIENT_DISCONNECT,
+    SITE_QUEUE_STALL,
+];
+
+/// What a firing site should do. The kind is fixed per site: panics only
+/// make sense where a `catch_unwind` boundary exists, denials only where
+/// the caller has a refusal path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Sleep for the clause's configured duration before proceeding.
+    Delay(Duration),
+    /// Unwind; the site is expected to convert this into a stream error.
+    Panic,
+    /// Pretend the guarded resource is unavailable this round.
+    Deny,
+}
+
+fn kind_for(site: &str, delay: Duration) -> Fault {
+    match site {
+        SITE_WORKER_PANIC => Fault::Panic,
+        SITE_POOL_PRESSURE | SITE_CLIENT_DISCONNECT => Fault::Deny,
+        _ => Fault::Delay(delay),
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Clause {
+    site: &'static str,
+    prob: f64,
+    fault: Fault,
+}
+
+/// A parsed fault schedule: which sites fire, with what probability, and
+/// a seeded PRNG driving the draws. Cheap to share (`Arc`).
+#[derive(Debug)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+    rng: Mutex<Rng>,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `HAD_FAULT` spec. Errors (rather than silently ignoring)
+    /// on unknown sites or malformed clauses so a typo'd chaos run fails
+    /// loudly instead of testing nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut clauses = Vec::new();
+        let mut seed = 0u64;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(v) = part.strip_prefix("seed=") {
+                seed = v.parse().map_err(|_| format!("bad seed '{v}'"))?;
+                continue;
+            }
+            let mut fields = part.split(':');
+            let name = fields.next().unwrap_or("");
+            let site = *SITES
+                .iter()
+                .find(|s| **s == name)
+                .ok_or_else(|| format!("unknown fault site '{name}'"))?;
+            let prob = match fields.next() {
+                None => 1.0,
+                Some(p) => {
+                    let p: f64 = p.parse().map_err(|_| format!("bad probability '{p}'"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("probability {p} outside [0, 1]"));
+                    }
+                    p
+                }
+            };
+            let delay_ms: u64 = match fields.next() {
+                None => 1,
+                Some(d) => d.parse().map_err(|_| format!("bad delay '{d}'"))?,
+            };
+            if fields.next().is_some() {
+                return Err(format!("too many fields in clause '{part}'"));
+            }
+            clauses.push(Clause { site, prob, fault: kind_for(site, Duration::from_millis(delay_ms)) });
+        }
+        if clauses.is_empty() {
+            return Err("no fault clauses in spec".to_string());
+        }
+        Ok(FaultPlan { clauses, rng: Mutex::new(Rng::new(seed)), injected: AtomicU64::new(0) })
+    }
+
+    /// Draw at a named site: `Some(fault)` when the site is configured
+    /// and its probability fires this call. Sites not in the plan never
+    /// fire and cost one linear scan of the (tiny) clause list.
+    pub fn fire(&self, site: &str) -> Option<Fault> {
+        let clause = self.clauses.iter().find(|c| c.site == site)?;
+        let hit = clause.prob >= 1.0 || {
+            let mut rng = self.rng.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            rng.next_f64() < clause.prob
+        };
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            Some(clause.fault)
+        } else {
+            None
+        }
+    }
+
+    /// Total faults fired so far (all sites).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+// Env-gated global plan, mirroring obs::span's enable pattern:
+// 0 = uninitialized, 1 = disabled, 2 = enabled.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static PLAN: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+
+fn init() -> u8 {
+    let plan = PLAN.get_or_init(|| match std::env::var("HAD_FAULT") {
+        Ok(v) if !v.trim().is_empty() && v.trim() != "0" => match FaultPlan::parse(&v) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => {
+                crate::log_warn!("HAD_FAULT: {e}; fault injection disabled");
+                None
+            }
+        },
+        _ => None,
+    });
+    let state = if plan.is_some() { 2 } else { 1 };
+    STATE.store(state, Ordering::Release);
+    state
+}
+
+/// The process-wide plan from `HAD_FAULT`, if set and well-formed.
+/// One relaxed atomic load on the (common) disabled path.
+pub fn from_env() -> Option<Arc<FaultPlan>> {
+    let state = match STATE.load(Ordering::Relaxed) {
+        0 => init(),
+        s => s,
+    };
+    if state == 2 {
+        PLAN.get().and_then(Clone::clone)
+    } else {
+        None
+    }
+}
+
+/// Convenience for call sites holding an instance-scoped plan: draw at
+/// `site` when a plan is present. `None` plan is a branch, no locking.
+#[inline]
+pub fn fire(plan: &Option<Arc<FaultPlan>>, site: &str) -> Option<Fault> {
+    plan.as_ref().and_then(|p| p.fire(site))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("decode_step:0.25:3,worker_panic:0.5,pool_pressure,seed=9").unwrap();
+        assert_eq!(p.clauses.len(), 3);
+        assert_eq!(p.clauses[0].site, SITE_DECODE_STEP);
+        assert_eq!(p.clauses[0].prob, 0.25);
+        assert_eq!(p.clauses[0].fault, Fault::Delay(Duration::from_millis(3)));
+        assert_eq!(p.clauses[1].fault, Fault::Panic);
+        assert_eq!(p.clauses[1].prob, 0.5);
+        assert_eq!(p.clauses[2].fault, Fault::Deny);
+        assert_eq!(p.clauses[2].prob, 1.0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("not_a_site").is_err());
+        assert!(FaultPlan::parse("decode_step:1.5").is_err());
+        assert!(FaultPlan::parse("decode_step:0.5:x").is_err());
+        assert!(FaultPlan::parse("decode_step:0.5:1:extra").is_err());
+        assert!(FaultPlan::parse("seed=abc,decode_step").is_err());
+    }
+
+    #[test]
+    fn unconfigured_sites_never_fire() {
+        let p = FaultPlan::parse("worker_panic").unwrap();
+        for _ in 0..32 {
+            assert_eq!(p.fire(SITE_DECODE_STEP), None);
+        }
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_counts() {
+        let p = FaultPlan::parse("client_disconnect:1.0").unwrap();
+        for _ in 0..5 {
+            assert_eq!(p.fire(SITE_CLIENT_DISCONNECT), Some(Fault::Deny));
+        }
+        assert_eq!(p.injected(), 5);
+    }
+
+    #[test]
+    fn seeded_draws_replay_identically() {
+        let draws = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::parse(&format!("decode_step:0.5,seed={seed}")).unwrap();
+            (0..64).map(|_| p.fire(SITE_DECODE_STEP).is_some()).collect()
+        };
+        assert_eq!(draws(42), draws(42));
+        assert_ne!(draws(42), draws(43), "different seeds should diverge");
+        let fired = draws(42).iter().filter(|b| **b).count();
+        assert!(fired > 8 && fired < 56, "p=0.5 over 64 draws fired {fired}");
+    }
+}

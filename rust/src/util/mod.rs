@@ -5,8 +5,18 @@
 pub mod bench;
 pub mod bf16;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod quickcheck;
 pub mod rng;
 pub mod threadpool;
+
+/// Lock a mutex, recovering from poisoning. A panic inside a worker
+/// (real or injected) poisons any mutex it held; the data guarded by
+/// the coordinator's mutexes stays structurally valid across a panicked
+/// decode step (streams/queues are only mutated between steps), so
+/// recovery is safe and keeps submit/shutdown paths alive.
+pub fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

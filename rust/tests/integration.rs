@@ -350,7 +350,7 @@ fn serving_generation_end_to_end() {
         kv,
     )
     .unwrap();
-    let limits = GenLimits { max_total_tokens: 64, kv_budget_bytes: kv.byte_budget };
+    let limits = GenLimits { max_total_tokens: 64, kv_budget_bytes: kv.byte_budget, ..GenLimits::unbounded() };
 
     let mut rng = Rng::new(9);
     let toks = |rng: &mut Rng, n: usize| -> Vec<i32> {

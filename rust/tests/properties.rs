@@ -545,7 +545,7 @@ fn prop_coordinator_stream_equals_direct_engine_loop() {
             .enumerate()
             .map(|(sid, req)| server.submit_generate(sid as u64, req.clone()).expect("admitted"))
             .collect();
-        let limits = GenLimits { max_total_tokens: 48, kv_budget_bytes: kv_cfg.byte_budget };
+        let limits = GenLimits { max_total_tokens: 48, kv_budget_bytes: kv_cfg.byte_budget, ..GenLimits::unbounded() };
         for (sid, rx) in rxs.into_iter().enumerate() {
             let mut tokens = Vec::new();
             let mut reason = None;
@@ -566,6 +566,99 @@ fn prop_coordinator_stream_equals_direct_engine_loop() {
         }
         true
     });
+}
+
+#[test]
+fn prop_faulted_streams_retire_explicitly_and_leak_nothing() {
+    // robustness property: under a seeded fault schedule (worker panics,
+    // client disconnects, decode delays, pool-pressure spikes, queue
+    // stalls) every admitted stream still retires with an explicit
+    // StopReason, its emitted tokens are a PREFIX of the fault-free
+    // direct-engine stream (exactly equal when it retires MaxTokens —
+    // faults truncate a stream, they never corrupt it), and the page
+    // pool returns to zero bytes once every session ends.
+    use had::coordinator::{Bucket, Server};
+    use had::generate::{generate, GenLimits, GenerateRequest, StopReason, StreamEvent};
+    use had::util::fault::FaultPlan;
+    let backend = gen_backend();
+    let kv_cfg = KvCacheConfig { page_tokens: 4, ..Default::default() };
+    for seed in [3u64, 17, 29, 42] {
+        let spec = format!(
+            "decode_step:0.25:1,worker_panic:0.1,client_disconnect:0.15,\
+             pool_pressure:0.1,queue_stall:0.1:1,seed={seed}"
+        );
+        let server = Server::start_cpu_chaos(
+            gen_backend(),
+            Router::new(vec![Bucket { config: "prop_gen".into(), n_ctx: 48, batch: 4 }]),
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams: 3,
+                ..Default::default()
+            },
+            kv_cfg,
+            FaultPlan::parse(&spec).expect("fault spec"),
+        )
+        .expect("server start");
+        let mut rng = Rng::new(seed);
+        let reqs: Vec<GenerateRequest> = (0..4)
+            .map(|_| {
+                let n = 1 + rng.range_usize(0, 12);
+                let prompt: Vec<i32> = (0..n).map(|_| rng.below(24) as i32).collect();
+                GenerateRequest::greedy(prompt, 1 + rng.range_usize(0, 5))
+            })
+            .collect();
+        let rxs: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(sid, req)| server.submit_generate(sid as u64, req.clone()).expect("admitted"))
+            .collect();
+        let limits = GenLimits {
+            max_total_tokens: 48,
+            kv_budget_bytes: kv_cfg.byte_budget,
+            ..GenLimits::unbounded()
+        };
+        for (sid, rx) in rxs.into_iter().enumerate() {
+            let mut tokens = Vec::new();
+            let mut reason = None;
+            for event in rx.iter() {
+                match event {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Done { reason: r, .. } => {
+                        reason = Some(r);
+                        break;
+                    }
+                }
+            }
+            let reason =
+                reason.expect("every admitted stream must close with an explicit StopReason");
+            let mut okv = backend.fresh_kv();
+            let want = generate(&backend, &mut okv, &[], &reqs[sid], &limits, |_, _| {});
+            assert!(
+                tokens.len() <= want.tokens.len()
+                    && tokens[..] == want.tokens[..tokens.len()],
+                "seed {seed} stream {sid}: a faulted stream must emit a prefix of the \
+                 fault-free stream, got {tokens:?} want prefix of {:?}",
+                want.tokens
+            );
+            if reason == StopReason::MaxTokens {
+                assert_eq!(
+                    tokens, want.tokens,
+                    "seed {seed} stream {sid}: an unfaulted stream must be token-identical"
+                );
+            }
+        }
+        assert_eq!(
+            server.metrics.snapshot().gen_streams,
+            4,
+            "seed {seed}: a stream vanished without retiring"
+        );
+        let store = server.sessions();
+        let mut store = store.lock().unwrap();
+        for sid in 0..4u64 {
+            store.end_session(sid);
+        }
+        assert_eq!(store.pool().bytes(), 0, "seed {seed}: leaked pool bytes");
+    }
 }
 
 #[test]

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Validate a stress-harness results file (benches/stress.rs writes
+results/stress.jsonl): every record parses, carries the schema-v2
+provenance stamp, and upholds the robustness invariants — all admitted
+streams retired, zero leaked pool bytes, and the deadlock watchdog never
+fired. Also requires the core scenario set to be present, so a harness
+that silently skipped a scenario fails loudly.
+
+Usage: python3 scripts/validate_stress.py results/stress.jsonl
+
+Exits non-zero (listing the problems) on any violation — CI's
+chaos-smoke step runs it against the stress.jsonl its HAD_FAULT leg
+emitted. Importable: `validate(path)` returns the list of problems
+(empty = ok).
+"""
+
+import json
+import sys
+
+REQUIRED_SCENARIOS = {"burst", "longtail", "slow_reader", "disconnect_storm", "fault_sweep"}
+NUM_KEYS = ("admitted", "retired", "leaked_bytes")
+
+
+def validate(path):
+    problems = []
+    try:
+        with open(path) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    if not lines:
+        return [f"{path}: empty results file"]
+    seen = set()
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"record {i}: not valid JSON: {e}")
+            continue
+        if rec.get("kind") != "stress":
+            continue
+        name = rec.get("name")
+        if not isinstance(name, str):
+            problems.append(f"record {i}: missing scenario name")
+            continue
+        seen.add(name)
+        for key in NUM_KEYS:
+            if not isinstance(rec.get(key), (int, float)):
+                problems.append(f"record {i} ({name}): bad/missing {key}")
+        if rec.get("retired") != rec.get("admitted"):
+            problems.append(
+                f"record {i} ({name}): {rec.get('admitted')} admitted but "
+                f"{rec.get('retired')} retired — a stream vanished without a StopReason"
+            )
+        if rec.get("leaked_bytes", 0) != 0:
+            problems.append(
+                f"record {i} ({name}): {rec.get('leaked_bytes')} B still in the "
+                "page pool after every session ended"
+            )
+        if rec.get("watchdog_ok") is not True:
+            problems.append(f"record {i} ({name}): watchdog fired (deadlock)")
+        for key in ("run", "git_sha", "schema"):
+            if key not in rec:
+                problems.append(f"record {i} ({name}): missing provenance key {key}")
+        if name == "fault_sweep" and rec.get("faults_injected", 0) <= 0:
+            problems.append(f"record {i} ({name}): seeded fault plan never fired")
+    missing = REQUIRED_SCENARIOS - seen
+    if missing:
+        problems.append(f"{path}: missing scenarios: {', '.join(sorted(missing))}")
+    return problems
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    problems = validate(argv[1])
+    if problems:
+        print(f"[stress] FAIL: {argv[1]}")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    with open(argv[1]) as f:
+        n = sum(1 for l in f if l.strip() and json.loads(l).get("kind") == "stress")
+    print(f"[stress] OK: {argv[1]} ({n} scenario records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
