@@ -1,0 +1,486 @@
+//! Socket-level stress harness for the HTTP front-end: real TCP clients
+//! driving a live `NetServer` over loopback — burst arrivals, slow
+//! readers under injected write stalls, mid-stream disconnect storms,
+//! and a seeded chaos sweep that turns on every fault site (engine and
+//! net) at once. Every scenario asserts the same robustness invariants
+//! as the in-process stress harness, now measured from the far side of
+//! a socket:
+//!
+//!   * every admitted stream retires with an explicit `StopReason`
+//!     (`Snapshot::gen_streams == admitted`), including streams whose
+//!     client vanished mid-chunk;
+//!   * the page pool returns to baseline once sessions end — no leaks
+//!     however the connections died;
+//!   * TTFT is measured as the client observes it (request written →
+//!     first chunk readable), so the per-token flush path is gated, not
+//!     trusted.
+//!
+//! Appends machine-readable records to results/net.jsonl (schema v2)
+//! for scripts/validate_net.py.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::generate::{generate, GenLimits, GenerateRequest, StreamEvent};
+use had::kvcache::KvCacheConfig;
+use had::net::{HttpClient, NetConfig, NetServer};
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::bench::{percentile_us, quick_env, write_jsonl};
+use had::util::fault::FaultPlan;
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+const N_CTX: usize = 128;
+
+fn kv_cfg() -> KvCacheConfig {
+    KvCacheConfig { page_tokens: 16, ..Default::default() }
+}
+
+fn coordinator(model: &ServeModel, policy: BatchPolicy, chaos: Option<FaultPlan>) -> Arc<Server> {
+    let kv = kv_cfg();
+    let router = Router::new(vec![Bucket { config: "net".into(), n_ctx: N_CTX, batch: 8 }]);
+    let backend = HadBackend::new(model.clone(), &kv);
+    let server = match chaos {
+        Some(plan) => Server::start_cpu_chaos(backend, router, policy, kv, plan),
+        None => Server::start_cpu_with_kv(backend, router, policy, kv),
+    };
+    Arc::new(server.expect("server start"))
+}
+
+fn bind(server: Arc<Server>, faults: Option<Arc<FaultPlan>>) -> NetServer {
+    let cfg = NetConfig {
+        workers: 16, // a connection holds its worker; bursts need headroom
+        read_timeout: Duration::from_secs(30),
+        write_timeout: Duration::from_secs(10),
+        faults,
+        ..Default::default()
+    };
+    NetServer::bind(server, "127.0.0.1:0", cfg).expect("bind loopback")
+}
+
+/// Arm a deadlock watchdog (same contract as benches/stress.rs: process
+/// exit 3 on overrun so CI reports a hang, not a timeout).
+fn arm_watchdog(name: &'static str, timeout: Duration) -> Arc<AtomicBool> {
+    let done = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&done);
+    std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        eprintln!("[net_stress] WATCHDOG: scenario '{name}' still live after {timeout:?} — deadlock suspected");
+        std::process::exit(3);
+    });
+    done
+}
+
+fn wait_retired(server: &Server, admitted: u64) {
+    while server.metrics.snapshot().gen_streams < admitted {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn leaked_bytes(server: &Server, sids: &[u64]) -> usize {
+    let store = server.sessions();
+    let mut store = store.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for &sid in sids {
+        store.end_session(sid);
+    }
+    store.pool().bytes()
+}
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.below(256) as i32).collect()
+}
+
+/// What one HTTP generation client observed.
+struct ClientRun {
+    /// request fully written -> first chunk readable
+    ttft_us: u128,
+    /// token JSONL lines, in order (trailing newline stripped)
+    token_lines: Vec<String>,
+    saw_done: bool,
+}
+
+/// Run one `POST /v1/generate` over loopback, reading chunk by chunk.
+/// `read_delay` simulates a slow consumer; `quit_after` closes the
+/// connection after that many chunks (mid-stream disconnect).
+fn generate_over_http(
+    addr: std::net::SocketAddr,
+    sid: u64,
+    prompt: &[i32],
+    n_new: usize,
+    read_delay: Duration,
+    quit_after: Option<usize>,
+) -> io::Result<ClientRun> {
+    let mut c = HttpClient::connect(addr)?;
+    c.set_timeouts(Some(Duration::from_secs(60)), Some(Duration::from_secs(10)))?;
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let body = format!(
+        r#"{{"session":{sid},"prompt":[{}],"max_new_tokens":{n_new}}}"#,
+        toks.join(",")
+    );
+    let t0 = Instant::now();
+    c.send("POST", "/v1/generate", Some(body.as_bytes()))?;
+    let head = c.read_head()?;
+    if head.status != 200 {
+        return Err(io::Error::new(io::ErrorKind::Other, format!("status {}", head.status)));
+    }
+    let mut run = ClientRun { ttft_us: 0, token_lines: Vec::new(), saw_done: false };
+    let mut n_chunks = 0usize;
+    while let Some(chunk) = c.next_chunk()? {
+        if n_chunks == 0 {
+            run.ttft_us = t0.elapsed().as_micros();
+        }
+        n_chunks += 1;
+        let line = String::from_utf8_lossy(&chunk).trim_end().to_string();
+        if line.contains(r#""event":"done""#) {
+            run.saw_done = true;
+        } else {
+            run.token_lines.push(line);
+        }
+        if quit_after.is_some_and(|q| n_chunks >= q) {
+            return Ok(run); // drop the connection mid-stream
+        }
+        if !read_delay.is_zero() {
+            std::thread::sleep(read_delay);
+        }
+    }
+    Ok(run)
+}
+
+struct Outcome {
+    admitted: u64,
+    done_events: u64,
+    leaked: usize,
+    ttfts: Vec<u128>,
+    /// extra faults fired by the net-layer plan (engine-plan firings are
+    /// already in `Snapshot::faults_injected`)
+    net_faults: u64,
+    identity_ok: Option<bool>,
+}
+
+impl Outcome {
+    fn record(&self, name: &str, server: &Server) -> Json {
+        let snap = server.metrics.snapshot();
+        assert_eq!(
+            snap.gen_streams, self.admitted,
+            "{name}: every admitted stream must retire with an explicit StopReason"
+        );
+        assert_eq!(self.leaked, 0, "{name}: page pool must return to baseline");
+        let mut ttfts = self.ttfts.clone();
+        ttfts.sort_unstable();
+        let mut fields = vec![
+            ("kind", Json::str("net")),
+            ("name", Json::str(name)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("retired", Json::num(snap.gen_streams as f64)),
+            ("done_events", Json::num(self.done_events as f64)),
+            ("leaked_bytes", Json::num(self.leaked as f64)),
+            ("watchdog_ok", Json::Bool(true)),
+            ("ttft_p99_us", Json::num(percentile_us(&ttfts, 0.99) as f64)),
+            ("faults_injected", Json::num((snap.faults_injected + self.net_faults) as f64)),
+            ("net_connections", Json::num(snap.net_connections as f64)),
+            ("net_requests", Json::num(snap.net_requests as f64)),
+            ("net_parse_errors", Json::num(snap.net_parse_errors as f64)),
+            ("net_slow_writes", Json::num(snap.net_slow_writes as f64)),
+        ];
+        if let Some(ok) = self.identity_ok {
+            fields.push(("identity_ok", Json::Bool(ok)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Seeded identity: the streamed JSONL token events over the socket must
+/// be byte-identical to the direct engine loop's, prompt for prompt.
+fn scenario_identity(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("net_identity", Duration::from_secs(120));
+    let n = if quick { 2 } else { 4 };
+    let server = coordinator(
+        model,
+        BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        None,
+    );
+    let net = bind(Arc::clone(&server), None);
+    let addr = net.local_addr();
+    let oracle = HadBackend::new(model.clone(), &kv_cfg());
+    let mut rng = Rng::new(0x1DE47);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut ttfts = Vec::new();
+    let mut sids = Vec::new();
+    let mut identity_ok = true;
+    for sid in 0..n as u64 {
+        let p = prompt(&mut rng, 8 + rng.below(24) as usize);
+        let n_new = 6usize;
+        let mut want = Vec::new();
+        let req = GenerateRequest::greedy(p.clone(), n_new);
+        generate(&oracle, &mut oracle.fresh_kv(), &[], &req, &GenLimits::unbounded(), |index, token| {
+            want.push(format!(r#"{{"event":"token","index":{index},"token":{token}}}"#));
+        });
+        let run = generate_over_http(addr, sid, &p, n_new, Duration::ZERO, None)
+            .expect("identity stream");
+        admitted += 1;
+        sids.push(sid);
+        done_events += u64::from(run.saw_done);
+        ttfts.push(run.ttft_us);
+        if run.token_lines != want {
+            eprintln!("[net_stress] identity mismatch for sid {sid}:\n  want {want:?}\n  got  {:?}", run.token_lines);
+            identity_ok = false;
+        }
+    }
+    assert!(identity_ok, "net_identity: socket stream diverged from the direct engine");
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked, ttfts, net_faults: 0, identity_ok: Some(identity_ok) };
+    let rec = out.record("net_identity", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Burst arrivals: waves of concurrent HTTP clients, each its own
+/// connection. Gates client-observed p99 TTFT downstream.
+fn scenario_burst(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("net_burst", Duration::from_secs(180));
+    let (waves, per_wave, n_new) = if quick { (2, 4, 6) } else { (4, 8, 10) };
+    let server = coordinator(
+        model,
+        BatchPolicy { max_wait: Duration::from_millis(1), max_streams: 8, ..Default::default() },
+        None,
+    );
+    let net = bind(Arc::clone(&server), None);
+    let addr = net.local_addr();
+    let mut rng = Rng::new(0xB0057);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut ttfts = Vec::new();
+    let mut sids = Vec::new();
+    for wave in 0..waves {
+        let mut handles = Vec::new();
+        for i in 0..per_wave {
+            let sid = (wave * per_wave + i) as u64;
+            let p = prompt(&mut rng, 8 + rng.below(24) as usize);
+            handles.push((sid, std::thread::spawn(move || {
+                generate_over_http(addr, sid, &p, n_new, Duration::ZERO, None)
+            })));
+        }
+        for (sid, h) in handles {
+            match h.join().expect("client thread") {
+                Ok(run) => {
+                    admitted += 1;
+                    sids.push(sid);
+                    done_events += u64::from(run.saw_done);
+                    ttfts.push(run.ttft_us);
+                }
+                Err(e) => panic!("net_burst: client {sid} failed: {e}"),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked, ttfts, net_faults: 0, identity_ok: None };
+    let rec = out.record("net_burst", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Slow readers with injected write stalls: every chunk write is delayed
+/// by the seeded `net_write` fault while clients also consume slowly.
+/// Streams must still retire and the slow-write counter must move.
+fn scenario_slow_reader(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("net_slow_reader", Duration::from_secs(180));
+    let n = if quick { 3 } else { 6 };
+    let server = coordinator(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 8,
+            stream_event_cap: 4,
+            ..Default::default()
+        },
+        None,
+    );
+    let net_plan = Arc::new(FaultPlan::parse("net_write:1.0:2,seed=11").expect("net plan"));
+    let net = bind(Arc::clone(&server), Some(Arc::clone(&net_plan)));
+    let addr = net.local_addr();
+    let mut rng = Rng::new(0x510);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut ttfts = Vec::new();
+    let mut sids = Vec::new();
+    let mut handles = Vec::new();
+    for sid in 0..n as u64 {
+        let p = prompt(&mut rng, 12);
+        handles.push((sid, std::thread::spawn(move || {
+            generate_over_http(addr, sid, &p, 12, Duration::from_millis(10), None)
+        })));
+    }
+    for (sid, h) in handles {
+        if let Ok(run) = h.join().expect("client thread") {
+            admitted += 1;
+            sids.push(sid);
+            done_events += u64::from(run.saw_done);
+            ttfts.push(run.ttft_us);
+        }
+    }
+    wait_retired(&server, admitted);
+    assert!(
+        server.metrics.snapshot().net_slow_writes > 0,
+        "net_slow_reader: the injected write stall never fired"
+    );
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome {
+        admitted, done_events, leaked, ttfts,
+        net_faults: net_plan.injected(),
+        identity_ok: None,
+    };
+    let rec = out.record("net_slow_reader", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Disconnect storm: half the clients close the socket after the first
+/// chunk; the scheduler must observe the dropped receivers and retire
+/// every stream anyway.
+fn scenario_disconnect_storm(model: &ServeModel, quick: bool) -> Json {
+    let done = arm_watchdog("net_disconnect_storm", Duration::from_secs(180));
+    let n = if quick { 6 } else { 12 };
+    let server = coordinator(
+        model,
+        BatchPolicy { max_wait: Duration::from_millis(1), max_streams: 6, ..Default::default() },
+        None,
+    );
+    let net = bind(Arc::clone(&server), None);
+    let addr = net.local_addr();
+    let mut rng = Rng::new(0xD15C);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut ttfts = Vec::new();
+    let mut sids = Vec::new();
+    let mut handles = Vec::new();
+    for sid in 0..n as u64 {
+        let p = prompt(&mut rng, 10);
+        let quit = if sid % 2 == 0 { Some(1) } else { None };
+        handles.push((sid, std::thread::spawn(move || {
+            generate_over_http(addr, sid, &p, 12, Duration::ZERO, quit)
+        })));
+    }
+    for (sid, h) in handles {
+        if let Ok(run) = h.join().expect("client thread") {
+            admitted += 1;
+            sids.push(sid);
+            done_events += u64::from(run.saw_done);
+            ttfts.push(run.ttft_us);
+        }
+    }
+    wait_retired(&server, admitted);
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome { admitted, done_events, leaked, ttfts, net_faults: 0, identity_ok: None };
+    let rec = out.record("net_disconnect_storm", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+/// Seeded chaos across the whole stack: engine sites on the scheduler's
+/// plan, net sites on the listener's plan, same grammar, both seeded.
+/// Clients retry dropped connections (`net_accept` denies them).
+fn scenario_fault_sweep(model: &ServeModel, quick: bool, seed: u64) -> Json {
+    let done = arm_watchdog("net_fault_sweep", Duration::from_secs(240));
+    let n = if quick { 4 } else { 8 };
+    let engine_plan = FaultPlan::parse(&format!(
+        "decode_step:0.3:2,worker_panic:0.15,client_disconnect:0.1,pool_pressure:0.2,queue_stall:0.1:2,seed={seed}"
+    ))
+    .expect("engine plan");
+    let net_plan = Arc::new(
+        FaultPlan::parse(&format!("net_accept:0.3,net_write:0.2:2,seed={seed}"))
+            .expect("net plan"),
+    );
+    let server = coordinator(
+        model,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 4,
+            stream_deadline_ms: 30_000,
+            ..Default::default()
+        },
+        Some(engine_plan),
+    );
+    let net = bind(Arc::clone(&server), Some(Arc::clone(&net_plan)));
+    let addr = net.local_addr();
+    let mut rng = Rng::new(seed ^ 0xFA175);
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let mut ttfts = Vec::new();
+    let mut sids = Vec::new();
+    for sid in 0..n as u64 {
+        let p = prompt(&mut rng, 16);
+        // retry: net_accept drops connections before a byte is served
+        for _attempt in 0..8 {
+            match generate_over_http(addr, sid, &p, 8, Duration::ZERO, None) {
+                Ok(run) => {
+                    admitted += 1;
+                    sids.push(sid);
+                    done_events += u64::from(run.saw_done);
+                    ttfts.push(run.ttft_us);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+    }
+    wait_retired(&server, admitted);
+    let total_faults =
+        server.metrics.snapshot().faults_injected + net_plan.injected();
+    assert!(total_faults > 0, "net_fault_sweep: no site ever fired");
+    let leaked = leaked_bytes(&server, &sids);
+    let out = Outcome {
+        admitted, done_events, leaked, ttfts,
+        net_faults: net_plan.injected(),
+        identity_ok: None,
+    };
+    let rec = out.record("net_fault_sweep", &server);
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
+fn main() {
+    let quick = quick_env();
+    let model = ServeModel::random(&demo_config("net", N_CTX, 32), 0x57E5).expect("model");
+    let mut records: Vec<Json> = Vec::new();
+
+    let seeds: &[u64] = if quick { &[7] } else { &[7, 11] };
+    let scenarios: Vec<(&str, Json)> = {
+        let mut v = Vec::new();
+        v.push(("net_identity", scenario_identity(&model, quick)));
+        v.push(("net_burst", scenario_burst(&model, quick)));
+        v.push(("net_slow_reader", scenario_slow_reader(&model, quick)));
+        v.push(("net_disconnect_storm", scenario_disconnect_storm(&model, quick)));
+        for &s in seeds {
+            v.push(("net_fault_sweep", scenario_fault_sweep(&model, quick, s)));
+        }
+        v
+    };
+    for (name, rec) in scenarios {
+        println!(
+            "net/{name}: admitted {} retired {} leaked {} B | client ttft p99 {:.2} ms | faults {} | slow-writes {}",
+            rec.get("admitted").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("retired").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("leaked_bytes").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("ttft_p99_us").and_then(Json::as_f64).unwrap_or(0.0) / 1e3,
+            rec.get("faults_injected").and_then(Json::as_f64).unwrap_or(0.0),
+            rec.get("net_slow_writes").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+        records.push(rec);
+    }
+
+    write_jsonl("results/net.jsonl", &records).expect("write results/net.jsonl");
+    println!("\nall net scenarios passed; {} records -> results/net.jsonl", records.len());
+}

@@ -1,0 +1,147 @@
+//! End-to-end HTTP serving demo: boots the coordinator behind the
+//! dependency-free net front-end on loopback, then plays a real client
+//! against it — health probe, a multi-turn classification session over
+//! `POST /v1/sessions` (second turn resuming warm), a streamed
+//! `POST /v1/generate` read chunk by chunk with client-observed TTFT,
+//! a metrics scrape showing the net counters, and a `DELETE` that
+//! releases the session's KV pages.
+//!
+//! With `--listen`, keeps serving instead (try the README's curl
+//! examples against the printed address; ctrl-C to stop).
+//!
+//! Run: cargo run --release --example serve_http -- [--port 0] [--listen]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::kvcache::KvCacheConfig;
+use had::net::{roundtrip, HttpClient, NetConfig, NetServer};
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::cli::Args;
+use had::util::json::Json;
+
+fn main() {
+    had::util::log::init_from_env();
+    let args = Args::parse(std::env::args().skip(1));
+    let port = args.get_usize("port", 0);
+    let listen = args.get_bool("listen");
+    let n_ctx = 256usize;
+
+    let cfg = demo_config("http_256", n_ctx, 48);
+    let model = ServeModel::random(&cfg, 0xD0DE).expect("demo model");
+    let kv = KvCacheConfig { page_tokens: 32, ..Default::default() };
+    let router = Router::new(vec![Bucket { config: "http_256".into(), n_ctx, batch: 8 }]);
+    let server = Arc::new(
+        Server::start_cpu_with_kv(
+            HadBackend::new(model, &kv),
+            router,
+            BatchPolicy {
+                max_wait: Duration::from_millis(2),
+                max_streams: 8,
+                ..Default::default()
+            },
+            kv,
+        )
+        .expect("server start"),
+    );
+    let net = NetServer::bind(
+        Arc::clone(&server),
+        format!("127.0.0.1:{port}"),
+        NetConfig::default(),
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    println!("serving on http://{addr}\n");
+
+    if listen {
+        println!("listening (ctrl-C to stop) — try:");
+        println!("  curl -s http://{addr}/healthz");
+        println!(
+            "  curl -s -N -X POST http://{addr}/v1/generate -d '{{\"session\":1,\"prompt\":[1,2,3],\"max_new_tokens\":8}}'"
+        );
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+
+    // liveness
+    let (status, body) = roundtrip(addr, "GET", "/healthz", None).expect("healthz");
+    assert_eq!(status, 200);
+    println!("GET /healthz -> {status} {}", String::from_utf8_lossy(&body));
+
+    // two session turns; the second resumes warm from the first's pages
+    let (status, body) =
+        roundtrip(addr, "POST", "/v1/sessions", Some(br#"{"session":1,"tokens":[1,2,3,4,5,6,7,8]}"#))
+            .expect("turn 1");
+    assert_eq!(status, 200);
+    let turn1 = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    println!(
+        "POST /v1/sessions (turn 1) -> pred {} bucket {:?} cached {}",
+        turn1.get("pred").and_then(Json::as_f64).unwrap(),
+        turn1.get("bucket").and_then(Json::as_str).unwrap(),
+        turn1.get("cached_tokens").and_then(Json::as_usize).unwrap(),
+    );
+    let (status, body) =
+        roundtrip(addr, "POST", "/v1/sessions", Some(br#"{"session":1,"tokens":[9,10]}"#))
+            .expect("turn 2");
+    assert_eq!(status, 200);
+    let turn2 = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let cached = turn2.get("cached_tokens").and_then(Json::as_usize).unwrap();
+    assert_eq!(cached, 8, "turn 2 must resume from turn 1's context");
+    println!("POST /v1/sessions (turn 2) -> cached {cached} (warm resume)");
+
+    // streamed generation, read the way a real client would
+    let mut c = HttpClient::connect(addr).expect("connect");
+    c.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    let t0 = Instant::now();
+    c.send(
+        "POST",
+        "/v1/generate",
+        Some(br#"{"session":2,"prompt":[1,2,3,4],"max_new_tokens":12}"#),
+    )
+    .expect("send generate");
+    let head = c.read_head().expect("head");
+    assert_eq!(head.status, 200);
+    assert!(head.chunked());
+    let mut first_chunk_ms = 0.0;
+    let mut n_tokens = 0usize;
+    while let Some(chunk) = c.next_chunk().expect("chunk") {
+        if first_chunk_ms == 0.0 {
+            first_chunk_ms = t0.elapsed().as_micros() as f64 / 1e3;
+        }
+        let line = String::from_utf8_lossy(&chunk);
+        let event = Json::parse(line.trim_end()).expect("event json");
+        match event.get("event").and_then(Json::as_str) {
+            Some("token") => {
+                n_tokens += 1;
+                print!("{} ", event.get("token").and_then(Json::as_f64).unwrap());
+            }
+            Some("done") => println!(
+                "\nPOST /v1/generate -> {} tokens ({}), client TTFT {first_chunk_ms:.2} ms",
+                event.get("generated").and_then(Json::as_usize).unwrap(),
+                event.get("reason").and_then(Json::as_str).unwrap(),
+            ),
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(n_tokens, 12);
+
+    // metrics scrape: the net counters observed all of the above
+    let (status, body) = roundtrip(addr, "GET", "/v1/metrics", None).expect("metrics");
+    assert_eq!(status, 200);
+    let metrics = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let reqs = metrics.at(&["counters", "net_requests"]).and_then(Json::as_f64).unwrap();
+    println!("GET /v1/metrics -> net_requests {reqs}");
+    assert!(reqs >= 5.0);
+
+    // end the generation session; its pages return to the pool
+    let (status, _) = roundtrip(addr, "DELETE", "/v1/sessions/2", None).expect("delete");
+    assert_eq!(status, 200);
+    roundtrip(addr, "DELETE", "/v1/sessions/1", None).expect("delete");
+    assert_eq!(server.sessions().lock().unwrap().pool().bytes(), 0, "pages released");
+    println!("DELETE /v1/sessions/{{1,2}} -> pool back to 0 B");
+
+    server.metrics.snapshot().print("serve_http");
+    println!("serve_http OK");
+}

@@ -1,0 +1,146 @@
+"""Net results-file validation: scripts/validate_net.py against a
+synthetic harness-shaped results file (the exact record shape
+benches/net_stress.rs writes), its failure modes (missing scenarios,
+un-retired streams, leaked pages, identity divergence, TTFT gate), and
+— when a bench run has left one — the real results/net.jsonl."""
+
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from validate_net import validate  # noqa: E402
+
+
+def record(name, **overrides):
+    """One harness-shaped scenario record (schema v2, provenance-stamped)."""
+    rec = {
+        "kind": "net",
+        "name": name,
+        "admitted": 8,
+        "retired": 8,
+        "done_events": 8,
+        "leaked_bytes": 0,
+        "watchdog_ok": True,
+        "ttft_p99_us": 120000,
+        "faults_injected": 0,
+        "net_connections": 9,
+        "net_requests": 9,
+        "net_parse_errors": 0,
+        "net_slow_writes": 0,
+        "run": "20260808-000000",
+        "git_sha": "abc1234",
+        "schema": 2,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def full_results():
+    return [
+        record("net_identity", identity_ok=True),
+        record("net_burst"),
+        record("net_slow_reader", net_slow_writes=12),
+        record("net_disconnect_storm"),
+        record("net_fault_sweep", faults_injected=5),
+    ]
+
+
+def write(tmp_path, records):
+    path = tmp_path / "net.jsonl"
+    if isinstance(records, str):
+        path.write_text(records)
+    else:
+        path.write_text("".join(json.dumps(r) + "\n" for r in records))
+    return str(path)
+
+
+def test_harness_shaped_results_pass(tmp_path):
+    assert validate(write(tmp_path, full_results())) == []
+
+
+def test_not_json_fails(tmp_path):
+    problems = validate(write(tmp_path, "{not json\n"))
+    assert any("not valid JSON" in p for p in problems)
+
+
+def test_empty_file_fails(tmp_path):
+    problems = validate(write(tmp_path, ""))
+    assert problems and "empty" in problems[0]
+
+
+def test_missing_file_fails(tmp_path):
+    problems = validate(str(tmp_path / "nope.jsonl"))
+    assert problems and "cannot read" in problems[0]
+
+
+def test_missing_scenario_fails(tmp_path):
+    recs = [r for r in full_results() if r["name"] != "net_slow_reader"]
+    problems = validate(write(tmp_path, recs))
+    assert any("missing scenarios" in p and "net_slow_reader" in p for p in problems)
+
+
+def test_unretired_stream_fails(tmp_path):
+    recs = full_results()
+    recs[1]["retired"] = recs[1]["admitted"] - 1
+    problems = validate(write(tmp_path, recs))
+    assert any("vanished without a StopReason" in p for p in problems)
+
+
+def test_leaked_pages_fail(tmp_path):
+    recs = full_results()
+    recs[3]["leaked_bytes"] = 4096
+    problems = validate(write(tmp_path, recs))
+    assert any("still in the page pool" in p for p in problems)
+
+
+def test_identity_divergence_fails(tmp_path):
+    recs = full_results()
+    recs[0]["identity_ok"] = False
+    problems = validate(write(tmp_path, recs))
+    assert any("diverged from the direct engine" in p for p in problems)
+
+
+def test_sweep_without_faults_fails(tmp_path):
+    recs = full_results()
+    recs[4]["faults_injected"] = 0
+    problems = validate(write(tmp_path, recs))
+    assert any("never fired" in p for p in problems)
+
+
+def test_slow_reader_without_slow_writes_fails(tmp_path):
+    recs = full_results()
+    recs[2]["net_slow_writes"] = 0
+    problems = validate(write(tmp_path, recs))
+    assert any("slow-write counter" in p for p in problems)
+
+
+def test_ttft_gate_fails_and_is_tunable(tmp_path):
+    recs = full_results()
+    recs[1]["ttft_p99_us"] = 9_000_000
+    path = write(tmp_path, recs)
+    assert any("TTFT" in p for p in validate(path))
+    assert validate(path, max_ttft_p99_us=10_000_000) == []
+
+
+def test_missing_provenance_fails(tmp_path):
+    recs = full_results()
+    del recs[0]["git_sha"]
+    problems = validate(write(tmp_path, recs))
+    assert any("provenance" in p for p in problems)
+
+
+def test_foreign_kinds_are_ignored(tmp_path):
+    recs = full_results() + [{"kind": "stress", "name": "burst"}]
+    assert validate(write(tmp_path, recs)) == []
+
+
+def test_real_results_if_present():
+    path = os.path.join(REPO, "results", "net.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("no results/net.jsonl (run cargo bench --bench net_stress first)")
+    assert validate(path) == []

@@ -54,6 +54,11 @@ pub struct Metrics {
     faults_injected: Arc<Counter>,
     decode_errors: Arc<Counter>,
     admission_deferrals: Arc<Counter>,
+    // net-layer counters (HTTP front-end; zero when serving in-process)
+    net_connections: Arc<Counter>,
+    net_requests: Arc<Counter>,
+    net_parse_errors: Arc<Counter>,
+    net_slow_writes: Arc<Counter>,
     // gauges (absolute values, last write wins)
     cache_bytes: Arc<Gauge>,
     cache_evictions: Arc<Gauge>,
@@ -89,6 +94,10 @@ impl Default for Metrics {
             faults_injected: registry.counter("faults_injected"),
             decode_errors: registry.counter("decode_errors"),
             admission_deferrals: registry.counter("admission_deferrals"),
+            net_connections: registry.counter("net_connections"),
+            net_requests: registry.counter("net_requests"),
+            net_parse_errors: registry.counter("net_parse_errors"),
+            net_slow_writes: registry.counter("net_slow_writes"),
             cache_bytes: registry.gauge("cache_bytes"),
             cache_evictions: registry.gauge("cache_evictions"),
             queue_depth: registry.gauge("queue_depth"),
@@ -176,6 +185,15 @@ pub struct Snapshot {
     /// admission rounds in which a queued stream was deferred because
     /// activating it would overcommit the pool's aggregate byte budget
     pub admission_deferrals: u64,
+    /// TCP connections accepted by the HTTP front-end
+    pub net_connections: u64,
+    /// HTTP requests parsed and dispatched (all endpoints)
+    pub net_requests: u64,
+    /// connections dropped for malformed/oversized HTTP input
+    pub net_parse_errors: u64,
+    /// chunk writes that hit the write deadline or an injected
+    /// `net_write` stall (slow or vanished streaming clients)
+    pub net_slow_writes: u64,
     /// time-to-first-token percentiles/mean (µs; admission -> emission)
     pub ttft_p50_us: u128,
     pub ttft_p99_us: u128,
@@ -313,6 +331,27 @@ impl Metrics {
         self.admission_deferrals.inc();
     }
 
+    /// The HTTP listener accepted a TCP connection.
+    pub fn record_net_connection(&self) {
+        self.net_connections.inc();
+    }
+
+    /// One HTTP request parsed and dispatched (any endpoint).
+    pub fn record_net_request(&self) {
+        self.net_requests.inc();
+    }
+
+    /// A connection sent malformed/oversized HTTP and was dropped.
+    pub fn record_net_parse_error(&self) {
+        self.net_parse_errors.inc();
+    }
+
+    /// A streamed chunk write hit the write deadline (or an injected
+    /// `net_write` stall) — the client is slow or gone.
+    pub fn record_net_slow_write(&self) {
+        self.net_slow_writes.inc();
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let (started, gen_span) = {
             let c = self.clocks.lock().unwrap();
@@ -375,6 +414,10 @@ impl Metrics {
             faults_injected: self.faults_injected.get(),
             decode_errors: self.decode_errors.get(),
             admission_deferrals: self.admission_deferrals.get(),
+            net_connections: self.net_connections.get(),
+            net_requests: self.net_requests.get(),
+            net_parse_errors: self.net_parse_errors.get(),
+            net_slow_writes: self.net_slow_writes.get(),
             ttft_p50_us: self.ttft.percentile(0.50) as u128,
             ttft_p99_us: self.ttft.percentile(0.99) as u128,
             ttft_mean_us: self.ttft.mean(),
@@ -461,6 +504,15 @@ impl Snapshot {
                 self.decode_errors,
                 self.admission_deferrals,
                 self.faults_injected,
+            );
+        }
+        if self.net_connections > 0 || self.net_requests > 0 {
+            println!(
+                "{label}: net: {} connections, {} requests | {} parse-error, {} slow-write",
+                self.net_connections,
+                self.net_requests,
+                self.net_parse_errors,
+                self.net_slow_writes,
             );
         }
         if self.decode_requests > 0 {
@@ -627,6 +679,33 @@ mod tests {
         let snap = format!("{}", m.registry().snapshot_json());
         assert!(snap.contains("\"deadline_exceeded\":2"));
         assert!(snap.contains("\"faults_injected\":3"));
+    }
+
+    #[test]
+    fn net_counters_surface_with_pinned_names() {
+        let m = Metrics::default();
+        let empty = m.snapshot();
+        assert_eq!(empty.net_connections, 0);
+        assert_eq!(empty.net_requests, 0);
+        m.record_net_connection();
+        m.record_net_connection();
+        m.record_net_request();
+        m.record_net_request();
+        m.record_net_request();
+        m.record_net_parse_error();
+        m.record_net_slow_write();
+        let s = m.snapshot();
+        assert_eq!(s.net_connections, 2);
+        assert_eq!(s.net_requests, 3);
+        assert_eq!(s.net_parse_errors, 1);
+        assert_eq!(s.net_slow_writes, 1);
+        // the registry names are the wire contract for metrics.jsonl and
+        // GET /v1/metrics — pin them
+        let snap = format!("{}", m.registry().snapshot_json());
+        assert!(snap.contains("\"net_connections\":2"));
+        assert!(snap.contains("\"net_requests\":3"));
+        assert!(snap.contains("\"net_parse_errors\":1"));
+        assert!(snap.contains("\"net_slow_writes\":1"));
     }
 
     #[test]

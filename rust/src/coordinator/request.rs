@@ -100,6 +100,38 @@ pub enum RejectReason {
     Timeout,
 }
 
+impl RejectReason {
+    /// Every variant, for exhaustive wire-code round-trip tests.
+    pub const ALL: [RejectReason; 6] = [
+        RejectReason::TooLong,
+        RejectReason::QueueFull,
+        RejectReason::ShuttingDown,
+        RejectReason::EmptyGeneration,
+        RejectReason::Unsupported,
+        RejectReason::Timeout,
+    ];
+
+    /// Stable machine-readable code for HTTP error bodies and the net
+    /// validators. Part of the wire contract: never rename a code —
+    /// clients and `scripts/validate_net.py` key off these, not the
+    /// human-facing `Display` strings.
+    pub fn wire_code(self) -> &'static str {
+        match self {
+            RejectReason::TooLong => "too_long",
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::ShuttingDown => "shutting_down",
+            RejectReason::EmptyGeneration => "empty_generation",
+            RejectReason::Unsupported => "unsupported",
+            RejectReason::Timeout => "timeout",
+        }
+    }
+
+    /// Inverse of [`RejectReason::wire_code`] (client-side decoding).
+    pub fn from_wire_code(code: &str) -> Option<RejectReason> {
+        RejectReason::ALL.into_iter().find(|r| r.wire_code() == code)
+    }
+}
+
 impl std::fmt::Display for RejectReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -110,5 +142,28 @@ impl std::fmt::Display for RejectReason {
             RejectReason::Unsupported => write!(f, "unsupported on this execution backend"),
             RejectReason::Timeout => write!(f, "admission queue stalled past its TTL"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_wire_codes_round_trip_and_stay_stable() {
+        for r in RejectReason::ALL {
+            assert_eq!(RejectReason::from_wire_code(r.wire_code()), Some(r));
+        }
+        // pin the published strings — renaming one is a breaking change
+        assert_eq!(RejectReason::QueueFull.wire_code(), "queue_full");
+        assert_eq!(RejectReason::TooLong.wire_code(), "too_long");
+        assert_eq!(RejectReason::ShuttingDown.wire_code(), "shutting_down");
+        assert_eq!(RejectReason::EmptyGeneration.wire_code(), "empty_generation");
+        assert_eq!(RejectReason::Unsupported.wire_code(), "unsupported");
+        assert_eq!(RejectReason::Timeout.wire_code(), "timeout");
+        assert_eq!(RejectReason::from_wire_code("nonsense"), None);
+        let codes: std::collections::BTreeSet<_> =
+            RejectReason::ALL.iter().map(|r| r.wire_code()).collect();
+        assert_eq!(codes.len(), RejectReason::ALL.len(), "codes must be distinct");
     }
 }

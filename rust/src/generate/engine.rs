@@ -91,6 +91,40 @@ pub enum StopReason {
     Shutdown,
 }
 
+impl StopReason {
+    /// Every variant, for exhaustive wire-code round-trip tests.
+    pub const ALL: [StopReason; 7] = [
+        StopReason::StopToken,
+        StopReason::MaxTokens,
+        StopReason::Budget,
+        StopReason::Disconnected,
+        StopReason::DeadlineExceeded,
+        StopReason::Error,
+        StopReason::Shutdown,
+    ];
+
+    /// Stable machine-readable code carried in streamed `done` events
+    /// over HTTP. Part of the wire contract: never rename a code —
+    /// clients and `scripts/validate_net.py` key off these, not the
+    /// human-facing `Display` strings.
+    pub fn wire_code(self) -> &'static str {
+        match self {
+            StopReason::StopToken => "stop_token",
+            StopReason::MaxTokens => "max_tokens",
+            StopReason::Budget => "budget",
+            StopReason::Disconnected => "disconnected",
+            StopReason::DeadlineExceeded => "deadline_exceeded",
+            StopReason::Error => "error",
+            StopReason::Shutdown => "shutdown",
+        }
+    }
+
+    /// Inverse of [`StopReason::wire_code`] (client-side decoding).
+    pub fn from_wire_code(code: &str) -> Option<StopReason> {
+        StopReason::ALL.into_iter().find(|r| r.wire_code() == code)
+    }
+}
+
 impl std::fmt::Display for StopReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -381,6 +415,25 @@ mod tests {
     fn toks(seed: u64, n: usize) -> Vec<i32> {
         let mut rng = Rng::new(seed);
         (0..n).map(|_| rng.below(24) as i32).collect()
+    }
+
+    #[test]
+    fn stop_wire_codes_round_trip_and_stay_stable() {
+        for r in StopReason::ALL {
+            assert_eq!(StopReason::from_wire_code(r.wire_code()), Some(r));
+        }
+        // pin the published strings — renaming one is a breaking change
+        assert_eq!(StopReason::StopToken.wire_code(), "stop_token");
+        assert_eq!(StopReason::MaxTokens.wire_code(), "max_tokens");
+        assert_eq!(StopReason::Budget.wire_code(), "budget");
+        assert_eq!(StopReason::Disconnected.wire_code(), "disconnected");
+        assert_eq!(StopReason::DeadlineExceeded.wire_code(), "deadline_exceeded");
+        assert_eq!(StopReason::Error.wire_code(), "error");
+        assert_eq!(StopReason::Shutdown.wire_code(), "shutdown");
+        assert_eq!(StopReason::from_wire_code("nonsense"), None);
+        let codes: std::collections::BTreeSet<_> =
+            StopReason::ALL.iter().map(|r| r.wire_code()).collect();
+        assert_eq!(codes.len(), StopReason::ALL.len(), "codes must be distinct");
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod generate;
 pub mod hwsim;
 pub mod kvcache;
 pub mod model;
+pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,260 @@
+//! The JSON wire surface of the HTTP front-end: request-body parsing,
+//! response/event serialization, and the mapping from the engine's
+//! typed refusals (`RejectReason`, `ParseError`) to HTTP statuses and
+//! stable machine-readable error codes.
+//!
+//! Everything here is pure data transformation over `util::json::Json`
+//! (no sockets), so the wire contract is unit-testable next to the
+//! types it serializes. Codes come from `RejectReason::wire_code` /
+//! `StopReason::wire_code` — clients must key off those, never off the
+//! human-readable `message` strings.
+
+use crate::coordinator::{RejectReason, Response};
+use crate::generate::{GenerateRequest, SamplingParams, StreamEvent};
+use crate::util::json::Json;
+
+/// HTTP status a rejected admission maps to. Refusals the client can
+/// retry later (backpressure) are 429; server lifecycle and stall
+/// refusals are 503; the rest are caller errors on this deployment.
+pub fn reject_status(r: RejectReason) -> u16 {
+    match r {
+        RejectReason::TooLong => 413,
+        RejectReason::QueueFull => 429,
+        RejectReason::ShuttingDown | RejectReason::Timeout => 503,
+        RejectReason::EmptyGeneration => 400,
+        RejectReason::Unsupported => 501,
+    }
+}
+
+/// `{"error": {"code": ..., "message": ...}}` — the uniform error body.
+pub fn error_body(code: &str, message: &str) -> Vec<u8> {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("code", Json::str(code)), ("message", Json::str(message))]),
+    )])
+    .to_string()
+    .into_bytes()
+}
+
+/// Error body for a rejected admission.
+pub fn reject_body(r: RejectReason) -> Vec<u8> {
+    error_body(r.wire_code(), &r.to_string())
+}
+
+/// One streamed event as a JSONL line (no trailing newline; the caller
+/// frames it). `done` carries the stop reason's wire code.
+pub fn event_json(event: &StreamEvent) -> Json {
+    match event {
+        StreamEvent::Token { index, token } => Json::obj(vec![
+            ("event", Json::str("token")),
+            ("index", Json::num(*index as f64)),
+            ("token", Json::num(*token as f64)),
+        ]),
+        StreamEvent::Done { reason, generated, ttft_us } => Json::obj(vec![
+            ("event", Json::str("done")),
+            ("reason", Json::str(reason.wire_code())),
+            ("generated", Json::num(*generated as f64)),
+            ("ttft_us", Json::num(*ttft_us as f64)),
+        ]),
+    }
+}
+
+/// A classification turn's response body (`POST /v1/sessions`).
+pub fn response_json(session: u64, resp: &Response) -> Json {
+    Json::obj(vec![
+        ("session", Json::num(session as f64)),
+        ("pred", Json::num(resp.pred)),
+        ("logits", Json::arr(resp.logits.iter().map(|&v| Json::num(v as f64)))),
+        ("bucket", Json::str(resp.bucket.clone())),
+        ("latency_us", Json::num(resp.latency_us as f64)),
+        ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
+        ("cached_tokens", Json::num(resp.cached_tokens as f64)),
+    ])
+}
+
+fn parse_json(body: &[u8]) -> Result<Json, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    Json::parse(text).map_err(|e| format!("body is not valid JSON: {e:?}"))
+}
+
+fn get_u64(obj: &Json, key: &str) -> Result<u64, String> {
+    let v = obj.get(key).ok_or_else(|| format!("missing field '{key}'"))?;
+    let f = v.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))?;
+    if f < 0.0 || f.fract() != 0.0 {
+        return Err(format!("field '{key}' must be a non-negative integer"));
+    }
+    Ok(f as u64)
+}
+
+fn get_tokens(obj: &Json, key: &str) -> Result<Vec<i32>, String> {
+    let v = obj.get(key).ok_or_else(|| format!("missing field '{key}'"))?;
+    let arr = v.as_arr().ok_or_else(|| format!("field '{key}' must be an array"))?;
+    arr.iter()
+        .map(|t| {
+            let f = t.as_f64().ok_or_else(|| format!("'{key}' holds a non-number"))?;
+            if f.fract() != 0.0 || f < i32::MIN as f64 || f > i32::MAX as f64 {
+                return Err(format!("'{key}' holds a non-i32 value"));
+            }
+            Ok(f as i32)
+        })
+        .collect()
+}
+
+/// Parse a `POST /v1/sessions` body: `{"session": id, "tokens": [...]}`.
+pub fn parse_sessions_body(body: &[u8]) -> Result<(u64, Vec<i32>), String> {
+    let obj = parse_json(body)?;
+    Ok((get_u64(&obj, "session")?, get_tokens(&obj, "tokens")?))
+}
+
+/// Parse a `POST /v1/generate` body:
+/// `{"session", "prompt", "max_new_tokens"[, "stop_tokens",
+/// "temperature", "top_k", "top_p", "seed"]}`. Sampling fields default
+/// to greedy decoding, which keeps seeded runs reproducible end to end.
+pub fn parse_generate_body(body: &[u8]) -> Result<(u64, GenerateRequest), String> {
+    let obj = parse_json(body)?;
+    let session = get_u64(&obj, "session")?;
+    let prompt = get_tokens(&obj, "prompt")?;
+    let max_new_tokens = get_u64(&obj, "max_new_tokens")? as usize;
+    let stop_tokens =
+        if obj.get("stop_tokens").is_some() { get_tokens(&obj, "stop_tokens")? } else { Vec::new() };
+    let mut sampling = SamplingParams::greedy();
+    if let Some(t) = obj.get("temperature") {
+        let t = t.as_f64().ok_or("field 'temperature' must be a number")?;
+        if !(t >= 0.0) || !t.is_finite() {
+            return Err("field 'temperature' must be finite and >= 0".to_string());
+        }
+        sampling.temperature = t as f32;
+    }
+    if obj.get("top_k").is_some() {
+        sampling.top_k = get_u64(&obj, "top_k")? as usize;
+    }
+    if let Some(p) = obj.get("top_p") {
+        let p = p.as_f64().ok_or("field 'top_p' must be a number")?;
+        if !(p > 0.0 && p <= 1.0) {
+            return Err("field 'top_p' must be in (0, 1]".to_string());
+        }
+        sampling.top_p = p as f32;
+    }
+    if obj.get("seed").is_some() {
+        sampling.seed = get_u64(&obj, "seed")?;
+    }
+    Ok((session, GenerateRequest { prompt, max_new_tokens, stop_tokens, sampling }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::StopReason;
+
+    #[test]
+    fn reject_statuses_cover_every_variant() {
+        for r in RejectReason::ALL {
+            let status = reject_status(r);
+            assert!(
+                matches!(status, 400 | 413 | 429 | 501 | 503),
+                "{r:?} mapped to unexpected status {status}"
+            );
+        }
+        assert_eq!(reject_status(RejectReason::QueueFull), 429);
+        assert_eq!(reject_status(RejectReason::ShuttingDown), 503);
+    }
+
+    #[test]
+    fn error_bodies_carry_the_wire_code() {
+        let body = String::from_utf8(reject_body(RejectReason::QueueFull)).unwrap();
+        let parsed = Json::parse(&body).unwrap();
+        assert_eq!(parsed.at(&["error", "code"]).and_then(Json::as_str), Some("queue_full"));
+        assert!(parsed.at(&["error", "message"]).is_some());
+    }
+
+    #[test]
+    fn event_serialization_round_trips_through_wire_codes() {
+        let tok = event_json(&StreamEvent::Token { index: 3, token: 17 }).to_string();
+        let parsed = Json::parse(&tok).unwrap();
+        assert_eq!(parsed.get("event").and_then(Json::as_str), Some("token"));
+        assert_eq!(parsed.get("index").and_then(Json::as_usize), Some(3));
+        assert_eq!(parsed.get("token").and_then(Json::as_f64), Some(17.0));
+
+        let done = event_json(&StreamEvent::Done {
+            reason: StopReason::MaxTokens,
+            generated: 8,
+            ttft_us: 1234,
+        })
+        .to_string();
+        let parsed = Json::parse(&done).unwrap();
+        let code = parsed.get("reason").and_then(Json::as_str).unwrap();
+        assert_eq!(StopReason::from_wire_code(code), Some(StopReason::MaxTokens));
+        assert_eq!(parsed.get("generated").and_then(Json::as_usize), Some(8));
+    }
+
+    #[test]
+    fn sessions_body_parses_and_validates() {
+        let (sid, toks) =
+            parse_sessions_body(br#"{"session": 7, "tokens": [1, 2, 3]}"#).unwrap();
+        assert_eq!(sid, 7);
+        assert_eq!(toks, vec![1, 2, 3]);
+        assert!(parse_sessions_body(b"not json").is_err());
+        assert!(parse_sessions_body(br#"{"tokens": [1]}"#).is_err(), "missing session");
+        assert!(parse_sessions_body(br#"{"session": 1}"#).is_err(), "missing tokens");
+        assert!(parse_sessions_body(br#"{"session": 1.5, "tokens": []}"#).is_err());
+        assert!(parse_sessions_body(br#"{"session": 1, "tokens": [1.5]}"#).is_err());
+        assert!(parse_sessions_body(&[0xff, 0xfe]).is_err(), "non-UTF-8 body");
+    }
+
+    #[test]
+    fn generate_body_defaults_to_greedy() {
+        let (sid, req) = parse_generate_body(
+            br#"{"session": 2, "prompt": [4, 5], "max_new_tokens": 6}"#,
+        )
+        .unwrap();
+        assert_eq!(sid, 2);
+        assert_eq!(req.prompt, vec![4, 5]);
+        assert_eq!(req.max_new_tokens, 6);
+        assert!(req.stop_tokens.is_empty());
+        assert_eq!(req.sampling, SamplingParams::greedy());
+    }
+
+    #[test]
+    fn generate_body_accepts_sampling_knobs_and_rejects_bad_ones() {
+        let (_, req) = parse_generate_body(
+            br#"{"session": 1, "prompt": [1], "max_new_tokens": 4,
+                 "stop_tokens": [0], "temperature": 0.75, "top_k": 3,
+                 "top_p": 0.9, "seed": 42}"#,
+        )
+        .unwrap();
+        assert_eq!(req.stop_tokens, vec![0]);
+        assert!((req.sampling.temperature - 0.75).abs() < 1e-6);
+        assert_eq!(req.sampling.top_k, 3);
+        assert!((req.sampling.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(req.sampling.seed, 42);
+
+        for bad in [
+            br#"{"session": 1, "prompt": [1], "max_new_tokens": 4, "top_p": 0}"#.as_slice(),
+            br#"{"session": 1, "prompt": [1], "max_new_tokens": 4, "top_p": 1.5}"#,
+            br#"{"session": 1, "prompt": [1], "max_new_tokens": 4, "temperature": -1}"#,
+            br#"{"session": 1, "prompt": [1]}"#,
+        ] {
+            assert!(parse_generate_body(bad).is_err(), "accepted {:?}", bad);
+        }
+    }
+
+    #[test]
+    fn response_json_carries_the_turn_fields() {
+        let resp = Response {
+            id: 1,
+            pred: 2,
+            logits: vec![0.5, -1.0],
+            bucket: "demo".into(),
+            latency_us: 1000,
+            batch_occupancy: 3,
+            cached_tokens: 4,
+            kernel_us: 0,
+            decode_us: 0,
+        };
+        let j = response_json(9, &resp);
+        assert_eq!(j.get("session").and_then(Json::as_usize), Some(9));
+        assert_eq!(j.get("pred").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("logits").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("cached_tokens").and_then(Json::as_usize), Some(4));
+    }
+}

@@ -1,0 +1,244 @@
+//! Minimal blocking HTTP/1.1 client — just enough protocol to drive the
+//! front-end from integration tests, the net stress bench, and the
+//! serving example without external dependencies. Supports keep-alive
+//! reuse, `Content-Length` bodies, and incremental chunked reads (one
+//! chunk per call) so a caller can timestamp the first streamed token
+//! the way a real client observes TTFT.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Parsed response head; the body is read separately (fully via
+/// [`HttpClient::read_body`] or chunk-at-a-time via
+/// [`HttpClient::next_chunk`]).
+#[derive(Clone, Debug)]
+pub struct ResponseHead {
+    pub status: u16,
+    /// lowercased names, order preserved
+    pub headers: Vec<(String, String)>,
+}
+
+impl ResponseHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn chunked(&self) -> bool {
+        self.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+    }
+
+    pub fn content_length(&self) -> Option<usize> {
+        self.header("content-length").and_then(|v| v.trim().parse().ok())
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// One TCP connection to the front-end (keep-alive: issue several
+/// requests back to back on the same `HttpClient`).
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    pub fn set_timeouts(&self, read: Option<Duration>, write: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(read)?;
+        self.stream.set_write_timeout(write)
+    }
+
+    /// Send one request. A `body` implies `Content-Length` framing.
+    pub fn send(&mut self, method: &str, path: &str, body: Option<&[u8]>) -> io::Result<()> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: had\r\n");
+        if let Some(b) = body {
+            head.push_str(&format!("Content-Type: application/json\r\nContent-Length: {}\r\n", b.len()));
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        if let Some(b) = body {
+            self.stream.write_all(b)?;
+        }
+        self.stream.flush()
+    }
+
+    /// Send one request with a chunked body (each slice becomes one
+    /// chunk) — exercises the server's chunked request decoding over a
+    /// real socket.
+    pub fn send_chunked(&mut self, method: &str, path: &str, chunks: &[&[u8]]) -> io::Result<()> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: had\r\nContent-Type: application/json\r\nTransfer-Encoding: chunked\r\n\r\n"
+        );
+        self.stream.write_all(head.as_bytes())?;
+        for c in chunks {
+            self.stream.write_all(format!("{:x}\r\n", c.len()).as_bytes())?;
+            self.stream.write_all(c)?;
+            self.stream.write_all(b"\r\n")?;
+        }
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+
+    fn fill(&mut self) -> io::Result<()> {
+        let mut tmp = [0u8; 4096];
+        let n = self.stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed mid-response"));
+        }
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(())
+    }
+
+    /// Pop one CRLF-terminated line off the buffer (filling as needed).
+    fn read_line(&mut self) -> io::Result<String> {
+        loop {
+            if let Some(pos) = self.buf.windows(2).position(|w| w == b"\r\n") {
+                let line = String::from_utf8(self.buf[..pos].to_vec())
+                    .map_err(|_| bad("non-UTF-8 header line"))?;
+                self.buf.drain(..pos + 2);
+                return Ok(line);
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Pop exactly `n` bytes off the buffer (filling as needed).
+    fn read_exact_buf(&mut self, n: usize) -> io::Result<Vec<u8>> {
+        while self.buf.len() < n {
+            self.fill()?;
+        }
+        let out = self.buf[..n].to_vec();
+        self.buf.drain(..n);
+        Ok(out)
+    }
+
+    /// Read a response's status line and headers; body left unread.
+    pub fn read_head(&mut self) -> io::Result<ResponseHead> {
+        let status_line = self.read_line()?;
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            return Err(bad("not an HTTP response"));
+        }
+        let status: u16 =
+            parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| bad("bad status code"))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| bad("bad header"))?;
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        Ok(ResponseHead { status, headers })
+    }
+
+    /// Read one chunk of a chunked body. `Ok(None)` after the final
+    /// (zero-length) chunk and its trailer section.
+    pub fn next_chunk(&mut self) -> io::Result<Option<Vec<u8>>> {
+        let size_line = self.read_line()?;
+        let size_hex = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_hex, 16).map_err(|_| bad("bad chunk size"))?;
+        if size == 0 {
+            loop {
+                if self.read_line()?.is_empty() {
+                    return Ok(None);
+                }
+            }
+        }
+        let data = self.read_exact_buf(size + 2)?; // data + CRLF
+        if &data[size..] != b"\r\n" {
+            return Err(bad("chunk missing CRLF"));
+        }
+        Ok(Some(data[..size].to_vec()))
+    }
+
+    /// Drain a response body completely (either framing).
+    pub fn read_body(&mut self, head: &ResponseHead) -> io::Result<Vec<u8>> {
+        if head.chunked() {
+            let mut out = Vec::new();
+            while let Some(chunk) = self.next_chunk()? {
+                out.extend_from_slice(&chunk);
+            }
+            Ok(out)
+        } else {
+            let n = head.content_length().unwrap_or(0);
+            self.read_exact_buf(n)
+        }
+    }
+}
+
+/// One-shot convenience: connect, send, read the full response.
+pub fn roundtrip(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> io::Result<(u16, Vec<u8>)> {
+    let mut c = HttpClient::connect(addr)?;
+    c.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))?;
+    c.send(method, path, body)?;
+    let head = c.read_head()?;
+    let body = c.read_body(&head)?;
+    Ok((head.status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Serve one canned response on a throwaway listener, return its addr.
+    fn canned(resp: &'static [u8]) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let mut sink = [0u8; 1024];
+                s.read(&mut sink).ok(); // consume the request head
+                s.write_all(resp).ok();
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn parses_content_length_response() {
+        let addr = canned(b"HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nContent-Length: 5\r\n\r\nhello");
+        let (status, body) = roundtrip(addr, "GET", "/x", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"hello");
+    }
+
+    #[test]
+    fn reads_chunked_response_chunk_by_chunk() {
+        let addr = canned(
+            b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n3\r\nfoo\r\n4\r\nbars\r\n0\r\n\r\n",
+        );
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.set_timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
+        c.send("GET", "/stream", None).unwrap();
+        let head = c.read_head().unwrap();
+        assert!(head.chunked());
+        assert_eq!(c.next_chunk().unwrap().as_deref(), Some(b"foo".as_slice()));
+        assert_eq!(c.next_chunk().unwrap().as_deref(), Some(b"bars".as_slice()));
+        assert_eq!(c.next_chunk().unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_garbage_status_line() {
+        let addr = canned(b"garbage\r\n\r\n");
+        let err = roundtrip(addr, "GET", "/", None).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -1,0 +1,710 @@
+//! Pure incremental HTTP/1.1 request parser — no sockets, no I/O.
+//!
+//! The connection loop (`net::server`) feeds raw bytes in with
+//! [`HttpReader::feed`] and pulls complete requests out with
+//! [`HttpReader::next_request`]; everything between those two calls is
+//! deterministic buffer manipulation, so malformed-input hardening and
+//! framing edge cases (split feeds, pipelined keep-alive requests,
+//! chunked bodies truncated mid-chunk) are unit-tested here without a
+//! listener. Limits are enforced as the bytes arrive, not after: a head
+//! that exceeds [`Limits::max_head_bytes`] errors before a terminator
+//! ever shows up, so an attacker cannot buffer unbounded memory by
+//! simply never finishing a request.
+//!
+//! Supported framing: `Content-Length` bodies, `Transfer-Encoding:
+//! chunked` bodies (extensions ignored, trailers skipped), and
+//! body-less requests. Both HTTP/1.1 (keep-alive default) and HTTP/1.0
+//! (close default) request lines are accepted; anything else is a
+//! [`ParseError::UnsupportedVersion`].
+
+/// Bounds the parser enforces while a request is still arriving.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Longest accepted request line (method + target + version).
+    pub max_request_line: usize,
+    /// Total head bytes (request line + headers + blank line).
+    pub max_head_bytes: usize,
+    /// Maximum number of header fields.
+    pub max_headers: usize,
+    /// Largest accepted body, whatever the framing.
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_request_line: 8 * 1024,
+            max_head_bytes: 32 * 1024,
+            max_headers: 64,
+            max_body_bytes: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// Why a request could not be parsed. Carries its own HTTP status and
+/// stable machine-readable code so the connection loop can answer
+/// before closing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// Request line is not `METHOD SP target SP HTTP/x.y`.
+    BadRequestLine,
+    /// Not an HTTP/1.0 or HTTP/1.1 request.
+    UnsupportedVersion,
+    /// A header line has no colon, an empty name, or malformed bytes.
+    BadHeader,
+    /// Head grew past [`Limits::max_head_bytes`] (or the request line
+    /// past [`Limits::max_request_line`]) without completing.
+    HeadTooLarge,
+    /// More than [`Limits::max_headers`] header fields.
+    TooManyHeaders,
+    /// `Content-Length` missing a parseable value, or repeated with
+    /// disagreeing values.
+    BadContentLength,
+    /// Declared or accumulated body larger than [`Limits::max_body_bytes`].
+    BodyTooLarge,
+    /// A chunk-size line is not valid hex (or is oversized).
+    BadChunk,
+    /// A `Transfer-Encoding` other than `chunked`.
+    UnsupportedTransferEncoding,
+}
+
+impl ParseError {
+    /// HTTP status the connection loop answers with before closing.
+    pub fn status(self) -> u16 {
+        match self {
+            ParseError::BadRequestLine
+            | ParseError::BadHeader
+            | ParseError::BadContentLength
+            | ParseError::BadChunk => 400,
+            ParseError::HeadTooLarge | ParseError::TooManyHeaders => 431,
+            ParseError::BodyTooLarge => 413,
+            ParseError::UnsupportedTransferEncoding => 501,
+            ParseError::UnsupportedVersion => 505,
+        }
+    }
+
+    /// Stable machine-readable code for the error body.
+    pub fn code(self) -> &'static str {
+        match self {
+            ParseError::BadRequestLine => "bad_request_line",
+            ParseError::UnsupportedVersion => "unsupported_version",
+            ParseError::BadHeader => "bad_header",
+            ParseError::HeadTooLarge => "head_too_large",
+            ParseError::TooManyHeaders => "too_many_headers",
+            ParseError::BadContentLength => "bad_content_length",
+            ParseError::BodyTooLarge => "body_too_large",
+            ParseError::BadChunk => "bad_chunk",
+            ParseError::UnsupportedTransferEncoding => "unsupported_transfer_encoding",
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.code())
+    }
+}
+
+/// One fully parsed request. Header names are lower-cased at parse time
+/// (field names are case-insensitive); values keep their bytes minus
+/// surrounding whitespace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Origin-form target as sent (path + optional `?query`).
+    pub target: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of a header, by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Target path with any `?query` stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Connection persistence per the version defaults and the
+    /// `Connection` header (`close` / `keep-alive` override).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Body-framing state while a request head has been parsed but its body
+/// is still arriving.
+#[derive(Debug)]
+enum BodyState {
+    /// `Content-Length` framing: `need` bytes remain.
+    Fixed { need: usize },
+    /// Chunked framing: waiting for the next `SIZE\r\n` line.
+    ChunkSize,
+    /// Chunked framing: `need` data bytes remain in the current chunk
+    /// (followed by CRLF).
+    ChunkData { need: usize },
+    /// Chunked framing: skipping trailer lines until the blank line.
+    ChunkTrailer,
+}
+
+/// Incremental parser for a stream of pipelined requests on one
+/// connection. `feed` appends raw bytes; `next_request` consumes at
+/// most one complete request from the front of the buffer. Leftover
+/// bytes stay buffered for the next call, which is exactly what
+/// keep-alive pipelining needs.
+#[derive(Debug)]
+pub struct HttpReader {
+    limits: Limits,
+    buf: Vec<u8>,
+    /// Head parsed, body still arriving.
+    pending: Option<(HttpRequest, BodyState)>,
+    /// Poisoned after the first error: HTTP/1.1 framing cannot recover
+    /// from a desynchronized stream, so the connection must close.
+    dead: Option<ParseError>,
+}
+
+impl HttpReader {
+    pub fn new(limits: Limits) -> HttpReader {
+        HttpReader { limits, buf: Vec::new(), pending: None, dead: None }
+    }
+
+    /// Append raw bytes read off the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed into a request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// `true` if a request is mid-parse (head seen, body incomplete) —
+    /// an EOF here means the peer truncated a request.
+    pub fn mid_request(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Try to produce the next complete request. `Ok(None)` means "need
+    /// more bytes"; an error poisons the reader (framing is lost) and
+    /// repeats on every later call.
+    pub fn next_request(&mut self) -> Result<Option<HttpRequest>, ParseError> {
+        if let Some(e) = self.dead {
+            return Err(e);
+        }
+        match self.advance() {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.dead = Some(e);
+                Err(e)
+            }
+        }
+    }
+
+    fn advance(&mut self) -> Result<Option<HttpRequest>, ParseError> {
+        if self.pending.is_none() {
+            match self.take_head()? {
+                None => return Ok(None),
+                Some(pending) => self.pending = Some(pending),
+            }
+        }
+        // Drive body framing until complete or out of bytes.
+        loop {
+            let (req, state) = self.pending.as_mut().expect("pending head");
+            match state {
+                BodyState::Fixed { need } => {
+                    if *need == 0 || self.buf.len() >= *need {
+                        let n = *need;
+                        req.body.extend_from_slice(&self.buf[..n]);
+                        self.buf.drain(..n);
+                        let (req, _) = self.pending.take().expect("pending head");
+                        return Ok(Some(req));
+                    }
+                    return Ok(None);
+                }
+                BodyState::ChunkSize => {
+                    let Some(line_end) = find_crlf(&self.buf) else {
+                        // A size line is tiny; anything longer is garbage.
+                        if self.buf.len() > 128 {
+                            return Err(ParseError::BadChunk);
+                        }
+                        return Ok(None);
+                    };
+                    let line = &self.buf[..line_end];
+                    let size = parse_chunk_size(line)?;
+                    self.buf.drain(..line_end + 2);
+                    if size == 0 {
+                        *state = BodyState::ChunkTrailer;
+                    } else {
+                        if req.body.len() + size > self.limits.max_body_bytes {
+                            return Err(ParseError::BodyTooLarge);
+                        }
+                        *state = BodyState::ChunkData { need: size };
+                    }
+                }
+                BodyState::ChunkData { need } => {
+                    // chunk data plus its trailing CRLF
+                    if self.buf.len() < *need + 2 {
+                        return Ok(None);
+                    }
+                    let n = *need;
+                    if &self.buf[n..n + 2] != b"\r\n" {
+                        return Err(ParseError::BadChunk);
+                    }
+                    req.body.extend_from_slice(&self.buf[..n]);
+                    self.buf.drain(..n + 2);
+                    *state = BodyState::ChunkSize;
+                }
+                BodyState::ChunkTrailer => {
+                    let Some(line_end) = find_crlf(&self.buf) else {
+                        if self.buf.len() > self.limits.max_head_bytes {
+                            return Err(ParseError::HeadTooLarge);
+                        }
+                        return Ok(None);
+                    };
+                    let blank = line_end == 0;
+                    self.buf.drain(..line_end + 2);
+                    if blank {
+                        let (req, _) = self.pending.take().expect("pending head");
+                        return Ok(Some(req));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Parse a complete head off the front of the buffer, if one has
+    /// arrived. Enforces head-size limits even while incomplete.
+    fn take_head(&mut self) -> Result<Option<(HttpRequest, BodyState)>, ParseError> {
+        let Some(head_end) = find_double_crlf(&self.buf) else {
+            if self.buf.len() > self.limits.max_head_bytes {
+                return Err(ParseError::HeadTooLarge);
+            }
+            // cheap early reject: a request line that never terminates
+            if find_crlf(&self.buf).is_none() && self.buf.len() > self.limits.max_request_line {
+                return Err(ParseError::HeadTooLarge);
+            }
+            return Ok(None);
+        };
+        if head_end + 4 > self.limits.max_head_bytes {
+            return Err(ParseError::HeadTooLarge);
+        }
+        let head: Vec<u8> = self.buf.drain(..head_end + 4).collect();
+        let head = &head[..head_end];
+        let mut lines = split_crlf(head);
+        let request_line = lines.next().ok_or(ParseError::BadRequestLine)?;
+        if request_line.len() > self.limits.max_request_line {
+            return Err(ParseError::HeadTooLarge);
+        }
+        let (method, target, http11) = parse_request_line(request_line)?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if headers.len() >= self.limits.max_headers {
+                return Err(ParseError::TooManyHeaders);
+            }
+            headers.push(parse_header_line(line)?);
+        }
+        let req = HttpRequest { method, target, http11, headers, body: Vec::new() };
+        let state = self.body_state_for(&req)?;
+        Ok(Some((req, state)))
+    }
+
+    /// Decide body framing from the parsed head.
+    fn body_state_for(&self, req: &HttpRequest) -> Result<BodyState, ParseError> {
+        if let Some(te) = req.header("transfer-encoding") {
+            if !te.eq_ignore_ascii_case("chunked") {
+                return Err(ParseError::UnsupportedTransferEncoding);
+            }
+            return Ok(BodyState::ChunkSize);
+        }
+        let mut need = 0usize;
+        let mut seen = false;
+        for (n, v) in &req.headers {
+            if n == "content-length" {
+                let parsed: usize =
+                    v.trim().parse().map_err(|_| ParseError::BadContentLength)?;
+                if seen && parsed != need {
+                    return Err(ParseError::BadContentLength);
+                }
+                need = parsed;
+                seen = true;
+            }
+        }
+        if need > self.limits.max_body_bytes {
+            return Err(ParseError::BodyTooLarge);
+        }
+        Ok(BodyState::Fixed { need })
+    }
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}
+
+fn find_double_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Iterate the CRLF-separated lines of a head (terminator not included).
+fn split_crlf(head: &[u8]) -> impl Iterator<Item = &[u8]> {
+    head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l))
+}
+
+fn parse_request_line(line: &[u8]) -> Result<(String, String, bool), ParseError> {
+    let line = std::str::from_utf8(line).map_err(|_| ParseError::BadRequestLine)?;
+    let mut parts = line.split(' ');
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(ParseError::BadRequestLine);
+    };
+    if method.is_empty()
+        || method.len() > 16
+        || !method.bytes().all(|b| b.is_ascii_uppercase())
+    {
+        return Err(ParseError::BadRequestLine);
+    }
+    if !target.starts_with('/') {
+        return Err(ParseError::BadRequestLine);
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(ParseError::UnsupportedVersion),
+    };
+    Ok((method.to_string(), target.to_string(), http11))
+}
+
+fn parse_header_line(line: &[u8]) -> Result<(String, String), ParseError> {
+    let line = std::str::from_utf8(line).map_err(|_| ParseError::BadHeader)?;
+    let (name, value) = line.split_once(':').ok_or(ParseError::BadHeader)?;
+    // field names are tokens: no whitespace, no empties
+    if name.is_empty() || name.contains(|c: char| c.is_ascii_whitespace()) {
+        return Err(ParseError::BadHeader);
+    }
+    Ok((name.to_ascii_lowercase(), value.trim().to_string()))
+}
+
+fn parse_chunk_size(line: &[u8]) -> Result<usize, ParseError> {
+    let line = std::str::from_utf8(line).map_err(|_| ParseError::BadChunk)?;
+    // chunk extensions (";ext=val") are legal; ignore them
+    let hex = line.split(';').next().unwrap_or("").trim();
+    if hex.is_empty() || hex.len() > 8 {
+        return Err(ParseError::BadChunk);
+    }
+    usize::from_str_radix(hex, 16).map_err(|_| ParseError::BadChunk)
+}
+
+// ---------------------------------------------------------------------------
+// Response serialization (the write half the connection loop uses)
+// ---------------------------------------------------------------------------
+
+/// Reason phrase for the statuses this server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize a complete fixed-length response.
+pub fn response_bytes(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason_phrase(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )
+    .into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Serialize the head of a chunked streaming response.
+pub fn chunked_head_bytes(status: u16, content_type: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n",
+        status,
+        reason_phrase(status),
+        content_type,
+    )
+    .into_bytes()
+}
+
+/// Serialize one chunk (hex size line + data + CRLF).
+pub fn chunk_bytes(data: &[u8]) -> Vec<u8> {
+    let mut out = format!("{:x}\r\n", data.len()).into_bytes();
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The terminating zero chunk.
+pub fn final_chunk_bytes() -> &'static [u8] {
+    b"0\r\n\r\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reader() -> HttpReader {
+        HttpReader::new(Limits::default())
+    }
+
+    fn parse_one(bytes: &[u8]) -> Result<Option<HttpRequest>, ParseError> {
+        let mut r = reader();
+        r.feed(bytes);
+        r.next_request()
+    }
+
+    #[test]
+    fn parses_a_simple_get() {
+        let req = parse_one(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .expect("complete");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path(), "/healthz");
+        assert!(req.http11);
+        assert!(req.keep_alive());
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_content_length_body_across_split_feeds() {
+        let wire = b"POST /v1/sessions HTTP/1.1\r\nContent-Length: 11\r\n\r\nhello world";
+        // feed byte-by-byte: every prefix must be NeedMore, never an error
+        let mut r = reader();
+        for (i, b) in wire.iter().enumerate() {
+            r.feed(&[*b]);
+            let out = r.next_request().expect("no error on any prefix");
+            if i + 1 < wire.len() {
+                assert!(out.is_none(), "premature completion at byte {i}");
+            } else {
+                let req = out.expect("complete at the last byte");
+                assert_eq!(req.body, b"hello world");
+            }
+        }
+    }
+
+    #[test]
+    fn parses_chunked_body_with_extensions_and_trailers() {
+        let wire = b"POST /v1/generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                     4;ext=1\r\nWiki\r\n5\r\npedia\r\n0\r\nTrailer: v\r\n\r\n";
+        let req = parse_one(wire).unwrap().expect("complete");
+        assert_eq!(req.body, b"Wikipedia");
+    }
+
+    #[test]
+    fn truncated_chunked_body_stays_incomplete_not_errored() {
+        // head + one full chunk + a declared-but-unsent second chunk:
+        // the reader must report "need more", so the connection loop can
+        // distinguish a slow client from a malformed one; EOF here is a
+        // truncation the loop detects via mid_request().
+        let mut r = reader();
+        r.feed(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nWiki\r\nA\r\npart");
+        assert_eq!(r.next_request().unwrap(), None);
+        assert!(r.mid_request(), "EOF now would be a truncated request");
+    }
+
+    #[test]
+    fn chunk_data_missing_crlf_is_an_error() {
+        let wire = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nWikiXX";
+        let mut r = reader();
+        r.feed(wire);
+        assert_eq!(r.next_request(), Err(ParseError::BadChunk));
+        // poisoned: the error repeats instead of resynchronizing
+        assert_eq!(r.next_request(), Err(ParseError::BadChunk));
+    }
+
+    #[test]
+    fn bad_chunk_size_lines_error() {
+        for bad in ["zz", "", " ;x", "123456789AB"] {
+            let wire =
+                format!("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n{bad}\r\n");
+            let mut r = reader();
+            r.feed(wire.as_bytes());
+            assert_eq!(r.next_request(), Err(ParseError::BadChunk), "size line {bad:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_request_lines_are_rejected() {
+        let cases: &[(&[u8], ParseError)] = &[
+            (b"GET\r\n\r\n" as &[u8], ParseError::BadRequestLine),
+            (b"GET /\r\n\r\n", ParseError::BadRequestLine),
+            (b"GET / HTTP/1.1 extra\r\n\r\n", ParseError::BadRequestLine),
+            (b"get / HTTP/1.1\r\n\r\n", ParseError::BadRequestLine),
+            (b"GET nopath HTTP/1.1\r\n\r\n", ParseError::BadRequestLine),
+            (b"GET / HTTP/2.0\r\n\r\n", ParseError::UnsupportedVersion),
+            (b"GET / SPDY/3\r\n\r\n", ParseError::UnsupportedVersion),
+            (b"\xff\xfe / HTTP/1.1\r\n\r\n", ParseError::BadRequestLine),
+        ];
+        for (wire, want) in cases {
+            assert_eq!(parse_one(wire).unwrap_err(), *want, "wire {wire:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_headers_are_rejected() {
+        for wire in [
+            b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1\r\n: empty-name\r\n\r\n",
+            b"GET / HTTP/1.1\r\nbad name: v\r\n\r\n",
+        ] {
+            assert_eq!(parse_one(wire).unwrap_err(), ParseError::BadHeader);
+        }
+    }
+
+    #[test]
+    fn oversized_heads_error_before_the_terminator_arrives() {
+        let limits = Limits { max_head_bytes: 256, ..Limits::default() };
+        let mut r = HttpReader::new(limits);
+        r.feed(b"GET / HTTP/1.1\r\n");
+        // an endless stream of headers, never a blank line
+        for i in 0.. {
+            r.feed(format!("x-h{i}: {}\r\n", "v".repeat(32)).as_bytes());
+            match r.next_request() {
+                Ok(None) => assert!(r.buffered() <= 512, "buffer must stay bounded"),
+                Err(e) => {
+                    assert_eq!(e, ParseError::HeadTooLarge);
+                    assert_eq!(e.status(), 431);
+                    return;
+                }
+                Ok(Some(_)) => panic!("no complete request was ever sent"),
+            }
+        }
+    }
+
+    #[test]
+    fn unterminated_request_line_errors_at_the_line_limit() {
+        let limits = Limits { max_request_line: 64, ..Limits::default() };
+        let mut r = HttpReader::new(limits);
+        r.feed(&[b'A'; 100]);
+        assert_eq!(r.next_request(), Err(ParseError::HeadTooLarge));
+    }
+
+    #[test]
+    fn too_many_headers_is_rejected() {
+        let limits = Limits { max_headers: 4, ..Limits::default() };
+        let mut wire = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..6 {
+            wire.push_str(&format!("h{i}: v\r\n"));
+        }
+        wire.push_str("\r\n");
+        let mut r = HttpReader::new(limits);
+        r.feed(wire.as_bytes());
+        assert_eq!(r.next_request(), Err(ParseError::TooManyHeaders));
+    }
+
+    #[test]
+    fn content_length_limits_and_conflicts() {
+        let limits = Limits { max_body_bytes: 8, ..Limits::default() };
+        let mut r = HttpReader::new(limits);
+        r.feed(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n");
+        assert_eq!(r.next_request(), Err(ParseError::BodyTooLarge));
+        assert_eq!(ParseError::BodyTooLarge.status(), 413);
+
+        assert_eq!(
+            parse_one(b"POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n").unwrap_err(),
+            ParseError::BadContentLength
+        );
+        assert_eq!(
+            parse_one(b"POST / HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 4\r\n\r\n")
+                .unwrap_err(),
+            ParseError::BadContentLength
+        );
+        // repeated but agreeing lengths are tolerated
+        let req =
+            parse_one(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok")
+                .unwrap()
+                .expect("complete");
+        assert_eq!(req.body, b"ok");
+    }
+
+    #[test]
+    fn unsupported_transfer_encoding_is_501() {
+        let e = parse_one(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n").unwrap_err();
+        assert_eq!(e, ParseError::UnsupportedTransferEncoding);
+        assert_eq!(e.status(), 501);
+    }
+
+    #[test]
+    fn pipelined_keep_alive_requests_parse_in_order() {
+        let mut r = reader();
+        r.feed(
+            b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nonePOST /b HTTP/1.1\r\n\
+              Content-Length: 3\r\n\r\ntwoGET /c HTTP/1.1\r\n\r\n",
+        );
+        let a = r.next_request().unwrap().expect("first");
+        assert_eq!((a.path(), a.body.as_slice()), ("/a", b"one".as_slice()));
+        let b = r.next_request().unwrap().expect("second");
+        assert_eq!((b.path(), b.body.as_slice()), ("/b", b"two".as_slice()));
+        let c = r.next_request().unwrap().expect("third");
+        assert_eq!(c.path(), "/c");
+        assert_eq!(r.next_request().unwrap(), None, "stream drained");
+        assert_eq!(r.buffered(), 0);
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let req =
+            parse_one(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let req = parse_one(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive(), "1.0 defaults to close");
+        let req = parse_one(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn response_serialization_round_trips_framing() {
+        let bytes = response_bytes(200, "application/json", b"{}", true);
+        let s = String::from_utf8(bytes).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+
+        let head = String::from_utf8(chunked_head_bytes(200, "application/x-ndjson")).unwrap();
+        assert!(head.contains("Transfer-Encoding: chunked\r\n"));
+
+        assert_eq!(chunk_bytes(b"abc"), b"3\r\nabc\r\n");
+        assert_eq!(chunk_bytes(&[b'x'; 16]).starts_with(b"10\r\n"), true);
+        assert_eq!(final_chunk_bytes(), b"0\r\n\r\n");
+    }
+
+    #[test]
+    fn query_strings_are_stripped_by_path() {
+        let req = parse_one(b"GET /v1/metrics?pretty=1 HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.path(), "/v1/metrics");
+        assert_eq!(req.target, "/v1/metrics?pretty=1");
+    }
+}

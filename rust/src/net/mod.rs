@@ -1,0 +1,30 @@
+//! HTTP/1.1 network front-end: the serving coordinator over real
+//! sockets, with zero new dependencies (std `TcpListener` + the
+//! existing `util::threadpool` substrate — DESIGN.md §Substrates).
+//!
+//! Three layers, separated so each is testable on its own:
+//!
+//! * [`http`] — pure incremental request parser + response serializers.
+//!   No I/O; malformed-input hardening and framing edge cases are unit
+//!   tests over byte slices.
+//! * [`api`] — the JSON wire contract: request bodies, response/event
+//!   serialization, and the `RejectReason` → HTTP status + stable wire
+//!   code mapping shared with `scripts/validate_net.py`.
+//! * [`server`] — the connection loop: accept thread + worker pool,
+//!   per-connection read/write deadlines, keep-alive pipelining,
+//!   chunked per-token streaming for `/v1/generate`, and the
+//!   `net_accept` / `net_write` chaos sites.
+//!
+//! [`client`] is a minimal blocking HTTP client used by the socket
+//! tests, the `net_stress` bench, and the `serve_http` example — it
+//! reads chunked responses one chunk at a time, so client-observed TTFT
+//! is measurable without external tooling.
+
+pub mod api;
+pub mod client;
+pub mod http;
+pub mod server;
+
+pub use client::{roundtrip, HttpClient, ResponseHead};
+pub use http::{HttpReader, HttpRequest, Limits, ParseError};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,559 @@
+//! The socket half of the HTTP front-end: a dependency-free listener
+//! that exposes a running `coordinator::Server` over real TCP.
+//!
+//! One accept thread hands connections to a fixed
+//! `util::threadpool::ThreadPool`; each handler runs a read loop around
+//! the pure parser ([`super::http::HttpReader`]) so pipelined
+//! keep-alive requests drain in order, and routes:
+//!
+//! * `GET  /healthz`            — liveness probe
+//! * `GET  /v1/metrics`         — metric registry snapshot as JSON
+//! * `POST /v1/sessions`        — one classification turn (`submit_session`)
+//! * `POST /v1/generate`        — streamed generation: one `StreamEvent`
+//!   per `Transfer-Encoding: chunked` chunk (JSONL), written and flushed
+//!   as each token is sampled so client-observed TTFT is honest
+//! * `DELETE /v1/sessions/{id}` — end a session, releasing its KV pages
+//!
+//! Backpressure crosses the socket boundary in both directions: typed
+//! admission refusals become HTTP statuses with machine-readable codes
+//! (`api::reject_status` / wire codes), and a slow reader trips the
+//! per-write deadline, which drops the stream's receiver — exactly the
+//! bounded-channel disconnect the scheduler already handles
+//! (`StopReason::Disconnected`), so a stalled client can never wedge a
+//! decode tick. Seeded chaos reaches the socket layer through two fault
+//! sites: `net_accept` (drop a just-accepted connection) and
+//! `net_write` (stall a chunk write).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Server;
+use crate::obs::{self, SpanId};
+use crate::util::fault::{self, Fault, FaultPlan, SITE_NET_ACCEPT, SITE_NET_WRITE};
+use crate::util::threadpool::ThreadPool;
+
+use super::api;
+use super::http::{self, HttpReader, HttpRequest, Limits};
+
+/// Tuning knobs of the listener. Defaults suit tests and the demo
+/// deployment; production would raise `workers`.
+#[derive(Clone)]
+pub struct NetConfig {
+    /// Connection-handler threads (also the keep-alive concurrency cap:
+    /// a connection holds its worker for its whole lifetime).
+    pub workers: usize,
+    /// Per-read deadline; an idle keep-alive connection is closed when
+    /// it fires.
+    pub read_timeout: Duration,
+    /// Per-write deadline; a streaming client that stays unwritable
+    /// this long is treated as disconnected.
+    pub write_timeout: Duration,
+    /// Parser bounds (head/body size, header count).
+    pub limits: Limits,
+    /// Socket-layer fault plan; defaults to the process-wide `HAD_FAULT`
+    /// plan so the net sites join the same seeded sweep as the engine
+    /// sites.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            workers: 4,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            limits: Limits::default(),
+            faults: fault::from_env(),
+        }
+    }
+}
+
+/// A bound, serving listener. Dropping it stops the accept loop and
+/// joins every in-flight connection handler (the pool drop is the
+/// barrier), then the wrapped `Server`'s own drop runs its graceful
+/// drain — so teardown order matches a real shutdown: stop accepting,
+/// finish connections, drain streams.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `server` in the background.
+    pub fn bind<A: ToSocketAddrs>(
+        server: Arc<Server>,
+        addr: A,
+        cfg: NetConfig,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("had-net-accept".into())
+            .spawn(move || accept_loop(listener, server, cfg, stop2))?;
+        Ok(NetServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and wait for in-flight connections to finish.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, server: Arc<Server>, cfg: NetConfig, stop: Arc<AtomicBool>) {
+    // The pool lives on the accept thread's stack: when the loop breaks,
+    // dropping it joins every in-flight handler before the thread exits.
+    let pool = ThreadPool::new(cfg.workers.max(1));
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((conn, _peer)) => {
+                // Seeded chaos: drop the connection on the floor before a
+                // byte is served (clients observe EOF and must retry).
+                if matches!(fault::fire(&cfg.faults, SITE_NET_ACCEPT), Some(Fault::Deny)) {
+                    drop(conn);
+                    continue;
+                }
+                let server = Arc::clone(&server);
+                let cfg = cfg.clone();
+                pool.submit(move || handle_conn(conn, &server, &cfg));
+            }
+            // Non-blocking accept: poll the stop flag between attempts.
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+fn handle_conn(mut conn: TcpStream, server: &Server, cfg: &NetConfig) {
+    server.metrics.record_net_connection();
+    let mut conn_span = obs::root_span("net_conn");
+    conn.set_nodelay(true).ok(); // per-token chunks must not sit in Nagle
+    if conn.set_read_timeout(Some(cfg.read_timeout)).is_err()
+        || conn.set_write_timeout(Some(cfg.write_timeout)).is_err()
+    {
+        return;
+    }
+    let mut reader = HttpReader::new(cfg.limits);
+    let mut served = 0u64;
+    let mut buf = [0u8; 8 * 1024];
+    'conn: loop {
+        // Drain everything already buffered (pipelined keep-alive).
+        loop {
+            match reader.next_request() {
+                Ok(Some(req)) => {
+                    served += 1;
+                    if !dispatch(&mut conn, server, cfg, &req) {
+                        break 'conn;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Framing is lost: answer once, then close.
+                    server.metrics.record_net_parse_error();
+                    let body = api::error_body(e.code(), &e.to_string());
+                    let resp = http::response_bytes(e.status(), "application/json", &body, false);
+                    conn.write_all(&resp).ok();
+                    break 'conn;
+                }
+            }
+        }
+        match conn.read(&mut buf) {
+            Ok(0) => break, // clean EOF
+            Ok(n) => reader.feed(&buf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // WouldBlock / TimedOut (read deadline on an idle
+            // connection) and hard errors all end the connection.
+            Err(_) => break,
+        }
+    }
+    conn_span.set_payload(served);
+}
+
+/// Serve one parsed request. Returns whether the connection may be
+/// kept alive.
+fn dispatch(conn: &mut TcpStream, server: &Server, cfg: &NetConfig, req: &HttpRequest) -> bool {
+    server.metrics.record_net_request();
+    let trace = obs::sample_request();
+    let start = Instant::now();
+    let keep_req = req.keep_alive();
+    let (status, keep) = match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => {
+            let body = br#"{"status":"ok"}"#;
+            write_simple(conn, 200, body, keep_req)
+        }
+        ("GET", "/v1/metrics") => {
+            let body = server.metrics.registry().snapshot_json().to_string().into_bytes();
+            write_simple(conn, 200, &body, keep_req)
+        }
+        ("POST", "/v1/sessions") => match api::parse_sessions_body(&req.body) {
+            Ok((sid, tokens)) => match server.submit_session(sid, tokens) {
+                Ok(rx) => match rx.recv() {
+                    Ok(resp) => {
+                        let body = api::response_json(sid, &resp).to_string().into_bytes();
+                        write_simple(conn, 200, &body, keep_req)
+                    }
+                    // Reply sender dropped: the batch failed server-side.
+                    Err(_) => write_error(conn, 500, "internal", "reply channel closed"),
+                },
+                Err(r) => write_reject(conn, r, keep_req),
+            },
+            Err(msg) => write_error(conn, 400, "bad_request", &msg),
+        },
+        ("POST", "/v1/generate") => match api::parse_generate_body(&req.body) {
+            Ok((sid, greq)) => match server.submit_generate(sid, greq) {
+                Ok(rx) => stream_events(conn, server, cfg, rx, keep_req),
+                Err(r) => write_reject(conn, r, keep_req),
+            },
+            Err(msg) => write_error(conn, 400, "bad_request", &msg),
+        },
+        ("DELETE", path) if path.starts_with("/v1/sessions/") => {
+            match path["/v1/sessions/".len()..].parse::<u64>() {
+                Ok(sid) => {
+                    server.sessions().lock().unwrap_or_else(|e| e.into_inner()).end_session(sid);
+                    let body = format!(r#"{{"session":{sid},"ended":true}}"#).into_bytes();
+                    write_simple(conn, 200, &body, keep_req)
+                }
+                Err(_) => write_error(conn, 400, "bad_request", "session id is not a u64"),
+            }
+        }
+        _ => write_error(conn, 404, "not_found", "unknown method or path"),
+    };
+    obs::record_as(trace, SpanId::NONE, "net_request", start, start.elapsed().as_micros() as u64, status as u64);
+    keep
+}
+
+/// Write a fixed-length response; returns `(status, keep_alive)` where
+/// `keep_alive` is false if the write failed.
+fn write_simple(conn: &mut TcpStream, status: u16, body: &[u8], keep: bool) -> (u16, bool) {
+    let resp = http::response_bytes(status, "application/json", body, keep);
+    let ok = conn.write_all(&resp).is_ok();
+    (status, keep && ok)
+}
+
+fn write_error(conn: &mut TcpStream, status: u16, code: &str, msg: &str) -> (u16, bool) {
+    // Error responses always close: the conversation went wrong, so give
+    // the client an unambiguous framing boundary to restart from.
+    let (status, _) = write_simple(conn, status, &api::error_body(code, msg), false);
+    (status, false)
+}
+
+fn write_reject(
+    conn: &mut TcpStream,
+    r: crate::coordinator::RejectReason,
+    keep: bool,
+) -> (u16, bool) {
+    // A shutdown refusal also closes the connection (nothing further
+    // will be admitted); other rejections are per-request and retryable
+    // on the same connection.
+    let keep = keep && r != crate::coordinator::RejectReason::ShuttingDown;
+    write_simple(conn, api::reject_status(r), &api::reject_body(r), keep)
+}
+
+/// Deliver a generation stream as chunked JSONL, one event per chunk,
+/// flushed per token. A write that hits the deadline (or any write
+/// error) drops `rx`, which the scheduler observes as a client
+/// disconnect on its next send — the net layer's slow-reader story is
+/// the coordinator's bounded-channel story, surfaced one hop earlier.
+fn stream_events(
+    conn: &mut TcpStream,
+    server: &Server,
+    cfg: &NetConfig,
+    rx: std::sync::mpsc::Receiver<crate::generate::StreamEvent>,
+    keep: bool,
+) -> (u16, bool) {
+    if conn.write_all(&http::chunked_head_bytes(200, "application/jsonl")).is_err() {
+        return (200, false);
+    }
+    for event in rx.iter() {
+        // Seeded chaos: stall this chunk write (the deterministic stand-in
+        // for a congested socket), surfaced in the slow-write counter.
+        if let Some(Fault::Delay(d)) = fault::fire(&cfg.faults, SITE_NET_WRITE) {
+            server.metrics.record_net_slow_write();
+            std::thread::sleep(d);
+        }
+        let mut line = api::event_json(&event).to_string().into_bytes();
+        line.push(b'\n');
+        if conn.write_all(&http::chunk_bytes(&line)).is_err() || conn.flush().is_err() {
+            server.metrics.record_net_slow_write();
+            return (200, false); // dropping rx disconnects the stream
+        }
+    }
+    // Sender dropped after `Done`: the stream retired; finish the framing.
+    let ok = conn.write_all(http::final_chunk_bytes()).is_ok();
+    (200, keep && ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchPolicy, Bucket, Router};
+    use crate::generate::{generate, GenLimits, GenerateRequest, StreamEvent};
+    use crate::kvcache::KvCacheConfig;
+    use crate::net::client::{roundtrip, HttpClient};
+    use crate::runtime::{ConfigEntry, ModelCfg};
+    use crate::serve::{token_config_entry, HadBackend, ServeModel};
+    use crate::util::json::Json;
+
+    const MODEL_SEED: u64 = 0xBEEF;
+
+    fn tiny_model_cfg() -> ConfigEntry {
+        token_config_entry(
+            "net_srv",
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 32,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 8, block_q: 16,
+            },
+        )
+    }
+
+    fn tiny_backend(kv: &KvCacheConfig) -> HadBackend {
+        HadBackend::new(ServeModel::random(&tiny_model_cfg(), MODEL_SEED).unwrap(), kv)
+    }
+
+    fn kv_cfg() -> KvCacheConfig {
+        KvCacheConfig { page_tokens: 4, ..Default::default() }
+    }
+
+    fn coordinator() -> Arc<Server> {
+        let kv = kv_cfg();
+        let router = Router::new(vec![Bucket { config: "net_srv".into(), n_ctx: 32, batch: 4 }]);
+        let policy =
+            BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() };
+        Arc::new(Server::start_cpu_with_kv(tiny_backend(&kv), router, policy, kv).unwrap())
+    }
+
+    fn test_net_cfg() -> NetConfig {
+        NetConfig {
+            workers: 2,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            limits: Limits::default(),
+            faults: None, // never inherit HAD_FAULT from the test env
+        }
+    }
+
+    fn serve() -> (NetServer, SocketAddr) {
+        let net = NetServer::bind(coordinator(), "127.0.0.1:0", test_net_cfg()).unwrap();
+        let addr = net.local_addr();
+        (net, addr)
+    }
+
+    #[test]
+    fn healthz_and_metrics_respond() {
+        let (_net, addr) = serve();
+        let (status, body) = roundtrip(addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, br#"{"status":"ok"}"#);
+
+        let (status, body) = roundtrip(addr, "GET", "/v1/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        // the net counters observed their own connections
+        let conns = parsed.at(&["counters", "net_connections"]).and_then(Json::as_f64);
+        assert!(conns.is_some_and(|c| c >= 1.0), "metrics body: {parsed}");
+    }
+
+    #[test]
+    fn sessions_turn_over_the_socket_returns_the_turn_fields() {
+        let (_net, addr) = serve();
+        let (status, body) =
+            roundtrip(addr, "POST", "/v1/sessions", Some(br#"{"session":1,"tokens":[1,2,3,4]}"#))
+                .unwrap();
+        assert_eq!(status, 200, "body: {}", String::from_utf8_lossy(&body));
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.get("session").and_then(Json::as_usize), Some(1));
+        assert!(parsed.get("pred").and_then(Json::as_f64).is_some());
+        assert_eq!(parsed.get("logits").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+
+        // second turn reuses the resident pages
+        let (status, body) =
+            roundtrip(addr, "POST", "/v1/sessions", Some(br#"{"session":1,"tokens":[5,6]}"#))
+                .unwrap();
+        assert_eq!(status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.get("cached_tokens").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn chunked_request_body_is_decoded_over_the_socket() {
+        let (_net, addr) = serve();
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.set_timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
+        c.send_chunked(
+            "POST",
+            "/v1/sessions",
+            &[br#"{"session":3,"#.as_slice(), br#""tokens":[1,2,3]}"#.as_slice()],
+        )
+        .unwrap();
+        let head = c.read_head().unwrap();
+        let body = c.read_body(&head).unwrap();
+        assert_eq!(head.status, 200, "body: {}", String::from_utf8_lossy(&body));
+    }
+
+    /// The acceptance property: a seeded generate over the socket streams
+    /// exactly the token events the direct engine loop produces — the
+    /// HTTP layer adds framing, never content.
+    #[test]
+    fn streamed_generate_is_byte_identical_to_the_direct_engine() {
+        let (_net, addr) = serve();
+        let prompt = vec![1i32, 2, 3, 4];
+        let max_new = 6usize;
+
+        // direct-engine oracle over an identical model (same cfg + seed)
+        let backend = tiny_backend(&kv_cfg());
+        let req = GenerateRequest::greedy(prompt.clone(), max_new);
+        let mut want_lines: Vec<String> = Vec::new();
+        let out = generate(&backend, &mut backend.fresh_kv(), &[], &req, &GenLimits::unbounded(), |index, token| {
+            want_lines.push(api::event_json(&StreamEvent::Token { index, token }).to_string());
+        });
+
+        // socket side: one chunk per event, JSONL framed
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10))).unwrap();
+        let body = format!(
+            r#"{{"session":7,"prompt":[1,2,3,4],"max_new_tokens":{max_new}}}"#
+        );
+        c.send("POST", "/v1/generate", Some(body.as_bytes())).unwrap();
+        let head = c.read_head().unwrap();
+        assert_eq!(head.status, 200);
+        assert!(head.chunked(), "streaming must be chunked");
+        let mut got_lines: Vec<String> = Vec::new();
+        while let Some(chunk) = c.next_chunk().unwrap() {
+            let text = String::from_utf8(chunk).unwrap();
+            assert!(text.ends_with('\n'), "each chunk is one JSONL line");
+            got_lines.push(text.trim_end().to_string());
+        }
+
+        let done_line = got_lines.pop().expect("stream ends with a done event");
+        assert_eq!(got_lines, want_lines, "token events must be byte-identical");
+        let done = Json::parse(&done_line).unwrap();
+        assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+        assert_eq!(
+            done.get("reason").and_then(Json::as_str),
+            Some(out.reason.wire_code()),
+            "stop reason must match the direct engine"
+        );
+        assert_eq!(done.get("generated").and_then(Json::as_usize), Some(out.tokens.len()));
+        assert!(done.get("ttft_us").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn rejects_map_to_stable_statuses_and_codes() {
+        let (_net, addr) = serve();
+        // empty context: EmptyGeneration -> 400 + wire code
+        let (status, body) = roundtrip(
+            addr,
+            "POST",
+            "/v1/generate",
+            Some(br#"{"session":9,"prompt":[],"max_new_tokens":4}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 400);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.at(&["error", "code"]).and_then(Json::as_str), Some("empty_generation"));
+
+        // sequence longer than every bucket: TooLong -> 413
+        let toks: Vec<String> = (0..64).map(|i| i.to_string()).collect();
+        let body = format!(r#"{{"session":10,"tokens":[{}]}}"#, toks.join(","));
+        let (status, body) =
+            roundtrip(addr, "POST", "/v1/sessions", Some(body.as_bytes())).unwrap();
+        assert_eq!(status, 413, "body: {}", String::from_utf8_lossy(&body));
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.at(&["error", "code"]).and_then(Json::as_str), Some("too_long"));
+    }
+
+    #[test]
+    fn unknown_route_and_malformed_body_answer_cleanly() {
+        let (_net, addr) = serve();
+        let (status, _) = roundtrip(addr, "GET", "/nope", None).unwrap();
+        assert_eq!(status, 404);
+        let (status, body) =
+            roundtrip(addr, "POST", "/v1/sessions", Some(b"this is not json")).unwrap();
+        assert_eq!(status, 400);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.at(&["error", "code"]).and_then(Json::as_str), Some("bad_request"));
+    }
+
+    #[test]
+    fn malformed_request_line_gets_400_and_the_parse_error_counter() {
+        let server = coordinator();
+        let net = NetServer::bind(Arc::clone(&server), "127.0.0.1:0", test_net_cfg()).unwrap();
+        let mut conn = TcpStream::connect(net.local_addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        conn.write_all(b"garbage\r\n\r\n").unwrap();
+        let mut resp = Vec::new();
+        conn.read_to_end(&mut resp).unwrap(); // server answers then closes
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 400"), "got: {text}");
+        assert!(text.contains("bad_request_line"), "got: {text}");
+        assert_eq!(server.metrics.snapshot().net_parse_errors, 1);
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_connection() {
+        let (_net, addr) = serve();
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.set_timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
+        for turn in 0..3 {
+            c.send("GET", "/healthz", None).unwrap();
+            let head = c.read_head().unwrap();
+            let body = c.read_body(&head).unwrap();
+            assert_eq!(head.status, 200, "turn {turn}");
+            assert_eq!(body, br#"{"status":"ok"}"#);
+        }
+    }
+
+    #[test]
+    fn delete_ends_the_session_and_releases_its_pages() {
+        let server = coordinator();
+        let net = NetServer::bind(Arc::clone(&server), "127.0.0.1:0", test_net_cfg()).unwrap();
+        let addr = net.local_addr();
+        let (status, _) =
+            roundtrip(addr, "POST", "/v1/sessions", Some(br#"{"session":5,"tokens":[1,2,3,4]}"#))
+                .unwrap();
+        assert_eq!(status, 200);
+        assert!(server.sessions().lock().unwrap().pool().bytes() > 0);
+        let (status, body) = roundtrip(addr, "DELETE", "/v1/sessions/5", None).unwrap();
+        assert_eq!(status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(parsed.get("ended").and_then(Json::as_bool), Some(true));
+        assert_eq!(server.sessions().lock().unwrap().pool().bytes(), 0);
+
+        let (status, _) = roundtrip(addr, "DELETE", "/v1/sessions/notanid", None).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn net_accept_fault_drops_connections_before_a_byte_is_served() {
+        let mut cfg = test_net_cfg();
+        cfg.faults = Some(Arc::new(FaultPlan::parse("net_accept,seed=1").unwrap()));
+        let net = NetServer::bind(coordinator(), "127.0.0.1:0", cfg).unwrap();
+        // always-on accept fault: every request dies without a response
+        let err = roundtrip(net.local_addr(), "GET", "/healthz", None);
+        assert!(err.is_err(), "connection must be dropped, got {err:?}");
+    }
+}

@@ -38,13 +38,21 @@ pub const SITE_CLIENT_DISCONNECT: &str = "client_disconnect";
 /// Stall the scheduler's work-selection loop briefly (exercises
 /// deadline and TTL enforcement under a slow scheduler).
 pub const SITE_QUEUE_STALL: &str = "queue_stall";
+/// Drop a just-accepted TCP connection at the HTTP listener (exercises
+/// client retry behavior and accept-loop hygiene).
+pub const SITE_NET_ACCEPT: &str = "net_accept";
+/// Stall a chunk write to a streaming HTTP client (exercises write
+/// deadlines and the slow-reader backpressure path over real sockets).
+pub const SITE_NET_WRITE: &str = "net_write";
 
-const SITES: [&str; 5] = [
+const SITES: [&str; 7] = [
     SITE_DECODE_STEP,
     SITE_WORKER_PANIC,
     SITE_POOL_PRESSURE,
     SITE_CLIENT_DISCONNECT,
     SITE_QUEUE_STALL,
+    SITE_NET_ACCEPT,
+    SITE_NET_WRITE,
 ];
 
 /// What a firing site should do. The kind is fixed per site: panics only
@@ -63,7 +71,7 @@ pub enum Fault {
 fn kind_for(site: &str, delay: Duration) -> Fault {
     match site {
         SITE_WORKER_PANIC => Fault::Panic,
-        SITE_POOL_PRESSURE | SITE_CLIENT_DISCONNECT => Fault::Deny,
+        SITE_POOL_PRESSURE | SITE_CLIENT_DISCONNECT | SITE_NET_ACCEPT => Fault::Deny,
         _ => Fault::Delay(delay),
     }
 }
@@ -235,6 +243,20 @@ mod tests {
             assert_eq!(p.fire(SITE_CLIENT_DISCONNECT), Some(Fault::Deny));
         }
         assert_eq!(p.injected(), 5);
+    }
+
+    #[test]
+    fn net_sites_share_the_grammar_and_fixed_kinds() {
+        // net_accept denies (the accept loop refuses the connection);
+        // net_write delays (a stalled socket write), honoring delay_ms.
+        let p = FaultPlan::parse("net_accept:0.5,net_write:0.25:7,seed=3").unwrap();
+        assert_eq!(p.clauses[0].site, SITE_NET_ACCEPT);
+        assert_eq!(p.clauses[0].fault, Fault::Deny);
+        assert_eq!(p.clauses[1].site, SITE_NET_WRITE);
+        assert_eq!(p.clauses[1].fault, Fault::Delay(Duration::from_millis(7)));
+        let always = FaultPlan::parse("net_accept").unwrap();
+        assert_eq!(always.fire(SITE_NET_ACCEPT), Some(Fault::Deny));
+        assert_eq!(always.fire(SITE_NET_WRITE), None);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Validate a net stress-harness results file (benches/net_stress.rs
+writes results/net.jsonl): every record parses, carries the schema-v2
+provenance stamp, and upholds the socket-level robustness invariants —
+all admitted streams retired, zero leaked pool bytes, the deadlock
+watchdog never fired, the seeded identity check held (streamed chunks
+byte-identical to the direct engine), the chaos sweep actually injected
+faults, and client-observed p99 TTFT on the burst scenario stays under
+the gate. Also requires the core scenario set to be present, so a
+harness that silently skipped a scenario fails loudly.
+
+Usage: python3 scripts/validate_net.py results/net.jsonl [max_ttft_p99_us]
+
+max_ttft_p99_us defaults to 5000000 (5 s — generous for shared CI
+runners; the gate catches order-of-magnitude regressions like a lost
+per-token flush, not scheduler jitter).
+
+Exits non-zero (listing the problems) on any violation — CI's net-smoke
+step runs it against the net.jsonl its loopback leg emitted. Importable:
+`validate(path, max_ttft_p99_us=...)` returns the list of problems
+(empty = ok).
+"""
+
+import json
+import sys
+
+REQUIRED_SCENARIOS = {
+    "net_identity",
+    "net_burst",
+    "net_slow_reader",
+    "net_disconnect_storm",
+    "net_fault_sweep",
+}
+NUM_KEYS = ("admitted", "retired", "leaked_bytes", "ttft_p99_us", "net_requests")
+DEFAULT_MAX_TTFT_P99_US = 5_000_000
+
+
+def validate(path, max_ttft_p99_us=DEFAULT_MAX_TTFT_P99_US):
+    problems = []
+    try:
+        with open(path) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    if not lines:
+        return [f"{path}: empty results file"]
+    seen = set()
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"record {i}: not valid JSON: {e}")
+            continue
+        if rec.get("kind") != "net":
+            continue
+        name = rec.get("name")
+        if not isinstance(name, str):
+            problems.append(f"record {i}: missing scenario name")
+            continue
+        seen.add(name)
+        for key in NUM_KEYS:
+            if not isinstance(rec.get(key), (int, float)):
+                problems.append(f"record {i} ({name}): bad/missing {key}")
+        if rec.get("retired") != rec.get("admitted"):
+            problems.append(
+                f"record {i} ({name}): {rec.get('admitted')} admitted but "
+                f"{rec.get('retired')} retired — a stream vanished without a StopReason"
+            )
+        if rec.get("leaked_bytes", 0) != 0:
+            problems.append(
+                f"record {i} ({name}): {rec.get('leaked_bytes')} B still in the "
+                "page pool after every session ended"
+            )
+        if rec.get("watchdog_ok") is not True:
+            problems.append(f"record {i} ({name}): watchdog fired (deadlock)")
+        for key in ("run", "git_sha", "schema"):
+            if key not in rec:
+                problems.append(f"record {i} ({name}): missing provenance key {key}")
+        if name == "net_identity" and rec.get("identity_ok") is not True:
+            problems.append(
+                f"record {i} ({name}): socket stream diverged from the direct engine"
+            )
+        if name == "net_fault_sweep" and rec.get("faults_injected", 0) <= 0:
+            problems.append(f"record {i} ({name}): seeded fault plan never fired")
+        if name == "net_slow_reader" and rec.get("net_slow_writes", 0) <= 0:
+            problems.append(
+                f"record {i} ({name}): injected net_write stall never surfaced "
+                "in the slow-write counter"
+            )
+        if name == "net_burst":
+            ttft = rec.get("ttft_p99_us")
+            if isinstance(ttft, (int, float)) and ttft > max_ttft_p99_us:
+                problems.append(
+                    f"record {i} ({name}): client-observed p99 TTFT {ttft:.0f} us "
+                    f"exceeds the {max_ttft_p99_us:.0f} us gate"
+                )
+    missing = REQUIRED_SCENARIOS - seen
+    if missing:
+        problems.append(f"{path}: missing scenarios: {', '.join(sorted(missing))}")
+    return problems
+
+
+def main(argv):
+    if len(argv) not in (2, 3):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    max_ttft = DEFAULT_MAX_TTFT_P99_US
+    if len(argv) == 3:
+        try:
+            max_ttft = float(argv[2])
+        except ValueError:
+            print(f"bad max_ttft_p99_us: {argv[2]!r}", file=sys.stderr)
+            return 2
+    problems = validate(argv[1], max_ttft_p99_us=max_ttft)
+    if problems:
+        print(f"[net] FAIL: {argv[1]}")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    with open(argv[1]) as f:
+        n = sum(1 for l in f if l.strip() and json.loads(l).get("kind") == "net")
+    print(f"[net] OK: {argv[1]} ({n} scenario records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
