@@ -1,0 +1,255 @@
+//! Bench: persistent store — checkpoint load (legacy cold heap load vs
+//! zero-copy mmap), KV stripe spill/hydrate throughput, and restart
+//! identity under budget pressure through a live `Server`.
+//!
+//! Acceptance gates (hard asserts in full mode, relaxed under
+//! HAD_BENCH_QUICK=1 where tiny budgets on noisy CI runners would make
+//! perf asserts flaky — identity asserts always run):
+//!
+//!   * mmap-loaded weights produce bit-identical logits to heap-loaded;
+//!   * a spilled-and-hydrated KV is bit-identical to the original;
+//!   * at >=4k context, hydrating from disk beats re-prefilling.
+//!
+//! Appends machine-readable records to results/store.jsonl for
+//! scripts/validate_store.py (the CI store-smoke gate).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::kvcache::KvCacheConfig;
+use had::model::{load_checkpoint, save_checkpoint, Checkpoint, ParamSet};
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::store::{write_checkpoint, SpillStore};
+use had::util::bench::{quick_env, write_jsonl};
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("had-store-bench-{}-{name}", std::process::id()))
+}
+
+fn us(d: Duration) -> f64 {
+    d.as_nanos() as f64 / 1e3
+}
+
+/// Best-of-n wall time for `f` (loads and I/O are long enough that the
+/// minimum is the stable statistic; no need for the full Bencher).
+fn best_of<R>(n: usize, mut f: impl FnMut() -> R) -> (Duration, R) {
+    let mut best: Option<Duration> = None;
+    let mut out = None;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed();
+        if best.map_or(true, |b| dt < b) {
+            best = Some(dt);
+        }
+        out = Some(r);
+    }
+    (best.unwrap(), out.unwrap())
+}
+
+/// Part 1: checkpoint container — cold (legacy HADCKPT1 stream decode
+/// into heap tensors) vs zero-copy mmap open of the HADSTOR1 container,
+/// plus logits identity between the two loaded models.
+fn bench_checkpoint(iters: usize) -> Json {
+    let cfg = demo_config("store_bench", 128, 32);
+    let mut rng = Rng::new(0x57031);
+    let ckpt = Checkpoint {
+        config: cfg.name.clone(),
+        step: 1.0,
+        sigma_q: vec![0.8, 1.1],
+        sigma_k: vec![0.9, 1.2],
+        params: ParamSet::init(&cfg, &mut rng),
+    };
+    let legacy = temp("ckpt-legacy.bin");
+    let stor = temp("ckpt.stor");
+    save_checkpoint(&legacy, &cfg, &ckpt).expect("legacy save");
+    write_checkpoint(&stor, &cfg, &ckpt).expect("store write");
+
+    let (cold, heap_model) = best_of(iters, || {
+        let loaded = load_checkpoint(&legacy, &cfg).expect("legacy load");
+        ServeModel::from_checkpoint(&cfg, &loaded).expect("heap model")
+    });
+    let (mmap, mapped_model) =
+        best_of(iters, || ServeModel::from_store(&cfg, &stor).expect("mapped model"));
+
+    // identity gate: bit-identical logits from both load paths
+    let kv = KvCacheConfig { page_tokens: 16, ..Default::default() };
+    let toks: Vec<i32> = (0..32).map(|i| (i * 7) % 256).collect();
+    let lh = HadBackend::new(heap_model, &kv).forward_logits(&toks);
+    let lm = HadBackend::new(mapped_model, &kv).forward_logits(&toks);
+    let identity_ok = lh == lm;
+    println!(
+        "store/checkpoint: cold load {:.1} us | mmap load {:.1} us ({:.2}x) | logits identical: {identity_ok}",
+        us(cold),
+        us(mmap),
+        us(cold) / us(mmap).max(1e-9),
+    );
+    assert!(identity_ok, "mmap-loaded logits must be bit-identical to heap-loaded");
+    std::fs::remove_file(&legacy).ok();
+    std::fs::remove_file(&stor).ok();
+    Json::obj(vec![
+        ("kind", Json::str("checkpoint")),
+        ("cold_us", Json::num(us(cold))),
+        ("mmap_us", Json::num(us(mmap))),
+        ("identity_ok", Json::Bool(identity_ok)),
+    ])
+}
+
+/// Part 2: spill/hydrate a long-context session's stripes and compare
+/// against re-prefilling the same tokens through the backend — the cost
+/// a spill-less pool pays after evicting the session.
+fn bench_spill(n_ctx: usize, iters: usize, quick: bool) -> Json {
+    let cfg = demo_config("store_spill", n_ctx, 32);
+    let model = ServeModel::random(&cfg, 0x5B1).expect("model");
+    let kv_cfg = KvCacheConfig { page_tokens: 64, ..Default::default() };
+    let backend = HadBackend::new(model, &kv_cfg);
+    let mut rng = Rng::new(0x5B2);
+    let toks: Vec<i32> = (0..n_ctx).map(|_| rng.below(256) as i32).collect();
+
+    let mut kv = backend.fresh_kv();
+    backend.decode(&mut kv, &toks, &[toks.len()]);
+    let reference = kv.clone();
+    let resident_bytes = kv.bytes();
+
+    let store = SpillStore::create(&temp("spill"), None).expect("spill store");
+    let (mut spill_best, mut hydrate_best) = (Duration::MAX, Duration::MAX);
+    let mut spilled_bytes = 0usize;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let mut freed = 0usize;
+        while let Some((b, _)) = kv.spill_one(&store) {
+            freed += b;
+        }
+        spill_best = spill_best.min(t0.elapsed());
+        spilled_bytes = freed;
+        let t0 = Instant::now();
+        let (pages_in, failures) = kv.hydrate(&store);
+        hydrate_best = hydrate_best.min(t0.elapsed());
+        assert!(pages_in > 0 && failures == 0, "hydrate must restore every stripe");
+    }
+    // bit-identity: the hydrated pages ARE the original pages
+    let geom = kv.geom();
+    let mut identity_ok = kv.tokens() == reference.tokens();
+    let mut row = vec![0.0f32; geom.d_head];
+    let mut want = vec![0.0f32; geom.d_head];
+    'outer: for l in 0..geom.n_layers {
+        for h in 0..geom.n_heads {
+            let (a, b) = (kv.chain(l, h), reference.chain(l, h));
+            for i in 0..b.len() {
+                a.value_into(i, &mut row);
+                b.value_into(i, &mut want);
+                if a.key(i) != b.key(i) || row != want {
+                    identity_ok = false;
+                    break 'outer;
+                }
+            }
+        }
+    }
+    assert!(identity_ok, "hydrated KV must be bit-identical to the original");
+    assert_eq!(store.live_records(), 0, "hydrate must release every spill record");
+
+    // the alternative to hydrating: re-prefill the evicted context
+    let (reprefill, _) = best_of(iters, || {
+        let mut fresh = backend.fresh_kv();
+        backend.decode(&mut fresh, &toks, &[toks.len()]);
+    });
+    let mb = spilled_bytes as f64 / (1024.0 * 1024.0);
+    println!(
+        "store/spill n_ctx={n_ctx}: {} KiB resident | spill {:.1} us ({:.1} MB/s) | hydrate {:.1} us ({:.1} MB/s) | re-prefill {:.1} us ({:.1}x slower than hydrate)",
+        resident_bytes / 1024,
+        us(spill_best),
+        mb / spill_best.as_secs_f64().max(1e-12),
+        us(hydrate_best),
+        mb / hydrate_best.as_secs_f64().max(1e-12),
+        us(reprefill),
+        us(reprefill) / us(hydrate_best).max(1e-9),
+    );
+    if n_ctx >= 4096 && !quick {
+        assert!(
+            hydrate_best < reprefill,
+            "at {n_ctx} context, hydrating ({hydrate_best:?}) must beat re-prefill ({reprefill:?})"
+        );
+    }
+    Json::obj(vec![
+        ("kind", Json::str("spill")),
+        ("n_ctx", Json::num(n_ctx as f64)),
+        ("spilled_bytes", Json::num(spilled_bytes as f64)),
+        ("spill_us", Json::num(us(spill_best))),
+        ("hydrate_us", Json::num(us(hydrate_best))),
+        ("reprefill_us", Json::num(us(reprefill))),
+        ("identity_ok", Json::Bool(identity_ok)),
+        ("checksum_failures", Json::num(store.stats().read_failures as f64)),
+    ])
+}
+
+/// Part 3: restart identity through a live server — a session whose
+/// stripes were forced to disk by another session's admission must come
+/// back bit-identical on its next turn.
+fn bench_restart() -> Json {
+    let cfg = demo_config("store_restart", 128, 32);
+    let model = ServeModel::random(&cfg, 0x5B3).expect("model");
+    let kv_probe = KvCacheConfig { page_tokens: 16, ..Default::default() };
+    let oracle_backend = HadBackend::new(model.clone(), &kv_probe);
+    // budget = exactly ONE 64-token session: session 2's checkin forces
+    // session 1's stripes out to the disk tier
+    let budget = oracle_backend.fresh_kv().bytes_at(64);
+    let kv = KvCacheConfig { page_tokens: 16, byte_budget: budget, ..Default::default() };
+    let store = Arc::new(SpillStore::create(&temp("restart"), None).expect("spill store"));
+    let router =
+        Router::new(vec![Bucket { config: "store_restart".into(), n_ctx: 128, batch: 4 }]);
+    let server = Server::start_cpu_spill(
+        HadBackend::new(model, &kv),
+        router,
+        BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        kv,
+        Arc::clone(&store),
+    )
+    .expect("server start");
+
+    let mut rng = Rng::new(0x5B4);
+    let ctx: Vec<i32> = (0..64).map(|_| rng.below(256) as i32).collect();
+    let other: Vec<i32> = (0..64).map(|_| rng.below(256) as i32).collect();
+    server.infer_session(1, ctx.clone()).expect("turn 1");
+    server.infer_session(2, other).expect("pressure turn");
+    let spill_pages_out = server.cache_stats().spill_pages_out;
+    let append: Vec<i32> = vec![3, 1, 4, 1];
+    let resp = server.infer_session(1, append.clone()).expect("restart turn");
+    let mut full = ctx;
+    full.extend_from_slice(&append);
+    let identity_ok = resp.logits == oracle_backend.forward_logits(&full);
+    let stats = server.cache_stats();
+    println!(
+        "store/restart: {} pages spilled, {} hydrated back ({} hydrating checkouts) | {} checksum failures | logits identical: {identity_ok}",
+        stats.spill_pages_out, stats.spill_pages_in, stats.hydrate_hits,
+        stats.store_checksum_failures,
+    );
+    assert!(spill_pages_out > 0, "the pressure turn must actually spill");
+    assert!(identity_ok, "post-hydrate logits must be bit-identical to a fresh forward");
+    assert_eq!(stats.store_checksum_failures, 0);
+    Json::obj(vec![
+        ("kind", Json::str("restart")),
+        ("spill_pages_out", Json::num(stats.spill_pages_out as f64)),
+        ("spill_pages_in", Json::num(stats.spill_pages_in as f64)),
+        ("hydrate_hits", Json::num(stats.hydrate_hits as f64)),
+        ("checksum_failures", Json::num(stats.store_checksum_failures as f64)),
+        ("identity_ok", Json::Bool(identity_ok)),
+    ])
+}
+
+fn main() {
+    let quick = quick_env();
+    let iters = if quick { 3 } else { 10 };
+    let n_ctx = if quick { 512 } else { 4096 };
+    let mut records: Vec<Json> = Vec::new();
+
+    println!("== persistent store: checkpoint load, KV spill tier, restart identity ==");
+    records.push(bench_checkpoint(iters));
+    records.push(bench_spill(n_ctx, iters.min(5), quick));
+    records.push(bench_restart());
+
+    write_jsonl("results/store.jsonl", &records).expect("write results/store.jsonl");
+    println!("\nstore bench OK; {} records -> results/store.jsonl", records.len());
+}

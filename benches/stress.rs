@@ -23,9 +23,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use had::coordinator::{BatchPolicy, Bucket, Router, Server};
-use had::generate::{GenerateRequest, StreamEvent};
+use had::generate::{generate, GenLimits, GenerateRequest, StreamEvent};
 use had::kvcache::KvCacheConfig;
 use had::serve::{demo_config, HadBackend, ServeModel};
+use had::store::SpillStore;
 use had::util::bench::{quick_env, write_jsonl};
 use had::util::fault::FaultPlan;
 use had::util::json::Json;
@@ -352,6 +353,148 @@ fn scenario_fault_sweep(model: &ServeModel, quick: bool, seed: u64) -> Json {
     rec
 }
 
+/// Spill-tier chaos: a pool budget of TWO resident sessions forces
+/// constant stripe traffic to the disk tier while seeded
+/// `spill_write`/`spill_read` faults fire inside the store. Invariants:
+/// the pool degrades to plain eviction instead of wedging, every stream
+/// retires, and — because a failed hydrate truncates to the resident
+/// prefix and re-prefills — every stream's tokens stay bit-identical to
+/// the fault-free oracle (corrupt KV would drift).
+fn scenario_spill_chaos(model: &ServeModel, quick: bool, seed: u64) -> Json {
+    let done = arm_watchdog("spill_chaos", Duration::from_secs(180));
+    let n = if quick { 6 } else { 10 };
+    let plan = Arc::new(
+        FaultPlan::parse(&format!("spill_write:0.5,spill_read:0.5,seed={seed}"))
+            .expect("fault spec"),
+    );
+    let dir = std::env::temp_dir().join("had-stress-spill");
+    let store =
+        Arc::new(SpillStore::create(&dir, Some(Arc::clone(&plan))).expect("spill store"));
+    let oracle_backend = HadBackend::new(model.clone(), &kv_cfg());
+    let budget = 2 * oracle_backend.fresh_kv().bytes_at(32);
+    let kv = KvCacheConfig { byte_budget: budget, ..kv_cfg() };
+    let router =
+        Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
+    let server = Server::start_cpu_spill_chaos(
+        HadBackend::new(model.clone(), &kv),
+        router,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_streams: 4,
+            ..Default::default()
+        },
+        kv,
+        Arc::clone(&plan),
+        Arc::clone(&store),
+    )
+    .expect("server start");
+
+    // collect every stream's tokens (not just its Done event) so the
+    // oracle comparison below can prove no stream saw corrupt KV
+    let collect = |rxs: Vec<(u64, std::sync::mpsc::Receiver<StreamEvent>)>| {
+        let handles: Vec<_> = rxs
+            .into_iter()
+            .map(|(sid, rx)| {
+                std::thread::spawn(move || {
+                    let mut tokens = Vec::new();
+                    let mut saw_done = 0u64;
+                    for event in rx.iter() {
+                        match event {
+                            StreamEvent::Token { token, .. } => tokens.push(token),
+                            StreamEvent::Done { .. } => {
+                                saw_done = 1;
+                                break;
+                            }
+                        }
+                    }
+                    (sid, tokens, saw_done)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("reader thread")).collect::<Vec<_>>()
+    };
+    let oracle = |context: &[i32], req: &GenerateRequest| {
+        let mut okv = oracle_backend.fresh_kv();
+        generate(
+            &oracle_backend,
+            &mut okv,
+            context,
+            req,
+            &GenLimits {
+                max_total_tokens: N_CTX,
+                kv_budget_bytes: budget,
+                ..GenLimits::unbounded()
+            },
+            |_, _| {},
+        )
+        .tokens
+    };
+
+    let mut rng = Rng::new(seed ^ 0x5717);
+    let prompts: Vec<Vec<i32>> = (0..n).map(|_| prompt(&mut rng, 16)).collect();
+    let mut admitted = 0u64;
+    let mut done_events = 0u64;
+    let sids: Vec<u64> = (0..n as u64).collect();
+    // turn 1: concurrent cold streams racing the budget
+    let mut rxs = Vec::new();
+    for &sid in &sids {
+        let req = GenerateRequest::greedy(prompts[sid as usize].clone(), 10);
+        if let Ok(rx) = server.submit_generate(sid, req) {
+            admitted += 1;
+            rxs.push((sid, rx));
+        }
+    }
+    let mut turn1: Vec<Vec<i32>> = vec![Vec::new(); n];
+    for (sid, tokens, saw) in collect(rxs) {
+        assert_eq!(
+            tokens,
+            oracle(&[], &GenerateRequest::greedy(prompts[sid as usize].clone(), 10)),
+            "spill_chaos: stream {sid} turn 1 drifted from the fault-free oracle"
+        );
+        turn1[sid as usize] = tokens;
+        done_events += saw;
+    }
+    // turn 2: continues — checkouts must hydrate (or truncate and
+    // re-prefill when a seeded read fault corrupts the record), never
+    // serve stale or corrupt pages. Sessions whose history was dropped
+    // by a fall-back eviction reject the empty continue; skip those.
+    let mut rxs = Vec::new();
+    for &sid in &sids {
+        if let Ok(rx) = server.submit_generate(sid, GenerateRequest::greedy(Vec::new(), 6)) {
+            admitted += 1;
+            rxs.push((sid, rx));
+        }
+    }
+    for (sid, tokens, saw) in collect(rxs) {
+        let mut context = prompts[sid as usize].clone();
+        context.extend_from_slice(&turn1[sid as usize]);
+        assert_eq!(
+            tokens,
+            oracle(&context, &GenerateRequest::greedy(Vec::new(), 6)),
+            "spill_chaos: stream {sid} turn 2 drifted after hydrate/re-prefill"
+        );
+        done_events += saw;
+    }
+    wait_retired(&server, admitted);
+    let spill = store.stats();
+    assert!(
+        spill.writes + spill.write_failures > 0,
+        "spill_chaos: budget pressure never reached the spill tier"
+    );
+    let leaked = leaked_bytes(&server, &sids);
+    assert_eq!(store.live_records(), 0, "spill_chaos: spill records leaked past teardown");
+    let out = Outcome { admitted, done_events, leaked };
+    let mut rec = out.record("spill_chaos", &server);
+    if let Json::Obj(m) = &mut rec {
+        m.insert("spill_writes".into(), Json::num(spill.writes as f64));
+        m.insert("spill_write_failures".into(), Json::num(spill.write_failures as f64));
+        m.insert("spill_read_failures".into(), Json::num(spill.read_failures as f64));
+        m.insert("spill_faults".into(), Json::num(plan.injected() as f64));
+    }
+    done.store(true, Ordering::Relaxed);
+    rec
+}
+
 fn main() {
     let quick = quick_env();
     let model = ServeModel::random(&demo_config("stress", N_CTX, 32), 0x57E5).expect("model");
@@ -366,6 +509,9 @@ fn main() {
         v.push(("disconnect_storm", scenario_disconnect_storm(&model, quick)));
         for &s in seeds {
             v.push(("fault_sweep", scenario_fault_sweep(&model, quick, s)));
+        }
+        for &s in seeds {
+            v.push(("spill_chaos", scenario_spill_chaos(&model, quick, s)));
         }
         v
     };

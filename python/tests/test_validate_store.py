@@ -1,0 +1,145 @@
+"""Store results-file validation: scripts/validate_store.py against a
+synthetic bench-shaped results file (the exact record shapes
+benches/store.rs writes), its failure modes (missing kinds, identity
+breaks, checksum failures, the hydrate-vs-reprefill gate), and — when a
+bench run has left one — the real results/store.jsonl."""
+
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from validate_store import validate  # noqa: E402
+
+PROVENANCE = {"run": "20260808-000000", "git_sha": "abc1234", "schema": 2}
+
+
+def checkpoint_record(**overrides):
+    rec = {
+        "kind": "checkpoint",
+        "cold_us": 1800.0,
+        "mmap_us": 90.0,
+        "identity_ok": True,
+        **PROVENANCE,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def spill_record(**overrides):
+    rec = {
+        "kind": "spill",
+        "n_ctx": 4096,
+        "spilled_bytes": 2359296,
+        "spill_us": 4200.0,
+        "hydrate_us": 3100.0,
+        "reprefill_us": 250000.0,
+        "identity_ok": True,
+        "checksum_failures": 0,
+        **PROVENANCE,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def restart_record(**overrides):
+    rec = {
+        "kind": "restart",
+        "spill_pages_out": 32,
+        "spill_pages_in": 32,
+        "hydrate_hits": 1,
+        "checksum_failures": 0,
+        "identity_ok": True,
+        **PROVENANCE,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def full_results():
+    return [checkpoint_record(), spill_record(), restart_record()]
+
+
+def write(tmp_path, records):
+    path = tmp_path / "store.jsonl"
+    if isinstance(records, str):
+        path.write_text(records)
+    else:
+        path.write_text("".join(json.dumps(r) + "\n" for r in records))
+    return str(path)
+
+
+def test_bench_shaped_results_pass(tmp_path):
+    assert validate(write(tmp_path, full_results())) == []
+
+
+def test_not_json_fails(tmp_path):
+    problems = validate(write(tmp_path, "{not json\n"))
+    assert any("not valid JSON" in p for p in problems)
+
+
+def test_empty_file_fails(tmp_path):
+    problems = validate(write(tmp_path, ""))
+    assert problems and "empty" in problems[0]
+
+
+def test_missing_file_fails(tmp_path):
+    problems = validate(str(tmp_path / "nope.jsonl"))
+    assert problems and "cannot read" in problems[0]
+
+
+def test_missing_kind_fails(tmp_path):
+    problems = validate(write(tmp_path, [checkpoint_record(), spill_record()]))
+    assert any("missing record kinds" in p and "restart" in p for p in problems)
+
+
+@pytest.mark.parametrize("mk", [checkpoint_record, spill_record, restart_record])
+def test_identity_break_fails(tmp_path, mk):
+    records = [r for r in full_results() if r["kind"] != mk()["kind"]] + [
+        mk(identity_ok=False)
+    ]
+    problems = validate(write(tmp_path, records))
+    assert any("identity_ok" in p for p in problems)
+
+
+def test_checksum_failures_fail(tmp_path):
+    records = [checkpoint_record(), spill_record(checksum_failures=2), restart_record()]
+    problems = validate(write(tmp_path, records))
+    assert any("failed verification" in p for p in problems)
+
+
+def test_hydrate_gate_fires_at_long_context(tmp_path):
+    slow = spill_record(hydrate_us=300000.0, reprefill_us=250000.0)
+    problems = validate(write(tmp_path, [checkpoint_record(), slow, restart_record()]))
+    assert any("must beat re-prefill" in p for p in problems)
+
+
+def test_hydrate_gate_relaxed_at_short_context(tmp_path):
+    # quick-mode runs use tiny contexts where disk latency can lose to a
+    # cheap prefill; the gate only applies at >=4k
+    short = spill_record(n_ctx=512, hydrate_us=300000.0, reprefill_us=250000.0)
+    assert validate(write(tmp_path, [checkpoint_record(), short, restart_record()])) == []
+
+
+def test_never_spilled_restart_fails(tmp_path):
+    records = [checkpoint_record(), spill_record(), restart_record(spill_pages_out=0)]
+    problems = validate(write(tmp_path, records))
+    assert any("never spilled" in p for p in problems)
+
+
+def test_missing_provenance_fails(tmp_path):
+    rec = checkpoint_record()
+    del rec["git_sha"]
+    problems = validate(write(tmp_path, [rec, spill_record(), restart_record()]))
+    assert any("provenance" in p and "git_sha" in p for p in problems)
+
+
+def test_real_results_if_present():
+    path = os.path.join(REPO, "results", "store.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("no results/store.jsonl from a bench run")
+    assert validate(path) == []

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::generate::StopReason;
+use crate::kvcache::CacheStats;
 use crate::obs::{Counter, Gauge, Histogram, Registry};
 
 /// Wall-clock anchors that can't be counters: serving start (for req/s)
@@ -59,6 +60,15 @@ pub struct Metrics {
     net_requests: Arc<Counter>,
     net_parse_errors: Arc<Counter>,
     net_slow_writes: Arc<Counter>,
+    // spill-tier counters (zero without a spill store); fed from the
+    // pool's cumulative `CacheStats` via `sync_spill`, which diffs
+    // against `spill_seen` so the registry counters stay monotone
+    spill_pages_out: Arc<Counter>,
+    spill_pages_in: Arc<Counter>,
+    spill_bytes: Arc<Counter>,
+    hydrate_hits: Arc<Counter>,
+    store_checksum_failures: Arc<Counter>,
+    spill_seen: Mutex<CacheStats>,
     // gauges (absolute values, last write wins)
     cache_bytes: Arc<Gauge>,
     cache_evictions: Arc<Gauge>,
@@ -98,6 +108,12 @@ impl Default for Metrics {
             net_requests: registry.counter("net_requests"),
             net_parse_errors: registry.counter("net_parse_errors"),
             net_slow_writes: registry.counter("net_slow_writes"),
+            spill_pages_out: registry.counter("spill_pages_out"),
+            spill_pages_in: registry.counter("spill_pages_in"),
+            spill_bytes: registry.counter("spill_bytes"),
+            hydrate_hits: registry.counter("hydrate_hits"),
+            store_checksum_failures: registry.counter("store_checksum_failures"),
+            spill_seen: Mutex::new(CacheStats::default()),
             cache_bytes: registry.gauge("cache_bytes"),
             cache_evictions: registry.gauge("cache_evictions"),
             queue_depth: registry.gauge("queue_depth"),
@@ -194,6 +210,16 @@ pub struct Snapshot {
     /// chunk writes that hit the write deadline or an injected
     /// `net_write` stall (slow or vanished streaming clients)
     pub net_slow_writes: u64,
+    /// chain-pages moved to the disk spill tier instead of destroyed
+    pub spill_pages_out: u64,
+    /// chain-pages hydrated back from the spill tier at checkout
+    pub spill_pages_in: u64,
+    /// resident bytes freed by moving stripes to the spill tier
+    pub spill_bytes: u64,
+    /// checkouts that hydrated at least one page (re-prefill avoided)
+    pub hydrate_hits: u64,
+    /// spill-store reads that failed verification (fault, IO, checksum)
+    pub store_checksum_failures: u64,
     /// time-to-first-token percentiles/mean (µs; admission -> emission)
     pub ttft_p50_us: u128,
     pub ttft_p99_us: u128,
@@ -352,6 +378,21 @@ impl Metrics {
         self.net_slow_writes.inc();
     }
 
+    /// Fold the pool's cumulative spill counters into the registry.
+    /// `stats` is a monotone snapshot (`PagePool::stats`); this diffs
+    /// against the last-seen values under a lock, so concurrent callers
+    /// (decode shards, the retire path) never double-count a delta.
+    pub fn sync_spill(&self, stats: &CacheStats) {
+        let mut seen = self.spill_seen.lock().unwrap();
+        self.spill_pages_out.add(stats.spill_pages_out.saturating_sub(seen.spill_pages_out));
+        self.spill_pages_in.add(stats.spill_pages_in.saturating_sub(seen.spill_pages_in));
+        self.spill_bytes.add(stats.spill_bytes.saturating_sub(seen.spill_bytes));
+        self.hydrate_hits.add(stats.hydrate_hits.saturating_sub(seen.hydrate_hits));
+        self.store_checksum_failures
+            .add(stats.store_checksum_failures.saturating_sub(seen.store_checksum_failures));
+        *seen = *stats;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let (started, gen_span) = {
             let c = self.clocks.lock().unwrap();
@@ -418,6 +459,11 @@ impl Metrics {
             net_requests: self.net_requests.get(),
             net_parse_errors: self.net_parse_errors.get(),
             net_slow_writes: self.net_slow_writes.get(),
+            spill_pages_out: self.spill_pages_out.get(),
+            spill_pages_in: self.spill_pages_in.get(),
+            spill_bytes: self.spill_bytes.get(),
+            hydrate_hits: self.hydrate_hits.get(),
+            store_checksum_failures: self.store_checksum_failures.get(),
             ttft_p50_us: self.ttft.percentile(0.50) as u128,
             ttft_p99_us: self.ttft.percentile(0.99) as u128,
             ttft_mean_us: self.ttft.mean(),
@@ -504,6 +550,16 @@ impl Snapshot {
                 self.decode_errors,
                 self.admission_deferrals,
                 self.faults_injected,
+            );
+        }
+        if self.spill_pages_out > 0 || self.store_checksum_failures > 0 {
+            println!(
+                "{label}: spill: {} pages out ({} KiB freed), {} pages in across {} hydrating checkouts | {} checksum failures",
+                self.spill_pages_out,
+                self.spill_bytes / 1024,
+                self.spill_pages_in,
+                self.hydrate_hits,
+                self.store_checksum_failures,
             );
         }
         if self.net_connections > 0 || self.net_requests > 0 {
@@ -706,6 +762,44 @@ mod tests {
         assert!(snap.contains("\"net_requests\":3"));
         assert!(snap.contains("\"net_parse_errors\":1"));
         assert!(snap.contains("\"net_slow_writes\":1"));
+    }
+
+    #[test]
+    fn spill_counters_delta_sync_with_pinned_names() {
+        let m = Metrics::default();
+        let empty = m.snapshot();
+        assert_eq!(empty.spill_pages_out, 0);
+        assert_eq!(empty.hydrate_hits, 0);
+        // pool stats are cumulative; syncing the same snapshot twice
+        // must not double-count
+        let stats = CacheStats {
+            spill_pages_out: 8,
+            spill_pages_in: 4,
+            spill_bytes: 4096,
+            hydrate_hits: 2,
+            store_checksum_failures: 1,
+            ..CacheStats::default()
+        };
+        m.sync_spill(&stats);
+        m.sync_spill(&stats);
+        let s = m.snapshot();
+        assert_eq!(s.spill_pages_out, 8);
+        assert_eq!(s.spill_pages_in, 4);
+        assert_eq!(s.spill_bytes, 4096);
+        assert_eq!(s.hydrate_hits, 2);
+        assert_eq!(s.store_checksum_failures, 1);
+        // a later, larger snapshot adds only the delta
+        let grown = CacheStats { spill_pages_out: 11, ..stats };
+        m.sync_spill(&grown);
+        assert_eq!(m.snapshot().spill_pages_out, 11);
+        // the registry names are the wire contract for metrics.jsonl and
+        // GET /v1/metrics — pin them
+        let snap = format!("{}", m.registry().snapshot_json());
+        assert!(snap.contains("\"spill_pages_out\":11"));
+        assert!(snap.contains("\"spill_pages_in\":4"));
+        assert!(snap.contains("\"spill_bytes\":4096"));
+        assert!(snap.contains("\"hydrate_hits\":2"));
+        assert!(snap.contains("\"store_checksum_failures\":1"));
     }
 
     #[test]

@@ -140,11 +140,23 @@ pub struct SessionStore {
 
 impl SessionStore {
     pub fn new(kv: KvCacheConfig) -> SessionStore {
+        SessionStore::new_with_spill(kv, None)
+    }
+
+    /// Like `new`, with a disk spill tier attached to the pool: budget
+    /// pressure spills cold full stripes to `spill` instead of
+    /// destroying sessions, and `checkout` hydrates them back.
+    pub fn new_with_spill(
+        kv: KvCacheConfig,
+        spill: Option<Arc<crate::store::SpillStore>>,
+    ) -> SessionStore {
         // token ids cost 4 B vs >= ~100 B/token of per-layer KV state, so
         // a small slice of the byte budget bounds histories comfortably
         let max_history_tokens = (kv.byte_budget / 16).max(4096);
+        let mut pool = PagePool::new(kv);
+        pool.set_spill(spill);
         SessionStore {
-            pool: PagePool::new(kv),
+            pool,
             histories: HashMap::new(),
             clock: 0,
             hist_tokens: 0,
@@ -208,8 +220,28 @@ impl SessionStore {
 
     /// Check a session's decode state OUT for a batch decode (its bytes
     /// leave the pool accounting until `checkin`).
+    ///
+    /// Hydrate-before-decode invariant: attention never touches a
+    /// non-resident page, so any stripes living in the spill tier are
+    /// read back here, bit-identically. A failed read (fault injection,
+    /// corruption) leaves the cache truncated to the prefix before the
+    /// bad stripe — the decode re-prefills the difference instead of
+    /// ever serving corrupt KV.
     pub fn checkout(&mut self, session_id: u64) -> Option<LayeredKv> {
-        self.pool.take(session_id)
+        let mut kv = self.pool.take(session_id)?;
+        if !kv.fully_resident() {
+            match self.pool.spill_store().cloned() {
+                Some(store) => {
+                    let (pages_in, failures) = kv.hydrate(&store);
+                    self.pool.note_hydrate(pages_in, failures);
+                }
+                // spill tier detached with stripes still out: nothing to
+                // read them from — restart the context (stripes spill
+                // oldest-first, so there is no usable resident prefix)
+                None => kv.truncate(0),
+            }
+        }
+        Some(kv)
     }
 
     /// Return a decode state to the pool: records the hit/miss outcome
@@ -337,6 +369,48 @@ impl Server {
         )
     }
 
+    /// CPU backend with an explicit KV spill store: budget pressure
+    /// spills cold stripes to disk instead of destroying sessions, and
+    /// checkouts hydrate them back (persistence benches and tests;
+    /// production servers pick the tier up from `HAD_STORE=dir`).
+    pub fn start_cpu_spill(
+        backend: HadBackend,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+        spill: Arc<crate::store::SpillStore>,
+    ) -> Result<Server> {
+        Server::start_inner_full(
+            Exec::Cpu { backend: Arc::new(backend), check: None },
+            router,
+            policy,
+            kv,
+            fault::from_env(),
+            Some(spill),
+        )
+    }
+
+    /// Spill store AND an instance-scoped fault plan (chaos testing of
+    /// the spill tier itself; create the store with the same plan so
+    /// `spill_write`/`spill_read` sites fire inside it).
+    pub fn start_cpu_spill_chaos(
+        backend: HadBackend,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+        plan: Arc<FaultPlan>,
+        spill: Arc<crate::store::SpillStore>,
+    ) -> Result<Server> {
+        Server::start_inner_full(
+            Exec::Cpu { backend: Arc::new(backend), check: None },
+            router,
+            policy,
+            kv,
+            Some(plan),
+            Some(spill),
+        )
+    }
+
     /// CPU backend with the PJRT engine as a per-batch cross-check:
     /// every served batch is also executed through the bucket's lowered
     /// artifact and the logits difference is logged. The engine is OFF
@@ -409,6 +483,20 @@ impl Server {
         kv: KvCacheConfig,
         faults: Option<Arc<FaultPlan>>,
     ) -> Result<Server> {
+        // opt-in disk spill tier (`HAD_STORE=dir`); the explicit-store
+        // constructors bypass this and pass theirs directly
+        let spill = crate::store::SpillStore::from_env(faults.clone());
+        Server::start_inner_full(exec, router, policy, kv, faults, spill)
+    }
+
+    fn start_inner_full(
+        exec: Exec,
+        router: Router,
+        policy: BatchPolicy,
+        kv: KvCacheConfig,
+        faults: Option<Arc<FaultPlan>>,
+        spill: Option<Arc<crate::store::SpillStore>>,
+    ) -> Result<Server> {
         let queues: Vec<BucketQueue> = router
             .buckets()
             .iter()
@@ -421,7 +509,7 @@ impl Server {
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
-        let sessions = Arc::new(Mutex::new(SessionStore::new(kv)));
+        let sessions = Arc::new(Mutex::new(SessionStore::new_with_spill(kv, spill)));
         let cpu = matches!(exec, Exec::Cpu { .. });
         // generation streams grow inside the server-wide bounds: the
         // largest routed context, the page pool's byte budget, and the
@@ -937,6 +1025,7 @@ fn decode_job(
         // a resume is a cache hit; a reset (or cold start) a miss
         store.checkin(id, kv, was_resident && stats.resumed_at > 0);
         metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+        metrics.sync_spill(&store.pool().stats());
     }
 
     main_slots
@@ -1124,6 +1213,7 @@ fn retire_stream(
                 store.checkin(admit.session, kv, resumed);
             }
             metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+            metrics.sync_spill(&store.pool().stats());
         }
     }
     metrics.record_stream_retired(reason);
@@ -2239,5 +2329,108 @@ mod tests {
         }
         assert_eq!(reason, Some(StopReason::Shutdown));
         assert_eq!(metrics.snapshot().drain_shutdowns, 1);
+    }
+
+    fn spill_server(kv: KvCacheConfig) -> (Server, Arc<crate::store::SpillStore>) {
+        let dir = std::env::temp_dir().join("had-spill-server-test");
+        let spill =
+            Arc::new(crate::store::SpillStore::create(&dir, None).expect("spill store"));
+        let router = Router::new(vec![Bucket {
+            config: "serve_srv".into(),
+            n_ctx: 32,
+            batch: 4,
+        }]);
+        let server = Server::start_cpu_spill(
+            tiny_backend(&kv),
+            router,
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams: 4,
+                ..Default::default()
+            },
+            kv,
+            Arc::clone(&spill),
+        )
+        .expect("server start");
+        (server, spill)
+    }
+
+    #[test]
+    fn spilled_session_hydrates_with_bit_identical_logits() {
+        // budget fits exactly ONE 8-token session (2 stripes x 4 chains
+        // x 288 B): admitting a second session forces the first's
+        // stripes to the disk tier instead of destroying it
+        let budget = 2 * 4 * 288;
+        let kv = kv_cfg(budget);
+        let backend = tiny_backend(&kv);
+        let (server, spill) = spill_server(kv);
+        let t1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        server.infer_session(1, t1.clone()).expect("turn 1");
+        server.infer_session(2, vec![9, 10, 11, 12, 13, 14, 15, 16]).expect("turn 2");
+        let stats = server.cache_stats();
+        assert!(stats.spill_pages_out > 0, "budget pressure spilled, stats: {stats:?}");
+        assert_eq!(stats.evictions, 0, "spilling replaced eviction");
+        assert!(spill.live_records() > 0, "stripes live on disk");
+        // the follow-up turn hydrates session 1 and its logits are
+        // bit-identical to a fresh forward over the full history
+        let append = vec![3i32, 1];
+        let resp = server.infer_session(1, append.clone()).expect("turn 3");
+        let mut full = t1;
+        full.extend_from_slice(&append);
+        assert_eq!(resp.logits, backend.forward_logits(&full));
+        assert_eq!(resp.cached_tokens, 8, "session resumed from history, not restarted");
+        let stats = server.cache_stats();
+        assert!(stats.hydrate_hits >= 1, "checkout hydrated, stats: {stats:?}");
+        assert!(stats.spill_pages_in >= 8, "both stripes came back, stats: {stats:?}");
+        assert_eq!(stats.store_checksum_failures, 0);
+        // the pool counters land in the metrics registry under pinned
+        // names (the /v1/metrics and metrics.jsonl wire contract)
+        let snap = server.metrics.snapshot();
+        assert!(snap.spill_pages_out > 0 && snap.spill_pages_in >= 8);
+        assert!(snap.hydrate_hits >= 1);
+        assert_eq!(snap.store_checksum_failures, 0);
+    }
+
+    #[test]
+    fn continue_stream_over_hydrated_kv_is_token_identical() {
+        // budget = the continuing stream's final state (3 stripes); a
+        // middle turn on another session spills stream 1's stripes, so
+        // the continuation must hydrate before decoding
+        let budget = 3 * 4 * 288;
+        let kv = kv_cfg(budget);
+        let backend = tiny_backend(&kv);
+        let (server, _spill) = spill_server(kv);
+        let prompt = vec![1i32, 2, 3, 4];
+        let out_a = server
+            .generate_session(1, GenerateRequest::greedy(prompt.clone(), 4))
+            .expect("stream A");
+        assert_eq!(out_a.reason, StopReason::MaxTokens);
+        server.infer_session(2, vec![5, 6, 7, 8, 9, 10, 11, 12]).expect("pressure turn");
+        assert!(server.cache_stats().spill_pages_out > 0, "stream A's stripes spilled");
+        let out_b = server
+            .generate_session(1, GenerateRequest::greedy(Vec::new(), 3))
+            .expect("continue stream");
+        assert_eq!(out_b.reason, StopReason::MaxTokens);
+        // token-for-token identical to the direct loop over the same
+        // context — the hydrated pages ARE the original pages
+        let mut context = prompt;
+        context.extend_from_slice(&out_a.tokens);
+        let mut okv = backend.fresh_kv();
+        let oracle = crate::generate::generate(
+            &backend,
+            &mut okv,
+            &context,
+            &GenerateRequest::greedy(Vec::new(), 3),
+            &crate::generate::GenLimits {
+                max_total_tokens: 32,
+                kv_budget_bytes: budget,
+                ..crate::generate::GenLimits::unbounded()
+            },
+            |_, _| {},
+        );
+        assert_eq!(out_b.tokens, oracle.tokens, "hydrated continuation must not drift");
+        let stats = server.cache_stats();
+        assert!(stats.hydrate_hits >= 1, "continuation hydrated, stats: {stats:?}");
+        assert_eq!(stats.store_checksum_failures, 0);
     }
 }

@@ -20,6 +20,13 @@
 use crate::binary::bitpack::words_for;
 use crate::kvcache::config::ValueDtype;
 use crate::kvcache::session::SessionKv;
+use crate::store::SpillStore;
+
+/// Bytes of stripe-geometry header prepended to every spill record:
+/// chains, page_tokens, d_head (u32 LE each) + value element width +
+/// 3 reserved bytes. Restore shape-checks the header against the live
+/// geometry so a record can never hydrate into the wrong cache.
+const STRIPE_HEADER: usize = 16;
 
 /// Head geometry of a layered cache (one chain per (layer, head)).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +53,15 @@ pub struct LayeredKv {
     /// chains hold exactly `tokens.len()` entries each once a token's
     /// forward completes (`note_token` asserts it).
     tokens: Vec<i32>,
+    /// Spilled stripes, sorted by stripe index: `(stripe, spill tag)`.
+    /// A stripe is page index `p` of EVERY chain — one lock-step token
+    /// range `[p*page_tokens, (p+1)*page_tokens)` — spilled and hydrated
+    /// as a unit. Only full (sealed) stripes ever spill.
+    spilled: Vec<(usize, u64)>,
+    /// Spill tags whose stripes were dropped without store access
+    /// (truncate/reset) — the owner must `drain_released` and release
+    /// them against the spill store, or the records leak until teardown.
+    released: Vec<u64>,
 }
 
 impl LayeredKv {
@@ -54,7 +70,7 @@ impl LayeredKv {
         let chains = (0..geom.chains())
             .map(|_| SessionKv::new_with(geom.d_head, geom.d_head, page_tokens, dtype))
             .collect();
-        LayeredKv { geom, chains, tokens: Vec::new() }
+        LayeredKv { geom, chains, tokens: Vec::new(), spilled: Vec::new(), released: Vec::new() }
     }
 
     #[inline]
@@ -106,8 +122,29 @@ impl LayeredKv {
     }
 
     /// Roll every chain (and the token record) back to `len` tokens.
+    ///
+    /// Spill interaction: a cut that lands INSIDE a spilled stripe is
+    /// clamped down to that stripe's start (keeping the partial page
+    /// would require hydrating it here, without store access — callers
+    /// re-prefill the few clamped tokens instead). Spilled stripes at or
+    /// beyond the cut are dropped and their tags buffered for
+    /// [`LayeredKv::drain_released`].
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.tokens.len(), "truncate beyond length");
+        let pt = self.page_tokens();
+        let len = match self.spilled.iter().find(|&&(p, _)| p * pt < len && len < (p + 1) * pt) {
+            Some(&(p, _)) => p * pt,
+            None => len,
+        };
+        let mut kept = Vec::with_capacity(self.spilled.len());
+        for &(p, tag) in &self.spilled {
+            if (p + 1) * pt <= len {
+                kept.push((p, tag));
+            } else {
+                self.released.push(tag);
+            }
+        }
+        self.spilled = kept;
         for c in &mut self.chains {
             c.truncate(len);
         }
@@ -139,6 +176,151 @@ impl LayeredKv {
                 n_tokens.div_ceil(c.page_tokens()) * c.page_tokens() * per_token
             })
             .sum()
+    }
+
+    // ---- disk spill tier ------------------------------------------------
+
+    /// Tokens per page (uniform across chains).
+    #[inline]
+    pub fn page_tokens(&self) -> usize {
+        self.chains[0].page_tokens()
+    }
+
+    /// Full (sealed) stripes — the only spill candidates. The partial
+    /// tail page, if any, always stays resident.
+    #[inline]
+    pub fn full_stripes(&self) -> usize {
+        self.tokens.len() / self.page_tokens()
+    }
+
+    /// Number of stripes currently living in the spill tier.
+    #[inline]
+    pub fn spilled_stripes(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// True when every page is resident (the decode precondition —
+    /// `SessionStore::checkout` hydrates before handing the cache out).
+    #[inline]
+    pub fn fully_resident(&self) -> bool {
+        self.spilled.is_empty()
+    }
+
+    fn stripe_spilled(&self, p: usize) -> bool {
+        self.spilled.iter().any(|&(s, _)| s == p)
+    }
+
+    /// Is there a resident full stripe left to spill?
+    pub fn has_spillable(&self) -> bool {
+        (0..self.full_stripes()).any(|p| !self.stripe_spilled(p))
+    }
+
+    /// Serialize stripe `p`: geometry header, then every chain's page `p`
+    /// payload in chain order.
+    fn encode_stripe(&self, p: usize) -> Vec<u8> {
+        let payload: usize = self.chains.iter().map(|c| c.pages()[p].payload_len()).sum();
+        let mut out = Vec::with_capacity(STRIPE_HEADER + payload);
+        out.extend_from_slice(&(self.chains.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.page_tokens() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.geom.d_head as u32).to_le_bytes());
+        out.push(self.chains[0].value_dtype().bytes_per_elem() as u8);
+        out.extend_from_slice(&[0u8; 3]);
+        for c in &self.chains {
+            c.pages()[p].encode_payload(&mut out);
+        }
+        out
+    }
+
+    /// Restore stripe `p` from a spill record, shape-checking the header
+    /// against the live geometry.
+    fn restore_stripe(&mut self, p: usize, buf: &[u8]) -> Result<usize, String> {
+        if buf.len() < STRIPE_HEADER {
+            return Err(format!("stripe header short: {} B", buf.len()));
+        }
+        let word = |o: usize| {
+            u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) as usize
+        };
+        let elem = self.chains[0].value_dtype().bytes_per_elem();
+        if word(0) != self.chains.len()
+            || word(4) != self.page_tokens()
+            || word(8) != self.geom.d_head
+            || buf[12] as usize != elem
+        {
+            return Err("stripe geometry mismatch".to_string());
+        }
+        let mut rest = &buf[STRIPE_HEADER..];
+        for c in &mut self.chains {
+            rest = c.page_mut(p).restore_payload(rest)?;
+        }
+        if !rest.is_empty() {
+            return Err(format!("{} trailing bytes after stripe restore", rest.len()));
+        }
+        Ok(self.chains.len())
+    }
+
+    /// Spill the oldest resident full stripe to `store`, dropping its
+    /// pages to zero-byte shells. Returns `(bytes freed, pages spilled)`,
+    /// or `None` when nothing is spillable or the store refused the write
+    /// (fault injection / IO error) — the caller falls back to plain
+    /// eviction, it never wedges.
+    pub fn spill_one(&mut self, store: &SpillStore) -> Option<(usize, usize)> {
+        let p = (0..self.full_stripes()).find(|&p| !self.stripe_spilled(p))?;
+        let tag = store.put(&self.encode_stripe(p)).ok()?;
+        let mut freed = 0;
+        for c in &mut self.chains {
+            let page = c.page_mut(p);
+            freed += page.bytes();
+            page.drop_payload();
+        }
+        let at = self.spilled.partition_point(|&(s, _)| s < p);
+        self.spilled.insert(at, (p, tag));
+        Some((freed, self.chains.len()))
+    }
+
+    /// Hydrate every spilled stripe back from `store`, oldest first,
+    /// releasing each record once its bytes are resident again. On a
+    /// failed read (fault injection, corruption) the cache is truncated
+    /// to the resident prefix before the failed stripe — the scheduler's
+    /// existing resume path re-prefills the difference; corrupt KV is
+    /// never served. Returns `(pages restored, failed reads)`.
+    pub fn hydrate(&mut self, store: &SpillStore) -> (usize, usize) {
+        let spilled = std::mem::take(&mut self.spilled);
+        let mut pages_in = 0;
+        for (i, &(p, tag)) in spilled.iter().enumerate() {
+            let restored = match store.get(tag) {
+                Ok(buf) => self.restore_stripe(p, &buf).is_ok(),
+                Err(_) => false,
+            };
+            if restored {
+                pages_in += self.chains.len();
+                store.release(tag);
+                continue;
+            }
+            // Drop the failed stripe and everything after it (later
+            // tokens attend to these keys, so they are unusable too).
+            for &(_, later) in &spilled[i..] {
+                store.release(later);
+            }
+            let keep = p * self.page_tokens();
+            for c in &mut self.chains {
+                c.truncate(keep);
+            }
+            self.tokens.truncate(keep);
+            return (pages_in, 1);
+        }
+        (pages_in, 0)
+    }
+
+    /// Tags of every spilled stripe (released by the pool when the whole
+    /// session is evicted or removed).
+    pub fn spill_tags(&self) -> Vec<u64> {
+        self.spilled.iter().map(|&(_, tag)| tag).collect()
+    }
+
+    /// Take the tags buffered by [`LayeredKv::truncate`] for release
+    /// against the spill store.
+    pub fn drain_released(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.released)
     }
 }
 
@@ -213,6 +395,129 @@ mod tests {
         push_token(&mut kv, 3, 0.5);
         // 4 chains x one page x 4 tokens x (8 B key + 64*4 B value)
         assert_eq!(kv.bytes(), 4 * 4 * (8 + 256));
+    }
+
+    fn spill_store() -> SpillStore {
+        SpillStore::create(&std::env::temp_dir().join("had-spill-test"), None).unwrap()
+    }
+
+    fn filled(tokens: usize, page_tokens: usize) -> LayeredKv {
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 16 };
+        let mut kv = LayeredKv::new(geom, page_tokens, ValueDtype::F32);
+        for t in 0..tokens {
+            // vary sign and magnitude per (token, chain) so stripes differ
+            push_token(&mut kv, t as i32, (t as f32 - 3.5) * 0.4);
+        }
+        kv
+    }
+
+    fn assert_same_kv(a: &LayeredKv, b: &LayeredKv) {
+        assert_eq!(a.tokens(), b.tokens());
+        let g = a.geom();
+        let mut ra = vec![0.0f32; g.d_head];
+        let mut rb = vec![0.0f32; g.d_head];
+        for l in 0..g.n_layers {
+            for h in 0..g.n_heads {
+                let (ca, cb) = (a.chain(l, h), b.chain(l, h));
+                assert_eq!(ca.len(), cb.len());
+                for i in 0..ca.len() {
+                    assert_eq!(ca.key(i), cb.key(i), "chain ({l},{h}) key {i}");
+                    ca.value_into(i, &mut ra);
+                    cb.value_into(i, &mut rb);
+                    assert_eq!(ra, rb, "chain ({l},{h}) value {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spill_hydrate_roundtrip_is_bit_identical() {
+        let store = spill_store();
+        let mut kv = filled(10, 4); // 2 full stripes + 2-token tail
+        let oracle = kv.clone();
+        let resident = kv.bytes();
+        assert_eq!(kv.full_stripes(), 2);
+        assert!(kv.has_spillable());
+
+        let (freed1, pages1) = kv.spill_one(&store).expect("first stripe spills");
+        assert_eq!(pages1, kv.geom().chains());
+        let (freed2, _) = kv.spill_one(&store).expect("second stripe spills");
+        assert!(kv.spill_one(&store).is_none(), "tail page never spills");
+        assert_eq!(kv.spilled_stripes(), 2);
+        assert!(!kv.fully_resident());
+        assert_eq!(kv.bytes(), resident - freed1 - freed2);
+        assert_eq!(kv.len(), 10, "spill does not change the token record");
+        assert_eq!(store.live_records(), 2);
+
+        let (pages_in, failures) = kv.hydrate(&store);
+        assert_eq!((pages_in, failures), (2 * kv.geom().chains(), 0));
+        assert!(kv.fully_resident());
+        assert_eq!(kv.bytes(), resident);
+        assert_eq!(store.live_records(), 0, "hydrate releases the records");
+        assert_same_kv(&kv, &oracle);
+    }
+
+    #[test]
+    fn truncate_inside_spilled_stripe_clamps_to_stripe_start() {
+        let store = spill_store();
+        let mut kv = filled(8, 4);
+        let oracle = kv.clone();
+        kv.spill_one(&store).unwrap();
+        kv.spill_one(&store).unwrap();
+
+        kv.truncate(6); // cuts inside spilled stripe 1 -> clamps to 4
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.spilled_stripes(), 1);
+        let released = kv.drain_released();
+        assert_eq!(released.len(), 1);
+        for tag in released {
+            store.release(tag);
+        }
+        assert_eq!(store.live_records(), 1);
+
+        let (pages_in, failures) = kv.hydrate(&store);
+        assert_eq!((pages_in, failures), (kv.geom().chains(), 0));
+        let mut expect = oracle;
+        expect.truncate(4);
+        assert_same_kv(&kv, &expect);
+        assert_eq!(store.live_records(), 0);
+    }
+
+    #[test]
+    fn failed_hydrate_truncates_to_resident_prefix_and_releases() {
+        let store = spill_store();
+        let mut kv = filled(9, 4);
+        kv.spill_one(&store).unwrap();
+        kv.spill_one(&store).unwrap();
+        // Re-open the spill file behind the index and corrupt stripe 0's
+        // record so its hydrating read fails the checksum.
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = std::fs::File::options().write(true).open(store.path()).unwrap();
+            f.seek(SeekFrom::Start(16 + 16 + 3)).unwrap();
+            f.write_all(&[0xAA]).unwrap();
+        }
+        let (pages_in, failures) = kv.hydrate(&store);
+        assert_eq!(failures, 1);
+        assert_eq!(pages_in, 0, "stripe 0 failed; stripe 1 is dropped, not read");
+        assert!(kv.is_empty(), "everything at or after the bad stripe is gone");
+        assert!(kv.fully_resident());
+        assert_eq!(store.live_records(), 0, "failed hydrate still releases records");
+        // The cache remains usable: re-prefill from scratch.
+        push_token(&mut kv, 42, 0.5);
+        assert_eq!(kv.tokens(), &[42]);
+    }
+
+    #[test]
+    fn spill_write_fault_degrades_to_none() {
+        let plan = std::sync::Arc::new(crate::util::fault::FaultPlan::parse("spill_write").unwrap());
+        let store =
+            SpillStore::create(&std::env::temp_dir().join("had-spill-test"), Some(plan)).unwrap();
+        let mut kv = filled(4, 4);
+        let before = kv.bytes();
+        assert!(kv.spill_one(&store).is_none(), "refused write degrades, never wedges");
+        assert!(kv.fully_resident());
+        assert_eq!(kv.bytes(), before);
     }
 
     #[test]

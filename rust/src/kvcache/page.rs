@@ -20,6 +20,12 @@ enum Values {
 /// One page of KV state. Storage is allocated at full capacity on
 /// construction, so `bytes()` is constant over the page's lifetime and
 /// appends never move memory (slices handed out stay valid).
+///
+/// A page can be **spilled**: `drop_payload` frees the key/value storage
+/// leaving a zero-byte shell (geometry and `len` intact) whose bytes
+/// live in the disk spill tier, and `restore_payload` rebuilds it
+/// bit-identically. Attention never touches a non-resident page — the
+/// pool hydrates at checkout, before any decode.
 #[derive(Clone, Debug)]
 pub struct Page {
     d: usize,
@@ -31,6 +37,8 @@ pub struct Page {
     keys: Vec<u64>,
     /// capacity * d_v value elements, filled up to len rows.
     values: Values,
+    /// False while the payload lives only in the spill tier.
+    resident: bool,
 }
 
 impl Page {
@@ -54,6 +62,7 @@ impl Page {
             len: 0,
             keys: vec![0u64; capacity * words_per_key],
             values,
+            resident: true,
         }
     }
 
@@ -93,6 +102,7 @@ impl Page {
     /// Append one token's key (continuous f32, binarized here) and value
     /// (rounded to the page's value dtype).
     pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(self.resident, "push into an evicted page");
         assert!(!self.is_full(), "page overflow");
         assert_eq!(k_row.len(), self.d, "key dim mismatch");
         assert_eq!(v_row.len(), self.d_v, "value dim mismatch");
@@ -114,6 +124,7 @@ impl Page {
     #[inline]
     pub fn key(&self, i: usize) -> &[u64] {
         debug_assert!(i < self.len);
+        debug_assert!(self.resident, "key read from an evicted page");
         &self.keys[i * self.words_per_key..(i + 1) * self.words_per_key]
     }
 
@@ -122,6 +133,7 @@ impl Page {
     /// streams so a resident page is touched once per query block.
     #[inline]
     pub fn keys_packed(&self) -> &[u64] {
+        debug_assert!(self.resident, "keys_packed on an evicted page");
         &self.keys[..self.len * self.words_per_key]
     }
 
@@ -176,16 +188,118 @@ impl Page {
     /// Roll back to `len` tokens (decode rollback / bench reset).
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.len, "truncate beyond length");
+        assert!(
+            self.resident || len == 0,
+            "partial truncate of an evicted page (hydrate first, or drop the whole stripe)"
+        );
         self.len = len;
     }
 
     /// Resident payload bytes (full capacity — allocation, not fill).
+    /// Zero while the payload is spilled to disk.
     pub fn bytes(&self) -> usize {
+        if !self.resident {
+            return 0;
+        }
         let value_bytes = match &self.values {
             Values::F32(vs) => vs.len() * 4,
             Values::Bf16(vs) => vs.len() * 2,
         };
         self.keys.len() * 8 + value_bytes
+    }
+
+    /// True unless the payload has been spilled to disk.
+    #[inline]
+    pub fn is_resident(&self) -> bool {
+        self.resident
+    }
+
+    fn value_elem_bytes(&self) -> usize {
+        match self.values {
+            Values::F32(_) => 4,
+            Values::Bf16(_) => 2,
+        }
+    }
+
+    /// Exact size of this page's spill payload (filled rows only).
+    pub fn payload_len(&self) -> usize {
+        self.len * self.words_per_key * 8 + self.len * self.d_v * self.value_elem_bytes()
+    }
+
+    /// Append the filled rows' payload to `out`: `len * words_per_key`
+    /// key words (u64 LE), then `len * d_v` value elements in the page's
+    /// dtype (LE). Geometry is not encoded — the shell keeps it, so
+    /// restore is shape-checked against the page itself.
+    pub fn encode_payload(&self, out: &mut Vec<u8>) {
+        assert!(self.resident, "encode of an evicted page");
+        out.reserve(self.payload_len());
+        for w in &self.keys[..self.len * self.words_per_key] {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        match &self.values {
+            Values::F32(vs) => {
+                for x in &vs[..self.len * self.d_v] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Values::Bf16(vs) => {
+                for x in &vs[..self.len * self.d_v] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Free the key/value storage, leaving a zero-byte shell. The caller
+    /// owns the spilled bytes (see `store::SpillStore`).
+    pub fn drop_payload(&mut self) {
+        assert!(self.resident, "double spill of a page");
+        self.resident = false;
+        self.keys = Vec::new();
+        self.values = match self.values {
+            Values::F32(_) => Values::F32(Vec::new()),
+            Values::Bf16(_) => Values::Bf16(Vec::new()),
+        };
+    }
+
+    /// Rebuild the payload from bytes produced by [`Page::encode_payload`],
+    /// consuming exactly [`Page::payload_len`] bytes from the front of
+    /// `buf` and returning the remainder. Bit-identical: pushes after
+    /// restore behave as if the page never left RAM.
+    pub fn restore_payload<'a>(&mut self, buf: &'a [u8]) -> Result<&'a [u8], String> {
+        if self.resident {
+            return Err("restore into a resident page".to_string());
+        }
+        let need = self.payload_len();
+        if buf.len() < need {
+            return Err(format!("stripe payload short: need {need} B, have {}", buf.len()));
+        }
+        let kw = self.len * self.words_per_key;
+        let mut keys = vec![0u64; self.capacity * self.words_per_key];
+        for (slot, c) in keys[..kw].iter_mut().zip(buf[..kw * 8].chunks_exact(8)) {
+            *slot = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        let vbytes = &buf[kw * 8..need];
+        let values = match self.values {
+            Values::F32(_) => {
+                let mut vs = vec![0.0f32; self.capacity * self.d_v];
+                for (slot, c) in vs[..self.len * self.d_v].iter_mut().zip(vbytes.chunks_exact(4)) {
+                    *slot = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                Values::F32(vs)
+            }
+            Values::Bf16(_) => {
+                let mut vs = vec![0u16; self.capacity * self.d_v];
+                for (slot, c) in vs[..self.len * self.d_v].iter_mut().zip(vbytes.chunks_exact(2)) {
+                    *slot = u16::from_le_bytes(c.try_into().unwrap());
+                }
+                Values::Bf16(vs)
+            }
+        };
+        self.keys = keys;
+        self.values = values;
+        self.resident = true;
+        Ok(&buf[need..])
     }
 }
 
@@ -318,5 +432,52 @@ mod tests {
         let mut page = Page::new(1, 8, 2);
         page.push(&[1.0; 8], &[0.0; 2]);
         page.push(&[1.0; 8], &[0.0; 2]);
+    }
+
+    #[test]
+    fn spill_roundtrip_is_bit_identical() {
+        let mut rng = Rng::new(5);
+        for dtype in [ValueDtype::F32, ValueDtype::Bf16] {
+            let (d, d_v, cap) = (65usize, 16usize, 4usize);
+            let mut page = Page::new_with(cap, d, d_v, dtype);
+            for _ in 0..cap {
+                page.push(&rng.normal_vec(d, 1.0), &rng.normal_vec(d_v, 1.0));
+            }
+            let before = page.clone();
+            let mut payload = Vec::new();
+            page.encode_payload(&mut payload);
+            assert_eq!(payload.len(), page.payload_len());
+
+            page.drop_payload();
+            assert!(!page.is_resident());
+            assert_eq!(page.bytes(), 0, "evicted shell accounts zero bytes");
+            assert_eq!(page.len(), cap, "shell keeps its length");
+
+            let rest = page.restore_payload(&payload).unwrap();
+            assert!(rest.is_empty());
+            assert!(page.is_resident());
+            assert_eq!(page.bytes(), before.bytes());
+            for i in 0..cap {
+                assert_eq!(page.key(i), before.key(i), "{dtype:?} key {i}");
+                let (mut a, mut b) = (vec![0.0; d_v], vec![0.0; d_v]);
+                page.value_into(i, &mut a);
+                before.value_into(i, &mut b);
+                assert_eq!(a, b, "{dtype:?} value {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_short_payload() {
+        let mut page = Page::new(2, 16, 4);
+        page.push(&[1.0; 16], &[0.5; 4]);
+        let mut payload = Vec::new();
+        page.encode_payload(&mut payload);
+        page.drop_payload();
+        assert!(page.restore_payload(&payload[..payload.len() - 1]).is_err());
+        // A failed restore leaves the shell evicted; a full payload works.
+        assert!(!page.is_resident());
+        page.restore_payload(&payload).unwrap();
+        assert!(page.is_resident());
     }
 }

@@ -10,18 +10,41 @@
 //! [`PagePool::insert`]).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::kvcache::config::KvCacheConfig;
 use crate::kvcache::layered::LayeredKv;
 use crate::kvcache::session::SessionKv;
+use crate::store::SpillStore;
 use crate::tensor::Mat;
 
 /// What the pool needs from a resident entry: byte accounting, a token
-/// count for `cached_tokens`, and rollback support.
+/// count for `cached_tokens`, rollback support, and (optionally) a
+/// page-granular spill tier. The spill methods default to "no spill"
+/// so single-chain pools keep their destroy-on-evict behavior.
 pub trait PooledKv {
     fn bytes(&self) -> usize;
     fn tokens(&self) -> usize;
     fn truncate(&mut self, len: usize);
+    /// Move one cold full stripe to `store`, returning
+    /// `(bytes freed, pages spilled)`; `None` when nothing is spillable
+    /// or the store refused the write.
+    fn spill_one(&mut self, _store: &SpillStore) -> Option<(usize, usize)> {
+        None
+    }
+    /// Is there a resident full stripe left to spill?
+    fn has_spillable(&self) -> bool {
+        false
+    }
+    /// Spill tags this entry still references (released when the entry
+    /// is dropped wholesale).
+    fn spill_tags(&self) -> Vec<u64> {
+        Vec::new()
+    }
+    /// Tags buffered by a truncate, to release against the store.
+    fn drain_released(&mut self) -> Vec<u64> {
+        Vec::new()
+    }
 }
 
 impl PooledKv for SessionKv {
@@ -46,6 +69,18 @@ impl PooledKv for LayeredKv {
     fn truncate(&mut self, len: usize) {
         LayeredKv::truncate(self, len)
     }
+    fn spill_one(&mut self, store: &SpillStore) -> Option<(usize, usize)> {
+        LayeredKv::spill_one(self, store)
+    }
+    fn has_spillable(&self) -> bool {
+        LayeredKv::has_spillable(self)
+    }
+    fn spill_tags(&self) -> Vec<u64> {
+        LayeredKv::spill_tags(self)
+    }
+    fn drain_released(&mut self) -> Vec<u64> {
+        LayeredKv::drain_released(self)
+    }
 }
 
 /// Cumulative cache counters (monotone; snapshot and diff as needed).
@@ -59,6 +94,16 @@ pub struct CacheStats {
     pub evictions: u64,
     /// bytes released by evictions
     pub evicted_bytes: u64,
+    /// chain-pages moved to the disk spill tier instead of destroyed
+    pub spill_pages_out: u64,
+    /// chain-pages hydrated back from the spill tier at checkout
+    pub spill_pages_in: u64,
+    /// resident bytes freed by moving stripes to the spill tier
+    pub spill_bytes: u64,
+    /// checkouts that hydrated at least one page (re-prefill avoided)
+    pub hydrate_hits: u64,
+    /// store reads that failed verification (fault, IO, checksum)
+    pub store_checksum_failures: u64,
 }
 
 impl CacheStats {
@@ -96,6 +141,10 @@ pub struct PagePool<T: PooledKv = SessionKv> {
     clock: u64,
     bytes: usize,
     stats: CacheStats,
+    /// Disk spill tier. When set, `enforce_budget` spills cold full
+    /// stripes page-granularly before falling back to whole-session
+    /// eviction.
+    spill: Option<Arc<SpillStore>>,
 }
 
 impl<T: PooledKv> PagePool<T> {
@@ -106,7 +155,36 @@ impl<T: PooledKv> PagePool<T> {
             clock: 0,
             bytes: 0,
             stats: CacheStats::default(),
+            spill: None,
         }
+    }
+
+    /// Attach (or detach) the disk spill tier.
+    pub fn set_spill(&mut self, store: Option<Arc<SpillStore>>) {
+        self.spill = store;
+    }
+
+    pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
+        self.spill.as_ref()
+    }
+
+    /// Release `tags` against the spill store, if one is attached.
+    fn release_all(&self, tags: Vec<u64>) {
+        if let Some(store) = &self.spill {
+            for tag in tags {
+                store.release(tag);
+            }
+        }
+    }
+
+    /// Record a checkout-time hydration (the coordinator hydrates taken
+    /// sessions before decode; the pool owns the counters).
+    pub fn note_hydrate(&mut self, pages_in: usize, failures: usize) {
+        self.stats.spill_pages_in += pages_in as u64;
+        if pages_in > 0 {
+            self.stats.hydrate_hits += 1;
+        }
+        self.stats.store_checksum_failures += failures as u64;
     }
 
     pub fn config(&self) -> &KvCacheConfig {
@@ -183,10 +261,14 @@ impl<T: PooledKv> PagePool<T> {
     /// evicting the session just inserted. Returns the ids evicted to
     /// make room, so the caller can drop any per-session state of its own
     /// (the coordinator's token histories).
-    pub fn insert(&mut self, session_id: u64, kv: T) -> Vec<u64> {
+    pub fn insert(&mut self, session_id: u64, mut kv: T) -> Vec<u64> {
         let now = self.tick();
+        let released = kv.drain_released();
+        self.release_all(released);
         if let Some(old) = self.sessions.remove(&session_id) {
             self.bytes -= old.kv.bytes();
+            let tags = old.kv.spill_tags();
+            self.release_all(tags);
         }
         self.bytes += kv.bytes();
         self.sessions.insert(session_id, Entry { kv, last_used: now });
@@ -202,32 +284,65 @@ impl<T: PooledKv> PagePool<T> {
             self.remove(session_id);
             return;
         }
+        let mut tags = Vec::new();
         if let Some(e) = self.sessions.get_mut(&session_id) {
             if e.kv.tokens() > len {
                 let before = e.kv.bytes();
                 e.kv.truncate(len);
                 self.bytes -= before - e.kv.bytes();
+                tags = e.kv.drain_released();
             }
         }
+        self.release_all(tags);
     }
 
     /// Drop a session outright (client disconnect). Not counted as an
     /// eviction. Returns true if it was resident.
     pub fn remove(&mut self, session_id: u64) -> bool {
         match self.sessions.remove(&session_id) {
-            Some(e) => {
+            Some(mut e) => {
                 self.bytes -= e.kv.bytes();
+                let mut tags = e.kv.spill_tags();
+                tags.extend(e.kv.drain_released());
+                self.release_all(tags);
                 true
             }
             None => false,
         }
     }
 
-    /// Evict LRU sessions until the budget holds. `protect` (the session
-    /// just admitted) is never evicted, so one session larger than the
-    /// whole budget stays resident — admission control is the router's
-    /// job, not the pool's. Returns the evicted ids.
+    /// Bring the pool back under its byte budget, in two passes.
+    ///
+    /// Pass 1 (only with a spill tier attached) is **page-granular**:
+    /// the coldest session's oldest full stripes move to disk, one at a
+    /// time, re-picking the coldest spillable session each step — the
+    /// session stays resident and hydrates at its next checkout instead
+    /// of paying re-prefill. A refused write (fault injection, IO error)
+    /// falls straight through to pass 2; spilling degrades, it never
+    /// wedges.
+    ///
+    /// Pass 2 is the original session-granular LRU eviction. `protect`
+    /// (the session just admitted) is never spilled or evicted, so one
+    /// session larger than the whole budget stays resident — admission
+    /// control is the router's job, not the pool's. Returns the evicted
+    /// ids so the caller can drop its own per-session state.
     fn enforce_budget(&mut self, protect: u64) -> Vec<u64> {
+        if let Some(store) = self.spill.clone() {
+            while self.bytes > self.cfg.byte_budget {
+                let victim = self
+                    .sessions
+                    .iter()
+                    .filter(|(&id, e)| id != protect && e.kv.has_spillable())
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(&id, _)| id);
+                let Some(id) = victim else { break };
+                let spilled = self.sessions.get_mut(&id).and_then(|e| e.kv.spill_one(&store));
+                let Some((freed, pages)) = spilled else { break };
+                self.bytes -= freed;
+                self.stats.spill_pages_out += pages as u64;
+                self.stats.spill_bytes += freed as u64;
+            }
+        }
         let mut evicted = Vec::new();
         while self.bytes > self.cfg.byte_budget {
             let victim = self
@@ -237,11 +352,14 @@ impl<T: PooledKv> PagePool<T> {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(&id, _)| id);
             let Some(id) = victim else { break };
-            if let Some(e) = self.sessions.remove(&id) {
+            if let Some(mut e) = self.sessions.remove(&id) {
                 let freed = e.kv.bytes();
                 self.bytes -= freed;
                 self.stats.evictions += 1;
                 self.stats.evicted_bytes += freed as u64;
+                let mut tags = e.kv.spill_tags();
+                tags.extend(e.kv.drain_released());
+                self.release_all(tags);
                 evicted.push(id);
             }
         }
@@ -480,6 +598,106 @@ mod tests {
         p.insert(1, layered(2));
         p.insert(1, layered(6));
         assert_eq!(p.bytes(), kv_bytes);
+    }
+
+    fn spill_store() -> Arc<SpillStore> {
+        Arc::new(
+            SpillStore::create(&std::env::temp_dir().join("had-spill-test"), None).unwrap(),
+        )
+    }
+
+    #[test]
+    fn budget_pressure_spills_pages_before_evicting_sessions() {
+        let one = PooledKv::bytes(&layered(4)); // exactly one full stripe
+        let mut p: PagePool<LayeredKv> = PagePool::new(KvCacheConfig {
+            page_tokens: 4,
+            byte_budget: 2 * one,
+            ..Default::default()
+        });
+        let store = spill_store();
+        p.set_spill(Some(Arc::clone(&store)));
+        p.insert(1, layered(4));
+        p.insert(2, layered(4));
+        let evicted = p.insert(3, layered(4));
+        assert!(evicted.is_empty(), "spill absorbed the pressure, nobody evicted");
+        assert_eq!(p.len(), 3, "all sessions stay resident");
+        assert!(p.bytes() <= p.budget());
+        let s = p.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.spill_pages_out, 4, "one stripe = n_layers * n_heads pages");
+        assert_eq!(s.spill_bytes, one as u64);
+        assert_eq!(store.live_records(), 1);
+        let coldest = p.peek(1).unwrap();
+        assert_eq!(coldest.spilled_stripes(), 1, "the LRU session's stripe spilled");
+        assert!(p.peek(2).unwrap().fully_resident());
+    }
+
+    #[test]
+    fn spill_write_fault_degrades_to_plain_eviction() {
+        use crate::util::fault::FaultPlan;
+        let one = PooledKv::bytes(&layered(4));
+        let mut p: PagePool<LayeredKv> = PagePool::new(KvCacheConfig {
+            page_tokens: 4,
+            byte_budget: 2 * one,
+            ..Default::default()
+        });
+        let plan = Arc::new(FaultPlan::parse("spill_write").unwrap());
+        let store = Arc::new(
+            SpillStore::create(&std::env::temp_dir().join("had-spill-test"), Some(plan)).unwrap(),
+        );
+        p.set_spill(Some(Arc::clone(&store)));
+        p.insert(1, layered(4));
+        p.insert(2, layered(4));
+        let evicted = p.insert(3, layered(4));
+        assert_eq!(evicted, vec![1], "refused writes fall back to LRU eviction");
+        assert!(p.bytes() <= p.budget());
+        assert_eq!(p.stats().spill_pages_out, 0);
+        assert!(store.stats().write_failures > 0);
+        assert_eq!(store.live_records(), 0);
+    }
+
+    #[test]
+    fn dropping_spilled_sessions_releases_their_records() {
+        let one = PooledKv::bytes(&layered(4));
+        let mut p: PagePool<LayeredKv> = PagePool::new(KvCacheConfig {
+            page_tokens: 4,
+            byte_budget: one,
+            ..Default::default()
+        });
+        let store = spill_store();
+        p.set_spill(Some(Arc::clone(&store)));
+        p.insert(1, layered(4));
+        p.insert(2, layered(4)); // spills session 1's only stripe
+        assert_eq!(store.live_records(), 1);
+        assert!(p.remove(1), "session 1 still resident (as a shell)");
+        assert_eq!(store.live_records(), 0, "remove releases the spill record");
+        // truncate-to-zero goes through remove and releases too
+        p.insert(3, layered(4)); // spills session 2
+        assert_eq!(store.live_records(), 1);
+        p.truncate_session(2, 0);
+        assert_eq!(store.live_records(), 0);
+        // replacing a spilled entry wholesale releases the old records
+        p.insert(4, layered(4)); // spills session 3
+        assert_eq!(store.live_records(), 1);
+        p.insert(3, layered(4)); // replaces session 3, spills someone
+        assert!(store.live_records() <= 2);
+        let removed: Vec<u64> = vec![3, 4];
+        for id in removed {
+            p.remove(id);
+        }
+        assert_eq!(store.live_records(), 0);
+    }
+
+    #[test]
+    fn hydrate_counters_flow_through_note_hydrate() {
+        let mut p: PagePool<LayeredKv> =
+            PagePool::new(KvCacheConfig { page_tokens: 4, byte_budget: 1 << 20, ..Default::default() });
+        p.note_hydrate(8, 0);
+        p.note_hydrate(0, 1);
+        let s = p.stats();
+        assert_eq!(s.spill_pages_in, 8);
+        assert_eq!(s.hydrate_hits, 1, "only checkouts that restored pages count");
+        assert_eq!(s.store_checksum_failures, 1);
     }
 
     #[test]

@@ -73,6 +73,12 @@ impl SessionKv {
         &self.pages
     }
 
+    /// Mutable access to page `p` — the spill tier drops and restores
+    /// page payloads through this (`LayeredKv` stripe operations).
+    pub fn page_mut(&mut self, p: usize) -> &mut Page {
+        &mut self.pages[p]
+    }
+
     /// Incremental decode: binarize-pack and append ONE token's key/value
     /// rows (the serving backend's per-token unit of work).
     pub fn append_row(&mut self, k_row: &[f32], v_row: &[f32]) {

@@ -34,5 +34,6 @@ pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod util;

@@ -312,7 +312,7 @@ impl HadBackend {
                 let seg_us = seg_start.elapsed().as_micros();
                 captures.push(CaptureOut {
                     len: p + 1,
-                    logits: logits.data,
+                    logits: logits.data.into_vec(),
                     attn_us: seg_attn,
                     decode_us: seg_us,
                 });

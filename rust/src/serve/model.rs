@@ -11,7 +11,10 @@ use anyhow::{ensure, Context, Result};
 
 use crate::model::{Checkpoint, ParamSet};
 use crate::runtime::{ConfigEntry, Init, ModelCfg, ParamSpec};
+use crate::store::StoreError;
 use crate::tensor::Mat;
+
+type StoreResult<T> = std::result::Result<T, StoreError>;
 
 /// One transformer layer's weights, de-stacked.
 #[derive(Clone, Debug)]
@@ -141,6 +144,98 @@ impl ServeModel {
     /// Load a distilled checkpoint (weights + calibrated sigmas).
     pub fn from_checkpoint(cfg: &ConfigEntry, ckpt: &Checkpoint) -> Result<ServeModel> {
         ServeModel::from_params(cfg, &ckpt.params, ckpt.sigma_q.clone(), ckpt.sigma_k.clone())
+    }
+
+    /// Zero-copy load from a `HADSTOR1` checkpoint container: weight
+    /// matrices become [`crate::tensor::Slab`] views borrowing the
+    /// read-only mmap (per-layer slices of the stacked sections, no heap
+    /// copies), so load cost is CRC verification plus demand paging and
+    /// the logits are bit-identical to [`ServeModel::from_checkpoint`].
+    /// Small vectors (biases, layernorm params, sigmas) are copied to the
+    /// heap — they are a rounding error next to the matrices.
+    ///
+    /// Every failure mode (corrupt file, wrong config, geometry drift) is
+    /// a typed [`StoreError`]; callers fall back to a cold heap load.
+    pub fn from_store(cfg: &ConfigEntry, path: &std::path::Path) -> StoreResult<ServeModel> {
+        let mut sp = crate::obs::root_span("mmap_load");
+        let c = crate::store::open_checkpoint(path, cfg)?;
+        let m = &cfg.model;
+        if m.vocab == 0 {
+            return Err(StoreError::ShapeMismatch("serving store is token-mode only".into()));
+        }
+        let sigma_q = crate::store::meta_sigmas(&c, "sigma_q")?;
+        let sigma_k = crate::store::meta_sigmas(&c, "sigma_k")?;
+        if sigma_q.len() != m.n_layers || sigma_k.len() != m.n_layers {
+            return Err(StoreError::ShapeMismatch(format!(
+                "need one sigma per layer ({} layers, got {}/{})",
+                m.n_layers,
+                sigma_q.len(),
+                sigma_k.len()
+            )));
+        }
+        let (l_count, d, f) = (m.n_layers, m.d_model, m.d_ff);
+
+        let sect = |name: &str, numel: usize| -> StoreResult<crate::tensor::Slab> {
+            let s = c.section_f32(name)?;
+            if s.len() != numel {
+                return Err(StoreError::ShapeMismatch(format!(
+                    "{name}: {} f32s on disk, architecture wants {numel}",
+                    s.len()
+                )));
+            }
+            Ok(s)
+        };
+        let mat = |name: &str, rows: usize, cols: usize| -> StoreResult<Mat> {
+            Ok(Mat::from_slab(rows, cols, sect(name, rows * cols)?))
+        };
+        // layer `l`'s sub-view of a stacked (L, ...) section — zero-copy
+        let layer_mat = |name: &str, l: usize, rows: usize, cols: usize| -> StoreResult<Mat> {
+            let s = sect(name, l_count * rows * cols)?;
+            Ok(Mat::from_slab(rows, cols, s.slice(l * rows * cols, rows * cols)))
+        };
+        let layer_vec = |name: &str, l: usize, len: usize| -> StoreResult<Vec<f32>> {
+            let s = sect(name, l_count * len)?;
+            Ok(s.as_slice()[l * len..(l + 1) * len].to_vec())
+        };
+
+        let mut layers = Vec::with_capacity(l_count);
+        for l in 0..l_count {
+            layers.push(LayerWeights {
+                ln1_g: layer_vec("ln1_g", l, d)?,
+                ln1_b: layer_vec("ln1_b", l, d)?,
+                wq: layer_mat("wq", l, d, d)?,
+                bq: layer_vec("bq", l, d)?,
+                wk: layer_mat("wk", l, d, d)?,
+                bk: layer_vec("bk", l, d)?,
+                wv: layer_mat("wv", l, d, d)?,
+                bv: layer_vec("bv", l, d)?,
+                wo: layer_mat("wo", l, d, d)?,
+                bo: layer_vec("bo", l, d)?,
+                ln2_g: layer_vec("ln2_g", l, d)?,
+                ln2_b: layer_vec("ln2_b", l, d)?,
+                w1: layer_mat("w1", l, d, f)?,
+                b1: layer_vec("b1", l, f)?,
+                w2: layer_mat("w2", l, f, d)?,
+                b2: layer_vec("b2", l, d)?,
+            });
+        }
+
+        let model = ServeModel {
+            cfg: m.clone(),
+            tok_emb: mat("tok_emb", m.vocab, d)?,
+            pos_emb: mat("pos_emb", m.n_ctx, d)?,
+            layers,
+            lnf_g: sect("lnf_g", d)?.into_vec(),
+            lnf_b: sect("lnf_b", d)?.into_vec(),
+            head_w: mat("head_w", d, m.n_classes)?,
+            head_b: sect("head_b", m.n_classes)?.into_vec(),
+            sigma_q,
+            sigma_k,
+            n_top: m.n_top,
+        };
+        let total: usize = cfg.params.iter().map(|p| p.numel() * 4).sum();
+        sp.set_payload(total as u64);
+        Ok(model)
     }
 
     /// Randomly initialized model with unit sigmas (latency/throughput

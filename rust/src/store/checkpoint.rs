@@ -1,0 +1,206 @@
+//! Checkpoint producer/consumer for the `HADSTOR1` container: one
+//! page-aligned section per tensor, so [`crate::serve::ServeModel`] can
+//! borrow weight slabs straight out of a read-only mmap
+//! ([`ServeModel::from_store`]) instead of copying them to the heap —
+//! bit-identical logits, near-zero load cost, and one shared physical
+//! image across processes.
+//!
+//! Coexists with the legacy `HADCKPT1` stream format in
+//! `model::checkpoint` (the training pipeline's save/resume path); this
+//! is the serving-side store.
+
+use std::path::Path;
+
+use crate::model::Checkpoint;
+use crate::runtime::ConfigEntry;
+use crate::store::format::{Container, ContainerWriter, StoreError};
+use crate::util::json::Json;
+
+/// Section (and manifest) alignment: one 4 KiB page, so every mapped
+/// tensor view is page-aligned (and trivially f32-aligned).
+pub const CHECKPOINT_ALIGN: usize = 4096;
+pub const CHECKPOINT_KIND: &str = "checkpoint";
+
+/// Serialize a checkpoint into the container format. Tensors are written
+/// in manifest (`cfg.params`) order, one section per tensor, each padded
+/// to [`CHECKPOINT_ALIGN`]; sigmas and config identity travel in the
+/// manifest's `meta`.
+pub fn write_checkpoint(
+    path: &Path,
+    cfg: &ConfigEntry,
+    ckpt: &Checkpoint,
+) -> Result<(), StoreError> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut w = ContainerWriter::new(CHECKPOINT_KIND, CHECKPOINT_ALIGN);
+    let tensors = Json::arr(cfg.params.iter().map(|p| {
+        Json::obj(vec![
+            ("name", Json::str(p.name.clone())),
+            ("shape", Json::arr(p.shape.iter().map(|&d| Json::num(d as f64)))),
+        ])
+    }));
+    w.set_meta(Json::obj(vec![
+        ("config", Json::str(ckpt.config.clone())),
+        ("step", Json::num(f64::from(ckpt.step))),
+        ("sigma_q", Json::arr(ckpt.sigma_q.iter().map(|&x| Json::num(f64::from(x))))),
+        ("sigma_k", Json::arr(ckpt.sigma_k.iter().map(|&x| Json::num(f64::from(x))))),
+        ("tensors", tensors),
+    ]));
+    for (spec, t) in cfg.params.iter().zip(&ckpt.params.tensors) {
+        let data = t
+            .as_f32()
+            .map_err(|e| StoreError::ShapeMismatch(format!("tensor {}: {e}", spec.name)))?;
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        w.add_section(&spec.name, bytes);
+    }
+    w.write_to(path)
+}
+
+/// Open a container and check it holds a checkpoint for `cfg`. All CRCs
+/// are verified here; the returned container hands out zero-copy views.
+pub fn open_checkpoint(path: &Path, cfg: &ConfigEntry) -> Result<Container, StoreError> {
+    let c = Container::open(path)?;
+    if c.kind() != CHECKPOINT_KIND {
+        return Err(StoreError::BadManifest(format!(
+            "container holds '{}', expected '{CHECKPOINT_KIND}'",
+            c.kind()
+        )));
+    }
+    let config = c.meta().get("config").and_then(Json::as_str).unwrap_or("");
+    if config != cfg.name {
+        return Err(StoreError::BadManifest(format!(
+            "checkpoint is for config '{config}', expected '{}'",
+            cfg.name
+        )));
+    }
+    Ok(c)
+}
+
+/// Read a per-layer sigma vector out of a checkpoint container's meta.
+pub fn meta_sigmas(c: &Container, key: &str) -> Result<Vec<f32>, StoreError> {
+    Ok(c.meta()
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| StoreError::BadManifest(format!("missing {key}")))?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(1.0) as f32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+    use crate::runtime::ModelCfg;
+    use crate::serve::model::token_config_entry;
+    use crate::serve::reference::reference_forward;
+    use crate::serve::ServeModel;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg(name: &str) -> ConfigEntry {
+        token_config_entry(
+            name,
+            ModelCfg {
+                n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, n_ctx: 16,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 8, block_q: 16,
+            },
+        )
+    }
+
+    fn tiny_ckpt(cfg: &ConfigEntry, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        Checkpoint {
+            config: cfg.name.clone(),
+            step: 11.0,
+            sigma_q: vec![0.5, 0.7],
+            sigma_k: vec![0.9, 1.1],
+            params: ParamSet::init(cfg, &mut rng),
+        }
+    }
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("had-storeckpt-{}-{name}.stor", std::process::id()))
+    }
+
+    #[test]
+    fn mmap_load_is_bit_identical_to_heap_load() {
+        let cfg = tiny_cfg("store_tiny");
+        let ckpt = tiny_ckpt(&cfg, 21);
+        let p = temp("identity");
+        write_checkpoint(&p, &cfg, &ckpt).unwrap();
+
+        let heap = ServeModel::from_checkpoint(&cfg, &ckpt).unwrap();
+        let mapped = ServeModel::from_store(&cfg, &p).unwrap();
+        assert_eq!(mapped.sigma_q, heap.sigma_q);
+        assert_eq!(mapped.sigma_k, heap.sigma_k);
+        assert_eq!(mapped.tok_emb, heap.tok_emb);
+        for (a, b) in mapped.layers.iter().zip(&heap.layers) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(a.w2, b.w2);
+            assert_eq!(a.ln1_g, b.ln1_g);
+        }
+        // End to end: the reference forward pass produces bit-identical
+        // logits from the mapped and heap-loaded weights.
+        let tokens: Vec<i32> = (0..12).map(|i| i % 24).collect();
+        let lm = reference_forward(&mapped, &tokens);
+        let lh = reference_forward(&heap, &tokens);
+        assert_eq!(lm.data, lh.data, "mapped vs heap logits must be bit-identical");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn weight_slabs_stay_mapped_until_written() {
+        let cfg = tiny_cfg("store_mapped");
+        let ckpt = tiny_ckpt(&cfg, 22);
+        let p = temp("mapped");
+        write_checkpoint(&p, &cfg, &ckpt).unwrap();
+        let model = ServeModel::from_store(&cfg, &p).unwrap();
+        // Big weight matrices borrow the mapping zero-copy; the decode
+        // path never writes them, so they stay borrowed.
+        assert!(model.tok_emb.data.is_mapped());
+        assert!(model.layers[0].wq.data.is_mapped());
+        assert!(model.layers[1].w1.data.is_mapped());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn config_mismatch_is_typed_not_silent() {
+        let cfg = tiny_cfg("store_cfg_a");
+        let ckpt = tiny_ckpt(&cfg, 23);
+        let p = temp("cfgmismatch");
+        write_checkpoint(&p, &cfg, &ckpt).unwrap();
+        let other = tiny_cfg("store_cfg_b");
+        assert!(matches!(
+            ServeModel::from_store(&other, &p),
+            Err(StoreError::BadManifest(_))
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shape_drift_is_typed_not_silent() {
+        // Same config name, different geometry: the weight sections no
+        // longer match the architecture — must be a ShapeMismatch, never
+        // silently mis-sliced weights.
+        let cfg = tiny_cfg("store_shape");
+        let ckpt = tiny_ckpt(&cfg, 24);
+        let p = temp("shapedrift");
+        write_checkpoint(&p, &cfg, &ckpt).unwrap();
+        let wider = token_config_entry(
+            "store_shape",
+            ModelCfg {
+                n_layers: 2, d_model: 48, n_heads: 2, d_ff: 64, n_ctx: 16,
+                n_classes: 3, vocab: 24, input_dim: 0, n_top: 8, block_q: 16,
+            },
+        );
+        assert!(matches!(
+            ServeModel::from_store(&wider, &p),
+            Err(StoreError::ShapeMismatch(_))
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,471 @@
+//! The `HADSTOR1` on-disk container: magic + fixed header + CRC-guarded
+//! JSON manifest + alignment-padded, per-section-checksummed payload
+//! sections.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! 0   "HADSTOR1"                      8 B   magic
+//! 8   version                         4 B   (currently 1)
+//! 12  manifest_len                    4 B
+//! 16  manifest_crc                    4 B   CRC32 (IEEE) of the manifest
+//! 20  reserved                        4 B   zero
+//! 24  manifest JSON                   manifest_len B
+//!     zero padding to `align`
+//!     section payloads, each starting on an `align` boundary
+//! ```
+//!
+//! The manifest records `kind` (what the file holds), `align`, free-form
+//! `meta`, and a section table of `{name, off, len, crc}` where `off` is
+//! relative to the aligned data base (`align_up(24 + manifest_len,
+//! align)`), so section offsets are computable before the manifest is
+//! serialized. Every read path returns a typed [`StoreError`] — a
+//! truncated, bit-flipped, or future-versioned file must surface as a
+//! clean error (metric + cold-start fallback), never a panic or silently
+//! wrong weights.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use crate::tensor::Slab;
+use crate::util::json::Json;
+use crate::util::mmap::Mapping;
+
+pub const MAGIC: &[u8; 8] = b"HADSTOR1";
+pub const VERSION: u32 = 1;
+const HEADER_LEN: usize = 24;
+
+/// Typed failure modes of the container reader/writer.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    /// The file does not start with `HADSTOR1`.
+    BadMagic,
+    /// A version this build does not understand.
+    BadVersion(u32),
+    /// The file ends before a region the header/manifest promised.
+    Truncated(String),
+    /// The manifest failed to parse or is missing required fields.
+    BadManifest(String),
+    /// A CRC32 mismatch in the named region ("manifest" or a section).
+    ChecksumMismatch(String),
+    /// A section the caller asked for is not in the table.
+    MissingSection(String),
+    /// Section bytes exist but have the wrong size/alignment for the
+    /// requested typed view.
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store I/O error: {e}"),
+            StoreError::BadMagic => write!(f, "not a HADSTOR1 container"),
+            StoreError::BadVersion(v) => write!(f, "unsupported store version {v}"),
+            StoreError::Truncated(what) => write!(f, "store file truncated: {what}"),
+            StoreError::BadManifest(why) => write!(f, "bad store manifest: {why}"),
+            StoreError::ChecksumMismatch(what) => write!(f, "store checksum mismatch in {what}"),
+            StoreError::MissingSection(name) => write!(f, "store section '{name}' missing"),
+            StoreError::ShapeMismatch(why) => write!(f, "store section shape mismatch: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+/// CRC32 (IEEE 802.3 polynomial, the zlib/`cksum -o3` flavor).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// FNV-1a 64-bit — the content hash keying the spill tier's
+/// content-addressed index (cheap, deterministic, and collision-safe at
+/// spill-file scale; every read is additionally CRC-verified).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn align_up(n: usize, align: usize) -> usize {
+    n.div_ceil(align) * align
+}
+
+/// Buffered container writer: stage sections, then emit the whole file.
+/// Sections are held in RAM until [`ContainerWriter::write_to`] — fine
+/// for checkpoints, whose tensors are heap-resident at save time anyway.
+pub struct ContainerWriter {
+    kind: String,
+    align: usize,
+    meta: Json,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl ContainerWriter {
+    /// `align` is the section boundary (and the padding unit after the
+    /// manifest): 4096 for checkpoints (page-aligned mmap views), smaller
+    /// for tests.
+    pub fn new(kind: &str, align: usize) -> ContainerWriter {
+        assert!(align.is_power_of_two() && align >= 4, "align must be a power of two >= 4");
+        ContainerWriter { kind: kind.to_string(), align, meta: Json::obj(vec![]), sections: Vec::new() }
+    }
+
+    /// Free-form metadata carried in the manifest (config name, sigmas…).
+    pub fn set_meta(&mut self, meta: Json) {
+        self.meta = meta;
+    }
+
+    pub fn add_section(&mut self, name: &str, bytes: Vec<u8>) {
+        self.sections.push((name.to_string(), bytes));
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<(), StoreError> {
+        // Section offsets relative to the data base are independent of
+        // the manifest's serialized length, so one pass suffices.
+        let mut table = Vec::new();
+        let mut off = 0usize;
+        for (name, bytes) in &self.sections {
+            table.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("off", Json::num(off as f64)),
+                ("len", Json::num(bytes.len() as f64)),
+                ("crc", Json::num(f64::from(crc32(bytes)))),
+            ]));
+            off = align_up(off + bytes.len(), self.align);
+        }
+        let manifest = Json::obj(vec![
+            ("kind", Json::str(self.kind.clone())),
+            ("align", Json::num(self.align as f64)),
+            ("meta", self.meta.clone()),
+            ("sections", Json::arr(table)),
+        ]);
+        let mjson = format!("{manifest}");
+        let mbytes = mjson.as_bytes();
+
+        let mut out = Vec::with_capacity(HEADER_LEN + mbytes.len() + off);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(mbytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(mbytes).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(mbytes);
+        let data_base = align_up(out.len(), self.align);
+        out.resize(data_base, 0);
+        for (i, (_, bytes)) in self.sections.iter().enumerate() {
+            let want = data_base + sect_off(&manifest, i);
+            out.resize(want, 0);
+            out.extend_from_slice(bytes);
+        }
+
+        // Write to a sibling temp file then rename, so a crash mid-write
+        // never leaves a half-written container under the final name.
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+fn sect_off(manifest: &Json, i: usize) -> usize {
+    manifest.get("sections").and_then(Json::as_arr).and_then(|s| s[i].get("off")).and_then(Json::as_usize).unwrap()
+}
+
+/// One entry of the parsed section table (absolute offsets).
+#[derive(Debug, Clone)]
+struct Section {
+    name: String,
+    off: usize,
+    len: usize,
+}
+
+/// A verified, opened container over a read-only [`Mapping`]. All CRCs
+/// (manifest and every section) are checked at open, so section accessors
+/// can hand out raw views without re-validating.
+pub struct Container {
+    map: Arc<Mapping>,
+    manifest: Json,
+    sections: Vec<Section>,
+}
+
+impl Container {
+    pub fn open(path: &Path) -> Result<Container, StoreError> {
+        let map = Arc::new(Mapping::open(path)?);
+        Self::from_mapping(map)
+    }
+
+    /// Parse + verify an already-mapped image (tests feed corrupted
+    /// byte buffers through a temp file here).
+    pub fn from_mapping(map: Arc<Mapping>) -> Result<Container, StoreError> {
+        let b = map.bytes();
+        if b.len() < HEADER_LEN {
+            return Err(StoreError::Truncated(format!("{} B file, {HEADER_LEN} B header", b.len())));
+        }
+        if &b[..8] != MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(StoreError::BadVersion(version));
+        }
+        let mlen = u32::from_le_bytes(b[12..16].try_into().unwrap()) as usize;
+        let mcrc = u32::from_le_bytes(b[16..20].try_into().unwrap());
+        let mend = HEADER_LEN
+            .checked_add(mlen)
+            .ok_or_else(|| StoreError::BadManifest("manifest length overflows".into()))?;
+        if b.len() < mend {
+            return Err(StoreError::Truncated(format!("manifest needs {mend} B, file has {}", b.len())));
+        }
+        let mbytes = &b[HEADER_LEN..mend];
+        if crc32(mbytes) != mcrc {
+            return Err(StoreError::ChecksumMismatch("manifest".into()));
+        }
+        let mjson = std::str::from_utf8(mbytes)
+            .map_err(|_| StoreError::BadManifest("manifest is not UTF-8".into()))?;
+        let manifest =
+            Json::parse(mjson).map_err(|e| StoreError::BadManifest(format!("parse: {e:?}")))?;
+        let align = manifest
+            .get("align")
+            .and_then(Json::as_usize)
+            .filter(|a| a.is_power_of_two() && *a >= 4)
+            .ok_or_else(|| StoreError::BadManifest("bad or missing align".into()))?;
+        let data_base = align_up(mend, align);
+        let table = manifest
+            .get("sections")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| StoreError::BadManifest("missing section table".into()))?;
+        let mut sections = Vec::with_capacity(table.len());
+        for (i, s) in table.iter().enumerate() {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {i}: missing name")))?
+                .to_string();
+            let rel = s
+                .get("off")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {name}: missing off")))?;
+            let len = s
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {name}: missing len")))?;
+            let crc = s
+                .get("crc")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {name}: missing crc")))?
+                as u32;
+            let off = data_base
+                .checked_add(rel)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {name}: offset overflows")))?;
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| StoreError::BadManifest(format!("section {name}: length overflows")))?;
+            if end > b.len() {
+                return Err(StoreError::Truncated(format!(
+                    "section {name} needs {end} B, file has {}",
+                    b.len()
+                )));
+            }
+            if crc32(&b[off..end]) != crc {
+                return Err(StoreError::ChecksumMismatch(format!("section {name}")));
+            }
+            sections.push(Section { name, off, len });
+        }
+        Ok(Container { map, manifest, sections })
+    }
+
+    /// The manifest's `kind` field.
+    pub fn kind(&self) -> &str {
+        self.manifest.get("kind").and_then(Json::as_str).unwrap_or("")
+    }
+
+    /// The free-form `meta` object.
+    pub fn meta(&self) -> &Json {
+        static NULL: Json = Json::Null;
+        self.manifest.get("meta").unwrap_or(&NULL)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(|s| s.name.as_str())
+    }
+
+    /// Raw bytes of a named section (CRC already verified at open).
+    pub fn section_bytes(&self, name: &str) -> Result<&[u8], StoreError> {
+        let s = self
+            .sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| StoreError::MissingSection(name.to_string()))?;
+        Ok(&self.map.bytes()[s.off..s.off + s.len])
+    }
+
+    /// Zero-copy f32 view of a section: a [`Slab`] borrowing the mapping.
+    pub fn section_f32(&self, name: &str) -> Result<Slab, StoreError> {
+        let s = self
+            .sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| StoreError::MissingSection(name.to_string()))?;
+        if s.len % 4 != 0 {
+            return Err(StoreError::ShapeMismatch(format!(
+                "section {name}: {} B is not a whole number of f32s",
+                s.len
+            )));
+        }
+        Slab::mapped(Arc::clone(&self.map), s.off, s.len / 4).map_err(StoreError::ShapeMismatch)
+    }
+
+    /// Whether the backing bytes are a true mmap (vs the buffered-read
+    /// fallback) — surfaced in logs/benches.
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("had-format-{}-{name}.stor", std::process::id()))
+    }
+
+    fn sample(path: &Path, align: usize) {
+        let mut w = ContainerWriter::new("test", align);
+        w.set_meta(Json::obj(vec![("note", Json::str("hello"))]));
+        w.add_section("alpha", (0..300u16).flat_map(|i| i.to_le_bytes()).collect());
+        w.add_section("beta", vec![7u8; 33]);
+        w.write_to(path).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_sections_and_meta() {
+        let p = temp("roundtrip");
+        sample(&p, 64);
+        let c = Container::open(&p).unwrap();
+        assert_eq!(c.kind(), "test");
+        assert_eq!(c.meta().get("note").and_then(Json::as_str), Some("hello"));
+        let alpha = c.section_bytes("alpha").unwrap();
+        assert_eq!(alpha.len(), 600);
+        assert_eq!(&alpha[..4], &[0, 0, 1, 0]);
+        assert_eq!(c.section_bytes("beta").unwrap(), &[7u8; 33][..]);
+        assert!(matches!(c.section_bytes("gamma"), Err(StoreError::MissingSection(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sections_start_on_alignment_boundaries() {
+        let p = temp("aligned");
+        sample(&p, 4096);
+        let c = Container::open(&p).unwrap();
+        for s in &c.sections {
+            assert_eq!(s.off % 4096, 0, "section {} at {}", s.name, s.off);
+        }
+        // f32 views are therefore always constructible.
+        let slab = c.section_f32("beta");
+        assert!(matches!(slab, Err(StoreError::ShapeMismatch(_))), "33 B is not f32s");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn crc_known_vector() {
+        // The classic IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fnv_distinguishes_content() {
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    fn mutate(path: &Path, f: impl FnOnce(&mut Vec<u8>)) -> Result<Container, StoreError> {
+        let mut bytes = std::fs::read(path).unwrap();
+        f(&mut bytes);
+        let p2 = path.with_extension("mut");
+        std::fs::write(&p2, &bytes).unwrap();
+        let r = Container::open(&p2);
+        std::fs::remove_file(&p2).ok();
+        r
+    }
+
+    #[test]
+    fn wrong_magic_is_typed() {
+        let p = temp("magic");
+        sample(&p, 64);
+        let r = mutate(&p, |b| b[0] = b'X');
+        assert!(matches!(r, Err(StoreError::BadMagic)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn future_version_is_typed() {
+        let p = temp("version");
+        sample(&p, 64);
+        let r = mutate(&p, |b| b[8..12].copy_from_slice(&9u32.to_le_bytes()));
+        assert!(matches!(r, Err(StoreError::BadVersion(9))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncation_anywhere_is_typed() {
+        let p = temp("trunc");
+        sample(&p, 64);
+        let full = std::fs::read(&p).unwrap().len();
+        for keep in [0, 7, HEADER_LEN - 1, HEADER_LEN + 3, full / 2, full - 1] {
+            let r = mutate(&p, |b| b.truncate(keep));
+            let typed =
+                matches!(&r, Err(StoreError::Truncated(_) | StoreError::ChecksumMismatch(_)));
+            assert!(typed, "keep={keep} gave {:?}", r.err());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bit_flip_in_section_is_a_checksum_mismatch() {
+        let p = temp("flip");
+        sample(&p, 64);
+        let full = std::fs::read(&p).unwrap().len();
+        let r = mutate(&p, |b| b[full - 5] ^= 0x10);
+        assert!(matches!(r, Err(StoreError::ChecksumMismatch(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bit_flip_in_manifest_is_a_checksum_mismatch() {
+        let p = temp("mflip");
+        sample(&p, 64);
+        let r = mutate(&p, |b| b[HEADER_LEN + 2] ^= 0x01);
+        assert!(matches!(r, Err(StoreError::ChecksumMismatch(_))));
+        std::fs::remove_file(&p).ok();
+    }
+}

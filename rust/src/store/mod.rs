@@ -1,0 +1,23 @@
+//! Persistent store: the `HADSTOR1` container format and its two
+//! producers/consumers.
+//!
+//! * [`format`] — the versioned on-disk container: magic + header +
+//!   CRC-guarded JSON manifest + alignment-padded, per-section-
+//!   checksummed payloads. Every read failure is a typed
+//!   [`StoreError`]; corruption can cost a cold start, never a panic or
+//!   silently wrong bytes.
+//! * [`checkpoint`] — serializes a `model::Checkpoint` one page-aligned
+//!   section per tensor, the substrate for `ServeModel::from_store`'s
+//!   zero-copy mmap weight load (`util::mmap` + `tensor::Slab`).
+//! * [`spill`] — the disk spill tier for cold KV: sealed packed-K/V
+//!   stripes evicted from the `PagePool` are written to a
+//!   content-addressed spill file and hydrated back bit-identically on
+//!   the next checkout, instead of paying re-prefill.
+
+pub mod checkpoint;
+pub mod format;
+pub mod spill;
+
+pub use checkpoint::{meta_sigmas, open_checkpoint, write_checkpoint, CHECKPOINT_KIND};
+pub use format::{crc32, fnv1a64, Container, ContainerWriter, StoreError};
+pub use spill::{SpillStats, SpillStore};

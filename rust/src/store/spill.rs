@@ -1,0 +1,354 @@
+//! The disk spill tier for cold KV: sealed packed-K/V stripes evicted
+//! from the [`crate::kvcache::PagePool`] land here instead of being
+//! destroyed, so a later checkout hydrates them back bit-identically
+//! instead of paying re-prefill.
+//!
+//! One append-only file per store (`<dir>/spill-<pid>-<n>.kv`), with a
+//! **content-addressed** in-memory index: records are keyed by the
+//! FNV-1a 64 hash of their payload, so identical stripes (e.g. shared
+//! prompt prefixes across sessions) are written once and refcounted.
+//! Every read re-verifies both the CRC32 and the content hash — a bad
+//! record surfaces as a typed [`StoreError`] and the caller falls back
+//! to re-prefill; corrupt KV is never served. Space is reclaimed by
+//! deleting the whole file when the store drops (spill files are
+//! per-process scratch, not a database).
+//!
+//! Fault injection: `spill_write`/`spill_read` (`util::fault`) make
+//! `put`/`get` fail on demand so chaos runs can prove the pool degrades
+//! to plain eviction and streams re-prefill rather than wedge.
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::store::format::{crc32, fnv1a64, StoreError};
+use crate::util::fault::{self, Fault, FaultPlan, SITE_SPILL_READ, SITE_SPILL_WRITE};
+
+const SPILL_MAGIC: &[u8; 8] = b"HADSPIL1";
+/// Per-record framing: hash (8) + len (4) + crc (4).
+const REC_HEADER: usize = 16;
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    off: u64,
+    len: u32,
+    crc: u32,
+    refs: u32,
+}
+
+struct Inner {
+    file: std::fs::File,
+    end: u64,
+    index: HashMap<u64, Slot>,
+    live_bytes: usize,
+}
+
+/// Cumulative spill-store counters (monotone).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpillStats {
+    /// Records written (dedup hits do not re-write).
+    pub writes: u64,
+    /// Successful hydrating reads.
+    pub reads: u64,
+    /// Failed reads: injected faults, I/O errors, checksum mismatches.
+    pub read_failures: u64,
+    /// Failed writes (injected faults or I/O errors).
+    pub write_failures: u64,
+}
+
+/// A shared handle to one spill file. All methods take `&self`; the
+/// record index and file cursor live behind one mutex (spill I/O is rare
+/// next to decode work, and the pool already serializes eviction).
+pub struct SpillStore {
+    inner: Mutex<Inner>,
+    path: PathBuf,
+    faults: Option<Arc<FaultPlan>>,
+    writes: AtomicU64,
+    reads: AtomicU64,
+    read_failures: AtomicU64,
+    write_failures: AtomicU64,
+}
+
+impl SpillStore {
+    /// Create a fresh spill file under `dir` (created if missing). The
+    /// name embeds pid + a process-local counter so concurrent servers
+    /// (and tests) never collide.
+    pub fn create(dir: &Path, faults: Option<Arc<FaultPlan>>) -> std::io::Result<SpillStore> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "spill-{}-{}.kv",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut file = std::fs::File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        file.write_all(SPILL_MAGIC)?;
+        file.write_all(&1u32.to_le_bytes())?;
+        file.write_all(&0u32.to_le_bytes())?;
+        Ok(SpillStore {
+            inner: Mutex::new(Inner {
+                file,
+                end: 16,
+                index: HashMap::new(),
+                live_bytes: 0,
+            }),
+            path,
+            faults,
+            writes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            read_failures: AtomicU64::new(0),
+            write_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// Resolve a spill store from `HAD_STORE=dir`. Returns `None` when
+    /// the knob is unset; logs and returns `None` (serving degrades to
+    /// destroy-on-evict) when the directory is unusable.
+    pub fn from_env(faults: Option<Arc<FaultPlan>>) -> Option<Arc<SpillStore>> {
+        let dir = std::env::var("HAD_STORE").ok().filter(|v| !v.trim().is_empty())?;
+        match SpillStore::create(Path::new(&dir), faults) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                crate::log_warn!("HAD_STORE={dir}: {e}; KV spill disabled");
+                None
+            }
+        }
+    }
+
+    /// Write (or dedupe into) the store; returns the content hash that
+    /// later [`SpillStore::get`] / [`SpillStore::release`] calls use.
+    pub fn put(&self, payload: &[u8]) -> Result<u64, StoreError> {
+        let mut sp = crate::obs::span("spill");
+        match fault::fire(&self.faults, SITE_SPILL_WRITE) {
+            Some(Fault::Deny) => {
+                self.write_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(StoreError::Io(std::io::Error::other("injected spill_write fault")));
+            }
+            Some(Fault::Delay(d)) => std::thread::sleep(d),
+            Some(Fault::Panic) => panic!("injected spill_write panic"),
+            None => {}
+        }
+        let hash = fnv1a64(payload);
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(slot) = inner.index.get_mut(&hash) {
+            slot.refs += 1;
+            sp.set_payload(0);
+            return Ok(hash);
+        }
+        let off = inner.end;
+        let res: std::io::Result<()> = (|| {
+            inner.file.seek(SeekFrom::Start(off))?;
+            inner.file.write_all(&hash.to_le_bytes())?;
+            inner.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+            inner.file.write_all(&crc32(payload).to_le_bytes())?;
+            inner.file.write_all(payload)?;
+            Ok(())
+        })();
+        if let Err(e) = res {
+            self.write_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(StoreError::Io(e));
+        }
+        inner.end = off + (REC_HEADER + payload.len()) as u64;
+        inner.index.insert(
+            hash,
+            Slot { off, len: payload.len() as u32, crc: crc32(payload), refs: 1 },
+        );
+        inner.live_bytes += payload.len();
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        sp.set_payload(payload.len() as u64);
+        Ok(hash)
+    }
+
+    /// Read a record back, verifying CRC32 and the content hash. Any
+    /// failure is typed; the caller must treat the record as gone (the
+    /// stream re-prefills) — corrupt bytes are never returned.
+    pub fn get(&self, hash: u64) -> Result<Vec<u8>, StoreError> {
+        let mut sp = crate::obs::span("hydrate");
+        if let Some(f) = fault::fire(&self.faults, SITE_SPILL_READ) {
+            match f {
+                Fault::Delay(d) => std::thread::sleep(d),
+                _ => {
+                    self.read_failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(StoreError::Io(std::io::Error::other(
+                        "injected spill_read fault",
+                    )));
+                }
+            }
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let slot = *inner.index.get(&hash).ok_or_else(|| {
+            StoreError::MissingSection(format!("spill record {hash:016x}"))
+        })?;
+        let mut buf = vec![0u8; slot.len as usize];
+        let res: std::io::Result<()> = (|| {
+            inner.file.seek(SeekFrom::Start(slot.off + REC_HEADER as u64))?;
+            inner.file.read_exact(&mut buf)?;
+            Ok(())
+        })();
+        drop(inner);
+        if let Err(e) = res {
+            self.read_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(StoreError::Io(e));
+        }
+        if crc32(&buf) != slot.crc || fnv1a64(&buf) != hash {
+            self.read_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(StoreError::ChecksumMismatch(format!("spill record {hash:016x}")));
+        }
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        sp.set_payload(buf.len() as u64);
+        Ok(buf)
+    }
+
+    /// Drop one reference to a record; the last release forgets it (the
+    /// bytes stay in the append-only file until the store drops).
+    pub fn release(&self, hash: u64) {
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(slot) = inner.index.get_mut(&hash) {
+            slot.refs -= 1;
+            if slot.refs == 0 {
+                let len = slot.len as usize;
+                inner.index.remove(&hash);
+                inner.live_bytes -= len;
+            }
+        }
+    }
+
+    /// Bytes of payload currently referenced by at least one session.
+    pub fn live_bytes(&self) -> usize {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).live_bytes
+    }
+
+    /// Distinct records currently referenced.
+    pub fn live_records(&self) -> usize {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).index.len()
+    }
+
+    pub fn stats(&self) -> SpillStats {
+        SpillStats {
+            writes: self.writes.load(Ordering::Relaxed),
+            reads: self.reads.load(Ordering::Relaxed),
+            read_failures: self.read_failures.load(Ordering::Relaxed),
+            write_failures: self.write_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Where the spill file lives (benches report it).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+impl std::fmt::Debug for SpillStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillStore")
+            .field("path", &self.path)
+            .field("live_records", &self.live_records())
+            .field("live_bytes", &self.live_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> SpillStore {
+        SpillStore::create(&std::env::temp_dir().join("had-spill-test"), None).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_bit_identical() {
+        let s = store();
+        let payload: Vec<u8> = (0..5000u32).map(|i| (i * 31 + 7) as u8).collect();
+        let h = s.put(&payload).unwrap();
+        assert_eq!(s.get(h).unwrap(), payload);
+        assert_eq!(s.live_bytes(), payload.len());
+        assert_eq!(s.stats().writes, 1);
+        assert_eq!(s.stats().reads, 1);
+    }
+
+    #[test]
+    fn content_addressing_dedupes_and_refcounts() {
+        let s = store();
+        let payload = vec![42u8; 1024];
+        let h1 = s.put(&payload).unwrap();
+        let h2 = s.put(&payload).unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(s.stats().writes, 1, "identical payload written once");
+        assert_eq!(s.live_bytes(), 1024);
+        s.release(h1);
+        assert_eq!(s.live_records(), 1, "still referenced by the second put");
+        assert!(s.get(h2).is_ok());
+        s.release(h2);
+        assert_eq!(s.live_records(), 0);
+        assert_eq!(s.live_bytes(), 0);
+        assert!(matches!(s.get(h2), Err(StoreError::MissingSection(_))));
+    }
+
+    #[test]
+    fn spill_file_is_deleted_on_drop() {
+        let s = store();
+        let path = s.path().to_path_buf();
+        s.put(&[1, 2, 3]).unwrap();
+        assert!(path.exists());
+        drop(s);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn injected_write_fault_is_a_typed_error() {
+        let plan = Arc::new(FaultPlan::parse("spill_write").unwrap());
+        let s = SpillStore::create(
+            &std::env::temp_dir().join("had-spill-test"),
+            Some(Arc::clone(&plan)),
+        )
+        .unwrap();
+        assert!(matches!(s.put(&[1, 2, 3]), Err(StoreError::Io(_))));
+        assert_eq!(s.stats().write_failures, 1);
+        assert!(plan.injected() > 0);
+    }
+
+    #[test]
+    fn injected_read_fault_never_returns_bytes() {
+        let plan = Arc::new(FaultPlan::parse("spill_read").unwrap());
+        let s = SpillStore::create(
+            &std::env::temp_dir().join("had-spill-test"),
+            Some(plan),
+        )
+        .unwrap();
+        // Writes are clean (plan only covers reads); every get fails typed.
+        let h = s.put(&[9u8; 64]).unwrap();
+        assert!(s.get(h).is_err());
+        assert_eq!(s.stats().read_failures, 1);
+    }
+
+    #[test]
+    fn corrupted_record_fails_checksum() {
+        let s = store();
+        let payload = vec![7u8; 256];
+        let h = s.put(&payload).unwrap();
+        // Flip a byte of the record's payload on disk behind the index.
+        {
+            let inner = s.inner.lock().unwrap();
+            let off = inner.index[&h].off + REC_HEADER as u64 + 13;
+            let mut f = std::fs::File::options().write(true).open(&s.path).unwrap();
+            f.seek(SeekFrom::Start(off)).unwrap();
+            f.write_all(&[0xFF]).unwrap();
+        }
+        assert!(matches!(s.get(h), Err(StoreError::ChecksumMismatch(_))));
+        assert_eq!(s.stats().read_failures, 1);
+    }
+}

@@ -6,22 +6,33 @@
 //! executables in `runtime/`.
 
 pub mod ops;
+pub mod slab;
 
-/// Row-major 2-D matrix of f32.
+pub use slab::Slab;
+
+/// Row-major 2-D matrix of f32. Storage is a [`Slab`]: heap-owned by
+/// every constructor here, or a zero-copy view into a mapped checkpoint
+/// when built via [`Mat::from_slab`] (the `store` load path).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: Slab,
 }
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![0.0; rows * cols].into() }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data: data.into() }
+    }
+
+    /// Wrap existing storage (owned or mapped) without copying.
+    pub fn from_slab(rows: usize, cols: usize, data: Slab) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/slab mismatch");
         Mat { rows, cols, data }
     }
 
@@ -32,11 +43,11 @@ impl Mat {
                 data.push(f(r, c));
             }
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     pub fn random(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng, std: f32) -> Mat {
-        Mat { rows, cols, data: rng.normal_vec(rows * cols, std) }
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, std).into() }
     }
 
     #[inline]

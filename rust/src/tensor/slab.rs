@@ -1,0 +1,249 @@
+//! `Slab` — the storage seam behind [`super::Mat`]: either an owned
+//! `Vec<f32>` (the default everywhere) or a zero-copy view into an
+//! `Arc<util::mmap::Mapping>` (the checkpoint-store load path). Deref
+//! gives `&[f32]` either way; the first mutable access to a mapped slab
+//! copies it to the heap (copy-on-write), so existing `Mat` call sites
+//! compile and behave unchanged.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+use crate::util::mmap::Mapping;
+
+#[derive(Clone)]
+enum Repr {
+    Owned(Vec<f32>),
+    Mapped {
+        map: Arc<Mapping>,
+        /// Element (not byte) offset into the mapping.
+        off: usize,
+        len: usize,
+    },
+}
+
+/// f32 storage that is either heap-owned or borrowed from a read-only
+/// file mapping. Cheap to clone in mapped form (an `Arc` bump).
+#[derive(Clone)]
+pub struct Slab(Repr);
+
+impl Slab {
+    /// A zero-copy view of `len` f32s starting `byte_off` bytes into the
+    /// mapping. Errors on out-of-range or misaligned views (section
+    /// alignment in the store format guarantees 4-byte alignment; this
+    /// guards against hand-built offsets).
+    pub fn mapped(map: Arc<Mapping>, byte_off: usize, len: usize) -> Result<Slab, String> {
+        let end = byte_off
+            .checked_add(len.checked_mul(4).ok_or("slab length overflows")?)
+            .ok_or("slab range overflows")?;
+        if end > map.len() {
+            return Err(format!("slab [{byte_off}, {end}) outside mapping of {} B", map.len()));
+        }
+        if (map.as_ptr() as usize + byte_off) % 4 != 0 {
+            return Err(format!("slab byte offset {byte_off} not 4-byte aligned"));
+        }
+        Ok(Slab(Repr::Mapped { map, off: byte_off / 4, len }))
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        match &self.0 {
+            Repr::Owned(v) => v,
+            // Safety: range and alignment were validated in `mapped`; the
+            // Arc keeps the image alive for the borrow's lifetime.
+            Repr::Mapped { map, off, len } => unsafe {
+                std::slice::from_raw_parts((map.as_ptr() as *const f32).add(*off), *len)
+            },
+        }
+    }
+
+    /// Mutable access; promotes a mapped view to an owned copy first.
+    pub fn to_mut(&mut self) -> &mut Vec<f32> {
+        if let Repr::Mapped { .. } = self.0 {
+            self.0 = Repr::Owned(self.as_slice().to_vec());
+        }
+        match &mut self.0 {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => unreachable!(),
+        }
+    }
+
+    /// The data as an owned vector (no copy when already owned).
+    pub fn into_vec(self) -> Vec<f32> {
+        match self.0 {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => self.as_slice().to_vec(),
+        }
+    }
+
+    /// A sub-view of `len` elements starting at element `start`:
+    /// zero-copy for mapped slabs, a copy for owned ones (only the store
+    /// loader slices, and it always holds mapped slabs).
+    pub fn slice(&self, start: usize, len: usize) -> Slab {
+        match &self.0 {
+            Repr::Owned(v) => Slab(Repr::Owned(v[start..start + len].to_vec())),
+            Repr::Mapped { map, off, len: total } => {
+                assert!(start + len <= *total, "slab slice out of range");
+                Slab(Repr::Mapped { map: Arc::clone(map), off: off + start, len })
+            }
+        }
+    }
+
+    /// True when the bytes are still borrowed from a mapping (i.e. no
+    /// copy-on-write has happened).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.0 {
+            Repr::Owned(v) => v.len(),
+            Repr::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for Slab {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for Slab {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.to_mut()
+    }
+}
+
+impl From<Vec<f32>> for Slab {
+    fn from(v: Vec<f32>) -> Slab {
+        Slab(Repr::Owned(v))
+    }
+}
+
+impl FromIterator<f32> for Slab {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> Slab {
+        Slab(Repr::Owned(iter.into_iter().collect()))
+    }
+}
+
+impl<'a> IntoIterator for &'a Slab {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut Slab {
+    type Item = &'a mut f32;
+    type IntoIter = std::slice::IterMut<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.to_mut().iter_mut()
+    }
+}
+
+impl PartialEq for Slab {
+    fn eq(&self, other: &Slab) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for Slab {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Slab> for Vec<f32> {
+    fn eq(&self, other: &Slab) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Slab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_mapped() {
+            write!(f, "Slab(mapped, len={})", self.len())
+        } else {
+            std::fmt::Debug::fmt(self.as_slice(), f)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_mapping(floats: &[f32]) -> Arc<Mapping> {
+        let p = std::env::temp_dir().join(format!(
+            "had-slab-{}-{}.bin",
+            std::process::id(),
+            floats.len()
+        ));
+        let mut f = std::fs::File::create(&p).unwrap();
+        for x in floats {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let m = Arc::new(Mapping::open(&p).unwrap());
+        std::fs::remove_file(&p).ok();
+        m
+    }
+
+    #[test]
+    fn owned_roundtrip_and_eq() {
+        let s: Slab = vec![1.0f32, 2.0, 3.0].into();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.clone().into_vec(), vec![1.0, 2.0, 3.0]);
+        assert!(!s.is_mapped());
+    }
+
+    #[test]
+    fn mapped_view_reads_and_cows_on_write() {
+        let data = [0.5f32, -1.25, 3.75, 8.0];
+        let map = temp_mapping(&data);
+        let mut s = Slab::mapped(Arc::clone(&map), 4, 2).unwrap();
+        assert!(s.is_mapped());
+        assert_eq!(&s[..], &[-1.25, 3.75]);
+        s[0] = 9.0; // copy-on-write
+        assert!(!s.is_mapped());
+        assert_eq!(&s[..], &[9.0, 3.75]);
+        // The mapping itself is untouched.
+        let again = Slab::mapped(map, 4, 2).unwrap();
+        assert_eq!(&again[..], &[-1.25, 3.75]);
+    }
+
+    #[test]
+    fn mapped_slice_is_zero_copy() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let map = temp_mapping(&data);
+        let s = Slab::mapped(map, 0, 6).unwrap();
+        let sub = s.slice(2, 3);
+        assert!(sub.is_mapped());
+        assert_eq!(&sub[..], &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn mapped_rejects_bad_ranges() {
+        let map = temp_mapping(&[1.0, 2.0]);
+        assert!(Slab::mapped(Arc::clone(&map), 0, 3).is_err(), "past end");
+        assert!(Slab::mapped(map, 2, 1).is_err(), "misaligned");
+    }
+
+    #[test]
+    fn iteration_both_ways() {
+        let mut s: Slab = vec![1.0f32, 2.0].into();
+        let sum: f32 = (&s).into_iter().sum();
+        assert_eq!(sum, 3.0);
+        for x in &mut s {
+            *x *= 2.0;
+        }
+        assert_eq!(s, vec![2.0, 4.0]);
+    }
+}

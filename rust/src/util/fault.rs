@@ -44,8 +44,14 @@ pub const SITE_NET_ACCEPT: &str = "net_accept";
 /// Stall a chunk write to a streaming HTTP client (exercises write
 /// deadlines and the slow-reader backpressure path over real sockets).
 pub const SITE_NET_WRITE: &str = "net_write";
+/// Fail a KV spill write in `store::SpillStore::put` (the pool must
+/// degrade to plain destroy-on-evict, never wedge).
+pub const SITE_SPILL_WRITE: &str = "spill_write";
+/// Fail a KV hydrate read in `store::SpillStore::get` (the stream must
+/// re-prefill or retire cleanly — corrupt KV is never served).
+pub const SITE_SPILL_READ: &str = "spill_read";
 
-const SITES: [&str; 7] = [
+const SITES: [&str; 9] = [
     SITE_DECODE_STEP,
     SITE_WORKER_PANIC,
     SITE_POOL_PRESSURE,
@@ -53,6 +59,8 @@ const SITES: [&str; 7] = [
     SITE_QUEUE_STALL,
     SITE_NET_ACCEPT,
     SITE_NET_WRITE,
+    SITE_SPILL_WRITE,
+    SITE_SPILL_READ,
 ];
 
 /// What a firing site should do. The kind is fixed per site: panics only
@@ -71,7 +79,8 @@ pub enum Fault {
 fn kind_for(site: &str, delay: Duration) -> Fault {
     match site {
         SITE_WORKER_PANIC => Fault::Panic,
-        SITE_POOL_PRESSURE | SITE_CLIENT_DISCONNECT | SITE_NET_ACCEPT => Fault::Deny,
+        SITE_POOL_PRESSURE | SITE_CLIENT_DISCONNECT | SITE_NET_ACCEPT | SITE_SPILL_WRITE
+        | SITE_SPILL_READ => Fault::Deny,
         _ => Fault::Delay(delay),
     }
 }
@@ -257,6 +266,19 @@ mod tests {
         let always = FaultPlan::parse("net_accept").unwrap();
         assert_eq!(always.fire(SITE_NET_ACCEPT), Some(Fault::Deny));
         assert_eq!(always.fire(SITE_NET_WRITE), None);
+    }
+
+    #[test]
+    fn spill_sites_deny_so_callers_take_their_refusal_paths() {
+        // spill_write fails the write (pool degrades to plain eviction);
+        // spill_read fails the hydrate (stream re-prefills). Both are
+        // refusals with an error path at the call site, hence Deny.
+        let p = FaultPlan::parse("spill_write:0.5,spill_read,seed=1").unwrap();
+        assert_eq!(p.clauses[0].site, SITE_SPILL_WRITE);
+        assert_eq!(p.clauses[0].fault, Fault::Deny);
+        assert_eq!(p.clauses[1].site, SITE_SPILL_READ);
+        assert_eq!(p.clauses[1].fault, Fault::Deny);
+        assert_eq!(p.fire(SITE_SPILL_READ), Some(Fault::Deny));
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Minimal read-only file mapping without libc (the cargo registry is
+//! unreachable — DESIGN.md §Substrates).
+//!
+//! On linux-x86_64 [`Mapping::open`] issues the `mmap`/`munmap` syscalls
+//! directly via inline asm, so checkpoint weight sections can be borrowed
+//! in place: zero copies at load, demand paging, and one physical image
+//! shared across every process serving the same file. Everywhere else
+//! (and under `HAD_MMAP=0`) it degrades to a buffered read into an
+//! 8-byte-aligned heap buffer behind the same API, so callers never
+//! branch on platform.
+//!
+//! The image is immutable for the lifetime of the mapping; `tensor::Slab`
+//! views borrow it through an `Arc<Mapping>`.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+/// A read-only byte image of a file: a real `mmap` on linux-x86_64, or an
+/// owned aligned heap buffer on the fallback path.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+    /// Fallback storage; `None` when `ptr` came from mmap. A `Vec<u64>`
+    /// (not `Vec<u8>`) so the base address is 8-byte aligned and f32/u64
+    /// views over the image are always well-aligned.
+    heap: Option<Vec<u64>>,
+}
+
+// Safety: the image is read-only and never mutated after construction,
+// so shared references across threads are safe; the heap buffer (if any)
+// is owned and freed exactly once in Drop.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only. Uses mmap where available unless
+    /// `HAD_MMAP=0`; otherwise reads the whole file into an aligned
+    /// buffer. Empty files always take the buffered path (a zero-length
+    /// mmap is EINVAL).
+    pub fn open(path: &Path) -> io::Result<Mapping> {
+        if cfg!(all(target_os = "linux", target_arch = "x86_64"))
+            && std::env::var("HAD_MMAP").map(|v| v != "0").unwrap_or(true)
+        {
+            let file = File::open(path)?;
+            let len = file.metadata()?.len() as usize;
+            if len > 0 {
+                if let Ok(ptr) = map_file(&file, len) {
+                    return Ok(Mapping { ptr, len, heap: None });
+                }
+                // mmap refused (exotic filesystem): fall through to read.
+            }
+            return Self::read_into_heap(file, len);
+        }
+        Self::buffered(path)
+    }
+
+    /// Force the buffered path (used by tests to compare against mmap and
+    /// by non-linux builds).
+    pub fn buffered(path: &Path) -> io::Result<Mapping> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        Self::read_into_heap(file, len)
+    }
+
+    fn read_into_heap(mut file: File, len: usize) -> io::Result<Mapping> {
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        if len > 0 {
+            // Safety: the buffer holds len.div_ceil(8)*8 >= len writable
+            // bytes; u64 has no invalid bit patterns.
+            let bytes =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(bytes)?;
+        }
+        Ok(Mapping { ptr: buf.as_ptr() as *const u8, len, heap: Some(buf) })
+    }
+
+    /// The whole image.
+    pub fn bytes(&self) -> &[u8] {
+        // Safety: ptr/len describe a live image (mmap'd or heap-owned)
+        // valid for the lifetime of self.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Base pointer of the image (8-byte aligned on both paths: mmap
+    /// returns page-aligned addresses, the heap buffer is `Vec<u64>`).
+    pub fn as_ptr(&self) -> *const u8 {
+        self.ptr
+    }
+
+    /// True when the bytes are a real file mapping (zero-copy path).
+    pub fn is_mapped(&self) -> bool {
+        self.heap.is_none()
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        if self.heap.is_none() && self.len > 0 {
+            unmap_file(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("len", &self.len)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn map_file(file: &File, len: usize) -> io::Result<*const u8> {
+    use std::os::unix::io::AsRawFd;
+    const SYS_MMAP: usize = 9;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+    let ret: isize;
+    // Safety: mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0) with a valid
+    // open fd; the kernel either returns a mapping or an errno in
+    // [-4095, -1]. rcx/r11 are clobbered by the syscall instruction.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") SYS_MMAP => ret,
+            in("rdi") 0usize,
+            in("rsi") len,
+            in("rdx") PROT_READ,
+            in("r10") MAP_PRIVATE,
+            in("r8") file.as_raw_fd() as usize,
+            in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+    if (-4095..0).contains(&ret) {
+        Err(io::Error::from_raw_os_error(-ret as i32))
+    } else {
+        Ok(ret as *const u8)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn map_file(_file: &File, _len: usize) -> io::Result<*const u8> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "mmap unavailable"))
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn unmap_file(ptr: *const u8, len: usize) {
+    const SYS_MUNMAP: usize = 11;
+    let _ret: isize;
+    // Safety: ptr/len came from a successful map_file; munmap failure at
+    // drop time is unreportable and ignored.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") SYS_MUNMAP => _ret,
+            in("rdi") ptr as usize,
+            in("rsi") len,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn unmap_file(_ptr: *const u8, _len: usize) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("had-mmap-{}-{name}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_and_buffered_agree() {
+        let payload: Vec<u8> = (0..4099u32).map(|i| (i * 7 + 3) as u8).collect();
+        let p = temp("agree", &payload);
+        let m = Mapping::open(&p).unwrap();
+        let b = Mapping::buffered(&p).unwrap();
+        assert_eq!(m.bytes(), &payload[..]);
+        assert_eq!(b.bytes(), &payload[..]);
+        assert!(!b.is_mapped());
+        #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+        assert!(m.is_mapped(), "linux-x86_64 should take the real mmap path");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn buffered_base_is_8_byte_aligned() {
+        let p = temp("align", &[1, 2, 3]);
+        let b = Mapping::buffered(&p).unwrap();
+        assert_eq!(b.as_ptr() as usize % 8, 0);
+        assert_eq!(b.len(), 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_image() {
+        let p = temp("empty", &[]);
+        let m = Mapping::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_io_error() {
+        let p = std::env::temp_dir().join("had-mmap-definitely-missing");
+        assert!(Mapping::open(&p).is_err());
+    }
+}

@@ -8,6 +8,7 @@ pub mod cli;
 pub mod fault;
 pub mod json;
 pub mod log;
+pub mod mmap;
 pub mod quickcheck;
 pub mod rng;
 pub mod threadpool;

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate a persistent-store results file (benches/store.rs writes
+results/store.jsonl): every record parses, carries the schema
+provenance stamp, and upholds the store invariants —
+
+  * checkpoint: mmap-loaded logits bit-identical to heap-loaded;
+  * spill: a spilled-and-hydrated KV bit-identical to the original,
+    zero checksum failures, and at >=4k context the hydrate path must
+    beat re-prefilling the evicted tokens;
+  * restart: a session forced to disk by budget pressure came back
+    with bit-identical logits on its next turn, having actually
+    spilled, with zero checksum failures.
+
+Also requires all three record kinds to be present, so a bench that
+silently skipped a part fails loudly.
+
+Usage: python3 scripts/validate_store.py results/store.jsonl
+
+Exits non-zero (listing the problems) on any violation — CI's
+store-smoke step runs it against the store.jsonl its bench leg
+emitted. Importable: `validate(path)` returns the list of problems
+(empty = ok).
+"""
+
+import json
+import sys
+
+REQUIRED_KINDS = {"checkpoint", "spill", "restart"}
+HYDRATE_GATE_CTX = 4096
+
+
+def validate(path):
+    problems = []
+    try:
+        with open(path) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    if not lines:
+        return [f"{path}: empty results file"]
+    seen = set()
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"record {i}: not valid JSON: {e}")
+            continue
+        kind = rec.get("kind")
+        if kind not in REQUIRED_KINDS:
+            continue
+        seen.add(kind)
+        for key in ("run", "git_sha", "schema"):
+            if key not in rec:
+                problems.append(f"record {i} ({kind}): missing provenance key {key}")
+        if rec.get("identity_ok") is not True:
+            problems.append(
+                f"record {i} ({kind}): identity_ok is not true — "
+                "the store round-trip was not bit-identical"
+            )
+        if kind == "checkpoint":
+            for key in ("cold_us", "mmap_us"):
+                if not isinstance(rec.get(key), (int, float)):
+                    problems.append(f"record {i} ({kind}): bad/missing {key}")
+        if kind in ("spill", "restart") and rec.get("checksum_failures", 1) != 0:
+            problems.append(
+                f"record {i} ({kind}): {rec.get('checksum_failures')} store reads "
+                "failed verification on a fault-free run"
+            )
+        if kind == "spill":
+            for key in ("n_ctx", "hydrate_us", "reprefill_us"):
+                if not isinstance(rec.get(key), (int, float)):
+                    problems.append(f"record {i} ({kind}): bad/missing {key}")
+            n_ctx = rec.get("n_ctx", 0)
+            hydrate = rec.get("hydrate_us")
+            reprefill = rec.get("reprefill_us")
+            if (
+                isinstance(n_ctx, (int, float))
+                and n_ctx >= HYDRATE_GATE_CTX
+                and isinstance(hydrate, (int, float))
+                and isinstance(reprefill, (int, float))
+                and hydrate >= reprefill
+            ):
+                problems.append(
+                    f"record {i} ({kind}): at {n_ctx:.0f} context, hydrate "
+                    f"({hydrate:.0f} us) must beat re-prefill ({reprefill:.0f} us)"
+                )
+        if kind == "restart" and rec.get("spill_pages_out", 0) <= 0:
+            problems.append(
+                f"record {i} ({kind}): budget pressure never spilled a page — "
+                "the restart identity check exercised nothing"
+            )
+    missing = REQUIRED_KINDS - seen
+    if missing:
+        problems.append(f"{path}: missing record kinds: {', '.join(sorted(missing))}")
+    return problems
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    problems = validate(argv[1])
+    if problems:
+        print(f"[store] FAIL: {argv[1]}")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    with open(argv[1]) as f:
+        n = sum(
+            1
+            for l in f
+            if l.strip() and json.loads(l).get("kind") in REQUIRED_KINDS
+        )
+    print(f"[store] OK: {argv[1]} ({n} store records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -17,7 +17,14 @@ emitted. Importable: `validate(path)` returns the list of problems
 import json
 import sys
 
-REQUIRED_SCENARIOS = {"burst", "longtail", "slow_reader", "disconnect_storm", "fault_sweep"}
+REQUIRED_SCENARIOS = {
+    "burst",
+    "longtail",
+    "slow_reader",
+    "disconnect_storm",
+    "fault_sweep",
+    "spill_chaos",
+}
 NUM_KEYS = ("admitted", "retired", "leaked_bytes")
 
 
@@ -64,6 +71,12 @@ def validate(path):
                 problems.append(f"record {i} ({name}): missing provenance key {key}")
         if name == "fault_sweep" and rec.get("faults_injected", 0) <= 0:
             problems.append(f"record {i} ({name}): seeded fault plan never fired")
+        if name == "spill_chaos":
+            engaged = rec.get("spill_writes", 0) + rec.get("spill_write_failures", 0)
+            if engaged <= 0:
+                problems.append(
+                    f"record {i} ({name}): budget pressure never reached the spill tier"
+                )
     missing = REQUIRED_SCENARIOS - seen
     if missing:
         problems.append(f"{path}: missing scenarios: {', '.join(sorted(missing))}")
