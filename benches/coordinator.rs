@@ -93,7 +93,7 @@ fn main() {
     // bookkeeping only — it must be cheap enough to hold the sessions
     // lock on the submit path).
     let s = b.run("coordinator/session admit 16x8 turns", || {
-        let mut store = SessionStore::new(KvCacheConfig::default());
+        let mut store = SessionStore::new(KvCacheConfig::default().into());
         let mut appended = 0usize;
         for turn in 0..8 {
             for sid in 0..16u64 {
@@ -107,7 +107,7 @@ fn main() {
     s.print_throughput((16 * 8) as f64, "admit");
 
     // steady-state history accounting over one long-lived store
-    let mut store = SessionStore::new(KvCacheConfig::default());
+    let mut store = SessionStore::new(KvCacheConfig::default().into());
     for turn in 0..20i32 {
         for sid in 0..8u64 {
             let tokens: Vec<i32> = (0..16).map(|t| (turn * 16 + t) % 256).collect();

@@ -76,7 +76,7 @@ fn main() {
         // fresh server per point so Metrics isolate the configuration
         let router =
             Router::new(vec![Bucket { config: "gen_bench".into(), n_ctx, batch: 8 }]);
-        let server = Server::start_cpu_with_kv(
+        let server = Server::builder(
             HadBackend::new(model.clone(), &kv),
             router,
             BatchPolicy {
@@ -84,8 +84,9 @@ fn main() {
                 max_streams: 16,
                 ..Default::default()
             },
-            kv,
         )
+        .kv(kv)
+        .start()
         .expect("server start");
         let rxs: Vec<_> = (0..streams)
             .map(|sid| {

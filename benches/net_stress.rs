@@ -43,11 +43,11 @@ fn coordinator(model: &ServeModel, policy: BatchPolicy, chaos: Option<FaultPlan>
     let kv = kv_cfg();
     let router = Router::new(vec![Bucket { config: "net".into(), n_ctx: N_CTX, batch: 8 }]);
     let backend = HadBackend::new(model.clone(), &kv);
-    let server = match chaos {
-        Some(plan) => Server::start_cpu_chaos(backend, router, policy, kv, plan),
-        None => Server::start_cpu_with_kv(backend, router, policy, kv),
-    };
-    Arc::new(server.expect("server start"))
+    let mut builder = Server::builder(backend, router, policy).kv(kv);
+    if let Some(plan) = chaos {
+        builder = builder.chaos(plan);
+    }
+    Arc::new(builder.start().expect("server start"))
 }
 
 fn bind(server: Arc<Server>, faults: Option<Arc<FaultPlan>>) -> NetServer {

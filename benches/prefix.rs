@@ -1,0 +1,195 @@
+//! Bench: cross-session prefix sharing — N concurrent streams over ONE
+//! identical prompt, sharing on vs off, at 1/4/16 streams.
+//!
+//! With sharing enabled the elected prefiller pays the prompt's prefill
+//! once; every other stream adopts the published content-hashed stripes
+//! and skips straight to decode. Acceptance gates (hard asserts, and
+//! re-checked by scripts/validate_prefix.py over the emitted records):
+//!
+//!   * tokens bit-identical to the sharing-off baseline, stream by
+//!     stream;
+//!   * the shareable prompt prefix is prefilled exactly once —
+//!     `prefix_tokens_reused == (n-1) * share_tokens`, no follower
+//!     re-executed a shared stripe;
+//!   * the pool (private pages AND shared registry) drains to zero
+//!     bytes once every session ends;
+//!   * at 16 streams the shared run resides a fraction of the baseline
+//!     bytes (shared bytes counted once) and, in full mode, finishes
+//!     faster.
+//!
+//! Appends machine-readable records to results/prefix.jsonl for
+//! scripts/validate_prefix.py (the CI prefix-smoke gate). Full mode
+//! uses a 4096-token prompt; HAD_BENCH_QUICK=1 shrinks it to 256 so
+//! the smoke leg stays fast (identity/counter asserts always run).
+
+use std::time::Instant;
+
+use had::coordinator::{BatchPolicy, Bucket, Router, Server};
+use had::generate::{GenerateRequest, StopReason, StreamEvent};
+use had::kvcache::KvCacheConfig;
+use had::serve::{demo_config, HadBackend, ServeModel};
+use had::util::bench::{quick_env, write_jsonl};
+use had::util::json::Json;
+use had::util::rng::Rng;
+
+const N_NEW: usize = 8; // decoded tokens per stream after the prompt
+
+fn serve(model: &ServeModel, kv: KvCacheConfig, n_ctx: usize, sharing: bool) -> Server {
+    let router =
+        Router::new(vec![Bucket { config: "prefix".into(), n_ctx, batch: 16 }]);
+    Server::builder(
+        HadBackend::new(model.clone(), &kv),
+        router,
+        BatchPolicy {
+            max_wait: std::time::Duration::from_millis(1),
+            max_streams: 16,
+            ..Default::default()
+        },
+    )
+    .kv(kv)
+    .prefix_sharing(sharing)
+    .start()
+    .expect("server start")
+}
+
+/// Submit `n` identical greedy streams, drain them all, and return
+/// (per-stream tokens, wall time ms, pool bytes resident after every
+/// stream retired but before its session ends).
+fn run(server: &Server, prompt: &[i32], n: u64) -> (Vec<Vec<i32>>, f64, usize) {
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (1..=n)
+        .map(|sid| {
+            server
+                .submit_generate(sid, GenerateRequest::greedy(prompt.to_vec(), N_NEW))
+                .expect("admitted")
+        })
+        .collect();
+    let streams: Vec<Vec<i32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            let mut tokens = Vec::new();
+            for event in rx.iter() {
+                match event {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Done { reason, .. } => {
+                        assert_eq!(reason, StopReason::MaxTokens, "stream must run to budget");
+                        return tokens;
+                    }
+                }
+            }
+            panic!("server dropped the stream");
+        })
+        .collect();
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let resident = server.sessions().lock().unwrap().pool().bytes();
+    (streams, ms, resident)
+}
+
+/// End every session and return the pool bytes left behind (the
+/// drain-to-zero gate: shared registry entries must die with their
+/// last reference).
+fn drain(server: &Server, n: u64) -> usize {
+    let sessions = server.sessions();
+    let mut store = sessions.lock().unwrap();
+    for sid in 1..=n {
+        store.end_session(sid);
+    }
+    store.pool().bytes()
+}
+
+fn bench_point(model: &ServeModel, kv: KvCacheConfig, n_ctx: usize, prompt: &[i32], n: u64, quick: bool) -> Json {
+    let share_tokens = (prompt.len() - 1) / kv.page_tokens * kv.page_tokens;
+    let expected_reuse = (n - 1) * share_tokens as u64;
+
+    let baseline = serve(model, kv, n_ctx, false);
+    let shared = serve(model, kv, n_ctx, true);
+    let (base_tokens, base_ms, base_bytes) = run(&baseline, prompt, n);
+    let (shared_tokens, shared_ms, shared_bytes) = run(&shared, prompt, n);
+
+    let identity_ok = shared_tokens == base_tokens;
+    assert!(identity_ok, "prefix sharing must be bit-identical to unshared serving");
+
+    let stats = shared.cache_stats();
+    // counter math is deterministic, not a perf statistic: every
+    // follower adopts the shareable prefix exactly once, so the prompt
+    // was prefilled exactly once across all n streams
+    let prefill_once = stats.prefix_tokens_reused == expected_reuse;
+    assert!(
+        prefill_once,
+        "streams={n}: reused {} prompt tokens, expected exactly {expected_reuse}",
+        stats.prefix_tokens_reused,
+    );
+    let base_stats = baseline.cache_stats();
+    assert_eq!(
+        (base_stats.shared_pages, base_stats.prefix_tokens_reused),
+        (0, 0),
+        "sharing off: prefix counters stay zero"
+    );
+
+    let bytes_ratio = shared_bytes as f64 / base_bytes.max(1) as f64;
+    let leftover = drain(&shared, n) + drain(&baseline, n);
+    let drained_ok = leftover == 0;
+    assert!(drained_ok, "{leftover} pool bytes leaked after every session ended");
+
+    println!(
+        "prefix/streams={n}: sharing {shared_ms:.1} ms vs baseline {base_ms:.1} ms \
+         ({:.2}x) | {} tokens reused ({} hits) | resident {:.0}% of baseline | \
+         drained to zero: {drained_ok}",
+        base_ms / shared_ms.max(1e-9),
+        stats.prefix_tokens_reused,
+        stats.prefix_hits,
+        bytes_ratio * 100.0,
+    );
+    if n >= 16 && !quick {
+        assert!(
+            shared_ms < base_ms,
+            "at {n} streams one shared prefill must beat {n} private ones"
+        );
+    }
+    Json::obj(vec![
+        ("kind", Json::str("streams")),
+        ("streams", Json::num(n as f64)),
+        ("prompt_tokens", Json::num(prompt.len() as f64)),
+        ("share_tokens", Json::num(share_tokens as f64)),
+        ("baseline_ms", Json::num(base_ms)),
+        ("sharing_ms", Json::num(shared_ms)),
+        ("shared_pages", Json::num(stats.shared_pages as f64)),
+        ("prefix_hits", Json::num(stats.prefix_hits as f64)),
+        ("tokens_reused", Json::num(stats.prefix_tokens_reused as f64)),
+        ("expected_reuse", Json::num(expected_reuse as f64)),
+        ("cow_copies", Json::num(stats.cow_copies as f64)),
+        ("baseline_bytes", Json::num(base_bytes as f64)),
+        ("sharing_bytes", Json::num(shared_bytes as f64)),
+        ("bytes_ratio", Json::num(bytes_ratio)),
+        ("identity_ok", Json::Bool(identity_ok)),
+        ("prefill_once", Json::Bool(prefill_once)),
+        ("drained_ok", Json::Bool(drained_ok)),
+    ])
+}
+
+fn main() {
+    let quick = quick_env();
+    let prompt_len = if quick { 256 } else { 4096 };
+    let n_ctx = prompt_len + 2 * N_NEW;
+    let cfg = demo_config("prefix_bench", n_ctx, 32);
+    let model = ServeModel::random(&cfg, 0x9E1F).expect("model");
+    let kv_probe = KvCacheConfig { page_tokens: 64, ..Default::default() };
+    // budget: every stream fully resident plus headroom — eviction and
+    // spill are store.rs territory; this bench isolates sharing
+    let budget =
+        18 * HadBackend::new(model.clone(), &kv_probe).fresh_kv().bytes_at(n_ctx);
+    let kv = KvCacheConfig { page_tokens: 64, byte_budget: budget, ..Default::default() };
+
+    let mut rng = Rng::new(0x9E20);
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(256) as i32).collect();
+
+    println!(
+        "== prefix sharing: {prompt_len}-token identical prompt, sharing on vs off =="
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for n in [1u64, 4, 16] {
+        records.push(bench_point(&model, kv, n_ctx, &prompt, n, quick));
+    }
+    write_jsonl("results/prefix.jsonl", &records).expect("write results/prefix.jsonl");
+    println!("\nprefix bench OK; {} records -> results/prefix.jsonl", records.len());
+}

@@ -90,12 +90,13 @@ fn main() {
     println!("\n== session serving through the coordinator ==");
     let (n_sessions, n_turns) = if quick { (3u64, 3usize) } else { (4, 5) };
     let router = Router::new(vec![Bucket { config: "serve_bench".into(), n_ctx: 1024, batch: 8 }]);
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         HadBackend::new(model, &kv),
         router,
         BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..Default::default() },
-        kv,
     )
+    .kv(kv)
+    .start()
     .expect("server start");
     for sid in 0..n_sessions {
         for t in 0..n_turns {

@@ -200,13 +200,14 @@ fn bench_restart() -> Json {
     let store = Arc::new(SpillStore::create(&temp("restart"), None).expect("spill store"));
     let router =
         Router::new(vec![Bucket { config: "store_restart".into(), n_ctx: 128, batch: 4 }]);
-    let server = Server::start_cpu_spill(
+    let server = Server::builder(
         HadBackend::new(model, &kv),
         router,
         BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
-        kv,
-        Arc::clone(&store),
     )
+    .kv(kv)
+    .spill(Arc::clone(&store))
+    .start()
     .expect("server start");
 
     let mut rng = Rng::new(0x5B4);

@@ -14,7 +14,7 @@
 //! Runs under an ambient `HAD_FAULT` plan unchanged (the CI chaos leg
 //! does exactly that), so invariant checks are fault-agnostic; the
 //! fault-sweep scenario additionally pins its own seeded plan through
-//! `Server::start_cpu_chaos` for reproducibility. Appends
+//! `Server::builder(..).chaos(plan)` for reproducibility. Appends
 //! machine-readable records to results/stress.jsonl (provenance-stamped
 //! schema v2) for scripts/validate_stress.py.
 
@@ -42,7 +42,9 @@ fn stress_server(model: &ServeModel, policy: BatchPolicy) -> Server {
     let kv = kv_cfg();
     let router =
         Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
-    Server::start_cpu_with_kv(HadBackend::new(model.clone(), &kv), router, policy, kv)
+    Server::builder(HadBackend::new(model.clone(), &kv), router, policy)
+        .kv(kv)
+        .start()
         .expect("server start")
 }
 
@@ -50,7 +52,10 @@ fn chaos_server(model: &ServeModel, policy: BatchPolicy, plan: FaultPlan) -> Ser
     let kv = kv_cfg();
     let router =
         Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
-    Server::start_cpu_chaos(HadBackend::new(model.clone(), &kv), router, policy, kv, plan)
+    Server::builder(HadBackend::new(model.clone(), &kv), router, policy)
+        .kv(kv)
+        .chaos(plan)
+        .start()
         .expect("server start")
 }
 
@@ -375,7 +380,7 @@ fn scenario_spill_chaos(model: &ServeModel, quick: bool, seed: u64) -> Json {
     let kv = KvCacheConfig { byte_budget: budget, ..kv_cfg() };
     let router =
         Router::new(vec![Bucket { config: "stress".into(), n_ctx: N_CTX, batch: 8 }]);
-    let server = Server::start_cpu_spill_chaos(
+    let server = Server::builder(
         HadBackend::new(model.clone(), &kv),
         router,
         BatchPolicy {
@@ -383,10 +388,11 @@ fn scenario_spill_chaos(model: &ServeModel, quick: bool, seed: u64) -> Json {
             max_streams: 4,
             ..Default::default()
         },
-        kv,
-        Arc::clone(&plan),
-        Arc::clone(&store),
     )
+    .kv(kv)
+    .chaos(Arc::clone(&plan))
+    .spill(Arc::clone(&store))
+    .start()
     .expect("server start");
 
     // collect every stream's tokens (not just its Done event) so the

@@ -33,7 +33,7 @@ fn main() {
     let probe = HadBackend::new(model.clone(), &kv);
     let backend = HadBackend::new(model, &kv);
     let router = Router::new(vec![Bucket { config: "gen_512".into(), n_ctx, batch: 8 }]);
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         backend,
         router,
         BatchPolicy {
@@ -41,8 +41,9 @@ fn main() {
             max_streams: 8,
             ..Default::default()
         },
-        kv,
     )
+    .kv(kv)
+    .start()
     .expect("server start");
     let limits = GenLimits { max_total_tokens: n_ctx, kv_budget_bytes: kv.byte_budget, ..GenLimits::unbounded() };
 

@@ -33,7 +33,7 @@ fn main() {
     let kv = KvCacheConfig { page_tokens: 32, ..Default::default() };
     let router = Router::new(vec![Bucket { config: "http_256".into(), n_ctx, batch: 8 }]);
     let server = Arc::new(
-        Server::start_cpu_with_kv(
+        Server::builder(
             HadBackend::new(model, &kv),
             router,
             BatchPolicy {
@@ -41,8 +41,9 @@ fn main() {
                 max_streams: 8,
                 ..Default::default()
             },
-            kv,
         )
+        .kv(kv)
+        .start()
         .expect("server start"),
     );
     let net = NetServer::bind(

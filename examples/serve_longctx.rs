@@ -39,12 +39,13 @@ fn main() -> Result<()> {
             .map(|&(n, b)| Bucket { config: format!("cpu_{n}"), n_ctx: n, batch: b })
             .collect(),
     );
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         backend,
         router,
         BatchPolicy { max_wait: std::time::Duration::from_millis(4), ..Default::default() },
-        kv,
-    )?;
+    )
+    .kv(kv)
+    .start()?;
 
     println!("\nserving {n_requests} mixed-length requests from {n_clients} client threads...");
     let t0 = std::time::Instant::now();

@@ -39,12 +39,13 @@ fn main() {
     let probe = HadBackend::new(model.clone(), &kv);
     let backend = HadBackend::new(model, &kv);
     let router = Router::new(vec![Bucket { config: "cpu_512".into(), n_ctx, batch: 8 }]);
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         backend,
         router,
         BatchPolicy { max_wait: std::time::Duration::from_millis(2), ..Default::default() },
-        kv,
     )
+    .kv(kv)
+    .start()
     .expect("server start");
 
     let mut rng = Rng::new(0xBEEF);

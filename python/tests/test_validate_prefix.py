@@ -1,0 +1,138 @@
+"""Prefix-sharing results-file validation: scripts/validate_prefix.py
+against a synthetic bench-shaped results file (the exact record shapes
+benches/prefix.rs writes), its failure modes (missing stream counts,
+identity breaks, re-prefilled shared stripes, residency regressions,
+pool leaks), and — when a bench run has left one — the real
+results/prefix.jsonl."""
+
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from validate_prefix import validate  # noqa: E402
+
+PROVENANCE = {"run": "20260808-000000", "git_sha": "abc1234", "schema": 2}
+
+
+def streams_record(n, **overrides):
+    share_tokens = 4032  # floor(4095 / 64) * 64 for the 4096-token prompt
+    rec = {
+        "kind": "streams",
+        "streams": n,
+        "prompt_tokens": 4096,
+        "share_tokens": share_tokens,
+        "baseline_ms": 120.0 * n,
+        "sharing_ms": 120.0 + 2.0 * n,
+        "shared_pages": 504,
+        "prefix_hits": max(0, n - 1),
+        "tokens_reused": (n - 1) * share_tokens,
+        "expected_reuse": (n - 1) * share_tokens,
+        "cow_copies": 0,
+        "baseline_bytes": 1048576 * n,
+        "sharing_bytes": 1048576 + 4096 * n,
+        "bytes_ratio": (1048576 + 4096 * n) / (1048576.0 * n),
+        "identity_ok": True,
+        "prefill_once": True,
+        "drained_ok": True,
+        **PROVENANCE,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def full_results():
+    return [streams_record(n) for n in (1, 4, 16)]
+
+
+def write(tmp_path, records):
+    path = tmp_path / "prefix.jsonl"
+    if isinstance(records, str):
+        path.write_text(records)
+    else:
+        path.write_text("".join(json.dumps(r) + "\n" for r in records))
+    return str(path)
+
+
+def test_bench_shaped_results_pass(tmp_path):
+    assert validate(write(tmp_path, full_results())) == []
+
+
+def test_not_json_fails(tmp_path):
+    problems = validate(write(tmp_path, "{not json\n"))
+    assert any("not valid JSON" in p for p in problems)
+
+
+def test_empty_file_fails(tmp_path):
+    problems = validate(write(tmp_path, ""))
+    assert problems and "empty" in problems[0]
+
+
+def test_missing_file_fails(tmp_path):
+    problems = validate(str(tmp_path / "nope.jsonl"))
+    assert problems and "cannot read" in problems[0]
+
+
+def test_missing_stream_count_fails(tmp_path):
+    problems = validate(write(tmp_path, [streams_record(1), streams_record(4)]))
+    assert any("missing stream counts" in p and "16" in p for p in problems)
+
+
+def test_identity_break_fails(tmp_path):
+    records = [streams_record(1), streams_record(4), streams_record(16, identity_ok=False)]
+    problems = validate(write(tmp_path, records))
+    assert any("identity_ok" in p for p in problems)
+
+
+def test_reprefilled_stripe_fails(tmp_path):
+    # a follower re-executed a shared stripe: reused falls short of the
+    # exact (n-1) * share_tokens target and the prefill_once flag drops
+    broken = streams_record(16, tokens_reused=10 * 4032, prefill_once=False)
+    problems = validate(write(tmp_path, [streams_record(1), streams_record(4), broken]))
+    assert any("prefill_once" in p for p in problems)
+    assert any("expected exactly" in p for p in problems)
+
+
+def test_no_shareable_stripe_fails(tmp_path):
+    # a degenerate sweep (prompt shorter than one page) exercises nothing
+    hollow = streams_record(
+        16, share_tokens=0, tokens_reused=0, expected_reuse=0
+    )
+    problems = validate(write(tmp_path, [streams_record(1), streams_record(4), hollow]))
+    assert any("expected_reuse is zero" in p for p in problems)
+
+
+def test_residency_regression_fails(tmp_path):
+    fat = streams_record(16, bytes_ratio=1.0)
+    problems = validate(write(tmp_path, [streams_record(1), streams_record(4), fat]))
+    assert any("not deduplicated" in p for p in problems)
+
+
+def test_single_stream_residency_exempt(tmp_path):
+    # one stream has nothing to share: equal residency is correct there
+    lone = streams_record(1, bytes_ratio=1.0)
+    assert validate(write(tmp_path, [lone, streams_record(4), streams_record(16)])) == []
+
+
+def test_pool_leak_fails(tmp_path):
+    leaky = streams_record(16, drained_ok=False)
+    problems = validate(write(tmp_path, [streams_record(1), streams_record(4), leaky]))
+    assert any("drained_ok" in p for p in problems)
+
+
+def test_missing_provenance_fails(tmp_path):
+    rec = streams_record(1)
+    del rec["git_sha"]
+    problems = validate(write(tmp_path, [rec, streams_record(4), streams_record(16)]))
+    assert any("provenance" in p and "git_sha" in p for p in problems)
+
+
+def test_real_results_if_present():
+    path = os.path.join(REPO, "results", "prefix.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("no results/prefix.jsonl from a bench run")
+    assert validate(path) == []

@@ -68,6 +68,12 @@ pub struct Metrics {
     spill_bytes: Arc<Counter>,
     hydrate_hits: Arc<Counter>,
     store_checksum_failures: Arc<Counter>,
+    // prefix-sharing counters (zero with sharing off); same
+    // cumulative-diff feed as the spill counters
+    shared_pages: Arc<Counter>,
+    prefix_hits: Arc<Counter>,
+    prefix_tokens_reused: Arc<Counter>,
+    cow_copies: Arc<Counter>,
     spill_seen: Mutex<CacheStats>,
     // gauges (absolute values, last write wins)
     cache_bytes: Arc<Gauge>,
@@ -113,6 +119,10 @@ impl Default for Metrics {
             spill_bytes: registry.counter("spill_bytes"),
             hydrate_hits: registry.counter("hydrate_hits"),
             store_checksum_failures: registry.counter("store_checksum_failures"),
+            shared_pages: registry.counter("shared_pages"),
+            prefix_hits: registry.counter("prefix_hits"),
+            prefix_tokens_reused: registry.counter("prefix_tokens_reused"),
+            cow_copies: registry.counter("cow_copies"),
             spill_seen: Mutex::new(CacheStats::default()),
             cache_bytes: registry.gauge("cache_bytes"),
             cache_evictions: registry.gauge("cache_evictions"),
@@ -220,6 +230,16 @@ pub struct Snapshot {
     pub hydrate_hits: u64,
     /// spill-store reads that failed verification (fault, IO, checksum)
     pub store_checksum_failures: u64,
+    /// chain-pages published to (or deduplicated against) the
+    /// cross-session prefix registry
+    pub shared_pages: u64,
+    /// checkouts/activations that adopted at least one registry stripe
+    pub prefix_hits: u64,
+    /// prompt tokens whose prefill was skipped by adopting shared pages
+    pub prefix_tokens_reused: u64,
+    /// per-chain private copies made when a session diverged inside a
+    /// shared stripe (copy-on-write)
+    pub cow_copies: u64,
     /// time-to-first-token percentiles/mean (µs; admission -> emission)
     pub ttft_p50_us: u128,
     pub ttft_p99_us: u128,
@@ -390,6 +410,11 @@ impl Metrics {
         self.hydrate_hits.add(stats.hydrate_hits.saturating_sub(seen.hydrate_hits));
         self.store_checksum_failures
             .add(stats.store_checksum_failures.saturating_sub(seen.store_checksum_failures));
+        self.shared_pages.add(stats.shared_pages.saturating_sub(seen.shared_pages));
+        self.prefix_hits.add(stats.prefix_hits.saturating_sub(seen.prefix_hits));
+        self.prefix_tokens_reused
+            .add(stats.prefix_tokens_reused.saturating_sub(seen.prefix_tokens_reused));
+        self.cow_copies.add(stats.cow_copies.saturating_sub(seen.cow_copies));
         *seen = *stats;
     }
 
@@ -464,6 +489,10 @@ impl Metrics {
             spill_bytes: self.spill_bytes.get(),
             hydrate_hits: self.hydrate_hits.get(),
             store_checksum_failures: self.store_checksum_failures.get(),
+            shared_pages: self.shared_pages.get(),
+            prefix_hits: self.prefix_hits.get(),
+            prefix_tokens_reused: self.prefix_tokens_reused.get(),
+            cow_copies: self.cow_copies.get(),
             ttft_p50_us: self.ttft.percentile(0.50) as u128,
             ttft_p99_us: self.ttft.percentile(0.99) as u128,
             ttft_mean_us: self.ttft.mean(),
@@ -560,6 +589,15 @@ impl Snapshot {
                 self.spill_pages_in,
                 self.hydrate_hits,
                 self.store_checksum_failures,
+            );
+        }
+        if self.shared_pages > 0 || self.cow_copies > 0 {
+            println!(
+                "{label}: prefix-sharing: {} shared pages | {} adoptions reusing {} tokens | {} COW copies",
+                self.shared_pages,
+                self.prefix_hits,
+                self.prefix_tokens_reused,
+                self.cow_copies,
             );
         }
         if self.net_connections > 0 || self.net_requests > 0 {
@@ -800,6 +838,43 @@ mod tests {
         assert!(snap.contains("\"spill_bytes\":4096"));
         assert!(snap.contains("\"hydrate_hits\":2"));
         assert!(snap.contains("\"store_checksum_failures\":1"));
+    }
+
+    #[test]
+    fn prefix_sharing_counters_delta_sync_with_pinned_names() {
+        let m = Metrics::default();
+        let empty = m.snapshot();
+        assert_eq!(
+            (empty.shared_pages, empty.prefix_hits, empty.prefix_tokens_reused, empty.cow_copies),
+            (0, 0, 0, 0)
+        );
+        // pool stats are cumulative; syncing the same snapshot twice
+        // must not double-count
+        let stats = CacheStats {
+            shared_pages: 16,
+            prefix_hits: 3,
+            prefix_tokens_reused: 24,
+            cow_copies: 4,
+            ..CacheStats::default()
+        };
+        m.sync_spill(&stats);
+        m.sync_spill(&stats);
+        let s = m.snapshot();
+        assert_eq!(s.shared_pages, 16);
+        assert_eq!(s.prefix_hits, 3);
+        assert_eq!(s.prefix_tokens_reused, 24);
+        assert_eq!(s.cow_copies, 4);
+        // a later, larger snapshot adds only the delta
+        let grown = CacheStats { prefix_tokens_reused: 32, ..stats };
+        m.sync_spill(&grown);
+        assert_eq!(m.snapshot().prefix_tokens_reused, 32);
+        // the registry names are the wire contract for metrics.jsonl and
+        // GET /v1/metrics — pin them
+        let snap = format!("{}", m.registry().snapshot_json());
+        assert!(snap.contains("\"shared_pages\":16"));
+        assert!(snap.contains("\"prefix_hits\":3"));
+        assert!(snap.contains("\"prefix_tokens_reused\":32"));
+        assert!(snap.contains("\"cow_copies\":4"));
     }
 
     #[test]

@@ -15,8 +15,17 @@
 //!   the appended tokens are executed — resident per-layer pages are
 //!   reused in place), and checked back in. `Response.logits` ARE the
 //!   backend's logits. The PJRT engine can ride along as an optional
-//!   per-batch cross-check (`start_cpu_cross_checked`) but is no longer
-//!   on the decode path.
+//!   per-batch cross-check (`Server::builder(..).cross_check(..)`) but
+//!   is no longer on the decode path.
+//!
+//! CPU servers are configured through one builder —
+//! `Server::builder(backend, router, policy)` with `.kv(cfg)`,
+//! `.spill(store)`, `.chaos(plan)`, `.cross_check(engine, models)` and
+//! `.prefix_sharing(true)` — replacing the old per-feature CPU
+//! constructor family. With prefix sharing enabled, sealed full KV
+//! stripes gain a content-hash identity and N concurrent streams over
+//! one identical prompt pay its prefill exactly once (the others adopt
+//! the published pages), bit-identically to unshared serving.
 //! * **PJRT** (legacy / artifact environments): padded full-sequence
 //!   re-execution through `runtime::engine`, kept for comparing the CPU
 //!   backend against lowered artifacts.
@@ -138,23 +147,31 @@ pub struct SessionStore {
     max_history_tokens: usize,
 }
 
-impl SessionStore {
-    pub fn new(kv: KvCacheConfig) -> SessionStore {
-        SessionStore::new_with_spill(kv, None)
-    }
+/// Everything a [`SessionStore`] needs at construction: KV sizing, an
+/// optional disk spill tier (budget pressure spills cold full stripes
+/// instead of destroying sessions), and whether cross-session prefix
+/// sharing is on.
+#[derive(Clone, Default)]
+pub struct SessionStoreConfig {
+    pub kv: KvCacheConfig,
+    pub spill: Option<Arc<crate::store::SpillStore>>,
+    pub prefix_sharing: bool,
+}
 
-    /// Like `new`, with a disk spill tier attached to the pool: budget
-    /// pressure spills cold full stripes to `spill` instead of
-    /// destroying sessions, and `checkout` hydrates them back.
-    pub fn new_with_spill(
-        kv: KvCacheConfig,
-        spill: Option<Arc<crate::store::SpillStore>>,
-    ) -> SessionStore {
+impl From<KvCacheConfig> for SessionStoreConfig {
+    fn from(kv: KvCacheConfig) -> SessionStoreConfig {
+        SessionStoreConfig { kv, ..Default::default() }
+    }
+}
+
+impl SessionStore {
+    pub fn new(cfg: SessionStoreConfig) -> SessionStore {
         // token ids cost 4 B vs >= ~100 B/token of per-layer KV state, so
         // a small slice of the byte budget bounds histories comfortably
-        let max_history_tokens = (kv.byte_budget / 16).max(4096);
-        let mut pool = PagePool::new(kv);
-        pool.set_spill(spill);
+        let max_history_tokens = (cfg.kv.byte_budget / 16).max(4096);
+        let mut pool = PagePool::new(cfg.kv);
+        pool.set_spill(cfg.spill);
+        pool.set_prefix_sharing(cfg.prefix_sharing);
         SessionStore {
             pool,
             histories: HashMap::new(),
@@ -247,7 +264,11 @@ impl SessionStore {
     /// Return a decode state to the pool: records the hit/miss outcome
     /// the decode observed, enforces the byte budget, and drops the
     /// histories of any sessions evicted to make room.
-    pub fn checkin(&mut self, session_id: u64, kv: LayeredKv, hit: bool) {
+    pub fn checkin(&mut self, session_id: u64, mut kv: LayeredKv, hit: bool) {
+        // prefix sharing: every full private stripe this decode produced
+        // becomes adoptable by identical prompts (no-op when sharing is
+        // off or everything is already shared/spilled)
+        self.pool.publish_prefix(&mut kv);
         self.pool.record_lookup(hit);
         let evicted = self.pool.insert(session_id, kv);
         for id in evicted {
@@ -259,6 +280,53 @@ impl SessionStore {
 
     pub fn pool(&self) -> &PagePool<LayeredKv> {
         &self.pool
+    }
+
+    /// Adopt registry stripes matching a prefix of `tokens` into a
+    /// checked-out KV (bounded by `max_tokens`). Returns tokens adopted;
+    /// 0 whenever sharing is off or nothing matches.
+    pub fn seed_prefix(
+        &mut self,
+        kv: &mut LayeredKv,
+        tokens: &[i32],
+        max_tokens: usize,
+    ) -> usize {
+        self.pool.seed_prefix(kv, tokens, max_tokens)
+    }
+
+    /// Publish a checked-out KV's full private stripes to the registry
+    /// (mid-stream counterpart of the publish `checkin` performs).
+    pub fn publish_prefix(&mut self, kv: &mut LayeredKv) {
+        self.pool.publish_prefix(kv)
+    }
+
+    /// Does the registry cover every full stripe of `tokens` below
+    /// `max_tokens`? (Vacuously true with sharing off.)
+    pub fn prefix_covered(
+        &self,
+        geom: &crate::kvcache::StripeGeom,
+        tokens: &[i32],
+        max_tokens: usize,
+    ) -> bool {
+        self.pool.prefix_covered(geom, tokens, max_tokens)
+    }
+
+    /// First-prefiller election for identical concurrent prompts:
+    /// `None` means `stream` holds the claim, `Some(holder)` that
+    /// another stream is already prefilling this prompt.
+    pub fn try_claim(&mut self, key: u64, stream: u64) -> Option<u64> {
+        self.pool.try_claim(key, stream)
+    }
+
+    pub fn release_claim(&mut self, key: u64, stream: u64) {
+        self.pool.release_claim(key, stream)
+    }
+
+    /// Drop a checked-out KV that will never be checked back in
+    /// (poisoned stream, stale history): its spill tags and shared
+    /// registry references flow back instead of leaking.
+    pub fn discard_kv(&mut self, kv: LayeredKv) {
+        self.pool.discard(kv)
     }
 
     /// Undo one `admit` (queue-full rollback): restore the history to the
@@ -325,118 +393,119 @@ pub struct Server {
     policy: BatchPolicy,
 }
 
-impl Server {
-    /// Start on the CPU serving backend — `submit`/`submit_session`
-    /// return the backend's real logits. Default KV-cache sizing.
-    pub fn start_cpu(backend: HadBackend, router: Router, policy: BatchPolicy) -> Result<Server> {
-        Server::start_cpu_with_kv(backend, router, policy, KvCacheConfig::default())
+/// One-stop configuration for a CPU server, replacing the old
+/// six-way per-feature constructor family (with-kv / chaos / spill /
+/// spill-chaos / cross-checked variants) with one composable builder.
+/// Every knob is optional; `start()` launches the scheduler.
+///
+/// Defaults match the old bare constructor: default KV sizing, faults from
+/// the process-wide `HAD_FAULT` plan, spill tier from `HAD_STORE=dir`,
+/// no cross-check, prefix sharing off.
+pub struct ServerBuilder {
+    backend: HadBackend,
+    router: Router,
+    policy: BatchPolicy,
+    kv: KvCacheConfig,
+    spill: Option<Arc<crate::store::SpillStore>>,
+    chaos: Option<Arc<FaultPlan>>,
+    cross_check: Option<(EngineHandle, Vec<ServingModel>)>,
+    prefix_sharing: bool,
+}
+
+impl ServerBuilder {
+    /// Explicit KV-cache sizing (byte budget, page size, bf16 values).
+    pub fn kv(mut self, kv: KvCacheConfig) -> ServerBuilder {
+        self.kv = kv;
+        self
     }
 
-    /// CPU backend with explicit KV-cache sizing (byte budget, page
-    /// size, bf16 values).
-    pub fn start_cpu_with_kv(
-        backend: HadBackend,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
-    ) -> Result<Server> {
-        Server::start_inner(
-            Exec::Cpu { backend: Arc::new(backend), check: None },
-            router,
-            policy,
-            kv,
-        )
+    /// Explicit KV spill store: budget pressure spills cold stripes to
+    /// disk instead of destroying sessions, and checkouts hydrate them
+    /// back. Without this, the server picks the tier up from
+    /// `HAD_STORE=dir`.
+    pub fn spill(mut self, store: Arc<crate::store::SpillStore>) -> ServerBuilder {
+        self.spill = Some(store);
+        self
     }
 
-    /// CPU backend with an explicit, instance-scoped fault-injection
-    /// plan (chaos testing): only THIS server's hot paths draw from the
-    /// plan, so concurrently running servers (e.g. other tests in the
-    /// same process) are unaffected. Servers started through the other
-    /// constructors pick up the process-wide `HAD_FAULT` plan instead.
-    pub fn start_cpu_chaos(
-        backend: HadBackend,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
-        plan: FaultPlan,
-    ) -> Result<Server> {
-        Server::start_inner_with_faults(
-            Exec::Cpu { backend: Arc::new(backend), check: None },
-            router,
-            policy,
-            kv,
-            Some(Arc::new(plan)),
-        )
+    /// Instance-scoped fault-injection plan (chaos testing): only THIS
+    /// server's hot paths draw from the plan, so concurrently running
+    /// servers (e.g. other tests in the same process) are unaffected.
+    /// Without this, the process-wide `HAD_FAULT` plan applies. Pass an
+    /// `Arc` to share the plan with a `SpillStore` so its
+    /// `spill_write`/`spill_read` sites fire too.
+    pub fn chaos(mut self, plan: impl Into<Arc<FaultPlan>>) -> ServerBuilder {
+        self.chaos = Some(plan.into());
+        self
     }
 
-    /// CPU backend with an explicit KV spill store: budget pressure
-    /// spills cold stripes to disk instead of destroying sessions, and
-    /// checkouts hydrate them back (persistence benches and tests;
-    /// production servers pick the tier up from `HAD_STORE=dir`).
-    pub fn start_cpu_spill(
-        backend: HadBackend,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
-        spill: Arc<crate::store::SpillStore>,
-    ) -> Result<Server> {
-        Server::start_inner_full(
-            Exec::Cpu { backend: Arc::new(backend), check: None },
-            router,
-            policy,
-            kv,
-            fault::from_env(),
-            Some(spill),
-        )
-    }
-
-    /// Spill store AND an instance-scoped fault plan (chaos testing of
-    /// the spill tier itself; create the store with the same plan so
-    /// `spill_write`/`spill_read` sites fire inside it).
-    pub fn start_cpu_spill_chaos(
-        backend: HadBackend,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
-        plan: Arc<FaultPlan>,
-        spill: Arc<crate::store::SpillStore>,
-    ) -> Result<Server> {
-        Server::start_inner_full(
-            Exec::Cpu { backend: Arc::new(backend), check: None },
-            router,
-            policy,
-            kv,
-            Some(plan),
-            Some(spill),
-        )
-    }
-
-    /// CPU backend with the PJRT engine as a per-batch cross-check:
-    /// every served batch is also executed through the bucket's lowered
-    /// artifact and the logits difference is logged. The engine is OFF
-    /// the decode path — an exec failure logs a warning and serving
-    /// continues.
-    pub fn start_cpu_cross_checked(
-        backend: HadBackend,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
+    /// PJRT engine as a per-batch cross-check: every served batch is
+    /// also executed through the bucket's lowered artifact and the
+    /// logits difference is logged. The engine is OFF the decode path —
+    /// an exec failure logs a warning and serving continues.
+    pub fn cross_check(
+        mut self,
         engine: EngineHandle,
         models: Vec<ServingModel>,
-    ) -> Result<Server> {
-        anyhow::ensure!(
-            models.len() == router.buckets().len(),
-            "one cross-check ServingModel per bucket required"
-        );
-        Server::start_inner(
-            Exec::Cpu {
-                backend: Arc::new(backend),
-                check: Some(CrossCheck { engine, models }),
-            },
+    ) -> ServerBuilder {
+        self.cross_check = Some((engine, models));
+        self
+    }
+
+    /// Cross-session prefix sharing: sealed full KV stripes get a
+    /// content-hash identity and identical prompts adopt each other's
+    /// pages instead of re-prefilling (bit-identical either way).
+    pub fn prefix_sharing(mut self, on: bool) -> ServerBuilder {
+        self.prefix_sharing = on;
+        self
+    }
+
+    pub fn start(self) -> Result<Server> {
+        let check = match self.cross_check {
+            Some((engine, models)) => {
+                anyhow::ensure!(
+                    models.len() == self.router.buckets().len(),
+                    "one cross-check ServingModel per bucket required"
+                );
+                Some(CrossCheck { engine, models })
+            }
+            None => None,
+        };
+        let faults = match self.chaos {
+            Some(plan) => Some(plan),
+            None => fault::from_env(),
+        };
+        // explicit store wins; otherwise the opt-in env tier
+        let spill = match self.spill {
+            Some(store) => Some(store),
+            None => crate::store::SpillStore::from_env(faults.clone()),
+        };
+        Server::start_inner_full(
+            Exec::Cpu { backend: Arc::new(self.backend), check },
+            self.router,
+            self.policy,
+            self.kv,
+            faults,
+            spill,
+            self.prefix_sharing,
+        )
+    }
+}
+
+impl Server {
+    /// Configure a CPU server — `submit`/`submit_session` return the
+    /// backend's real logits. See [`ServerBuilder`] for the knobs.
+    pub fn builder(backend: HadBackend, router: Router, policy: BatchPolicy) -> ServerBuilder {
+        ServerBuilder {
+            backend,
             router,
             policy,
-            kv,
-        )
+            kv: KvCacheConfig::default(),
+            spill: None,
+            chaos: None,
+            cross_check: None,
+            prefix_sharing: false,
+        }
     }
 
     /// Start on the legacy PJRT path: `models[i]` corresponds to
@@ -473,22 +542,14 @@ impl Server {
         policy: BatchPolicy,
         kv: KvCacheConfig,
     ) -> Result<Server> {
-        Server::start_inner_with_faults(exec, router, policy, kv, fault::from_env())
-    }
-
-    fn start_inner_with_faults(
-        exec: Exec,
-        router: Router,
-        policy: BatchPolicy,
-        kv: KvCacheConfig,
-        faults: Option<Arc<FaultPlan>>,
-    ) -> Result<Server> {
-        // opt-in disk spill tier (`HAD_STORE=dir`); the explicit-store
-        // constructors bypass this and pass theirs directly
+        // opt-in disk spill tier (`HAD_STORE=dir`); the builder bypasses
+        // this and passes its explicit store directly
+        let faults = fault::from_env();
         let spill = crate::store::SpillStore::from_env(faults.clone());
-        Server::start_inner_full(exec, router, policy, kv, faults, spill)
+        Server::start_inner_full(exec, router, policy, kv, faults, spill, false)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_inner_full(
         exec: Exec,
         router: Router,
@@ -496,6 +557,7 @@ impl Server {
         kv: KvCacheConfig,
         faults: Option<Arc<FaultPlan>>,
         spill: Option<Arc<crate::store::SpillStore>>,
+        prefix_sharing: bool,
     ) -> Result<Server> {
         let queues: Vec<BucketQueue> = router
             .buckets()
@@ -509,7 +571,11 @@ impl Server {
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
-        let sessions = Arc::new(Mutex::new(SessionStore::new_with_spill(kv, spill)));
+        let sessions = Arc::new(Mutex::new(SessionStore::new(SessionStoreConfig {
+            kv,
+            spill,
+            prefix_sharing,
+        })));
         let cpu = matches!(exec, Exec::Cpu { .. });
         // generation streams grow inside the server-wide bounds: the
         // largest routed context, the page pool's byte budget, and the
@@ -1006,9 +1072,18 @@ fn decode_job(
     let mut kv = {
         let mut co = crate::obs::span("kv_checkout");
         let kv = match session {
-            Some(id) => lock_or_recover(sessions)
-                .checkout(id)
-                .unwrap_or_else(|| backend.fresh_kv()),
+            Some(id) => {
+                let mut store = lock_or_recover(sessions);
+                let mut kv = store.checkout(id).unwrap_or_else(|| backend.fresh_kv());
+                // prefix sharing: adopt registry stripes below the first
+                // capture point (the logits at a capture length need the
+                // row AT that length decoded here, not adopted)
+                if let Some(&first) = capture.first() {
+                    let cap = first.min(tokens.len()).saturating_sub(1);
+                    store.seed_prefix(&mut kv, tokens, cap);
+                }
+                kv
+            }
             None => backend.fresh_kv(),
         };
         co.set_payload(kv.len() as u64);
@@ -1137,6 +1212,14 @@ struct ActiveGen {
     /// a decode shard panicked while stepping this stream — its KV is in
     /// an unknown state and must be dropped, never checked back in
     poisoned: bool,
+    /// prefix-sharing claim key for this stream's prompt. When `waiting`
+    /// is false and this is `Some`, the stream HOLDS the claim (it is
+    /// the elected prefiller) and must release it at retirement.
+    claim: Option<u64>,
+    /// parked: an identical prompt is being prefilled by another stream;
+    /// this one skips its step each tick until the registry covers its
+    /// shareable prefix (or the claim frees and it takes over)
+    waiting: bool,
     ttft_us: u128,
     last_token_at: Option<Instant>,
 }
@@ -1199,22 +1282,32 @@ fn retire_stream(
     sessions: &Mutex<SessionStore>,
     metrics: &Metrics,
 ) {
-    let ActiveGen { admit, kv, resumed, poisoned, ttft_us, .. } = g;
+    let ActiveGen { admit, kv, resumed, poisoned, claim, ttft_us, .. } = g;
     let generated = admit.state.n_generated();
     {
         let mut store = lock_or_recover(sessions);
-        if store.tokens(admit.session) == &admit.state.tokens()[..admit.admitted_len] {
-            store.append_generated(admit.session, admit.state.generated());
-            // a poisoned stream's KV is in an unknown state: drop it
-            // instead of checking it back in (checkout already removed
-            // its bytes from the pool accounting, so dropping keeps the
-            // books consistent; the session restarts cold next turn)
-            if !poisoned {
-                store.checkin(admit.session, kv, resumed);
-            }
-            metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
-            metrics.sync_spill(&store.pool().stats());
+        // release the prompt claim so a parked identical-prompt stream
+        // can take over (no-op when this stream never held it)
+        if let Some(key) = claim {
+            store.release_claim(key, admit.id);
         }
+        let intact =
+            store.tokens(admit.session) == &admit.state.tokens()[..admit.admitted_len];
+        if intact {
+            store.append_generated(admit.session, admit.state.generated());
+        }
+        // a poisoned stream's KV is in an unknown state, and a stream
+        // whose history was rewritten under it must not check stale
+        // pages in — discard instead (checkout already removed the bytes
+        // from the pool accounting; discard returns the KV's spill tags
+        // and shared-registry references so neither leaks)
+        if intact && !poisoned {
+            store.checkin(admit.session, kv, resumed);
+        } else {
+            store.discard_kv(kv);
+        }
+        metrics.update_cache_pool(store.pool().bytes(), store.pool().stats().evictions);
+        metrics.sync_spill(&store.pool().stats());
     }
     metrics.record_stream_retired(reason);
     // the stream umbrella span, under the id sample_request allocated at
@@ -1265,6 +1358,9 @@ fn scheduler_main(
     // grown attention buffers shared by every decode job — batch decodes
     // and generation steps — across all ticks
     let scratch_pool = ScratchPool::new();
+    // cross-session prefix sharing on? (fixed at construction; read once
+    // so the steady-state tick never touches the sessions lock for it)
+    let sharing = lock_or_recover(&sessions).pool().prefix_sharing();
     // live generation streams (continuous batching: one step per tick)
     let mut active: Vec<ActiveGen> = Vec::new();
     // geometry probe for worst-case byte reservations (CPU path only —
@@ -1441,35 +1537,53 @@ fn scheduler_main(
             );
             let reserve = reserve_for(&a.state);
             reserved += reserve;
-            let mut kv = {
+            let (kv, resumed, claim, waiting) = {
                 let _scope = crate::obs::enter(a.trace);
                 let mut co = crate::obs::span("kv_checkout");
-                let mut store = lock_or_recover(sessions);
-                let kv = store
+                let mut store = lock_or_recover(&sessions);
+                let mut kv = store
                     .checkout(a.session)
                     .unwrap_or_else(|| backend.fresh_kv());
                 co.set_payload(kv.len() as u64);
-                kv
-            };
-            let toks = a.state.tokens();
-            let resumed = if !kv.is_empty() && kv.is_prefix_of(toks) {
-                if kv.len() >= toks.len() {
-                    // fully resident (continue-generation after a turn
-                    // that decoded the whole context): drop just the last
-                    // row so the first step re-decodes ONE token instead
-                    // of tripping the capture-at-resident-length reset
-                    // and re-prefilling everything
-                    kv.truncate(toks.len() - 1);
+                let toks = a.state.tokens();
+                let resumed = if !kv.is_empty() && kv.is_prefix_of(toks) {
+                    if kv.len() >= toks.len() {
+                        // fully resident (continue-generation after a turn
+                        // that decoded the whole context): drop just the last
+                        // row so the first step re-decodes ONE token instead
+                        // of tripping the capture-at-resident-length reset
+                        // and re-prefilling everything
+                        kv.truncate(toks.len() - 1);
+                    }
+                    true
+                } else {
+                    if !kv.is_empty() {
+                        // stale resident pages (history diverged): release
+                        // them now so the stream's real footprint stays at or
+                        // under its reservation from the first step on
+                        kv.truncate(0);
+                    }
+                    false
+                };
+                // prefix sharing: adopt whatever the registry already
+                // covers (the last token always decodes here — its step
+                // produces the first sampled logits), then elect a
+                // prefiller when shareable stripes remain: the claim
+                // winner prefills for everyone, identical-prompt
+                // followers park until its stripes publish
+                let mut claim = None;
+                let mut waiting = false;
+                if sharing && !toks.is_empty() {
+                    let cap = toks.len() - 1;
+                    store.seed_prefix(&mut kv, toks, cap);
+                    let geom = kv.stripe_geom();
+                    if kv.len() < (cap / geom.page_tokens) * geom.page_tokens {
+                        let key = crate::kvcache::prompt_claim_key(&geom, toks);
+                        claim = Some(key);
+                        waiting = store.try_claim(key, a.id).is_some();
+                    }
                 }
-                true
-            } else {
-                if !kv.is_empty() {
-                    // stale resident pages (history diverged): release
-                    // them now so the stream's real footprint stays at or
-                    // under its reservation from the first step on
-                    kv.truncate(0);
-                }
-                false
+                (kv, resumed, claim, waiting)
             };
             active.push(ActiveGen {
                 admit: a,
@@ -1478,9 +1592,34 @@ fn scheduler_main(
                 pending: None,
                 reserve,
                 poisoned: false,
+                claim,
+                waiting,
                 ttft_us: 0,
                 last_token_at: None,
             });
+        }
+        // parked identical-prompt followers: wake the moment the elected
+        // prefiller's published stripes cover the shareable prefix, or
+        // take the claim over if it retired without publishing (serial
+        // area — the sessions lock is never taken inside the step pass)
+        if sharing && active.iter().any(|g| g.waiting) {
+            let mut store = lock_or_recover(&sessions);
+            for g in active.iter_mut().filter(|g| g.waiting) {
+                let toks = g.admit.state.tokens();
+                let cap = toks.len() - 1;
+                let geom = g.kv.stripe_geom();
+                if store.prefix_covered(&geom, toks, cap) {
+                    store.seed_prefix(&mut g.kv, toks, cap);
+                    g.waiting = false;
+                    g.claim = None; // never held — nothing to release
+                } else if let Some(key) = g.claim {
+                    if store.try_claim(key, g.admit.id).is_none() {
+                        // the prefiller is gone: this stream owns the
+                        // prefill now (claim held; release at retirement)
+                        g.waiting = false;
+                    }
+                }
+            }
         }
         if active.is_empty() {
             continue;
@@ -1501,6 +1640,12 @@ fn scheduler_main(
                 && g.admit.arrival.elapsed().as_millis() as u64 >= limits.deadline_ms
             {
                 g.pending = Some(StepOut::Done(StopReason::DeadlineExceeded));
+                return;
+            }
+            if g.waiting {
+                // parked on another stream's prefill: no step this tick
+                // (pending stays None, so the serial pass skips it too);
+                // the deadline check above still bounds the wait
                 return;
             }
             if let Some(Fault::Delay(d)) = fault::fire(&faults, fault::SITE_DECODE_STEP) {
@@ -1588,6 +1733,20 @@ fn scheduler_main(
                 served += 1;
             } else {
                 i += 1;
+            }
+        }
+        // publish newly filled stripes of live streams so parked
+        // identical-prompt followers can adopt mid-generation (steady
+        // state: no stream has a publishable stripe and the sessions
+        // lock is never taken)
+        if sharing
+            && active
+                .iter()
+                .any(|g| !g.waiting && !g.kv.publishable_stripes().is_empty())
+        {
+            let mut store = lock_or_recover(&sessions);
+            for g in active.iter_mut().filter(|g| !g.waiting) {
+                store.publish_prefix(&mut g.kv);
             }
         }
         drop(tick_span);
@@ -1716,7 +1875,7 @@ mod tests {
 
     #[test]
     fn session_store_incremental_admission() {
-        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        let mut store = SessionStore::new(kv_cfg(1 << 20).into());
         let a = store.admit(42, &[1, 2, 3, 4]);
         assert_eq!((a.cached_tokens, a.appended_tokens), (0, 4));
         let b = store.admit(42, &[5, 6]);
@@ -1729,7 +1888,7 @@ mod tests {
 
     #[test]
     fn rollback_restores_history() {
-        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        let mut store = SessionStore::new(kv_cfg(1 << 20).into());
         store.admit(1, &[1, 2, 3]);
         store.admit(1, &[4, 5]);
         store.rollback_turn(1, 3);
@@ -1743,7 +1902,7 @@ mod tests {
 
     #[test]
     fn history_budget_evicts_lru_sessions() {
-        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        let mut store = SessionStore::new(kv_cfg(1 << 20).into());
         store.max_history_tokens = 10;
         store.admit(1, &[0; 4]);
         store.admit(2, &[0; 4]);
@@ -1760,7 +1919,7 @@ mod tests {
     fn checkin_evictions_drop_their_histories() {
         let kv = kv_cfg(1); // tiny budget: any insert evicts the rest
         let backend = tiny_backend(&kv);
-        let mut store = SessionStore::new(kv);
+        let mut store = SessionStore::new(kv.into());
         store.admit(1, &[1, 2, 3]);
         store.admit(2, &[4, 5, 6]);
         let mut kv1 = backend.fresh_kv();
@@ -1780,7 +1939,7 @@ mod tests {
     fn decode_pass_serves_backend_logits_per_slot() {
         let kv = kv_cfg(1 << 20);
         let backend = tiny_backend(&kv);
-        let sessions = Mutex::new(SessionStore::new(kv));
+        let sessions = Mutex::new(SessionStore::new(kv.into()));
         let metrics = Metrics::default();
         let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
             let (tx, rx) = channel();
@@ -1836,7 +1995,7 @@ mod tests {
         // incremental decode serves both, logits captured at each length
         let kv = kv_cfg(1 << 20);
         let backend = tiny_backend(&kv);
-        let sessions = Mutex::new(SessionStore::new(kv));
+        let sessions = Mutex::new(SessionStore::new(kv.into()));
         let metrics = Metrics::default();
         let mk = |id: u64, tokens: Vec<i32>, session: Option<SessionInfo>| {
             let (tx, rx) = channel();
@@ -1863,7 +2022,7 @@ mod tests {
 
     #[test]
     fn empty_append_is_a_pure_history_hit() {
-        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        let mut store = SessionStore::new(kv_cfg(1 << 20).into());
         store.admit(9, &[1, 2]);
         let a = store.admit(9, &[]);
         assert_eq!((a.cached_tokens, a.appended_tokens), (2, 0));
@@ -1872,7 +2031,7 @@ mod tests {
 
     #[test]
     fn append_generated_extends_history_without_cache_counters() {
-        let mut store = SessionStore::new(kv_cfg(1 << 20));
+        let mut store = SessionStore::new(kv_cfg(1 << 20).into());
         store.admit(5, &[1, 2, 3]);
         store.append_generated(5, &[7, 8]);
         assert_eq!(store.tokens(5), &[1, 2, 3, 7, 8]);
@@ -1889,7 +2048,7 @@ mod tests {
             n_ctx: 32,
             batch: 4,
         }]);
-        Server::start_cpu_with_kv(
+        Server::builder(
             tiny_backend(&kv),
             router,
             BatchPolicy {
@@ -1897,8 +2056,9 @@ mod tests {
                 max_streams,
                 ..Default::default()
             },
-            kv,
         )
+        .kv(kv)
+        .start()
         .expect("server start")
     }
 
@@ -2113,7 +2273,7 @@ mod tests {
             n_ctx: 32,
             batch: 4,
         }]);
-        Server::start_cpu_with_kv(tiny_backend(&kv), router, policy, kv).expect("server start")
+        Server::builder(tiny_backend(&kv), router, policy).kv(kv).start().expect("server start")
     }
 
     #[test]
@@ -2269,16 +2429,17 @@ mod tests {
             n_ctx: 32,
             batch: 4,
         }]);
-        let server = Server::start_cpu_chaos(
+        let server = Server::builder(
             tiny_backend(&kv),
             router,
             BatchPolicy {
                 max_wait: std::time::Duration::from_millis(1),
                 ..Default::default()
             },
-            kv,
-            FaultPlan::parse("worker_panic").expect("plan"),
         )
+        .kv(kv)
+        .chaos(FaultPlan::parse("worker_panic").expect("plan"))
+        .start()
         .expect("server start");
         let out = server
             .generate_session(1, GenerateRequest::greedy(vec![1, 2, 3], 4))
@@ -2303,7 +2464,7 @@ mod tests {
             batch: 4,
         }]);
         // slow every step down so the stream is still live at drop time
-        let server = Server::start_cpu_chaos(
+        let server = Server::builder(
             tiny_backend(&kv),
             router,
             BatchPolicy {
@@ -2311,9 +2472,10 @@ mod tests {
                 drain_grace: std::time::Duration::ZERO,
                 ..Default::default()
             },
-            kv,
-            FaultPlan::parse("decode_step:1.0:20").expect("plan"),
         )
+        .kv(kv)
+        .chaos(FaultPlan::parse("decode_step:1.0:20").expect("plan"))
+        .start()
         .expect("server start");
         let metrics = Arc::clone(&server.metrics);
         let rx = server
@@ -2340,7 +2502,7 @@ mod tests {
             n_ctx: 32,
             batch: 4,
         }]);
-        let server = Server::start_cpu_spill(
+        let server = Server::builder(
             tiny_backend(&kv),
             router,
             BatchPolicy {
@@ -2348,9 +2510,10 @@ mod tests {
                 max_streams: 4,
                 ..Default::default()
             },
-            kv,
-            Arc::clone(&spill),
         )
+        .kv(kv)
+        .spill(Arc::clone(&spill))
+        .start()
         .expect("server start");
         (server, spill)
     }
@@ -2431,6 +2594,224 @@ mod tests {
         assert_eq!(out_b.tokens, oracle.tokens, "hydrated continuation must not drift");
         let stats = server.cache_stats();
         assert!(stats.hydrate_hits >= 1, "continuation hydrated, stats: {stats:?}");
+        assert_eq!(stats.store_checksum_failures, 0);
+    }
+
+    fn sharing_server(kv: KvCacheConfig, max_streams: usize) -> Server {
+        let router = Router::new(vec![Bucket {
+            config: "serve_srv".into(),
+            n_ctx: 32,
+            batch: 4,
+        }]);
+        Server::builder(
+            tiny_backend(&kv),
+            router,
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams,
+                ..Default::default()
+            },
+        )
+        .kv(kv)
+        .prefix_sharing(true)
+        .start()
+        .expect("server start")
+    }
+
+    fn collect_stream(rx: Receiver<StreamEvent>) -> (Vec<i32>, StopReason) {
+        let mut tokens = Vec::new();
+        for event in rx.iter() {
+            match event {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { reason, .. } => return (tokens, reason),
+            }
+        }
+        panic!("server dropped the stream");
+    }
+
+    #[test]
+    fn identical_prompt_streams_share_one_prefill_bit_identically() {
+        // N concurrent streams over ONE identical prompt: the elected
+        // prefiller pays the prompt's prefill, the others adopt its
+        // published stripes — tokens bit-identical to the sharing-off
+        // baseline, and the pool drains to zero once every session ends
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let prompt: Vec<i32> = (0..12).map(|i| i % 8).collect();
+        let n = 4u64;
+
+        let baseline = gen_server(kv, n as usize); // sharing OFF
+        let shared = sharing_server(kv, n as usize); // sharing ON
+        let run = |server: &Server| -> Vec<Vec<i32>> {
+            let rxs: Vec<_> = (1..=n)
+                .map(|sid| {
+                    server
+                        .submit_generate(sid, GenerateRequest::greedy(prompt.clone(), 4))
+                        .expect("admitted")
+                })
+                .collect();
+            rxs.into_iter()
+                .map(|rx| {
+                    let (tokens, reason) = collect_stream(rx);
+                    assert_eq!(reason, StopReason::MaxTokens);
+                    tokens
+                })
+                .collect()
+        };
+        let base_tokens = run(&baseline);
+        let shared_tokens = run(&shared);
+        assert_eq!(
+            shared_tokens, base_tokens,
+            "prefix sharing must be bit-identical to unshared serving"
+        );
+        for t in &shared_tokens[1..] {
+            assert_eq!(t, &shared_tokens[0], "identical prompts generate identically");
+        }
+
+        // prompt stripes below the last token: floor(11 / 4) = 2 stripes
+        // of 4 tokens; every follower adopts exactly those 8 tokens
+        let stats = shared.cache_stats();
+        assert!(stats.shared_pages > 0, "stripes published, stats: {stats:?}");
+        assert_eq!(
+            stats.prefix_tokens_reused,
+            (n - 1) * 8,
+            "each follower adopts the shareable prompt prefix exactly once"
+        );
+        assert!(stats.prefix_hits >= n - 1, "stats: {stats:?}");
+        let base_stats = baseline.cache_stats();
+        assert_eq!(
+            (base_stats.shared_pages, base_stats.prefix_hits, base_stats.prefix_tokens_reused),
+            (0, 0, 0),
+            "sharing off: counters stay zero"
+        );
+
+        // every stream retired warm: ending the sessions must drain both
+        // the private pool AND the shared registry to zero bytes
+        let store = shared.sessions();
+        let mut store = store.lock().unwrap();
+        assert!(store.pool().bytes() > 0);
+        for sid in 1..=n {
+            store.end_session(sid);
+        }
+        assert_eq!(store.pool().bytes(), 0, "shared pages drain with their last reference");
+        drop(store);
+
+        // one ordinary turn on a fresh session over the same sequence:
+        // logits equal a fresh forward over it
+        let mut full = prompt;
+        full.extend_from_slice(&base_tokens[0]);
+        let resp = baseline.infer_session(9, full.clone()).expect("turn served");
+        assert_eq!(resp.logits, backend.forward_logits(&full));
+    }
+
+    #[test]
+    fn divergence_after_sharing_is_copy_on_write() {
+        // a continue-generation stream truncates INSIDE a shared stripe
+        // (dropping the last row to re-decode it): the cut must copy the
+        // stripe private (COW) and stay token-identical to the direct
+        // loop — per-session determinism is untouched by sharing
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let server = sharing_server(kv, 2);
+        let context = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        server.infer_session(6, context.clone()).expect("turn served");
+        // the turn's checkin published both full stripes
+        assert!(server.cache_stats().shared_pages >= 8);
+        let out = server
+            .generate_session(6, GenerateRequest::greedy(Vec::new(), 4))
+            .expect("continue stream served");
+        assert_eq!(out.reason, StopReason::MaxTokens);
+        let mut okv = backend.fresh_kv();
+        let oracle = crate::generate::generate(
+            &backend,
+            &mut okv,
+            &context,
+            &GenerateRequest::greedy(Vec::new(), 4),
+            &crate::generate::GenLimits {
+                max_total_tokens: 32,
+                kv_budget_bytes: 1 << 20,
+                ..crate::generate::GenLimits::unbounded()
+            },
+            |_, _| {},
+        );
+        assert_eq!(out.tokens, oracle.tokens, "COW divergence must not drift");
+        let stats = server.cache_stats();
+        assert!(
+            stats.cow_copies >= 4,
+            "truncate(7) cut inside shared stripe 1 -> one copy per chain, stats: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn shared_entry_survives_spill_while_unreferenced_and_rehydrates() {
+        // a shared entry whose last referencing session ends spills ONCE
+        // to the disk tier (instead of being destroyed); a later
+        // identical prompt hydrates and adopts it bit-identically
+        let dir = std::env::temp_dir().join("had-prefix-spill-server-test");
+        let spill =
+            Arc::new(crate::store::SpillStore::create(&dir, None).expect("spill store"));
+        let kv = kv_cfg(1 << 20);
+        let backend = tiny_backend(&kv);
+        let router = Router::new(vec![Bucket {
+            config: "serve_srv".into(),
+            n_ctx: 32,
+            batch: 4,
+        }]);
+        let server = Server::builder(
+            tiny_backend(&kv),
+            router,
+            BatchPolicy {
+                max_wait: std::time::Duration::from_millis(1),
+                max_streams: 4,
+                ..Default::default()
+            },
+        )
+        .kv(kv)
+        .spill(Arc::clone(&spill))
+        .prefix_sharing(true)
+        .start()
+        .expect("server start");
+
+        let prompt = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        server.infer_session(1, prompt.clone()).expect("turn served");
+        assert!(server.cache_stats().shared_pages >= 8, "both stripes published");
+        // last reference gone: the registry entries spill to disk
+        server.sessions().lock().unwrap().end_session(1);
+        let stats = server.cache_stats();
+        assert!(
+            stats.spill_pages_out >= 8,
+            "zero-ref shared entries spill once, stats: {stats:?}"
+        );
+        assert!(spill.live_records() > 0, "entries live on disk");
+        assert_eq!(
+            server.sessions().lock().unwrap().pool().bytes(),
+            0,
+            "nothing resident while unreferenced"
+        );
+        // an identical prompt on a NEW session hydrates + adopts the
+        // spilled prefix (only the stripe below the last token: tokens
+        // 0..4), and generates exactly what a cold loop would
+        let out = server
+            .generate_session(2, GenerateRequest::greedy(prompt.clone(), 3))
+            .expect("stream served");
+        assert_eq!(out.reason, StopReason::MaxTokens);
+        let mut okv = backend.fresh_kv();
+        let oracle = crate::generate::generate(
+            &backend,
+            &mut okv,
+            &[],
+            &GenerateRequest::greedy(prompt, 3),
+            &crate::generate::GenLimits {
+                max_total_tokens: 32,
+                kv_budget_bytes: 1 << 20,
+                ..crate::generate::GenLimits::unbounded()
+            },
+            |_, _| {},
+        );
+        assert_eq!(out.tokens, oracle.tokens, "hydrated adoption must not drift");
+        let stats = server.cache_stats();
+        assert!(stats.prefix_hits >= 1, "stats: {stats:?}");
+        assert!(stats.spill_pages_in >= 4, "stripe 0 hydrated, stats: {stats:?}");
         assert_eq!(stats.store_checksum_failures, 0);
     }
 }

@@ -17,9 +17,13 @@
 //! packed sign-bit keys per layer per head plus values at the configured
 //! precision (`ValueDtype::Bf16` halves the value half).
 
+use std::sync::Arc;
+
 use crate::binary::bitpack::words_for;
 use crate::kvcache::config::ValueDtype;
+use crate::kvcache::page::SealedPage;
 use crate::kvcache::session::SessionKv;
+use crate::kvcache::shared::StripeGeom;
 use crate::store::SpillStore;
 
 /// Bytes of stripe-geometry header prepended to every spill record:
@@ -62,6 +66,17 @@ pub struct LayeredKv {
     /// (truncate/reset) — the owner must `drain_released` and release
     /// them against the spill store, or the records leak until teardown.
     released: Vec<u64>,
+    /// Stripes whose pages are shared with the prefix registry, sorted by
+    /// stripe index: `(stripe, content hash)`. A stripe is exactly one of
+    /// owned, spilled, or shared.
+    shared: Vec<(usize, u64)>,
+    /// Content hashes whose shared stripes were dropped without registry
+    /// access (truncate/reset) — the owner must `drain_released_shared`
+    /// and release the references, or the registry refcounts leak.
+    released_shared: Vec<u64>,
+    /// Copy-on-write page materializations since the last `take_cow`
+    /// (truncate landing inside a shared stripe).
+    cow_copies: u64,
 }
 
 impl LayeredKv {
@@ -70,7 +85,16 @@ impl LayeredKv {
         let chains = (0..geom.chains())
             .map(|_| SessionKv::new_with(geom.d_head, geom.d_head, page_tokens, dtype))
             .collect();
-        LayeredKv { geom, chains, tokens: Vec::new(), spilled: Vec::new(), released: Vec::new() }
+        LayeredKv {
+            geom,
+            chains,
+            tokens: Vec::new(),
+            spilled: Vec::new(),
+            released: Vec::new(),
+            shared: Vec::new(),
+            released_shared: Vec::new(),
+            cow_copies: 0,
+        }
     }
 
     #[inline]
@@ -129,6 +153,13 @@ impl LayeredKv {
     /// re-prefill the few clamped tokens instead). Spilled stripes at or
     /// beyond the cut are dropped and their tags buffered for
     /// [`LayeredKv::drain_released`].
+    /// Shared-stripe interaction: a cut INSIDE a shared stripe first
+    /// materializes a private copy of its pages (copy-on-write — the
+    /// registry copy and every other referencing session are untouched,
+    /// so bit-identity holds on both sides of the divergence); shared
+    /// stripes wholly at or beyond the cut just drop their pages. Either
+    /// way the stripe's registry reference is buffered for
+    /// [`LayeredKv::drain_released_shared`].
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.tokens.len(), "truncate beyond length");
         let pt = self.page_tokens();
@@ -145,6 +176,23 @@ impl LayeredKv {
             }
         }
         self.spilled = kept;
+        let mut kept_shared = Vec::with_capacity(self.shared.len());
+        for &(p, hash) in &self.shared {
+            if (p + 1) * pt <= len {
+                kept_shared.push((p, hash));
+            } else {
+                if p * pt < len {
+                    // The cut lands inside this shared stripe: COW so the
+                    // surviving partial page is privately mutable.
+                    for c in &mut self.chains {
+                        c.page_mut(p).make_owned();
+                    }
+                    self.cow_copies += self.chains.len() as u64;
+                }
+                self.released_shared.push(hash);
+            }
+        }
+        self.shared = kept_shared;
         for c in &mut self.chains {
             c.truncate(len);
         }
@@ -210,9 +258,15 @@ impl LayeredKv {
         self.spilled.iter().any(|&(s, _)| s == p)
     }
 
-    /// Is there a resident full stripe left to spill?
+    fn stripe_shared(&self, p: usize) -> bool {
+        self.shared.iter().any(|&(s, _)| s == p)
+    }
+
+    /// Is there a resident PRIVATE full stripe left to spill? Shared
+    /// stripes never spill from a session — the registry owns their
+    /// payload and spills it once, when the last reference drops.
     pub fn has_spillable(&self) -> bool {
-        (0..self.full_stripes()).any(|p| !self.stripe_spilled(p))
+        (0..self.full_stripes()).any(|p| !self.stripe_spilled(p) && !self.stripe_shared(p))
     }
 
     /// Serialize stripe `p`: geometry header, then every chain's page `p`
@@ -264,7 +318,8 @@ impl LayeredKv {
     /// (fault injection / IO error) — the caller falls back to plain
     /// eviction, it never wedges.
     pub fn spill_one(&mut self, store: &SpillStore) -> Option<(usize, usize)> {
-        let p = (0..self.full_stripes()).find(|&p| !self.stripe_spilled(p))?;
+        let p = (0..self.full_stripes())
+            .find(|&p| !self.stripe_spilled(p) && !self.stripe_shared(p))?;
         let tag = store.put(&self.encode_stripe(p)).ok()?;
         let mut freed = 0;
         for c in &mut self.chains {
@@ -321,6 +376,95 @@ impl LayeredKv {
     /// against the spill store.
     pub fn drain_released(&mut self) -> Vec<u64> {
         std::mem::take(&mut self.released)
+    }
+
+    // ---- cross-session prefix sharing -----------------------------------
+
+    /// The packing configuration a stripe's bits depend on — the seed of
+    /// every prefix content hash for this cache.
+    pub fn stripe_geom(&self) -> StripeGeom {
+        StripeGeom {
+            chains: self.chains.len(),
+            page_tokens: self.page_tokens(),
+            d_head: self.geom.d_head,
+            dtype: self.chains[0].value_dtype(),
+        }
+    }
+
+    /// Stripes currently referencing shared registry payloads.
+    #[inline]
+    pub fn shared_stripes(&self) -> usize {
+        self.shared.len()
+    }
+
+    /// Content hashes of every shared stripe — the references the pool
+    /// releases when the whole session is evicted or removed.
+    pub fn shared_hashes(&self) -> Vec<u64> {
+        self.shared.iter().map(|&(_, hash)| hash).collect()
+    }
+
+    /// Take the hashes buffered by [`LayeredKv::truncate`] for release
+    /// against the prefix registry.
+    pub fn drain_released_shared(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.released_shared)
+    }
+
+    /// Take the copy-on-write page count since the last call (drained
+    /// into `CacheStats` at pool boundaries).
+    pub fn take_cow(&mut self) -> u64 {
+        std::mem::take(&mut self.cow_copies)
+    }
+
+    /// Prefix adoption: extend every chain by one already-sealed shared
+    /// stripe (the registry's copy of `toks`' K/V — no prefill runs). The
+    /// cache must sit exactly at a fully-resident stripe boundary.
+    pub fn adopt_stripe(&mut self, toks: &[i32], pages: Vec<Arc<SealedPage>>, hash: u64) {
+        let pt = self.page_tokens();
+        assert_eq!(toks.len(), pt, "adopt of a partial stripe");
+        assert_eq!(self.tokens.len() % pt, 0, "adopt off a stripe boundary");
+        assert_eq!(pages.len(), self.chains.len(), "one shared page per chain");
+        let p = self.tokens.len() / pt;
+        for (c, page) in self.chains.iter_mut().zip(pages) {
+            c.adopt_shared_page(page);
+        }
+        self.tokens.extend_from_slice(toks);
+        let at = self.shared.partition_point(|&(s, _)| s < p);
+        self.shared.insert(at, (p, hash));
+    }
+
+    /// Full stripes eligible for publication: resident, private, not yet
+    /// shared.
+    pub fn publishable_stripes(&self) -> Vec<usize> {
+        (0..self.full_stripes())
+            .filter(|&p| !self.stripe_spilled(p) && !self.stripe_shared(p))
+            .collect()
+    }
+
+    /// Publish stripe `p`: move every chain's page `p` payload behind an
+    /// `Arc<SealedPage>` (reads continue through the shared copy,
+    /// bit-identical; the session's private bytes for the stripe drop to
+    /// zero) and record the stripe as shared under `hash`.
+    pub fn seal_stripe(&mut self, p: usize, hash: u64) -> Vec<Arc<SealedPage>> {
+        assert!(!self.stripe_spilled(p) && !self.stripe_shared(p), "stripe not publishable");
+        let arcs: Vec<Arc<SealedPage>> =
+            self.chains.iter_mut().map(|c| c.page_mut(p).seal_shared()).collect();
+        let at = self.shared.partition_point(|&(s, _)| s < p);
+        self.shared.insert(at, (p, hash));
+        arcs
+    }
+
+    /// Dedup at publication: an identical stripe already lives in the
+    /// registry, so drop stripe `p`'s private pages and reference the
+    /// registry copies instead (bit-identical by construction — same
+    /// token prefix, same packing config).
+    pub fn share_stripe(&mut self, p: usize, pages: &[Arc<SealedPage>], hash: u64) {
+        assert!(!self.stripe_spilled(p) && !self.stripe_shared(p), "stripe not publishable");
+        assert_eq!(pages.len(), self.chains.len(), "one shared page per chain");
+        for (c, arc) in self.chains.iter_mut().zip(pages) {
+            c.page_mut(p).replace_with_shared(Arc::clone(arc));
+        }
+        let at = self.shared.partition_point(|&(s, _)| s < p);
+        self.shared.insert(at, (p, hash));
     }
 }
 
@@ -518,6 +662,88 @@ mod tests {
         assert!(kv.spill_one(&store).is_none(), "refused write degrades, never wedges");
         assert!(kv.fully_resident());
         assert_eq!(kv.bytes(), before);
+    }
+
+    #[test]
+    fn seal_then_adopt_stripe_is_bit_identical_across_sessions() {
+        let mut leader = filled(10, 4); // 2 full stripes + tail
+        let oracle = leader.clone();
+        let geom = leader.stripe_geom();
+        let hashes = crate::kvcache::shared::stripe_hashes(&geom, leader.tokens());
+        assert_eq!(hashes.len(), 2);
+        let full_bytes = leader.bytes();
+
+        let mut follower = LayeredKv::new(leader.geom(), 4, ValueDtype::F32);
+        for (p, &h) in hashes.iter().enumerate() {
+            let toks: Vec<i32> = oracle.tokens()[p * 4..(p + 1) * 4].to_vec();
+            let arcs = leader.seal_stripe(p, h);
+            follower.adopt_stripe(&toks, arcs, h);
+        }
+        // Leader still reads its own bits through the shared payloads.
+        assert_same_kv(&leader, &oracle);
+        assert!(leader.bytes() < full_bytes, "sealed stripes leave private accounting");
+        assert_eq!(leader.shared_stripes(), 2);
+        assert_eq!(leader.shared_hashes(), hashes);
+
+        // Follower holds the first 8 tokens without any prefill...
+        assert_eq!(follower.len(), 8);
+        assert_eq!(follower.bytes(), 0, "adopted stripes cost no private bytes");
+        let mut expect = oracle.clone();
+        expect.truncate(8);
+        assert_same_kv(&follower, &expect);
+        // ...and keeps decoding privately past them.
+        push_token(&mut follower, 99, 0.7);
+        assert_eq!(follower.len(), 9);
+        assert!(follower.bytes() > 0);
+    }
+
+    #[test]
+    fn truncate_inside_shared_stripe_is_copy_on_write() {
+        let mut kv = filled(8, 4);
+        let oracle = kv.clone();
+        let geom = kv.stripe_geom();
+        let hashes = crate::kvcache::shared::stripe_hashes(&geom, kv.tokens());
+        let arcs: Vec<_> = hashes.iter().enumerate().map(|(p, &h)| kv.seal_stripe(p, h)).collect();
+        assert_eq!(kv.bytes(), 0, "fully shared cache has no private bytes");
+
+        // Cut inside stripe 0: its pages COW to private copies; stripe 1
+        // is wholly dropped. Both references are buffered for release.
+        kv.truncate(2);
+        assert_eq!(kv.len(), 2, "shared cuts do not clamp — COW keeps the partial page");
+        assert_eq!(kv.take_cow(), kv.geom().chains() as u64);
+        assert_eq!(kv.take_cow(), 0, "take_cow drains");
+        let mut released = kv.drain_released_shared();
+        released.sort_unstable();
+        let mut want = hashes.clone();
+        want.sort_unstable();
+        assert_eq!(released, want);
+        assert_eq!(kv.shared_stripes(), 0);
+        assert!(kv.bytes() > 0, "the COW copy is private residency again");
+        let mut expect = oracle.clone();
+        expect.truncate(2);
+        assert_same_kv(&kv, &expect);
+
+        // The registry copies were never touched by the divergence.
+        let mut reread = LayeredKv::new(oracle.geom(), 4, ValueDtype::F32);
+        reread.adopt_stripe(&oracle.tokens()[..4], arcs[0].clone(), hashes[0]);
+        let mut first = oracle;
+        first.truncate(4);
+        assert_same_kv(&reread, &first);
+    }
+
+    #[test]
+    fn shared_stripes_never_spill_from_a_session() {
+        let store = spill_store();
+        let mut kv = filled(8, 4);
+        let geom = kv.stripe_geom();
+        let hashes = crate::kvcache::shared::stripe_hashes(&geom, kv.tokens());
+        kv.seal_stripe(0, hashes[0]);
+        assert!(kv.has_spillable(), "stripe 1 is still private");
+        let (_, pages) = kv.spill_one(&store).expect("private stripe spills");
+        assert_eq!(pages, kv.geom().chains());
+        assert!(!kv.has_spillable(), "shared stripe 0 is not a spill candidate");
+        assert!(kv.spill_one(&store).is_none());
+        assert_eq!(kv.publishable_stripes(), Vec::<usize>::new());
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //!   `PagePool<LayeredKv>` for full decode states, which the coordinator
 //!   checks out per batch with `take` and back in with `insert`).
 //! * [`config::KvCacheConfig`] — sizing knobs and capacity math.
+//! * [`shared::SharedIndex`] — the cross-session prefix registry:
+//!   sealed full stripes gain a content-hash identity (FNV-64 over the
+//!   token prefix, seeded by the packing config), are deduped into
+//!   refcounted shared entries ([`page::SealedPage`] behind an `Arc`),
+//!   and are adopted by later identical prompts so N streams over one
+//!   prompt pay its prefill once; divergence copies-on-write.
 //!
 //! `binary::attention::had_attention_paged` scores XNOR-popcount directly
 //! over the non-contiguous pages, bit-identical to the contiguous
@@ -46,9 +52,11 @@ pub mod layered;
 pub mod page;
 pub mod pool;
 pub mod session;
+pub mod shared;
 
 pub use config::{KvCacheConfig, ValueDtype};
 pub use layered::{KvGeom, LayeredKv};
-pub use page::Page;
+pub use page::{Page, SealedPage};
 pub use pool::{Admission, CacheStats, PagePool, PooledKv};
 pub use session::SessionKv;
+pub use shared::{prompt_claim_key, SharedIndex, StripeGeom};

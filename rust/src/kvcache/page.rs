@@ -2,6 +2,8 @@
 //! up to `capacity` tokens. Pages are the unit of pool accounting and of
 //! the non-contiguous layout `had_attention_paged` scores over.
 
+use std::sync::Arc;
+
 use crate::binary::bitpack::{pack_vector, words_for};
 use crate::kvcache::config::ValueDtype;
 use crate::util::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
@@ -17,6 +19,102 @@ enum Values {
     Bf16(Vec<u16>),
 }
 
+/// The immutable payload of one sealed (full) page, shared between
+/// sessions behind an `Arc`: N streams over the same prompt reference ONE
+/// copy of its packed keys and values instead of N private copies. A
+/// sealed page is always full (`capacity` rows) and always resident —
+/// spilling a shared entry is the prefix registry's job, done when the
+/// last reference drops, never while a session still reads it.
+#[derive(Clone, Debug)]
+pub struct SealedPage {
+    d: usize,
+    words_per_key: usize,
+    d_v: usize,
+    capacity: usize,
+    keys: Vec<u64>,
+    values: Values,
+}
+
+impl SealedPage {
+    /// Heap bytes of the shared payload (accounted once, in the registry,
+    /// regardless of how many sessions reference it).
+    pub fn bytes(&self) -> usize {
+        let value_bytes = match &self.values {
+            Values::F32(vs) => vs.len() * 4,
+            Values::Bf16(vs) => vs.len() * 2,
+        };
+        self.keys.len() * 8 + value_bytes
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append the payload to `out`: all key words (u64 LE), then all
+    /// value elements in the page's dtype (LE) — the same layout as
+    /// [`Page::encode_payload`] for a full page.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.reserve(self.bytes());
+        for w in &self.keys {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        match &self.values {
+            Values::F32(vs) => {
+                for x in vs {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Values::Bf16(vs) => {
+                for x in vs {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Rebuild a sealed page from [`SealedPage::encode`] bytes, consuming
+    /// exactly its payload from the front of `buf` and returning the
+    /// remainder. Geometry comes from the caller (the adopting cache) so
+    /// a record can never decode into the wrong shape.
+    pub fn decode(
+        buf: &[u8],
+        capacity: usize,
+        d: usize,
+        d_v: usize,
+        dtype: ValueDtype,
+    ) -> Result<(SealedPage, &[u8]), String> {
+        let words_per_key = words_for(d);
+        let kw = capacity * words_per_key;
+        let need = kw * 8 + capacity * d_v * dtype.bytes_per_elem();
+        if buf.len() < need {
+            return Err(format!("sealed page short: need {need} B, have {}", buf.len()));
+        }
+        let mut keys = vec![0u64; kw];
+        for (slot, c) in keys.iter_mut().zip(buf[..kw * 8].chunks_exact(8)) {
+            *slot = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        let vbytes = &buf[kw * 8..need];
+        let values = match dtype {
+            ValueDtype::F32 => {
+                let mut vs = vec![0.0f32; capacity * d_v];
+                for (slot, c) in vs.iter_mut().zip(vbytes.chunks_exact(4)) {
+                    *slot = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                Values::F32(vs)
+            }
+            ValueDtype::Bf16 => {
+                let mut vs = vec![0u16; capacity * d_v];
+                for (slot, c) in vs.iter_mut().zip(vbytes.chunks_exact(2)) {
+                    *slot = u16::from_le_bytes(c.try_into().unwrap());
+                }
+                Values::Bf16(vs)
+            }
+        };
+        Ok((SealedPage { d, words_per_key, d_v, capacity, keys, values }, &buf[need..]))
+    }
+}
+
 /// One page of KV state. Storage is allocated at full capacity on
 /// construction, so `bytes()` is constant over the page's lifetime and
 /// appends never move memory (slices handed out stay valid).
@@ -26,6 +124,13 @@ enum Values {
 /// live in the disk spill tier, and `restore_payload` rebuilds it
 /// bit-identically. Attention never touches a non-resident page — the
 /// pool hydrates at checkout, before any decode.
+///
+/// A full page can also be **shared**: its payload moves behind an
+/// `Arc<SealedPage>` referenced by any number of sessions, reads go
+/// through the shared payload bit-identically, and `bytes()` reports 0
+/// (the prefix registry accounts shared bytes exactly once). Mutation of
+/// a shared page (partial truncate) requires [`Page::make_owned`] first —
+/// copy-on-write, driven by `LayeredKv`.
 #[derive(Clone, Debug)]
 pub struct Page {
     d: usize,
@@ -34,11 +139,16 @@ pub struct Page {
     capacity: usize,
     len: usize,
     /// capacity * words_per_key packed sign words, filled up to len rows.
+    /// Empty while the payload is shared.
     keys: Vec<u64>,
-    /// capacity * d_v value elements, filled up to len rows.
+    /// capacity * d_v value elements, filled up to len rows. Empty while
+    /// the payload is shared.
     values: Values,
     /// False while the payload lives only in the spill tier.
     resident: bool,
+    /// When set, reads resolve through this shared payload and the owned
+    /// vectors above are empty.
+    shared: Option<Arc<SealedPage>>,
 }
 
 impl Page {
@@ -63,7 +173,96 @@ impl Page {
             keys: vec![0u64; capacity * words_per_key],
             values,
             resident: true,
+            shared: None,
         }
+    }
+
+    /// A full page referencing an already-sealed shared payload (prefix
+    /// adoption: the session gains `capacity` tokens of KV without
+    /// packing or copying anything).
+    pub fn adopt_shared(payload: Arc<SealedPage>) -> Page {
+        let values = match payload.values {
+            Values::F32(_) => Values::F32(Vec::new()),
+            Values::Bf16(_) => Values::Bf16(Vec::new()),
+        };
+        Page {
+            d: payload.d,
+            words_per_key: payload.words_per_key,
+            d_v: payload.d_v,
+            capacity: payload.capacity,
+            len: payload.capacity,
+            keys: Vec::new(),
+            values,
+            resident: true,
+            shared: Some(payload),
+        }
+    }
+
+    /// Move this full, resident page's payload behind an `Arc<SealedPage>`
+    /// (publication into the prefix registry). The page keeps reading the
+    /// same bits through the shared payload; its owned storage is freed,
+    /// so `bytes()` drops to 0 and the registry accounts the copy once.
+    pub fn seal_shared(&mut self) -> Arc<SealedPage> {
+        assert!(self.resident, "seal of an evicted page");
+        assert!(self.shared.is_none(), "page already shared");
+        assert!(self.is_full(), "only full pages are sealed for sharing");
+        let keys = std::mem::take(&mut self.keys);
+        let empty = match &self.values {
+            Values::F32(_) => Values::F32(Vec::new()),
+            Values::Bf16(_) => Values::Bf16(Vec::new()),
+        };
+        let values = std::mem::replace(&mut self.values, empty);
+        let arc = Arc::new(SealedPage {
+            d: self.d,
+            words_per_key: self.words_per_key,
+            d_v: self.d_v,
+            capacity: self.capacity,
+            keys,
+            values,
+        });
+        self.shared = Some(Arc::clone(&arc));
+        arc
+    }
+
+    /// Replace this full, resident page's payload with an existing shared
+    /// one (dedup at publication: the bits are identical by construction —
+    /// same token prefix, same packing config — so the private copy is
+    /// dropped and the registry copy referenced instead).
+    pub fn replace_with_shared(&mut self, payload: Arc<SealedPage>) {
+        assert!(self.resident, "share of an evicted page");
+        assert!(self.shared.is_none(), "page already shared");
+        assert!(self.is_full(), "only full pages are shared");
+        assert!(
+            payload.capacity == self.capacity && payload.d == self.d && payload.d_v == self.d_v,
+            "shared payload geometry mismatch"
+        );
+        self.keys = Vec::new();
+        self.values = match &self.values {
+            Values::F32(_) => Values::F32(Vec::new()),
+            Values::Bf16(_) => Values::Bf16(Vec::new()),
+        };
+        self.shared = Some(payload);
+    }
+
+    /// Copy-on-write: materialize a private copy of the shared payload so
+    /// the page can be mutated (divergence/truncate inside a shared
+    /// stripe). Bit-identical — reads before and after see the same data.
+    /// No-op on an already-owned page.
+    pub fn make_owned(&mut self) {
+        let Some(s) = self.shared.take() else { return };
+        self.keys = s.keys.clone();
+        self.values = s.values.clone();
+    }
+
+    /// True while the payload is shared with the prefix registry.
+    #[inline]
+    pub fn is_shared(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// The shared payload, when this page references one.
+    pub fn shared_payload(&self) -> Option<&Arc<SealedPage>> {
+        self.shared.as_ref()
     }
 
     #[inline]
@@ -99,10 +298,30 @@ impl Page {
         }
     }
 
+    /// The packed key words reads resolve against — the shared payload's
+    /// when one is referenced, the page's own otherwise.
+    #[inline]
+    fn keys_buf(&self) -> &[u64] {
+        match &self.shared {
+            Some(s) => &s.keys,
+            None => &self.keys,
+        }
+    }
+
+    /// The value storage reads resolve against (shared or owned).
+    #[inline]
+    fn values_buf(&self) -> &Values {
+        match &self.shared {
+            Some(s) => &s.values,
+            None => &self.values,
+        }
+    }
+
     /// Append one token's key (continuous f32, binarized here) and value
     /// (rounded to the page's value dtype).
     pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
         assert!(self.resident, "push into an evicted page");
+        assert!(self.shared.is_none(), "push into a shared page (make_owned first)");
         assert!(!self.is_full(), "page overflow");
         assert_eq!(k_row.len(), self.d, "key dim mismatch");
         assert_eq!(v_row.len(), self.d_v, "value dim mismatch");
@@ -125,7 +344,7 @@ impl Page {
     pub fn key(&self, i: usize) -> &[u64] {
         debug_assert!(i < self.len);
         debug_assert!(self.resident, "key read from an evicted page");
-        &self.keys[i * self.words_per_key..(i + 1) * self.words_per_key]
+        &self.keys_buf()[i * self.words_per_key..(i + 1) * self.words_per_key]
     }
 
     /// All packed key words of the filled rows as one contiguous block
@@ -134,7 +353,7 @@ impl Page {
     #[inline]
     pub fn keys_packed(&self) -> &[u64] {
         debug_assert!(self.resident, "keys_packed on an evicted page");
-        &self.keys[..self.len * self.words_per_key]
+        &self.keys_buf()[..self.len * self.words_per_key]
     }
 
     /// f32 value row of token `i`. Only f32 pages have borrowable rows —
@@ -142,7 +361,7 @@ impl Page {
     #[inline]
     pub fn value(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
-        match &self.values {
+        match self.values_buf() {
             Values::F32(vs) => &vs[i * self.d_v..(i + 1) * self.d_v],
             Values::Bf16(_) => panic!("bf16 pages have no borrowable f32 rows"),
         }
@@ -156,7 +375,7 @@ impl Page {
     pub fn accum_value(&self, i: usize, w: f32, orow: &mut [f32]) {
         debug_assert!(i < self.len);
         let (lo, hi) = (i * self.d_v, (i + 1) * self.d_v);
-        match &self.values {
+        match self.values_buf() {
             Values::F32(vs) => {
                 for (o, &v) in orow.iter_mut().zip(&vs[lo..hi]) {
                     *o += w * v;
@@ -175,7 +394,7 @@ impl Page {
         debug_assert!(i < self.len);
         assert_eq!(out.len(), self.d_v, "value dim mismatch");
         let (lo, hi) = (i * self.d_v, (i + 1) * self.d_v);
-        match &self.values {
+        match self.values_buf() {
             Values::F32(vs) => out.copy_from_slice(&vs[lo..hi]),
             Values::Bf16(vs) => {
                 for (o, &bits) in out.iter_mut().zip(&vs[lo..hi]) {
@@ -192,13 +411,18 @@ impl Page {
             self.resident || len == 0,
             "partial truncate of an evicted page (hydrate first, or drop the whole stripe)"
         );
+        assert!(
+            self.shared.is_none() || len == self.len,
+            "partial truncate of a shared page (make_owned first, or drop the whole page)"
+        );
         self.len = len;
     }
 
     /// Resident payload bytes (full capacity — allocation, not fill).
-    /// Zero while the payload is spilled to disk.
+    /// Zero while the payload is spilled to disk, and zero while it is
+    /// shared (the prefix registry accounts the shared copy once).
     pub fn bytes(&self) -> usize {
-        if !self.resident {
+        if !self.resident || self.shared.is_some() {
             return 0;
         }
         let value_bytes = match &self.values {
@@ -233,10 +457,10 @@ impl Page {
     pub fn encode_payload(&self, out: &mut Vec<u8>) {
         assert!(self.resident, "encode of an evicted page");
         out.reserve(self.payload_len());
-        for w in &self.keys[..self.len * self.words_per_key] {
+        for w in &self.keys_buf()[..self.len * self.words_per_key] {
             out.extend_from_slice(&w.to_le_bytes());
         }
-        match &self.values {
+        match self.values_buf() {
             Values::F32(vs) => {
                 for x in &vs[..self.len * self.d_v] {
                     out.extend_from_slice(&x.to_le_bytes());
@@ -254,6 +478,7 @@ impl Page {
     /// owns the spilled bytes (see `store::SpillStore`).
     pub fn drop_payload(&mut self) {
         assert!(self.resident, "double spill of a page");
+        assert!(self.shared.is_none(), "spill of a shared page (the registry owns its spill)");
         self.resident = false;
         self.keys = Vec::new();
         self.values = match self.values {
@@ -465,6 +690,141 @@ mod tests {
                 assert_eq!(a, b, "{dtype:?} value {i}");
             }
         }
+    }
+
+    fn filled_page(rng: &mut Rng, dtype: ValueDtype, cap: usize, d: usize, d_v: usize) -> Page {
+        let mut page = Page::new_with(cap, d, d_v, dtype);
+        for _ in 0..cap {
+            page.push(&rng.normal_vec(d, 1.0), &rng.normal_vec(d_v, 1.0));
+        }
+        page
+    }
+
+    fn assert_same_rows(a: &Page, b: &Page, tag: &str) {
+        assert_eq!(a.len(), b.len(), "{tag} len");
+        for i in 0..a.len() {
+            assert_eq!(a.key(i), b.key(i), "{tag} key {i}");
+        }
+    }
+
+    #[test]
+    fn seal_adopt_reads_are_bit_identical_and_account_zero() {
+        let mut rng = Rng::new(7);
+        for dtype in [ValueDtype::F32, ValueDtype::Bf16] {
+            let (cap, d, d_v) = (4usize, 65usize, 8usize);
+            let mut page = filled_page(&mut rng, dtype, cap, d, d_v);
+            let owned = page.clone();
+            let owned_bytes = page.bytes();
+            assert!(owned_bytes > 0);
+
+            let arc = page.seal_shared();
+            assert!(page.is_shared());
+            assert_eq!(page.bytes(), 0, "shared page accounts zero bytes");
+            assert_eq!(arc.bytes(), owned_bytes, "registry accounts the payload once");
+
+            let adopted = Page::adopt_shared(Arc::clone(&arc));
+            assert!(adopted.is_full());
+            assert_eq!(adopted.bytes(), 0);
+            for p in [&page, &adopted] {
+                assert_same_rows(p, &owned, "shared read");
+                for i in 0..cap {
+                    let (mut a, mut b) = (vec![0.0; d_v], vec![0.0; d_v]);
+                    p.value_into(i, &mut a);
+                    owned.value_into(i, &mut b);
+                    assert_eq!(a, b, "{dtype:?} value {i}");
+                }
+                assert_eq!(p.keys_packed(), owned.keys_packed());
+            }
+        }
+    }
+
+    #[test]
+    fn make_owned_is_cow_and_restores_mutability() {
+        let mut rng = Rng::new(8);
+        let (cap, d, d_v) = (4usize, 32usize, 4usize);
+        let mut page = filled_page(&mut rng, ValueDtype::F32, cap, d, d_v);
+        let owned = page.clone();
+        let arc = page.seal_shared();
+        assert_eq!(Arc::strong_count(&arc), 2);
+
+        page.make_owned();
+        assert!(!page.is_shared());
+        assert_eq!(Arc::strong_count(&arc), 1, "COW drops the shared reference");
+        assert_eq!(page.bytes(), owned.bytes(), "owned copy accounts its bytes again");
+        assert_same_rows(&page, &owned, "post-COW read");
+
+        // The private copy diverges without touching the sealed payload.
+        page.truncate(1);
+        page.push(&rng.normal_vec(d, 1.0), &rng.normal_vec(d_v, 1.0));
+        assert_eq!(arc.capacity(), cap);
+        let reread = Page::adopt_shared(Arc::clone(&arc));
+        assert_same_rows(&reread, &owned, "sealed payload untouched by divergence");
+    }
+
+    #[test]
+    #[should_panic(expected = "make_owned first")]
+    fn shared_page_rejects_partial_truncate() {
+        let mut rng = Rng::new(9);
+        let mut page = filled_page(&mut rng, ValueDtype::F32, 2, 16, 4);
+        page.seal_shared();
+        page.truncate(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registry owns its spill")]
+    fn shared_page_rejects_spill() {
+        let mut rng = Rng::new(10);
+        let mut page = filled_page(&mut rng, ValueDtype::F32, 2, 16, 4);
+        page.seal_shared();
+        page.drop_payload();
+    }
+
+    #[test]
+    fn sealed_page_encode_decode_roundtrip() {
+        let mut rng = Rng::new(11);
+        for dtype in [ValueDtype::F32, ValueDtype::Bf16] {
+            let (cap, d, d_v) = (4usize, 65usize, 8usize);
+            let mut page = filled_page(&mut rng, dtype, cap, d, d_v);
+            let arc = page.seal_shared();
+            let mut buf = Vec::new();
+            arc.encode(&mut buf);
+            buf.extend_from_slice(b"tail");
+            let (decoded, rest) = SealedPage::decode(&buf, cap, d, d_v, dtype).unwrap();
+            assert_eq!(rest, b"tail");
+            assert_eq!(decoded.bytes(), arc.bytes());
+            let a = Page::adopt_shared(Arc::new(decoded));
+            let b = Page::adopt_shared(Arc::clone(&arc));
+            assert_same_rows(&a, &b, "decode");
+            for i in 0..cap {
+                let (mut x, mut y) = (vec![0.0; d_v], vec![0.0; d_v]);
+                a.value_into(i, &mut x);
+                b.value_into(i, &mut y);
+                assert_eq!(x, y, "{dtype:?} value {i}");
+            }
+            assert!(SealedPage::decode(&buf[..8], cap, d, d_v, dtype).is_err());
+        }
+    }
+
+    #[test]
+    fn replace_with_shared_dedupes_to_the_registry_copy() {
+        let mut rng = Rng::new(12);
+        let (cap, d, d_v) = (4usize, 32usize, 4usize);
+        let ks: Vec<f32> = rng.normal_vec(cap * d, 1.0);
+        let vs: Vec<f32> = rng.normal_vec(cap * d_v, 1.0);
+        let build = |ks: &[f32], vs: &[f32]| {
+            let mut p = Page::new(cap, d, d_v);
+            for i in 0..cap {
+                p.push(&ks[i * d..(i + 1) * d], &vs[i * d_v..(i + 1) * d_v]);
+            }
+            p
+        };
+        let mut first = build(&ks, &vs);
+        let mut second = build(&ks, &vs);
+        let arc = first.seal_shared();
+        second.replace_with_shared(Arc::clone(&arc));
+        assert_eq!(second.bytes(), 0);
+        assert_eq!(Arc::strong_count(&arc), 3);
+        assert_same_rows(&second, &first, "dedup");
     }
 
     #[test]

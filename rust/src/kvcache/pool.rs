@@ -15,6 +15,7 @@ use std::sync::Arc;
 use crate::kvcache::config::KvCacheConfig;
 use crate::kvcache::layered::LayeredKv;
 use crate::kvcache::session::SessionKv;
+use crate::kvcache::shared::{stripe_hashes, Acquire, Publish, SharedIndex, StripeGeom};
 use crate::store::SpillStore;
 use crate::tensor::Mat;
 
@@ -44,6 +45,20 @@ pub trait PooledKv {
     /// Tags buffered by a truncate, to release against the store.
     fn drain_released(&mut self) -> Vec<u64> {
         Vec::new()
+    }
+    /// Content hashes of shared prefix stripes this entry references
+    /// (released against the registry when the entry is dropped
+    /// wholesale).
+    fn shared_refs(&self) -> Vec<u64> {
+        Vec::new()
+    }
+    /// Hashes buffered by a truncate, to release against the registry.
+    fn drain_released_shared(&mut self) -> Vec<u64> {
+        Vec::new()
+    }
+    /// Copy-on-write page materializations since the last call.
+    fn take_cow(&mut self) -> u64 {
+        0
     }
 }
 
@@ -81,6 +96,15 @@ impl PooledKv for LayeredKv {
     fn drain_released(&mut self) -> Vec<u64> {
         LayeredKv::drain_released(self)
     }
+    fn shared_refs(&self) -> Vec<u64> {
+        LayeredKv::shared_hashes(self)
+    }
+    fn drain_released_shared(&mut self) -> Vec<u64> {
+        LayeredKv::drain_released_shared(self)
+    }
+    fn take_cow(&mut self) -> u64 {
+        LayeredKv::take_cow(self)
+    }
 }
 
 /// Cumulative cache counters (monotone; snapshot and diff as needed).
@@ -104,6 +128,17 @@ pub struct CacheStats {
     pub hydrate_hits: u64,
     /// store reads that failed verification (fault, IO, checksum)
     pub store_checksum_failures: u64,
+    /// chain-pages published into (or deduped against) the prefix
+    /// registry — each one is a page whose bytes are accounted once
+    /// however many sessions reference it
+    pub shared_pages: u64,
+    /// admissions that adopted at least one shared prefix stripe
+    pub prefix_hits: u64,
+    /// prompt tokens whose prefill was skipped via shared-prefix adoption
+    pub prefix_tokens_reused: u64,
+    /// pages privately re-materialized by copy-on-write when a session
+    /// diverged inside a shared stripe
+    pub cow_copies: u64,
 }
 
 impl CacheStats {
@@ -145,6 +180,10 @@ pub struct PagePool<T: PooledKv = SessionKv> {
     /// stripes page-granularly before falling back to whole-session
     /// eviction.
     spill: Option<Arc<SpillStore>>,
+    /// Cross-session prefix registry. When set, identical prompt prefixes
+    /// share one refcounted copy of their packed pages (`self.bytes`
+    /// keeps tracking private bytes only; `bytes()` adds the registry's).
+    shared: Option<SharedIndex>,
 }
 
 impl<T: PooledKv> PagePool<T> {
@@ -156,6 +195,7 @@ impl<T: PooledKv> PagePool<T> {
             bytes: 0,
             stats: CacheStats::default(),
             spill: None,
+            shared: None,
         }
     }
 
@@ -166,6 +206,64 @@ impl<T: PooledKv> PagePool<T> {
 
     pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
         self.spill.as_ref()
+    }
+
+    /// Enable (or disable) cross-session prefix sharing. Off by default;
+    /// with it off every path behaves exactly as before the registry
+    /// existed.
+    pub fn set_prefix_sharing(&mut self, on: bool) {
+        self.shared = if on { Some(SharedIndex::new()) } else { None };
+    }
+
+    /// Is the prefix registry attached?
+    #[inline]
+    pub fn prefix_sharing(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// The prefix registry (tests/metrics introspection).
+    pub fn shared_index(&self) -> Option<&SharedIndex> {
+        self.shared.as_ref()
+    }
+
+    /// Release registry references, spilling (or dropping) entries whose
+    /// refcount hits zero and counting the spilled pages like any other
+    /// spill traffic.
+    fn release_shared_all(&mut self, hashes: Vec<u64>) {
+        if hashes.is_empty() {
+            return;
+        }
+        let Some(shared) = self.shared.as_mut() else { return };
+        let spill = self.spill.as_deref();
+        let (mut pages, mut bytes) = (0u64, 0u64);
+        for h in hashes {
+            let (p, b) = shared.release(h, spill);
+            if p > 0 {
+                pages += p as u64;
+                bytes += b as u64;
+            }
+        }
+        self.stats.spill_pages_out += pages;
+        self.stats.spill_bytes += bytes;
+    }
+
+    /// Claim `key`'s prefill for `stream`: `None` = this stream runs it,
+    /// `Some(holder)` = park behind the holder. Always `None` with
+    /// sharing off (nobody ever waits).
+    pub fn try_claim(&mut self, key: u64, stream: u64) -> Option<u64> {
+        self.shared.as_mut().and_then(|s| s.try_claim(key, stream))
+    }
+
+    /// Is `key` still claimed by a stream other than `stream`?
+    pub fn claim_held_by_other(&self, key: u64, stream: u64) -> bool {
+        self.shared.as_ref().is_some_and(|s| s.claim_held_by_other(key, stream))
+    }
+
+    /// Release `key` if `stream` holds it (unconditional at retirement).
+    pub fn release_claim(&mut self, key: u64, stream: u64) {
+        if let Some(s) = self.shared.as_mut() {
+            s.release_claim(key, stream);
+        }
     }
 
     /// Release `tags` against the spill store, if one is attached.
@@ -191,9 +289,11 @@ impl<T: PooledKv> PagePool<T> {
         &self.cfg
     }
 
-    /// Resident payload bytes across all sessions.
+    /// Resident payload bytes: every session's private pages plus the
+    /// prefix registry's shared pages, each shared page counted exactly
+    /// once however many sessions reference it.
     pub fn bytes(&self) -> usize {
-        self.bytes
+        self.bytes + self.shared.as_ref().map_or(0, SharedIndex::bytes)
     }
 
     pub fn budget(&self) -> usize {
@@ -265,10 +365,15 @@ impl<T: PooledKv> PagePool<T> {
         let now = self.tick();
         let released = kv.drain_released();
         self.release_all(released);
-        if let Some(old) = self.sessions.remove(&session_id) {
+        self.release_shared_all(kv.drain_released_shared());
+        self.stats.cow_copies += kv.take_cow();
+        if let Some(mut old) = self.sessions.remove(&session_id) {
             self.bytes -= old.kv.bytes();
             let tags = old.kv.spill_tags();
             self.release_all(tags);
+            let mut hashes = old.kv.shared_refs();
+            hashes.extend(old.kv.drain_released_shared());
+            self.release_shared_all(hashes);
         }
         self.bytes += kv.bytes();
         self.sessions.insert(session_id, Entry { kv, last_used: now });
@@ -285,15 +390,36 @@ impl<T: PooledKv> PagePool<T> {
             return;
         }
         let mut tags = Vec::new();
+        let mut hashes = Vec::new();
+        let mut cow = 0;
         if let Some(e) = self.sessions.get_mut(&session_id) {
             if e.kv.tokens() > len {
                 let before = e.kv.bytes();
                 e.kv.truncate(len);
-                self.bytes -= before - e.kv.bytes();
+                // COW off a shared stripe can GROW private bytes, so this
+                // must be a signed adjustment, not a subtraction.
+                self.bytes = self.bytes - before + e.kv.bytes();
                 tags = e.kv.drain_released();
+                hashes = e.kv.drain_released_shared();
+                cow = e.kv.take_cow();
             }
         }
         self.release_all(tags);
+        self.release_shared_all(hashes);
+        self.stats.cow_copies += cow;
+    }
+
+    /// Discard a checked-out cache WITHOUT checking it back in (poisoned
+    /// stream, stale history — the KV is dropped), releasing its spill
+    /// records and registry references so neither leaks.
+    pub fn discard(&mut self, mut kv: T) {
+        let mut tags = kv.spill_tags();
+        tags.extend(kv.drain_released());
+        self.release_all(tags);
+        let mut hashes = kv.shared_refs();
+        hashes.extend(kv.drain_released_shared());
+        self.stats.cow_copies += kv.take_cow();
+        self.release_shared_all(hashes);
     }
 
     /// Drop a session outright (client disconnect). Not counted as an
@@ -305,6 +431,10 @@ impl<T: PooledKv> PagePool<T> {
                 let mut tags = e.kv.spill_tags();
                 tags.extend(e.kv.drain_released());
                 self.release_all(tags);
+                let mut hashes = e.kv.shared_refs();
+                hashes.extend(e.kv.drain_released_shared());
+                self.stats.cow_copies += e.kv.take_cow();
+                self.release_shared_all(hashes);
                 true
             }
             None => false,
@@ -360,10 +490,111 @@ impl<T: PooledKv> PagePool<T> {
                 let mut tags = e.kv.spill_tags();
                 tags.extend(e.kv.drain_released());
                 self.release_all(tags);
+                let mut hashes = e.kv.shared_refs();
+                hashes.extend(e.kv.drain_released_shared());
+                self.stats.cow_copies += e.kv.take_cow();
+                self.release_shared_all(hashes);
                 evicted.push(id);
             }
         }
         evicted
+    }
+}
+
+impl PagePool<LayeredKv> {
+    /// Prefix resolution at admit: extend `kv` with every contiguous
+    /// registry stripe matching `tokens`, up to (whole stripes within)
+    /// `max_tokens` — the caller caps at `tokens.len() - 1` so the
+    /// generation loop always has at least one token left to prefill
+    /// (its logits seed the first sample). Spilled entries hydrate once,
+    /// through the normal hydrate counters. Returns the tokens adopted;
+    /// prefill for them never runs.
+    pub fn seed_prefix(&mut self, kv: &mut LayeredKv, tokens: &[i32], max_tokens: usize) -> usize {
+        if self.shared.is_none() {
+            return 0;
+        }
+        let geom = kv.stripe_geom();
+        let pt = geom.page_tokens;
+        if kv.len() % pt != 0 || !kv.is_prefix_of(tokens) {
+            return 0;
+        }
+        let hashes = stripe_hashes(&geom, tokens);
+        let start = kv.len() / pt;
+        let mut adopted = 0;
+        let (mut pages_in, mut failed) = (0usize, 0usize);
+        for p in start..hashes.len() {
+            let end = (p + 1) * pt;
+            if end > max_tokens {
+                break;
+            }
+            let (shared, spill) = (self.shared.as_mut().unwrap(), self.spill.as_deref());
+            match shared.acquire(hashes[p], &tokens[..end], &geom, spill) {
+                Acquire::Hit { pages, hydrated_pages } => {
+                    pages_in += hydrated_pages;
+                    kv.adopt_stripe(&tokens[p * pt..end], pages, hashes[p]);
+                    adopted += 1;
+                }
+                Acquire::Miss { failed_reads } => {
+                    failed += failed_reads;
+                    break; // adopted stripes must stay contiguous
+                }
+            }
+        }
+        if pages_in > 0 || failed > 0 {
+            self.note_hydrate(pages_in, failed);
+        }
+        if adopted > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.prefix_tokens_reused += (adopted * pt) as u64;
+        }
+        adopted * pt
+    }
+
+    /// Publish every full, private, resident stripe of `kv` into the
+    /// registry (called on checked-out caches: at checkin and per tick
+    /// during generation, so followers can adopt a long prefill while it
+    /// is still running). An identical registered stripe dedupes — the
+    /// private copy is dropped and the registry copy referenced,
+    /// bit-identical by construction. No-op with sharing off, and cheap
+    /// when everything already published.
+    pub fn publish_prefix(&mut self, kv: &mut LayeredKv) {
+        if self.shared.is_none() {
+            return;
+        }
+        let stripes = kv.publishable_stripes();
+        if stripes.is_empty() {
+            return;
+        }
+        let geom = kv.stripe_geom();
+        let pt = geom.page_tokens;
+        let toks = kv.tokens().to_vec();
+        let hashes = stripe_hashes(&geom, &toks);
+        for p in stripes {
+            let end = (p + 1) * pt;
+            let (shared, spill) = (self.shared.as_mut().unwrap(), self.spill.as_deref());
+            match shared.prepare_publish(hashes[p], &toks[..end], spill) {
+                Publish::Dedupe(pages) => {
+                    kv.share_stripe(p, &pages, hashes[p]);
+                    self.stats.shared_pages += geom.chains as u64;
+                }
+                Publish::Adopt => {
+                    let arcs = kv.seal_stripe(p, hashes[p]);
+                    self.shared.as_mut().unwrap().complete_publish(hashes[p], &toks[..end], arcs);
+                    self.stats.shared_pages += geom.chains as u64;
+                }
+                Publish::Skip => {}
+            }
+        }
+    }
+
+    /// Are all full stripes of `tokens` within `max_tokens` registered?
+    /// The parked follower's wake condition; trivially true with sharing
+    /// off or when the prompt has no full stripe below the cap (such a
+    /// stream never waits).
+    pub fn prefix_covered(&self, geom: &StripeGeom, tokens: &[i32], max_tokens: usize) -> bool {
+        let Some(shared) = self.shared.as_ref() else { return true };
+        let target = max_tokens.min(tokens.len()) / geom.page_tokens;
+        shared.covers(geom, tokens, target)
     }
 }
 
@@ -698,6 +929,135 @@ mod tests {
         assert_eq!(s.spill_pages_in, 8);
         assert_eq!(s.hydrate_hits, 1, "only checkouts that restored pages count");
         assert_eq!(s.store_checksum_failures, 1);
+    }
+
+    fn sharing_pool(budget: usize) -> PagePool<LayeredKv> {
+        let mut p: PagePool<LayeredKv> = PagePool::new(KvCacheConfig {
+            page_tokens: 4,
+            byte_budget: budget,
+            ..Default::default()
+        });
+        p.set_prefix_sharing(true);
+        p
+    }
+
+    #[test]
+    fn prefix_publish_adopt_dedupe_and_drain_to_zero() {
+        let mut p = sharing_pool(1 << 20);
+        let mut leader = layered(8); // 2 full stripes
+        p.publish_prefix(&mut leader);
+        let registry = p.shared_index().unwrap().bytes();
+        assert!(registry > 0);
+        assert_eq!(p.stats().shared_pages, 2 * 4, "2 stripes x 4 chains published");
+        assert_eq!(PooledKv::bytes(&leader), 0, "published pages leave private accounting");
+        p.insert(1, leader);
+        assert_eq!(p.bytes(), registry, "shared bytes counted exactly once");
+
+        // A follower adopts both stripes without running prefill.
+        let toks: Vec<i32> = (0..8).collect();
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 16 };
+        let mut follower = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert_eq!(p.seed_prefix(&mut follower, &toks, 8), 8);
+        assert_eq!(follower.len(), 8);
+        let s = p.stats();
+        assert_eq!((s.prefix_hits, s.prefix_tokens_reused), (1, 8));
+        p.insert(2, follower);
+        assert_eq!(p.bytes(), registry, "two referencing sessions, bytes once");
+
+        // The cap stops adoption at whole stripes below it.
+        let mut capped = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert_eq!(p.seed_prefix(&mut capped, &toks, 7), 4, "only stripe 0 fits under 7");
+
+        // An identical private cache republished dedupes onto the copy.
+        let mut dup = layered(8);
+        p.publish_prefix(&mut dup);
+        assert_eq!(PooledKv::bytes(&dup), 0);
+        assert_eq!(p.shared_index().unwrap().bytes(), registry, "dedup adds no bytes");
+        p.insert(3, dup);
+
+        // Dropping every referencing session drains pool AND registry.
+        p.truncate_session(2, 0);
+        p.remove(1);
+        p.remove(3);
+        p.discard(capped); // never checked in: discard releases its references
+        assert_eq!(p.shared_index().unwrap().bytes(), 0, "registry drains");
+        assert_eq!(p.bytes(), 0, "pool + registry drain to zero");
+    }
+
+    #[test]
+    fn shared_entry_survives_spill_roundtrip_with_refcount() {
+        let mut p = sharing_pool(1 << 20);
+        let store = spill_store();
+        p.set_spill(Some(Arc::clone(&store)));
+        let mut leader = layered(4); // one stripe
+        p.publish_prefix(&mut leader);
+        let registry = p.shared_index().unwrap().bytes();
+        p.insert(1, leader);
+
+        // Last reference drops: the entry spills ONCE instead of dying.
+        p.remove(1);
+        assert_eq!(p.shared_index().unwrap().bytes(), 0, "resident bytes drained");
+        assert_eq!(p.shared_index().unwrap().entries(), 1, "entry stays indexed");
+        assert_eq!(store.live_records(), 1);
+        let s = p.stats();
+        assert_eq!(s.spill_pages_out, 4, "registry spill counted like any spill");
+        assert_eq!(s.spill_bytes, registry as u64);
+
+        // The next identical prompt hydrates it ONCE, refcount resuming.
+        let toks: Vec<i32> = (0..4).collect();
+        let geom = KvGeom { n_layers: 2, n_heads: 2, d_head: 16 };
+        let mut follower = LayeredKv::new(geom, 4, ValueDtype::F32);
+        assert_eq!(p.seed_prefix(&mut follower, &toks, 4), 4);
+        assert_eq!(store.live_records(), 0, "hydrate releases the record");
+        assert_eq!(p.shared_index().unwrap().bytes(), registry);
+        let s = p.stats();
+        assert_eq!(s.spill_pages_in, 4);
+        assert!(s.hydrate_hits >= 1);
+        p.insert(2, follower);
+        p.remove(2); // back to zero refs: spills again, still one entry
+        assert_eq!(p.shared_index().unwrap().entries(), 1);
+        assert_eq!(store.live_records(), 1);
+    }
+
+    #[test]
+    fn cow_divergence_counts_and_reaccounts_private_bytes() {
+        let mut p = sharing_pool(1 << 20);
+        let mut kv = layered(8);
+        p.publish_prefix(&mut kv);
+        p.insert(1, kv);
+        let registry = p.shared_index().unwrap().bytes();
+        assert_eq!(p.bytes(), registry);
+
+        // Truncate into stripe 0: COW materializes its 4 chain-pages
+        // privately and releases both stripes' registry references.
+        p.truncate_session(1, 2);
+        assert_eq!(p.stats().cow_copies, 4);
+        assert_eq!(p.shared_index().unwrap().bytes(), 0, "no other referents: entries drain");
+        assert!(p.bytes() > 0, "the COW copy is private residency");
+        assert_eq!(p.cached_tokens(1), 2);
+        p.remove(1);
+        assert_eq!(p.bytes(), 0);
+    }
+
+    #[test]
+    fn claims_are_inert_with_sharing_off() {
+        let mut p: PagePool<LayeredKv> =
+            PagePool::new(KvCacheConfig { page_tokens: 4, byte_budget: 1 << 20, ..Default::default() });
+        assert_eq!(p.try_claim(1, 7), None);
+        assert!(!p.claim_held_by_other(1, 8), "no registry, nobody ever waits");
+        p.release_claim(1, 7);
+        let geom = crate::kvcache::shared::StripeGeom {
+            chains: 4,
+            page_tokens: 4,
+            d_head: 16,
+            dtype: ValueDtype::F32,
+        };
+        assert!(p.prefix_covered(&geom, &[1, 2, 3, 4], 4), "coverage trivially true");
+        let mut kv = layered(8);
+        p.publish_prefix(&mut kv);
+        assert!(PooledKv::bytes(&kv) > 0, "publish is a no-op without the registry");
+        let mut fresh = LayeredKv::new(KvGeom { n_layers: 2, n_heads: 2, d_head: 16 }, 4, ValueDtype::F32);
+        assert_eq!(p.seed_prefix(&mut fresh, &[0, 1, 2, 3], 4), 0);
     }
 
     #[test]

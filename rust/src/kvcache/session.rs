@@ -3,8 +3,10 @@
 //! tokens; the packed keys of turns 0..N stay resident and are re-scored
 //! in place by `binary::attention::had_attention_paged`.
 
+use std::sync::Arc;
+
 use crate::kvcache::config::ValueDtype;
-use crate::kvcache::page::Page;
+use crate::kvcache::page::{Page, SealedPage};
 use crate::tensor::Mat;
 
 /// One session's paged KV cache for a single head geometry.
@@ -102,6 +104,24 @@ impl SessionKv {
         for r in 0..k.rows {
             self.append_row(k.row(r), v.row(r));
         }
+    }
+
+    /// Prefix adoption: append one FULL page referencing an
+    /// already-sealed shared payload instead of packing its rows. The
+    /// chain must sit exactly at a page boundary (a shared page can only
+    /// extend a whole-page prefix) and the payload must match the chain's
+    /// geometry.
+    pub fn adopt_shared_page(&mut self, payload: Arc<SealedPage>) {
+        assert!(!self.sealed, "append to sealed session");
+        assert_eq!(self.len % self.page_tokens, 0, "adopt off a page boundary");
+        assert_eq!(
+            self.pages.len(),
+            self.len / self.page_tokens,
+            "adopt over a partial tail page"
+        );
+        assert_eq!(payload.capacity(), self.page_tokens, "page_tokens mismatch");
+        self.pages.push(Page::adopt_shared(payload));
+        self.len += self.page_tokens;
     }
 
     /// Freeze the session: no further appends (end of conversation; the
@@ -276,6 +296,43 @@ mod tests {
         assert_eq!(kv.bytes(), one_page);
         kv.append(&rand_mat(&mut rng, 1, 64), &rand_mat(&mut rng, 1, 16));
         assert_eq!(kv.bytes(), 2 * one_page);
+    }
+
+    #[test]
+    fn adopt_shared_page_reads_like_the_private_original() {
+        let mut rng = Rng::new(21);
+        let (d, d_v, pt) = (32, 4, 4);
+        let k = rand_mat(&mut rng, pt, d);
+        let v = rand_mat(&mut rng, pt, d_v);
+        let mut source = SessionKv::new(d, d_v, pt);
+        source.append(&k, &v);
+        let payload = source.page_mut(0).seal_shared();
+
+        let mut kv = SessionKv::new(d, d_v, pt);
+        kv.adopt_shared_page(Arc::clone(&payload));
+        assert_eq!(kv.len(), pt);
+        assert_eq!(kv.bytes(), 0, "adopted pages account zero private bytes");
+        for i in 0..pt {
+            assert_eq!(kv.key(i), source.key(i));
+            assert_eq!(kv.value(i), source.value(i));
+        }
+        // The chain keeps growing privately past the shared page.
+        kv.append_row(k.row(0), v.row(0));
+        assert_eq!(kv.len(), pt + 1);
+        assert!(kv.bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "adopt off a page boundary")]
+    fn adopt_rejects_partial_tail() {
+        let mut rng = Rng::new(22);
+        let (d, d_v, pt) = (16, 2, 4);
+        let mut source = SessionKv::new(d, d_v, pt);
+        source.append(&rand_mat(&mut rng, pt, d), &rand_mat(&mut rng, pt, d_v));
+        let payload = source.page_mut(0).seal_shared();
+        let mut kv = SessionKv::new(d, d_v, pt);
+        kv.append_row(&vec![1.0; d], &vec![0.5; d_v]);
+        kv.adopt_shared_page(payload);
     }
 
     #[test]

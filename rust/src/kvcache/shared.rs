@@ -1,0 +1,535 @@
+//! Cross-session prefix registry: content-hashed, refcounted shared KV
+//! stripes.
+//!
+//! ## Identity
+//!
+//! A shared entry is one **stripe** — page index `p` of every chain, the
+//! same unit the spill tier moves — keyed by an FNV-1a-64 hash of the
+//! FULL token prefix through the stripe's end, seeded from the packing
+//! configuration ([`StripeGeom::seed`]). The hash is an index hint, not
+//! the identity: every entry stores the prefix token ids and adoption /
+//! dedup verify token equality, so a hash collision degrades to a miss,
+//! never to serving another prompt's KV. Because prefill is
+//! deterministic, equal token prefixes under equal packing config have
+//! bit-identical stripes — dedup is exact, not approximate.
+//!
+//! ## Lifecycle
+//!
+//! - **Publish** (checkin / per-tick during generation): a session's
+//!   full, private stripes are sealed behind `Arc<SealedPage>`s and
+//!   entered here. If the hash is present with matching tokens the
+//!   session *adopts the registry copy instead* (dedup — the duplicate
+//!   bytes are freed); otherwise its sealed pages become the entry.
+//! - **Adopt** (prefix resolution at admit): a new prompt walks its
+//!   stripe hashes; each hit extends the session's cache by a whole
+//!   stripe without re-running prefill.
+//! - **Release**: every referencing session dropped its stripe. With a
+//!   spill store the entry's bytes move to disk once (`spill_tag`,
+//!   resident bytes drain to zero) and hydrate once on the next adopt;
+//!   without one the entry is removed outright.
+//!
+//! Resident registry bytes are accounted here exactly once however many
+//! sessions reference an entry; `PagePool` reports them alongside its
+//! private bytes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kvcache::config::ValueDtype;
+use crate::kvcache::page::SealedPage;
+use crate::store::format::{fnv1a64, fnv1a64_extend};
+use crate::store::SpillStore;
+
+/// Bytes of geometry header on a spilled registry record: chains,
+/// page_tokens, d_head (u32 LE each) + value element width + 3 reserved.
+const ENTRY_HEADER: usize = 16;
+
+/// The packing configuration a stripe's bits depend on. Seeds every
+/// prefix hash so caches with different geometry or precision can never
+/// alias an entry (one registry serves one model's server, so geometry +
+/// tokens pin the content).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeGeom {
+    pub chains: usize,
+    pub page_tokens: usize,
+    pub d_head: usize,
+    pub dtype: ValueDtype,
+}
+
+impl StripeGeom {
+    /// Hash seed binding prefix hashes to this packing configuration.
+    pub fn seed(&self) -> u64 {
+        let mut h = fnv1a64(b"had-prefix-v1");
+        for x in [self.chains, self.page_tokens, self.d_head, self.dtype.bytes_per_elem()] {
+            h = fnv1a64_extend(h, &(x as u32).to_le_bytes());
+        }
+        h
+    }
+}
+
+/// Fold token ids (i32 LE) into an FNV-1a-64 state.
+pub fn extend_tokens(mut h: u64, toks: &[i32]) -> u64 {
+    for &t in toks {
+        h = fnv1a64_extend(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// Content hash of every full stripe of `tokens`: element `p` covers the
+/// whole prefix `tokens[..(p+1)*page_tokens]`, computed incrementally so
+/// hashing N stripes walks the prompt once.
+pub fn stripe_hashes(geom: &StripeGeom, tokens: &[i32]) -> Vec<u64> {
+    let mut h = geom.seed();
+    let mut out = Vec::with_capacity(tokens.len() / geom.page_tokens);
+    for stripe in tokens.chunks_exact(geom.page_tokens) {
+        h = extend_tokens(h, stripe);
+        out.push(h);
+    }
+    out
+}
+
+/// Claim key for a whole prompt: identical-prompt followers park on this
+/// while one stream runs the shared prefill. Domain-separated from the
+/// stripe-hash space (separate map, but keep the keys distinct anyway).
+pub fn prompt_claim_key(geom: &StripeGeom, tokens: &[i32]) -> u64 {
+    extend_tokens(geom.seed() ^ 0x9e37_79b9_7f4a_7c15, tokens)
+}
+
+/// One shared stripe: the token prefix it encodes, its pages (one
+/// `Arc<SealedPage>` per chain; `None` while spilled), and how many live
+/// session stripes reference it.
+struct SharedEntry {
+    tokens: Vec<i32>,
+    pages: Option<Vec<Arc<SealedPage>>>,
+    spill_tag: Option<u64>,
+    refs: usize,
+    /// Payload bytes when resident (counted once in the registry).
+    bytes: usize,
+}
+
+/// What a publisher should do with a full private stripe.
+pub enum Publish {
+    /// No entry (or a spilled one was displaced): seal the stripe's pages
+    /// and hand them to [`SharedIndex::complete_publish`].
+    Adopt,
+    /// An identical resident entry exists: swap the private pages for
+    /// these registry copies (the ref was already taken).
+    Dedupe(Vec<Arc<SealedPage>>),
+    /// Hash collision (tokens differ) — leave the stripe private.
+    Skip,
+}
+
+/// Result of a prefix lookup at admit time.
+pub enum Acquire {
+    /// Entry found (hydrated from the spill tier if needed) and a
+    /// reference taken. `hydrated_pages` > 0 when it came off disk.
+    Hit { pages: Vec<Arc<SealedPage>>, hydrated_pages: usize },
+    /// No matching entry. `failed_reads` = 1 when a spilled entry's
+    /// record was unreadable (the entry is dropped; caller prefills).
+    Miss { failed_reads: usize },
+}
+
+/// The registry. Owned by `PagePool` when prefix sharing is enabled.
+#[derive(Default)]
+pub struct SharedIndex {
+    entries: HashMap<u64, SharedEntry>,
+    /// full-prompt claim key -> stream id running that prompt's prefill.
+    claims: HashMap<u64, u64>,
+    /// Resident bytes across all entries (each counted once).
+    bytes: usize,
+}
+
+impl SharedIndex {
+    pub fn new() -> SharedIndex {
+        SharedIndex::default()
+    }
+
+    /// Resident registry bytes (spilled entries count zero).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Entries in the index, resident or spilled.
+    #[inline]
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is an identical prefix registered (resident or spilled)?
+    pub fn has(&self, hash: u64, tokens: &[i32]) -> bool {
+        self.entries.get(&hash).is_some_and(|e| e.tokens == tokens)
+    }
+
+    /// Are stripes `0..n` of `tokens` all registered? (The waiting
+    /// follower's wake condition.)
+    pub fn covers(&self, geom: &StripeGeom, tokens: &[i32], n: usize) -> bool {
+        stripe_hashes(geom, tokens)
+            .iter()
+            .take(n)
+            .enumerate()
+            .filter(|&(p, &h)| self.has(h, &tokens[..(p + 1) * geom.page_tokens]))
+            .count()
+            == n
+    }
+
+    /// Look up the stripe covering `tokens` and take a reference,
+    /// hydrating a spilled entry from `store` first. Token equality is
+    /// verified — a colliding hash is a miss.
+    pub fn acquire(
+        &mut self,
+        hash: u64,
+        tokens: &[i32],
+        geom: &StripeGeom,
+        store: Option<&SpillStore>,
+    ) -> Acquire {
+        let miss = |failed_reads| Acquire::Miss { failed_reads };
+        let Some(e) = self.entries.get_mut(&hash) else { return miss(0) };
+        if e.tokens != tokens {
+            return miss(0);
+        }
+        let mut hydrated_pages = 0;
+        if e.pages.is_none() {
+            let Some(store) = store else { return miss(0) };
+            let tag = e.spill_tag.expect("spilled entry without a tag");
+            let pages = store.get(tag).ok().and_then(|buf| decode_entry(&buf, geom).ok());
+            store.release(tag);
+            match pages {
+                Some(pages) => {
+                    e.bytes = pages.iter().map(|p| p.bytes()).sum();
+                    self.bytes += e.bytes;
+                    hydrated_pages = pages.len();
+                    e.pages = Some(pages);
+                    e.spill_tag = None;
+                }
+                None => {
+                    // Unreadable record: drop the entry; the caller
+                    // prefills and likely republishes it fresh.
+                    self.entries.remove(&hash);
+                    return miss(1);
+                }
+            }
+        }
+        e.refs += 1;
+        Acquire::Hit { pages: e.pages.clone().unwrap(), hydrated_pages }
+    }
+
+    /// Decide how to publish a full private stripe. `Dedupe` already took
+    /// the reference; `Adopt` expects a follow-up
+    /// [`SharedIndex::complete_publish`] with the sealed pages. A spilled
+    /// identical entry is displaced (its record released) so the
+    /// publisher's already-resident copy becomes the registry copy
+    /// instead of paying a disk round-trip.
+    pub fn prepare_publish(
+        &mut self,
+        hash: u64,
+        tokens: &[i32],
+        store: Option<&SpillStore>,
+    ) -> Publish {
+        match self.entries.get_mut(&hash) {
+            None => Publish::Adopt,
+            Some(e) if e.tokens != tokens => Publish::Skip,
+            Some(e) => match &e.pages {
+                Some(pages) => {
+                    e.refs += 1;
+                    Publish::Dedupe(pages.clone())
+                }
+                None => {
+                    if let (Some(tag), Some(store)) = (e.spill_tag.take(), store) {
+                        store.release(tag);
+                    }
+                    self.entries.remove(&hash);
+                    Publish::Adopt
+                }
+            },
+        }
+    }
+
+    /// Enter a freshly sealed stripe under `hash` with one reference (the
+    /// publisher's own).
+    pub fn complete_publish(&mut self, hash: u64, tokens: &[i32], pages: Vec<Arc<SealedPage>>) {
+        let bytes = pages.iter().map(|p| p.bytes()).sum();
+        self.bytes += bytes;
+        let prev = self.entries.insert(
+            hash,
+            SharedEntry {
+                tokens: tokens.to_vec(),
+                pages: Some(pages),
+                spill_tag: None,
+                refs: 1,
+                bytes,
+            },
+        );
+        debug_assert!(prev.is_none(), "publish over a live entry");
+    }
+
+    /// Drop one reference to `hash`. At zero the entry's bytes leave
+    /// residency: spilled once to `store` (hydrated once on the next
+    /// adopt, refcount picking up where it left off) or removed outright
+    /// without one. Returns `(pages_spilled, bytes_spilled)` for the
+    /// pool's counters. A refused spill write keeps the entry resident —
+    /// degraded, never wedged.
+    pub fn release(&mut self, hash: u64, store: Option<&SpillStore>) -> (usize, usize) {
+        let Some(e) = self.entries.get_mut(&hash) else { return (0, 0) };
+        debug_assert!(e.refs > 0, "release of an unreferenced entry");
+        e.refs = e.refs.saturating_sub(1);
+        if e.refs > 0 || e.pages.is_none() {
+            return (0, 0);
+        }
+        match store {
+            Some(store) => {
+                let pages = e.pages.as_ref().unwrap();
+                let Ok(tag) = store.put(&encode_entry(pages)) else { return (0, 0) };
+                let (n, freed) = (pages.len(), e.bytes);
+                e.pages = None;
+                e.spill_tag = Some(tag);
+                e.bytes = 0;
+                self.bytes -= freed;
+                (n, freed)
+            }
+            None => {
+                let freed = e.bytes;
+                self.bytes -= freed;
+                self.entries.remove(&hash);
+                (0, freed)
+            }
+        }
+    }
+
+    /// Claim `key`'s prefill for `stream`. `None` = claimed (or already
+    /// held by this stream); `Some(holder)` = another stream holds it.
+    pub fn try_claim(&mut self, key: u64, stream: u64) -> Option<u64> {
+        match self.claims.get(&key) {
+            Some(&holder) if holder != stream => Some(holder),
+            _ => {
+                self.claims.insert(key, stream);
+                None
+            }
+        }
+    }
+
+    /// Is `key` claimed by a stream other than `stream`?
+    pub fn claim_held_by_other(&self, key: u64, stream: u64) -> bool {
+        self.claims.get(&key).is_some_and(|&h| h != stream)
+    }
+
+    /// Release `key` if `stream` holds it (unconditional at stream
+    /// retirement, so a dead claimer can never park followers forever).
+    pub fn release_claim(&mut self, key: u64, stream: u64) {
+        if self.claims.get(&key) == Some(&stream) {
+            self.claims.remove(&key);
+        }
+    }
+}
+
+/// Serialize a registry entry for the spill tier: geometry header then
+/// every chain's sealed page.
+fn encode_entry(pages: &[Arc<SealedPage>]) -> Vec<u8> {
+    let payload: usize = pages.iter().map(|p| p.bytes()).sum();
+    let mut out = Vec::with_capacity(ENTRY_HEADER + payload);
+    out.extend_from_slice(&(pages.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(pages[0].capacity() as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // reserved (d_head checked at decode)
+    out.push(0);
+    out.extend_from_slice(&[0u8; 3]);
+    for p in pages {
+        p.encode(&mut out);
+    }
+    out
+}
+
+/// Rebuild a registry entry, shape-checking the header against the
+/// adopting cache's geometry so a record can never hydrate into the
+/// wrong shape.
+fn decode_entry(buf: &[u8], geom: &StripeGeom) -> Result<Vec<Arc<SealedPage>>, String> {
+    if buf.len() < ENTRY_HEADER {
+        return Err(format!("entry header short: {} B", buf.len()));
+    }
+    let word = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) as usize;
+    if word(0) != geom.chains || word(4) != geom.page_tokens {
+        return Err("entry geometry mismatch".to_string());
+    }
+    let mut rest = &buf[ENTRY_HEADER..];
+    let mut pages = Vec::with_capacity(geom.chains);
+    for _ in 0..geom.chains {
+        let (page, r) =
+            SealedPage::decode(rest, geom.page_tokens, geom.d_head, geom.d_head, geom.dtype)?;
+        pages.push(Arc::new(page));
+        rest = r;
+    }
+    if !rest.is_empty() {
+        return Err(format!("{} trailing bytes after entry decode", rest.len()));
+    }
+    Ok(pages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::page::Page;
+    use crate::util::rng::Rng;
+
+    fn geom() -> StripeGeom {
+        StripeGeom { chains: 2, page_tokens: 4, d_head: 16, dtype: ValueDtype::F32 }
+    }
+
+    fn sealed_pages(rng: &mut Rng, g: &StripeGeom) -> Vec<Arc<SealedPage>> {
+        (0..g.chains)
+            .map(|_| {
+                let mut p = Page::new(g.page_tokens, g.d_head, g.d_head);
+                for _ in 0..g.page_tokens {
+                    p.push(&rng.normal_vec(g.d_head, 1.0), &rng.normal_vec(g.d_head, 1.0));
+                }
+                p.seal_shared()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stripe_hashes_are_incremental_over_the_prefix() {
+        let g = geom();
+        let toks: Vec<i32> = (0..13).collect();
+        let hs = stripe_hashes(&g, &toks);
+        assert_eq!(hs.len(), 3, "13 tokens / 4 per page = 3 full stripes");
+        // Each element hashes the whole prefix, independent of chunking.
+        for (p, &h) in hs.iter().enumerate() {
+            let direct = extend_tokens(g.seed(), &toks[..(p + 1) * g.page_tokens]);
+            assert_eq!(h, direct, "stripe {p}");
+        }
+        // A different prompt or geometry never reuses a hash.
+        let other = stripe_hashes(&g, &[9, 9, 9, 9]);
+        assert_ne!(other[0], hs[0]);
+        let wider = StripeGeom { d_head: 32, ..g };
+        assert_ne!(stripe_hashes(&wider, &toks)[0], hs[0]);
+    }
+
+    #[test]
+    fn publish_dedupe_acquire_release_lifecycle() {
+        let mut rng = Rng::new(31);
+        let g = geom();
+        let toks: Vec<i32> = (0..4).collect();
+        let h = stripe_hashes(&g, &toks)[0];
+        let mut idx = SharedIndex::new();
+
+        assert!(matches!(idx.prepare_publish(h, &toks, None), Publish::Adopt));
+        let pages = sealed_pages(&mut rng, &g);
+        let entry_bytes: usize = pages.iter().map(|p| p.bytes()).sum();
+        idx.complete_publish(h, &toks, pages.clone());
+        assert_eq!(idx.bytes(), entry_bytes, "entry accounted once");
+        assert!(idx.has(h, &toks));
+        assert!(idx.covers(&g, &toks, 1));
+
+        // Second publisher of the identical stripe dedupes onto the copy.
+        let Publish::Dedupe(dup) = idx.prepare_publish(h, &toks, None) else {
+            panic!("identical stripe must dedupe");
+        };
+        assert!(Arc::ptr_eq(&dup[0], &pages[0]));
+        assert_eq!(idx.bytes(), entry_bytes, "dedup adds no bytes");
+
+        // A colliding publish (same hash, different tokens) is skipped.
+        assert!(matches!(idx.prepare_publish(h, &[7, 7, 7, 7], None), Publish::Skip));
+
+        // Adoption takes a third reference.
+        let Acquire::Hit { pages: got, hydrated_pages } = idx.acquire(h, &toks, &g, None) else {
+            panic!("resident entry must hit");
+        };
+        assert_eq!(hydrated_pages, 0);
+        assert!(Arc::ptr_eq(&got[0], &pages[0]));
+        // Token equality is the identity, not the hash.
+        assert!(matches!(
+            idx.acquire(h, &[7, 7, 7, 7], &g, None),
+            Acquire::Miss { failed_reads: 0 }
+        ));
+
+        // Three refs: entry survives two releases, drains on the third.
+        assert_eq!(idx.release(h, None), (0, 0));
+        assert_eq!(idx.release(h, None), (0, 0));
+        assert_eq!(idx.bytes(), entry_bytes);
+        assert_eq!(idx.release(h, None), (0, entry_bytes));
+        assert_eq!(idx.bytes(), 0, "registry drains to zero with no store");
+        assert_eq!(idx.entries(), 0);
+    }
+
+    #[test]
+    fn zero_ref_entry_spills_once_and_hydrates_once() {
+        let store =
+            SpillStore::create(&std::env::temp_dir().join("had-spill-test"), None).unwrap();
+        let mut rng = Rng::new(32);
+        let g = geom();
+        let toks: Vec<i32> = (10..14).collect();
+        let h = stripe_hashes(&g, &toks)[0];
+        let mut idx = SharedIndex::new();
+        let pages = sealed_pages(&mut rng, &g);
+        let entry_bytes: usize = pages.iter().map(|p| p.bytes()).sum();
+        idx.complete_publish(h, &toks, pages.clone());
+
+        let (spilled, freed) = idx.release(h, Some(&store));
+        assert_eq!((spilled, freed), (g.chains, entry_bytes));
+        assert_eq!(idx.bytes(), 0, "spilled entry leaves residency");
+        assert_eq!(idx.entries(), 1, "…but stays indexed");
+        assert!(idx.has(h, &toks));
+        assert_eq!(store.live_records(), 1);
+
+        let Acquire::Hit { pages: back, hydrated_pages } =
+            idx.acquire(h, &toks, &g, Some(&store))
+        else {
+            panic!("spilled entry must hydrate");
+        };
+        assert_eq!(hydrated_pages, g.chains);
+        assert_eq!(idx.bytes(), entry_bytes);
+        assert_eq!(store.live_records(), 0, "hydrate releases the record");
+        for (a, b) in back.iter().zip(&pages) {
+            let (pa, pb) = (Page::adopt_shared(Arc::clone(a)), Page::adopt_shared(Arc::clone(b)));
+            for i in 0..g.page_tokens {
+                assert_eq!(pa.key(i), pb.key(i), "hydrated keys bit-identical");
+                let (mut x, mut y) = (vec![0.0; g.d_head], vec![0.0; g.d_head]);
+                pa.value_into(i, &mut x);
+                pb.value_into(i, &mut y);
+                assert_eq!(x, y, "hydrated values bit-identical");
+            }
+        }
+        // The ref taken by the hydrate keeps it resident until released.
+        assert_eq!(idx.release(h, Some(&store)).0, g.chains, "re-spills at zero");
+    }
+
+    #[test]
+    fn corrupt_spilled_entry_degrades_to_a_miss() {
+        let store =
+            SpillStore::create(&std::env::temp_dir().join("had-spill-test"), None).unwrap();
+        let mut rng = Rng::new(33);
+        let g = geom();
+        let toks: Vec<i32> = (0..4).collect();
+        let h = stripe_hashes(&g, &toks)[0];
+        let mut idx = SharedIndex::new();
+        idx.complete_publish(h, &toks, sealed_pages(&mut rng, &g));
+        idx.release(h, Some(&store));
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = std::fs::File::options().write(true).open(store.path()).unwrap();
+            f.seek(SeekFrom::Start(16 + 16 + 3)).unwrap();
+            f.write_all(&[0xAA]).unwrap();
+        }
+        assert!(matches!(
+            idx.acquire(h, &toks, &g, Some(&store)),
+            Acquire::Miss { failed_reads: 1 }
+        ));
+        assert_eq!(idx.entries(), 0, "unreadable entry is dropped");
+        assert_eq!(store.live_records(), 0, "…and its record released");
+    }
+
+    #[test]
+    fn claims_park_followers_until_released() {
+        let g = geom();
+        let key = prompt_claim_key(&g, &[1, 2, 3, 4, 5]);
+        let mut idx = SharedIndex::new();
+        assert_eq!(idx.try_claim(key, 7), None, "first stream wins the claim");
+        assert_eq!(idx.try_claim(key, 7), None, "re-claim by the holder is a no-op");
+        assert_eq!(idx.try_claim(key, 8), Some(7), "follower sees the holder");
+        assert!(idx.claim_held_by_other(key, 8));
+        assert!(!idx.claim_held_by_other(key, 7));
+        idx.release_claim(key, 8);
+        assert!(idx.claim_held_by_other(key, 8), "only the holder can release");
+        idx.release_claim(key, 7);
+        assert_eq!(idx.try_claim(key, 8), None, "freed claim transfers");
+    }
+}

@@ -343,7 +343,7 @@ mod tests {
         let router = Router::new(vec![Bucket { config: "net_srv".into(), n_ctx: 32, batch: 4 }]);
         let policy =
             BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() };
-        Arc::new(Server::start_cpu_with_kv(tiny_backend(&kv), router, policy, kv).unwrap())
+        Arc::new(Server::builder(tiny_backend(&kv), router, policy).kv(kv).start().unwrap())
     }
 
     fn test_net_cfg() -> NetConfig {

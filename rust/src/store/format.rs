@@ -105,7 +105,13 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 /// content-addressed index (cheap, deterministic, and collision-safe at
 /// spill-file scale; every read is additionally CRC-verified).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a64_extend(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Fold more bytes into an FNV-1a 64-bit state — the incremental form of
+/// [`fnv1a64`], used to hash growing token prefixes (the shared-page
+/// prefix index) without re-walking the whole prefix per stripe.
+pub fn fnv1a64_extend(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= u64::from(b);
         h = h.wrapping_mul(0x100_0000_01b3);
@@ -406,6 +412,14 @@ mod tests {
     fn fnv_distinguishes_content() {
         assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn fnv_extend_is_the_incremental_form() {
+        let whole = fnv1a64(b"hamming attention");
+        let split = fnv1a64_extend(fnv1a64(b"hamming "), b"attention");
+        assert_eq!(whole, split);
+        assert_ne!(fnv1a64_extend(whole, b"x"), whole);
     }
 
     fn mutate(path: &Path, f: impl FnOnce(&mut Vec<u8>)) -> Result<Container, StoreError> {

@@ -242,12 +242,13 @@ fn serving_cpu_backend_end_to_end() {
     let probe = HadBackend::new(model.clone(), &kv);
     let backend = HadBackend::new(model, &kv);
     let router = Router::new(vec![Bucket { config: "cpu_64".into(), n_ctx: 64, batch: 4 }]);
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         backend,
         router,
         BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..Default::default() },
-        kv,
     )
+    .kv(kv)
+    .start()
     .unwrap();
 
     let mut rng = Rng::new(5);
@@ -339,7 +340,7 @@ fn serving_generation_end_to_end() {
     let probe = HadBackend::new(model.clone(), &kv);
     let backend = HadBackend::new(model, &kv);
     let router = Router::new(vec![Bucket { config: "gen_64".into(), n_ctx: 64, batch: 4 }]);
-    let server = Server::start_cpu_with_kv(
+    let server = Server::builder(
         backend,
         router,
         BatchPolicy {
@@ -347,8 +348,9 @@ fn serving_generation_end_to_end() {
             max_streams: 4,
             ..Default::default()
         },
-        kv,
     )
+    .kv(kv)
+    .start()
     .unwrap();
     let limits = GenLimits { max_total_tokens: 64, kv_budget_bytes: kv.byte_budget, ..GenLimits::unbounded() };
 

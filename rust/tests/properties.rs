@@ -528,7 +528,7 @@ fn prop_coordinator_stream_equals_direct_engine_loop() {
                 }
             })
             .collect();
-        let server = Server::start_cpu_with_kv(
+        let server = Server::builder(
             gen_backend(),
             Router::new(vec![Bucket { config: "prop_gen".into(), n_ctx: 48, batch: 4 }]),
             BatchPolicy {
@@ -536,8 +536,9 @@ fn prop_coordinator_stream_equals_direct_engine_loop() {
                 max_streams: 4,
                 ..Default::default()
             },
-            kv_cfg,
         )
+        .kv(kv_cfg)
+        .start()
         .expect("server start");
         // submit every stream before draining any: they interleave
         let rxs: Vec<_> = reqs
@@ -587,7 +588,7 @@ fn prop_faulted_streams_retire_explicitly_and_leak_nothing() {
             "decode_step:0.25:1,worker_panic:0.1,client_disconnect:0.15,\
              pool_pressure:0.1,queue_stall:0.1:1,seed={seed}"
         );
-        let server = Server::start_cpu_chaos(
+        let server = Server::builder(
             gen_backend(),
             Router::new(vec![Bucket { config: "prop_gen".into(), n_ctx: 48, batch: 4 }]),
             BatchPolicy {
@@ -595,9 +596,10 @@ fn prop_faulted_streams_retire_explicitly_and_leak_nothing() {
                 max_streams: 3,
                 ..Default::default()
             },
-            kv_cfg,
-            FaultPlan::parse(&spec).expect("fault spec"),
         )
+        .kv(kv_cfg)
+        .chaos(FaultPlan::parse(&spec).expect("fault spec"))
+        .start()
         .expect("server start");
         let mut rng = Rng::new(seed);
         let reqs: Vec<GenerateRequest> = (0..4)

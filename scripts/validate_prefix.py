@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Validate a prefix-sharing results file (benches/prefix.rs writes
+results/prefix.jsonl): every record parses, carries the schema
+provenance stamp, and upholds the sharing invariants —
+
+  * identity: tokens from the sharing-on run are bit-identical to the
+    sharing-off baseline at every stream count;
+  * prefill-once: with n streams over one identical prompt, the
+    shareable prefix was prefilled exactly once — tokens_reused equals
+    (n-1) * share_tokens, so no follower re-executed a shared stripe;
+  * residency: at >1 stream the shared run holds strictly fewer pool
+    bytes than the baseline (shared bytes counted once);
+  * drain: the pool (private pages and shared registry) returned to
+    zero bytes after every session ended.
+
+Also requires the 1/4/16 stream-count sweep to be present, so a bench
+that silently skipped a point fails loudly.
+
+Usage: python3 scripts/validate_prefix.py results/prefix.jsonl
+
+Exits non-zero (listing the problems) on any violation — CI's
+prefix-smoke step runs it against the prefix.jsonl its bench leg
+emitted. Importable: `validate(path)` returns the list of problems
+(empty = ok).
+"""
+
+import json
+import sys
+
+REQUIRED_KINDS = {"streams"}
+REQUIRED_STREAMS = {1, 4, 16}
+
+
+def validate(path):
+    problems = []
+    try:
+        with open(path) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    if not lines:
+        return [f"{path}: empty results file"]
+    seen_kinds = set()
+    seen_streams = set()
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"record {i}: not valid JSON: {e}")
+            continue
+        kind = rec.get("kind")
+        if kind not in REQUIRED_KINDS:
+            continue
+        seen_kinds.add(kind)
+        for key in ("run", "git_sha", "schema"):
+            if key not in rec:
+                problems.append(f"record {i} ({kind}): missing provenance key {key}")
+        n = rec.get("streams")
+        if not isinstance(n, (int, float)) or n < 1:
+            problems.append(f"record {i} ({kind}): bad/missing streams")
+            continue
+        n = int(n)
+        seen_streams.add(n)
+        for key in ("baseline_ms", "sharing_ms", "tokens_reused", "expected_reuse"):
+            if not isinstance(rec.get(key), (int, float)):
+                problems.append(f"record {i} ({kind}): bad/missing {key}")
+        if rec.get("identity_ok") is not True:
+            problems.append(
+                f"record {i} (streams={n}): identity_ok is not true — "
+                "sharing changed a stream's tokens"
+            )
+        if rec.get("prefill_once") is not True:
+            problems.append(
+                f"record {i} (streams={n}): prefill_once is not true — "
+                "the shared prompt prefix was not prefilled exactly once"
+            )
+        reused = rec.get("tokens_reused")
+        expected = rec.get("expected_reuse")
+        if (
+            isinstance(reused, (int, float))
+            and isinstance(expected, (int, float))
+            and reused != expected
+        ):
+            problems.append(
+                f"record {i} (streams={n}): reused {reused:.0f} prompt tokens, "
+                f"expected exactly {expected:.0f}"
+            )
+        if n > 1 and rec.get("expected_reuse", 0) <= 0:
+            problems.append(
+                f"record {i} (streams={n}): expected_reuse is zero — "
+                "the prompt had no shareable stripe, the sweep exercised nothing"
+            )
+        ratio = rec.get("bytes_ratio")
+        if n > 1 and isinstance(ratio, (int, float)) and ratio >= 1.0:
+            problems.append(
+                f"record {i} (streams={n}): shared run resides {ratio:.2f}x the "
+                "baseline bytes — shared pages were not deduplicated"
+            )
+        if rec.get("drained_ok") is not True:
+            problems.append(
+                f"record {i} (streams={n}): drained_ok is not true — "
+                "pool bytes leaked after every session ended"
+            )
+    missing = REQUIRED_KINDS - seen_kinds
+    if missing:
+        problems.append(f"{path}: missing record kinds: {', '.join(sorted(missing))}")
+    missing_streams = REQUIRED_STREAMS - seen_streams
+    if missing_streams:
+        problems.append(
+            f"{path}: missing stream counts: "
+            f"{', '.join(str(s) for s in sorted(missing_streams))}"
+        )
+    return problems
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    problems = validate(argv[1])
+    if problems:
+        print(f"[prefix] FAIL: {argv[1]}")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    with open(argv[1]) as f:
+        n = sum(
+            1
+            for l in f
+            if l.strip() and json.loads(l).get("kind") in REQUIRED_KINDS
+        )
+    print(f"[prefix] OK: {argv[1]} ({n} prefix records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
